@@ -1,0 +1,6 @@
+//! Bench: regenerate Fig. 4 — decoupled access-execute pipeline vs the
+//! monolithic (serialized) pipeline, per model + ASCII tick timeline.
+
+fn main() {
+    eiq_neutron::report::fig4();
+}

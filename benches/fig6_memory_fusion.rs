@@ -1,0 +1,6 @@
+//! Bench: regenerate Fig. 6 — memory usage over time for the first five
+//! layers of MobileNetV2, with and without the fusion+tiling optimization.
+
+fn main() {
+    eiq_neutron::report::fig6();
+}

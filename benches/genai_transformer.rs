@@ -1,0 +1,6 @@
+//! Bench: the Sec. VI Gen-AI claim — decoder-only transformer GEMMs on the
+//! 2-TOPS NPU vs 4×Cortex-A55 at 1.8 GHz (paper: ~10× speedup).
+
+fn main() {
+    eiq_neutron::report::genai();
+}

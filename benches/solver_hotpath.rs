@@ -1,0 +1,77 @@
+//! Bench: CP-solver hot paths (the compiler's dominant cost — §Perf).
+//!
+//! Microbenches the substrate on problem shapes the mid-end produces:
+//! knapsack-style selection (tiling), window placement (scheduling), plus
+//! one real full-mid-end compile.
+
+use eiq_neutron::arch::NeutronConfig;
+use eiq_neutron::compiler::{compile, CompileOptions};
+use eiq_neutron::cp::{solve, CpModel, LinExpr, SearchConfig};
+use eiq_neutron::util::bench::Bencher;
+use eiq_neutron::zoo::ModelId;
+
+fn knapsack(n: usize) -> CpModel {
+    let mut m = CpModel::new();
+    let vars: Vec<_> = (0..n).map(|i| m.bool_var(format!("x{i}"))).collect();
+    let w = LinExpr::weighted_sum(
+        vars.iter().enumerate().map(|(i, &v)| ((i as i64 * 7 % 13) + 1, v)),
+    );
+    m.add_le(w, (n as i64 * 13) / 5);
+    m.minimize(LinExpr::weighted_sum(
+        vars.iter().enumerate().map(|(i, &v)| (-((i as i64 * 11 % 17) + 1), v)),
+    ));
+    m
+}
+
+/// Scheduling-window shape: transfers choose one of 3 ticks; tick latency
+/// variables bound the per-tick load; objective Σ L_t + δ·N_DM.
+fn window_placement(transfers: usize, ticks: usize) -> CpModel {
+    let mut m = CpModel::new();
+    let mut obj = LinExpr::new();
+    let mut per_tick_terms: Vec<Vec<(i64, eiq_neutron::cp::Var)>> = vec![Vec::new(); ticks];
+    for t in 0..transfers {
+        let lo = t % ticks;
+        let slots: Vec<_> = (0..3).map(|d| m.bool_var(format!("x{t}_{d}"))).collect();
+        m.add_exactly_one(slots.clone());
+        for (d, &v) in slots.iter().enumerate() {
+            let tick = (lo + d) % ticks;
+            per_tick_terms[tick].push((((t as i64 * 97) % 900) + 100, v));
+            obj.push(8, v);
+        }
+    }
+    for (i, terms) in per_tick_terms.into_iter().enumerate() {
+        let l = m.int_var(200, 100_000, format!("L{i}"));
+        let mut con = LinExpr::var(l);
+        for (c, v) in terms {
+            con.push(-c, v);
+        }
+        m.add_ge(con, 0);
+        obj.push(1, l);
+    }
+    m.minimize(obj);
+    m
+}
+
+fn main() {
+    let b = Bencher::default();
+    for n in [16usize, 32, 64] {
+        let m = knapsack(n);
+        b.bench(&format!("cp knapsack n={n}"), || {
+            solve(&m, SearchConfig::default()).objective
+        });
+    }
+    for (t, k) in [(12usize, 12usize), (24, 12), (48, 16)] {
+        let m = window_placement(t, k);
+        b.bench(&format!("cp window t={t} ticks={k}"), || {
+            solve(&m, SearchConfig { time_limit_ms: Some(2000), ..Default::default() }).objective
+        });
+    }
+
+    let cfg = NeutronConfig::flagship_2tops();
+    let g = ModelId::MobileNetV2.build();
+    b.bench("compile mobilenet-v2 (full mid-end)", || {
+        compile(&g, &cfg, &CompileOptions::default_partitioned())
+            .schedule
+            .solve_ms
+    });
+}

@@ -1,0 +1,21 @@
+//! Bench: regenerate Table I (effective TOPS of the eNPU/iNPU baselines on
+//! ResNet50V1 and EfficientNet-Lite0) and time the baseline estimators.
+
+use eiq_neutron::baselines::{enpu, inpu, EnpuConfig, InpuConfig};
+use eiq_neutron::util::bench::Bencher;
+use eiq_neutron::zoo::ModelId;
+
+fn main() {
+    eiq_neutron::report::table1();
+
+    println!("\n-- harness timings --");
+    let b = Bencher::default();
+    let resnet = ModelId::ResNet50V1.build();
+    let effnet = ModelId::EfficientNetLite0.build();
+    let e = EnpuConfig::enpu_b();
+    let i = InpuConfig::vision_11tops();
+    b.bench("enpu::estimate(resnet50)", || enpu::estimate(&resnet, &e).latency_ms);
+    b.bench("enpu::estimate(efficientnet)", || enpu::estimate(&effnet, &e).latency_ms);
+    b.bench("inpu::estimate(resnet50)", || inpu::estimate(&resnet, &i).latency_ms);
+    b.bench("inpu::estimate(efficientnet)", || inpu::estimate(&effnet, &i).latency_ms);
+}

@@ -1,0 +1,10 @@
+//! Bench: regenerate Table II — CP problem partitioning vs compilation
+//! time and inference time on YOLOv8N-det (pass --quick for MobileNetV2).
+
+use eiq_neutron::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let quick = args.has_flag("quick");
+    eiq_neutron::report::table2(quick);
+}

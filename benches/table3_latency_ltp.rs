@@ -1,0 +1,23 @@
+//! Bench: regenerate Table III — latency + LTP for all 12 Table-IV models
+//! across Ours / eNPU-A / eNPU-B / iNPU, plus compile+simulate wall times.
+
+use eiq_neutron::arch::NeutronConfig;
+use eiq_neutron::compiler::{compile, CompileOptions};
+use eiq_neutron::sim::{simulate, SimOptions};
+use eiq_neutron::util::bench::Bencher;
+use eiq_neutron::zoo::ModelId;
+
+fn main() {
+    eiq_neutron::report::table3();
+
+    println!("\n-- harness timings (compile + simulate per model) --");
+    let b = Bencher::quick();
+    let cfg = NeutronConfig::flagship_2tops();
+    for id in [ModelId::MobileNetV2, ModelId::ResNet50V1, ModelId::YoloV8nDet] {
+        let g = id.build();
+        b.bench(&format!("compile+sim {}", id.display_name()), || {
+            let c = compile(&g, &cfg, &CompileOptions::default_partitioned());
+            simulate(&c, &cfg, &SimOptions::default()).total_cycles
+        });
+    }
+}

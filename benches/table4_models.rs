@@ -1,0 +1,15 @@
+//! Bench: regenerate Table IV — model characteristics (GMACs, M params)
+//! for every benchmark model, vs the paper's reported values.
+
+use eiq_neutron::util::bench::Bencher;
+use eiq_neutron::zoo::ModelId;
+
+fn main() {
+    eiq_neutron::report::table4();
+
+    println!("\n-- harness timings (graph construction) --");
+    let b = Bencher::default();
+    for id in [ModelId::MobileNetV2, ModelId::YoloV8s, ModelId::EfficientDetLite0] {
+        b.bench(&format!("build {}", id.display_name()), || id.build().ops.len());
+    }
+}

@@ -1,0 +1,9 @@
+//! Table III demo: latency + LTP of all 12 Table-IV models on Ours /
+//! eNPU-A / eNPU-B / iNPU (the paper's headline comparison).
+//!
+//!     cargo run --release --example compare_npus
+
+fn main() {
+    eiq_neutron::report::table3();
+    eiq_neutron::report::table1();
+}

@@ -1,0 +1,8 @@
+//! Fig. 6 demo: memory usage over time during the first layers of
+//! MobileNetV2, with and without the fusion+tiling optimization.
+//!
+//!     cargo run --release --example fusion_memory
+
+fn main() {
+    eiq_neutron::report::fig6();
+}

@@ -1,0 +1,133 @@
+"""AOT export: lower the L2 model (and a standalone L1 kernel) to HLO TEXT
+for the rust PJRT runtime.
+
+HLO *text* — not ``lowered.compile().serialize()`` — is the interchange
+format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids, which
+the image's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Outputs (under ``artifacts/``):
+  model.hlo.txt        — quickstart CNN forward (weights baked in)
+  kernel_mm.hlo.txt    — standalone neutron_mm matmul (runtime unit tests)
+  manifest.txt         — shapes/dtypes + expected outputs for self-checks
+
+Python runs ONCE at build time (``make artifacts``); the rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as model_mod
+from .kernels import ref
+from .kernels.neutron_mm import matmul_i8
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_model(out_dir: str, seed: int = 7, input_hw: int = 32) -> dict:
+    """Lower the quickstart model; return manifest entries."""
+    m = model_mod.build_quickstart(seed=seed, input_hw=input_hw)
+    fn = model_mod.forward_fn(m)
+    spec = jax.ShapeDtypeStruct((m.input_hw, m.input_hw, m.input_c), jnp.int8)
+    lowered = jax.jit(fn).lower(spec)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, "model.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+
+    # Self-check vector: run the traced fn and the pure oracle on a
+    # deterministic input; both go into the manifest so the rust runtime
+    # can assert its numerics without Python present.
+    rng = np.random.default_rng(99)
+    x = rng.integers(-128, 128, size=spec.shape, dtype=np.int8)
+    traced = np.asarray(fn(jnp.asarray(x))[0])
+    oracle = model_mod.reference_forward(m, x)
+    assert np.array_equal(traced, oracle), "traced forward != oracle"
+    return {
+        "model.input_shape": "x".join(map(str, spec.shape)),
+        "model.input_seed": "99",
+        "model.num_classes": str(m.num_classes),
+        "model.expected_logits": ",".join(map(str, traced.tolist())),
+        "model.path": "model.hlo.txt",
+    }
+
+
+# Fixed kernel-artifact geometry (runtime unit test shape).
+KM, KK, KN = 32, 64, 48
+K_MULT, K_SHIFT = ref.requant_from_real(0.0125)
+
+
+def export_kernel(out_dir: str) -> dict:
+    """Lower a standalone neutron_mm instance with runtime-fed operands."""
+
+    def fn(lhs, rhs, bias):
+        return (
+            matmul_i8(lhs, rhs, bias, multiplier=K_MULT, shift=K_SHIFT, relu=False),
+        )
+
+    lhs_s = jax.ShapeDtypeStruct((KM, KK), jnp.int8)
+    rhs_s = jax.ShapeDtypeStruct((KK, KN), jnp.int8)
+    bias_s = jax.ShapeDtypeStruct((KN,), jnp.int32)
+    lowered = jax.jit(fn).lower(lhs_s, rhs_s, bias_s)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, "kernel_mm.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+
+    # Deterministic check vector.
+    rng = np.random.default_rng(1234)
+    lhs, rhs, bias, _, _ = ref.random_quant_case(rng, KM, KK, KN)
+    want = np.asarray(ref.matmul_i8_ref(lhs, rhs, bias, K_MULT, K_SHIFT))
+    return {
+        "kernel.m": str(KM),
+        "kernel.k": str(KK),
+        "kernel.n": str(KN),
+        "kernel.seed": "1234",
+        "kernel.multiplier": str(K_MULT),
+        "kernel.shift": str(K_SHIFT),
+        "kernel.expected_row0": ",".join(map(str, want[0].tolist())),
+        "kernel.path": "kernel_mm.hlo.txt",
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="path of the model artifact (its directory receives all artifacts)")
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--input-hw", type=int, default=32)
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {}
+    manifest.update(export_model(out_dir, seed=args.seed, input_hw=args.input_hw))
+    manifest.update(export_kernel(out_dir))
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        for k in sorted(manifest):
+            f.write(f"{k}={manifest[k]}\n")
+    print(f"wrote artifacts to {out_dir}: {sorted(os.listdir(out_dir))}")
+
+
+if __name__ == "__main__":
+    main()

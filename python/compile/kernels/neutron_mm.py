@@ -1,0 +1,145 @@
+"""L1 Pallas kernel: the Neutron dot-product array as an MXU-shaped
+output-stationary INT8 matmul with fused requantization + activation.
+
+Hardware adaptation (DESIGN.md §3): the paper's core is M=16 parallel
+dot-product units of vector length N=16, output-stationary with A=2M
+accumulators, fed by a data engine that broadcasts one operand. On the TPU
+abstraction Pallas exposes, the same insight maps to:
+
+  * the M×N unit grid      → one MXU-tile matmul per (BM, BN) output block;
+  * the A-deep accumulator → the int32 VMEM scratch accumulated across the
+                             K grid dimension (output-stationary: the
+                             accumulator never leaves VMEM);
+  * the shared-operand bus → BlockSpec index maps re-using the lhs block
+                             across the N grid axis and the rhs block
+                             across the M grid axis;
+  * the activation engine  → fused requantize + ReLU on the final K step.
+
+Runs with ``interpret=True`` (CPU PJRT cannot execute Mosaic custom-calls);
+the TPU-side VMEM/MXU efficiency estimate lives in DESIGN.md §8.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # see ref.py — requant needs i64
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block sizes: multiples of the 128×128 MXU tile; K blocked at 128 so an
+# int8 lhs block (BM×BK) + rhs block (BK×BN) + int32 accumulator (BM×BN)
+# fit comfortably in VMEM: 64·128 + 128·128 + 64·128·4 ≈ 57 KiB per step.
+BM, BK, BN = 64, 128, 128
+
+
+def _mm_kernel(lhs_ref, rhs_ref, bias_ref, out_ref, acc_ref, *,
+               multiplier: int, shift: int, relu: bool, k_steps: int):
+    """One (m, n, k) grid step: accumulate lhs·rhs into the VMEM scratch;
+    on the last K step, add bias, requantize, activate, write out."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = lhs_ref[...].astype(jnp.int32)
+    b = rhs_ref[...].astype(jnp.int32)
+    acc_ref[...] += jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _finish():
+        acc = acc_ref[...] + bias_ref[...].astype(jnp.int32)[None, :]
+        # Fixed-point requantization (matches rust Requant::apply and
+        # ref.requant_apply bit-exactly).
+        prod = acc.astype(jnp.int64) * jnp.int64(multiplier)
+        high = (prod + jnp.int64(1 << 30)) >> jnp.int64(31)
+        if shift <= 0:
+            out = high << jnp.int64(-shift)
+        else:
+            out = (high + (jnp.int64(1) << jnp.int64(shift - 1))) >> jnp.int64(shift)
+        out = out.astype(jnp.int32)
+        if relu:
+            out = jnp.maximum(out, 0)
+        out_ref[...] = jnp.clip(out, -128, 127).astype(jnp.int8)
+
+
+def _pad_to(x, axis: int, block: int):
+    size = x.shape[axis]
+    pad = (-size) % block
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("multiplier", "shift", "relu"))
+def matmul_i8(lhs, rhs, bias, *, multiplier: int, shift: int, relu: bool = False):
+    """Quantized (M,K)×(K,N) int8 matmul with bias + requant [+ ReLU].
+
+    Shapes are padded up to the block grid; the valid region is sliced
+    back out, so any (M, K, N) works.
+    """
+    m, k = lhs.shape
+    k2, n = rhs.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    lhs_p = _pad_to(_pad_to(lhs, 0, BM), 1, BK)
+    rhs_p = _pad_to(_pad_to(rhs, 0, BK), 1, BN)
+    bias_p = _pad_to(bias, 0, BN)
+    mp, kp = lhs_p.shape
+    _, np_ = rhs_p.shape
+    k_steps = kp // BK
+    grid = (mp // BM, np_ // BN, k_steps)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _mm_kernel,
+            multiplier=multiplier,
+            shift=shift,
+            relu=relu,
+            k_steps=k_steps,
+        ),
+        grid=grid,
+        in_specs=[
+            # lhs block re-used across the n grid axis (shared-operand bus).
+            pl.BlockSpec((BM, BK), lambda i, j, kk: (i, kk)),
+            # rhs block re-used across the m grid axis.
+            pl.BlockSpec((BK, BN), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((BN,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int8),
+        scratch_shapes=[pltpu_scratch((BM, BN), jnp.int32)],
+        interpret=True,
+    )(lhs_p, rhs_p, bias_p)
+    return out[:m, :n]
+
+
+def pltpu_scratch(shape, dtype):
+    """VMEM scratch allocation (interpret-mode compatible)."""
+    return pl.VMEM(shape, dtype) if hasattr(pl, "VMEM") else _vmem_fallback(shape, dtype)
+
+
+def _vmem_fallback(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)
+
+
+def vmem_bytes_per_step() -> int:
+    """Static VMEM footprint of one grid step (DESIGN.md §8 estimate)."""
+    return BM * BK + BK * BN + BN * 4 + 2 * BM * BN * 4 + BM * BN
+
+
+def mxu_utilization_estimate(m: int, k: int, n: int) -> float:
+    """MXU utilization estimate from block padding (structure, not time)."""
+    mp = -(-m // BM) * BM
+    kp = -(-k // BK) * BK
+    np_ = -(-n // BN) * BN
+    return (m * k * n) / (mp * kp * np_)

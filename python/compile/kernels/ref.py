@@ -1,0 +1,110 @@
+"""Pure-jnp correctness oracle for the Neutron dot-product-array kernel.
+
+Implements the exact INT8 quantized matmul semantics the L1 Pallas kernel
+and the rust reference executor must reproduce bit-exactly:
+
+    acc   = sum_k lhs_i8[m, k] * rhs_i8[k, n]  + bias_i32[n]      (int32)
+    high  = round(acc * multiplier / 2**31)     (rounding high mul)
+    out   = clamp_i8( rounding_shift_right(high, shift) [+ relu] )
+
+The requantization pair ``(multiplier, shift)`` follows the fixed-point
+decomposition in ``rust/src/ir/quant.rs`` (`Requant::from_real/apply`).
+"""
+
+from __future__ import annotations
+
+import jax
+
+# The requantization high-multiply needs true 64-bit integers; without x64
+# jnp silently truncates to int32 and the python side would diverge from
+# the rust runtime's i64 arithmetic on large accumulators.
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def requant_from_real(real: float) -> tuple[int, int]:
+    """Decompose a positive real multiplier into (mantissa_q31, shift)."""
+    assert real > 0.0
+    shift = 0
+    r = float(real)
+    while r < 0.5:
+        r *= 2.0
+        shift += 1
+    while r >= 1.0:
+        r /= 2.0
+        shift -= 1
+    multiplier = int(round(r * (1 << 31)))
+    if multiplier == 1 << 31:
+        multiplier //= 2
+        shift -= 1
+    return multiplier, shift
+
+
+def requant_apply(acc, multiplier: int, shift: int):
+    """Apply the fixed-point rescale to an int32 array (jnp or np).
+
+    Mirrors ``Requant::apply`` in rust: rounding high multiply then
+    rounding right shift (or left shift for negative shifts).
+    """
+    acc64 = acc.astype(jnp.int64)
+    prod = acc64 * jnp.int64(multiplier)
+    high = (prod + jnp.int64(1 << 30)) >> jnp.int64(31)
+    if shift <= 0:
+        out = high << jnp.int64(-shift)
+    else:
+        round_ = jnp.int64(1) << jnp.int64(shift - 1)
+        out = (high + round_) >> jnp.int64(shift)
+    return out.astype(jnp.int32)
+
+
+def matmul_i8_ref(lhs, rhs, bias, multiplier: int, shift: int, relu: bool = False):
+    """Oracle: quantized (M,K)x(K,N) matmul with bias + requant [+ relu].
+
+    lhs: int8 (M, K); rhs: int8 (K, N); bias: int32 (N,)
+    Returns int8 (M, N).
+    """
+    acc = jnp.matmul(
+        lhs.astype(jnp.int32), rhs.astype(jnp.int32), preferred_element_type=jnp.int32
+    )
+    acc = acc + bias.astype(jnp.int32)[None, :]
+    out = requant_apply(acc, multiplier, shift)
+    if relu:
+        out = jnp.maximum(out, 0)
+    return jnp.clip(out, -128, 127).astype(jnp.int8)
+
+
+def conv2d_i8_ref(ifmap, weights, bias, multiplier: int, shift: int,
+                  stride: int = 1, relu: bool = False):
+    """Oracle for a SAME-padded int8 conv: (H,W,Cin) ⊛ (Cout,kh,kw,Cin).
+
+    Lowered the way the compiler does (Sec. IV-A): im2col to a matmul on
+    the dot-product array. Test scale only.
+    """
+    h, w, cin = ifmap.shape
+    cout, kh, kw, _ = weights.shape
+    oh, ow = -(-h // stride), -(-w // stride)
+    ph, pw = (kh - 1) // 2, (kw - 1) // 2
+    padded = jnp.pad(
+        ifmap.astype(jnp.int32), ((ph, kh - 1 - ph), (pw, kw - 1 - pw), (0, 0))
+    )
+    cols = []
+    for oy in range(oh):
+        for ox in range(ow):
+            patch = padded[oy * stride:oy * stride + kh, ox * stride:ox * stride + kw, :]
+            cols.append(patch.reshape(-1))
+    lhs = jnp.stack(cols).astype(jnp.int8)              # (oh*ow, kh*kw*cin)
+    rhs = weights.reshape(cout, -1).T.astype(jnp.int8)  # (kh*kw*cin, cout)
+    out = matmul_i8_ref(lhs, rhs, bias, multiplier, shift, relu)
+    return out.reshape(oh, ow, cout)
+
+
+def random_quant_case(rng: np.random.Generator, m: int, k: int, n: int):
+    """Deterministic random test case for the kernel sweeps."""
+    lhs = rng.integers(-128, 128, size=(m, k), dtype=np.int8)
+    rhs = rng.integers(-128, 128, size=(k, n), dtype=np.int8)
+    bias = rng.integers(-(1 << 12), 1 << 12, size=(n,), dtype=np.int32)
+    real = float(rng.uniform(2e-4, 0.05))  # realistic conv rescale range
+    mult, shift = requant_from_real(real)
+    return lhs, rhs, bias, mult, shift

@@ -1,0 +1,159 @@
+"""L2: the quantized model forward graph in JAX, calling the L1 kernel.
+
+The quickstart model is a small INT8 CNN classifier (32×32×3 input, three
+conv blocks + head) expressed exactly the way the paper's compiler lowers
+layers (Sec. IV-A): convs run as im2col matmuls on the dot-product array,
+the head as a 1×1 conv. The whole forward is one jittable function, so
+``aot.py`` lowers it to a single HLO module the rust runtime executes with
+no Python on the request path.
+
+Layer weights are generated deterministically (seeded) at build time and
+baked into the HLO as constants — the artifact is self-contained, mirroring
+a compiled LiteRT binary with its parameter blob.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels.neutron_mm import matmul_i8
+
+
+@dataclass
+class ConvLayer:
+    """One quantized conv layer's static config + baked weights."""
+
+    name: str
+    out_c: int
+    kernel: int
+    stride: int
+    relu: bool
+    weights: np.ndarray = field(repr=False, default=None)  # (outC, kh, kw, inC)
+    bias: np.ndarray = field(repr=False, default=None)     # (outC,) int32
+    multiplier: int = 0
+    shift: int = 0
+
+
+@dataclass
+class QuickstartModel:
+    """Static description of the quickstart CNN."""
+
+    input_hw: int
+    input_c: int
+    layers: list[ConvLayer]
+    num_classes: int
+
+    @property
+    def name(self) -> str:
+        return f"quickstart_cnn_{self.input_hw}"
+
+
+def build_quickstart(seed: int = 7, input_hw: int = 32) -> QuickstartModel:
+    """Deterministically materialize the quickstart model."""
+    rng = np.random.default_rng(seed)
+    specs = [
+        ("conv1", 16, 3, 2, True),
+        ("conv2", 32, 3, 2, True),
+        ("conv3", 64, 3, 2, True),
+        ("head", 10, 1, 1, False),
+    ]
+    layers = []
+    in_c = 3
+    for name, out_c, k, s, relu in specs:
+        w = rng.integers(-64, 64, size=(out_c, k, k, in_c), dtype=np.int8)
+        b = rng.integers(-(1 << 10), 1 << 10, size=(out_c,), dtype=np.int32)
+        # Scale ≈ 1/(rms accumulator) so activations use the int8 range
+        # without saturating (rms ≈ sqrt(K)·σ_w·σ_x for random operands).
+        k_contraction = k * k * in_c
+        target = 1.0 / (np.sqrt(k_contraction) * 37.0 * 74.0 / 48.0)
+        mult, shift = ref.requant_from_real(float(target * rng.uniform(0.7, 1.3)))
+        layers.append(ConvLayer(name, out_c, k, s, relu, w, b, mult, shift))
+        in_c = out_c
+    return QuickstartModel(input_hw=input_hw, input_c=3, layers=layers, num_classes=10)
+
+
+def _im2col(x, kernel: int, stride: int):
+    """SAME-padded im2col: (H,W,C) → (oh*ow, k*k*C), int8.
+
+    Static shapes only — this traces into the HLO artifact.
+    """
+    h, w, c = x.shape
+    oh, ow = -(-h // stride), -(-w // stride)
+    ph = (kernel - 1) // 2
+    padded = jnp.pad(x, ((ph, kernel - 1 - ph), (ph, kernel - 1 - ph), (0, 0)))
+    patches = []
+    for ky in range(kernel):
+        for kx in range(kernel):
+            sl = jax.lax.slice(
+                padded, (ky, kx, 0), (ky + h, kx + w, c)
+            )[::stride, ::stride, :]
+            patches.append(sl.reshape(oh * ow, c))
+    return jnp.concatenate(patches, axis=1)
+
+
+def conv_block(x, layer: ConvLayer):
+    """One conv layer via the L1 kernel (im2col lowering, Sec. IV-A)."""
+    h, w, _ = x.shape
+    oh, ow = -(-h // layer.stride), -(-w // layer.stride)
+    lhs = _im2col(x, layer.kernel, layer.stride)
+    # weights (outC, kh, kw, inC) → (kh*kw*inC, outC) matching im2col's
+    # (ky, kx, c) patch order.
+    wmat = jnp.asarray(
+        np.transpose(layer.weights, (1, 2, 3, 0)).reshape(-1, layer.out_c)
+    ).astype(jnp.int8)
+    out = matmul_i8(
+        lhs,
+        wmat,
+        jnp.asarray(layer.bias),
+        multiplier=layer.multiplier,
+        shift=layer.shift,
+        relu=layer.relu,
+    )
+    return out.reshape(oh, ow, layer.out_c)
+
+
+def forward(model: QuickstartModel, x):
+    """Full quantized forward: (H, W, 3) int8 → (num_classes,) int32 logits."""
+    for layer in model.layers:
+        x = conv_block(x, layer)
+    # Global average pool in the int domain (sum, then requant-free mean
+    # as int32 logits — the host applies softmax/argmax).
+    x32 = x.astype(jnp.int32)
+    pooled = jnp.sum(x32, axis=(0, 1))
+    return pooled
+
+
+def forward_fn(model: QuickstartModel):
+    """Jittable closure over the baked weights."""
+
+    @functools.wraps(forward)
+    def fn(x):
+        return (forward(model, x),)
+
+    return fn
+
+
+def reference_forward(model: QuickstartModel, x: np.ndarray) -> np.ndarray:
+    """Oracle forward using ref.conv2d_i8_ref — used by pytest to check the
+    traced/AOT path end-to-end."""
+    cur = jnp.asarray(x)
+    for layer in model.layers:
+        cur = ref.conv2d_i8_ref(
+            cur,
+            jnp.asarray(layer.weights),
+            jnp.asarray(layer.bias),
+            layer.multiplier,
+            layer.shift,
+            stride=layer.stride,
+            relu=layer.relu,
+        )
+    return np.asarray(jnp.sum(cur.astype(jnp.int32), axis=(0, 1)))

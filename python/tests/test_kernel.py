@@ -1,0 +1,110 @@
+"""L1 kernel correctness: neutron_mm vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/values; fixed cases pin the block-boundary and
+requant edge behaviour. Bit-exactness (array_equal, not allclose) is the
+contract — the rust runtime replays the same integer arithmetic.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.neutron_mm import (
+    BK,
+    BM,
+    BN,
+    matmul_i8,
+    mxu_utilization_estimate,
+    vmem_bytes_per_step,
+)
+
+
+def run_case(m, k, n, seed, relu=False):
+    rng = np.random.default_rng(seed)
+    lhs, rhs, bias, mult, shift = ref.random_quant_case(rng, m, k, n)
+    got = np.asarray(matmul_i8(lhs, rhs, bias, multiplier=mult, shift=shift, relu=relu))
+    want = np.asarray(ref.matmul_i8_ref(lhs, rhs, bias, mult, shift, relu=relu))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 160),
+    k=st.integers(1, 300),
+    n=st.integers(1, 160),
+    seed=st.integers(0, 2**31),
+    relu=st.booleans(),
+)
+def test_matmul_matches_ref_hypothesis(m, k, n, seed, relu):
+    run_case(m, k, n, seed, relu)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (BM, BK, BN),              # exactly one block
+        (BM + 1, BK + 1, BN + 1),  # one past the block boundary
+        (BM - 1, BK - 1, BN - 1),  # one short
+        (1, 1, 1),                 # degenerate
+        (2 * BM, 3 * BK, 2 * BN),  # multi-block grid
+        (7, 513, 9),               # deep contraction, thin output
+    ],
+)
+def test_matmul_block_boundaries(m, k, n):
+    run_case(m, k, n, seed=42)
+    run_case(m, k, n, seed=43, relu=True)
+
+
+def test_relu_clamps_negatives():
+    rng = np.random.default_rng(5)
+    lhs, rhs, bias, mult, shift = ref.random_quant_case(rng, 16, 32, 16)
+    out = np.asarray(matmul_i8(lhs, rhs, bias, multiplier=mult, shift=shift, relu=True))
+    assert out.min() >= 0
+
+
+def test_saturation_at_extremes():
+    # All-max inputs with a large multiplier must saturate, not wrap.
+    m, k, n = 8, 64, 8
+    lhs = np.full((m, k), 127, dtype=np.int8)
+    rhs = np.full((k, n), 127, dtype=np.int8)
+    bias = np.zeros(n, dtype=np.int32)
+    mult, shift = ref.requant_from_real(0.9)
+    got = np.asarray(matmul_i8(lhs, rhs, bias, multiplier=mult, shift=shift))
+    assert (got == 127).all()
+    got_neg = np.asarray(
+        matmul_i8(-lhs, rhs, bias, multiplier=mult, shift=shift)
+    )
+    assert (got_neg == -128).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(real=st.floats(1e-4, 4.0))
+def test_requant_decomposition_roundtrip(real):
+    mult, shift = ref.requant_from_real(real)
+    assert (1 << 30) <= mult < (1 << 31)
+    back = mult / (1 << 31) / (2.0**shift)
+    assert abs(back - real) / real < 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(acc=st.integers(-(2**28), 2**28), real=st.floats(1e-4, 0.5))
+def test_requant_apply_tracks_float(acc, real):
+    import jax.numpy as jnp
+
+    mult, shift = ref.requant_from_real(real)
+    got = int(ref.requant_apply(jnp.int32(acc), mult, shift))
+    want = round(acc * real)
+    assert abs(got - want) <= 1
+
+
+def test_vmem_footprint_fits_tpu_budget():
+    # The DESIGN.md §8 claim: one grid step's working set ≪ 16 MiB VMEM.
+    assert vmem_bytes_per_step() < 256 * 1024
+
+
+def test_mxu_utilization_estimates():
+    assert mxu_utilization_estimate(BM, BK, BN) == 1.0
+    # Ragged shapes pay padding.
+    assert mxu_utilization_estimate(BM + 1, BK, BN) < 0.6
+    assert 0.0 < mxu_utilization_estimate(3, 5, 7) < 0.01

@@ -1,0 +1,105 @@
+"""L2 model correctness: traced forward vs oracle, conv lowering, and the
+AOT artifact contract the rust runtime relies on."""
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import aot, model as model_mod
+from compile.kernels import ref
+
+
+def test_quickstart_build_is_deterministic():
+    a = model_mod.build_quickstart(seed=7)
+    b = model_mod.build_quickstart(seed=7)
+    for la, lb in zip(a.layers, b.layers):
+        np.testing.assert_array_equal(la.weights, lb.weights)
+        assert (la.multiplier, la.shift) == (lb.multiplier, lb.shift)
+
+
+def test_forward_matches_oracle():
+    m = model_mod.build_quickstart(seed=7, input_hw=16)
+    rng = np.random.default_rng(0)
+    x = rng.integers(-128, 128, size=(16, 16, 3), dtype=np.int8)
+    traced = np.asarray(model_mod.forward_fn(m)(jnp.asarray(x))[0])
+    oracle = model_mod.reference_forward(m, x)
+    np.testing.assert_array_equal(traced, oracle)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31), hw=st.sampled_from([8, 16, 24]))
+def test_forward_matches_oracle_across_seeds(seed, hw):
+    m = model_mod.build_quickstart(seed=seed % 1000, input_hw=hw)
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-128, 128, size=(hw, hw, 3), dtype=np.int8)
+    traced = np.asarray(model_mod.forward_fn(m)(jnp.asarray(x))[0])
+    oracle = model_mod.reference_forward(m, x)
+    np.testing.assert_array_equal(traced, oracle)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    hw=st.sampled_from([6, 9, 12]),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 24),
+    kernel=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31),
+)
+def test_conv_block_matches_conv_oracle(hw, cin, cout, kernel, stride, seed):
+    """The im2col lowering in model.py == direct conv in ref.py."""
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-128, 128, size=(hw, hw, cin), dtype=np.int8)
+    w = rng.integers(-64, 64, size=(cout, kernel, kernel, cin), dtype=np.int8)
+    b = rng.integers(-512, 512, size=(cout,), dtype=np.int32)
+    mult, shift = ref.requant_from_real(0.01)
+    layer = model_mod.ConvLayer("t", cout, kernel, stride, True, w, b, mult, shift)
+    got = np.asarray(model_mod.conv_block(jnp.asarray(x), layer))
+    want = np.asarray(
+        ref.conv2d_i8_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+                          mult, shift, stride=stride, relu=True)
+    )
+    np.testing.assert_array_equal(got, want)
+
+
+def test_hlo_text_export_shape(tmp_path):
+    entries = aot.export_model(str(tmp_path), seed=7, input_hw=16)
+    text = (tmp_path / "model.hlo.txt").read_text()
+    assert text.startswith("HloModule"), "must be HLO text, not a proto"
+    assert "s8[16,16,3]" in text, "input parameter shape baked in"
+    assert entries["model.input_shape"] == "16x16x3"
+    logits = [int(v) for v in entries["model.expected_logits"].split(",")]
+    assert len(logits) == 10
+
+
+def test_kernel_export_manifest(tmp_path):
+    entries = aot.export_kernel(str(tmp_path))
+    text = (tmp_path / "kernel_mm.hlo.txt").read_text()
+    assert text.startswith("HloModule")
+    row0 = [int(v) for v in entries["kernel.expected_row0"].split(",")]
+    assert len(row0) == aot.KN
+    assert all(-128 <= v <= 127 for v in row0)
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.txt")),
+    reason="artifacts not built",
+)
+def test_built_artifacts_consistent():
+    """The checked-out artifacts/ dir matches a fresh trace (same seeds)."""
+    root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    manifest = {}
+    with open(os.path.join(root, "manifest.txt")) as f:
+        for line in f:
+            k, v = line.strip().split("=", 1)
+            manifest[k] = v
+    m = model_mod.build_quickstart(seed=7, input_hw=int(manifest["model.input_shape"].split("x")[0]))
+    rng = np.random.default_rng(int(manifest["model.input_seed"]))
+    shape = tuple(int(s) for s in manifest["model.input_shape"].split("x"))
+    x = rng.integers(-128, 128, size=shape, dtype=np.int8)
+    got = np.asarray(model_mod.forward_fn(m)(jnp.asarray(x))[0])
+    want = [int(v) for v in manifest["model.expected_logits"].split(",")]
+    assert got.tolist() == want

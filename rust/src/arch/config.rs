@@ -1,0 +1,137 @@
+//! Architecture configuration of the Neutron NPU subsystem (Sec. III).
+
+/// Parameters of one Neutron compute core and the surrounding subsystem.
+///
+/// The paper's flagship-MPU instance: `N = M = 16`, `A = 2M`,
+/// `W_C = 8 KiB`, four cores at 1 GHz (2 TOPS), 1 MiB TCM, 12 GB/s DDR,
+/// three 128-bit buses per core.
+#[derive(Debug, Clone)]
+pub struct NeutronConfig {
+    /// Dot-product vector length (elements per unit per cycle).
+    pub n: usize,
+    /// Parallel dot-product units per core.
+    pub m: usize,
+    /// Accumulators per dot-product unit (output-stationary depth).
+    pub a: usize,
+    /// Weight-cache (scratchpad) bytes per core, `W_C`.
+    pub wc_bytes: usize,
+    /// Number of compute cores.
+    pub cores: usize,
+    /// Core clock in GHz.
+    pub freq_ghz: f64,
+    /// Total TCM capacity in bytes.
+    pub tcm_bytes: usize,
+    /// Number of (non-arbitrated) TCM banks — `C` in Eq. (7).
+    pub tcm_banks: usize,
+    /// Off-chip (DDR) bandwidth in GB/s.
+    pub ddr_gbps: f64,
+    /// Bus word width in bytes (128-bit buses).
+    pub bus_bytes: usize,
+    /// Operand/result buses per core.
+    pub buses_per_core: usize,
+    /// Fixed controller/firmware overhead per job dispatch, in cycles
+    /// (RISC-V programming of a compute or DMA job; next-task programming
+    /// overlaps with execution, so this is small).
+    pub job_overhead_cycles: u64,
+}
+
+impl NeutronConfig {
+    /// The 2-TOPS flagship-MPU instance evaluated in the paper.
+    pub fn flagship_2tops() -> Self {
+        Self {
+            n: 16,
+            m: 16,
+            a: 32,
+            wc_bytes: 8 * 1024,
+            cores: 4,
+            freq_ghz: 1.0,
+            tcm_bytes: 1 << 20,
+            tcm_banks: 32,
+            ddr_gbps: 12.0,
+            bus_bytes: 16,
+            buses_per_core: 3,
+            job_overhead_cycles: 256,
+        }
+    }
+
+    /// A single-core 0.5-TOPS MCU-class instance (used by scaling tests).
+    pub fn mcu_half_tops() -> Self {
+        Self {
+            cores: 1,
+            tcm_bytes: 512 * 1024,
+            tcm_banks: 16,
+            ddr_gbps: 6.0,
+            ..Self::flagship_2tops()
+        }
+    }
+
+    /// Peak TOPS = 2·N·M·cores·f / 1e12.
+    pub fn peak_tops(&self) -> f64 {
+        2.0 * (self.n * self.m * self.cores) as f64 * self.freq_ghz * 1e9 / 1e12
+    }
+
+    /// Bytes one TCM bank holds.
+    pub fn bank_bytes(&self) -> usize {
+        self.tcm_bytes / self.tcm_banks
+    }
+
+    /// DDR bytes per core-clock cycle.
+    pub fn ddr_bytes_per_cycle(&self) -> f64 {
+        self.ddr_gbps / self.freq_ghz
+    }
+
+    /// Aggregate TCM bandwidth available to one core's operand buses,
+    /// bytes/cycle (each bus moves one word per cycle).
+    pub fn core_bus_bytes_per_cycle(&self) -> usize {
+        self.bus_bytes * self.buses_per_core
+    }
+
+    /// Convert cycles to milliseconds.
+    pub fn cycles_to_ms(&self, cycles: u64) -> f64 {
+        cycles as f64 / (self.freq_ghz * 1e9) / 1e-3
+    }
+
+    /// Banks needed to hold `bytes` (tiles occupy whole banks — bank
+    /// exclusivity is the unit of the CP memory constraints).
+    pub fn banks_for(&self, bytes: usize) -> usize {
+        bytes.div_ceil(self.bank_bytes()).max(1)
+    }
+}
+
+impl Default for NeutronConfig {
+    fn default() -> Self {
+        Self::flagship_2tops()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flagship_is_2_tops() {
+        let c = NeutronConfig::flagship_2tops();
+        assert!((c.peak_tops() - 2.048).abs() < 0.05);
+        assert_eq!(c.bank_bytes(), 32 * 1024);
+    }
+
+    #[test]
+    fn ddr_bytes_per_cycle() {
+        let c = NeutronConfig::flagship_2tops();
+        assert!((c.ddr_bytes_per_cycle() - 12.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cycles_to_ms_at_1ghz() {
+        let c = NeutronConfig::flagship_2tops();
+        assert!((c.cycles_to_ms(1_000_000) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn banks_round_up() {
+        let c = NeutronConfig::flagship_2tops();
+        assert_eq!(c.banks_for(1), 1);
+        assert_eq!(c.banks_for(32 * 1024), 1);
+        assert_eq!(c.banks_for(32 * 1024 + 1), 2);
+    }
+}

@@ -1,0 +1,282 @@
+//! Cycle model of one Neutron compute core (Sec. III-B).
+//!
+//! The core is M parallel, pipelined dot-product units of vector length N,
+//! output-stationary with A accumulators per unit. The model estimates the
+//! cycles of one compute job from the layer geometry and the spatial format
+//! (depth vs line parallelism), capturing the utilization effects the paper
+//! builds its format-selection pass on:
+//!
+//!   * channel padding: the M units map to output channels — layers with
+//!     few channels strand units;
+//!   * vector padding: contraction lengths pad up to N (depthwise convs at
+//!     K = kh·kw ≪ N are the classic low-utilization case);
+//!   * engine padding: the spatially-tiled dimension pads to the engine
+//!     count for lockstep execution;
+//!   * bus bound: a job can never run faster than its operand/result
+//!     streams through the core's three 128-bit buses (the data engine's
+//!     2-D register file gives reuse, so only compulsory traffic counts).
+
+use super::config::NeutronConfig;
+use crate::ir::{Op, OpKind};
+
+/// Work description of one compute job (one layer tile on one-or-all cores).
+#[derive(Debug, Clone, Copy)]
+pub struct JobGeometry {
+    /// Output tile height (per the whole job, pre-engine-split).
+    pub out_h: usize,
+    pub out_w: usize,
+    pub out_c: usize,
+    /// Contraction: input channels (1 for depthwise-style ops).
+    pub in_c: usize,
+    pub filter_h: usize,
+    pub filter_w: usize,
+    /// Depthwise-style op (contraction excludes channels).
+    pub depthwise: bool,
+    /// Bytes/element of activations (1 = int8, 2 = int16: two-cycle MACs).
+    pub elem_bytes: usize,
+}
+
+impl JobGeometry {
+    /// Derive from an IR op producing an (oh, ow, oc) output tile.
+    pub fn from_op(op: &Op, out_h: usize, out_w: usize, out_c: usize, in_c: usize) -> Self {
+        let (fh, fw, depthwise) = match &op.kind {
+            OpKind::Conv2d { geom, .. } => (geom.filter_h, geom.filter_w, false),
+            OpKind::DepthwiseConv2d { geom } => (geom.filter_h, geom.filter_w, true),
+            OpKind::FullyConnected { .. } | OpKind::MatMul { .. } => (1, 1, false),
+            OpKind::Add | OpKind::Mul | OpKind::ScalarAddMul => (1, 1, true),
+            OpKind::Pool { size, .. } => (*size, *size, true),
+            OpKind::GlobalAvgPool => (out_h.max(1), out_w.max(1), true),
+            OpKind::ActivationOnly(_) | OpKind::Softmax => (1, 1, true),
+            // Data movement ops have no MAC geometry.
+            _ => (1, 1, true),
+        };
+        Self {
+            out_h,
+            out_w,
+            out_c,
+            in_c: if depthwise { 1 } else { in_c },
+            filter_h: fh,
+            filter_w: fw,
+            depthwise,
+            elem_bytes: 1,
+        }
+    }
+
+    /// MACs of the job.
+    pub fn macs(&self) -> u64 {
+        (self.out_h * self.out_w * self.out_c) as u64
+            * (self.filter_h * self.filter_w * self.in_c) as u64
+    }
+}
+
+/// Spatial format (Sec. IV-A): which output dimension is split across the
+/// lockstepped compute engines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Format {
+    /// Depth parallelism: engines split `outC`; ifmap broadcast.
+    Depth,
+    /// Line parallelism: engines split `outH`; parameters broadcast.
+    Line,
+}
+
+impl Format {
+    pub fn name(self) -> &'static str {
+        match self {
+            Format::Depth => "depth",
+            Format::Line => "line",
+        }
+    }
+}
+
+/// Cycle estimate for one compute job, split into its bounding terms (used
+/// by the scheduler's objective and by EXPERIMENTS.md §Perf reporting).
+#[derive(Debug, Clone, Copy)]
+pub struct ComputeCost {
+    /// MAC-array cycles (with all padding effects).
+    pub mac_cycles: u64,
+    /// Operand/result bus-bound cycles.
+    pub bus_cycles: u64,
+    /// Fixed job programming overhead.
+    pub overhead_cycles: u64,
+}
+
+impl ComputeCost {
+    /// Total latency of the job: datapath and buses overlap (deep
+    /// pipelining, Sec. III-A2), so the job is bound by the slower of the
+    /// two plus dispatch overhead.
+    pub fn total(&self) -> u64 {
+        self.mac_cycles.max(self.bus_cycles) + self.overhead_cycles
+    }
+
+    /// Effective utilization of the MAC array in [0, 1] given ideal MACs.
+    pub fn utilization(&self, ideal_macs: u64, macs_per_cycle: u64) -> f64 {
+        if self.total() == 0 {
+            return 0.0;
+        }
+        ideal_macs as f64 / (self.total() * macs_per_cycle) as f64
+    }
+}
+
+/// Estimate compute-job cycles for `geom` under `format` on `cfg`.
+///
+/// `engines` is the number of lockstepped cores the job runs on (broadcast
+/// mode) — 1 when each core runs an independent job.
+pub fn compute_cycles(
+    cfg: &NeutronConfig,
+    geom: &JobGeometry,
+    format: Format,
+    engines: usize,
+) -> ComputeCost {
+    let engines = engines.max(1);
+    // --- Engine-level split of the tiled dimension (lockstep => ceil). ---
+    let (eng_h, eng_c) = match format {
+        Format::Depth => (geom.out_h, geom.out_c.div_ceil(engines)),
+        Format::Line => (geom.out_h.div_ceil(engines), geom.out_c),
+    };
+
+    // --- Per-engine datapath cycles. ---
+    let mac_cycles = if geom.depthwise {
+        // Depthwise-style: units map to channels, contraction = fh·fw only.
+        let unit_steps = eng_c.div_ceil(cfg.m) as u64;
+        let k = (geom.filter_h * geom.filter_w) as u64;
+        let dot_cycles = k.div_ceil(cfg.n as u64).max(1);
+        (eng_h * geom.out_w) as u64 * unit_steps * dot_cycles
+    } else {
+        // Dense: units map to output channels; contraction = fh·fw·inC,
+        // streamed as fh·fw chunks of ceil(inC/N) vector-cycles (HWC rows
+        // are contiguous per filter row).
+        let unit_steps = eng_c.div_ceil(cfg.m) as u64;
+        let dot_cycles =
+            (geom.filter_h * geom.filter_w) as u64 * (geom.in_c.div_ceil(cfg.n) as u64);
+        (eng_h * geom.out_w) as u64 * unit_steps * dot_cycles
+    };
+    // 8×16-bit operands take two passes through the 8-bit multipliers.
+    let mac_cycles = mac_cycles * geom.elem_bytes as u64;
+
+    // --- Bus bound: compulsory operand + result traffic per engine. ---
+    // The data engine's register file and W_C scratchpad give full reuse
+    // within the job, so traffic = one read of inputs + params + one write
+    // of outputs (per engine, using the padded engine partition).
+    let in_h = geom.out_h; // stride folded into tile selection upstream
+    let in_bytes_engine = match format {
+        // Depth: full ifmap broadcast (shared bus — count once per engine
+        // set), params split per engine.
+        Format::Depth => {
+            let ifmap = (in_h * geom.out_w * geom.in_c.max(1)) as u64;
+            let params =
+                (eng_c * geom.filter_h * geom.filter_w * geom.in_c.max(1)) as u64;
+            ifmap + params
+        }
+        // Line: ifmap rows split per engine (plus halo), params broadcast.
+        Format::Line => {
+            let halo = geom.filter_h.saturating_sub(1);
+            let ifmap = ((eng_h + halo) * geom.out_w * geom.in_c.max(1)) as u64;
+            let params =
+                (geom.out_c * geom.filter_h * geom.filter_w * geom.in_c.max(1)) as u64;
+            ifmap + params
+        }
+    };
+    let out_bytes_engine = (eng_h.min(geom.out_h) * geom.out_w * eng_c.min(geom.out_c)) as u64;
+    let bytes = (in_bytes_engine + out_bytes_engine) * geom.elem_bytes as u64;
+    let bus_cycles = bytes.div_ceil(cfg.core_bus_bytes_per_cycle() as u64);
+
+    ComputeCost { mac_cycles, bus_cycles, overhead_cycles: cfg.job_overhead_cycles }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> NeutronConfig {
+        NeutronConfig::flagship_2tops()
+    }
+
+    fn dense(out_h: usize, out_w: usize, out_c: usize, in_c: usize, k: usize) -> JobGeometry {
+        JobGeometry {
+            out_h,
+            out_w,
+            out_c,
+            in_c,
+            filter_h: k,
+            filter_w: k,
+            depthwise: false,
+            elem_bytes: 1,
+        }
+    }
+
+    #[test]
+    fn full_utilization_on_big_dense_conv() {
+        let c = cfg();
+        let g = dense(16, 16, 64, 64, 3);
+        let cost = compute_cycles(&c, &g, Format::Depth, 4);
+        // Per engine: oc 16 → 1 unit step; K = 9·64 → 9·4 = 36 dot cycles.
+        assert_eq!(cost.mac_cycles, 16 * 16 * 36);
+        let util = g.macs() as f64 / 4.0 / (cost.mac_cycles * (16 * 16) as u64) as f64;
+        assert!(util > 0.99, "util={util}");
+    }
+
+    #[test]
+    fn depthwise_is_vector_bound() {
+        let c = cfg();
+        let g = JobGeometry {
+            out_h: 16,
+            out_w: 16,
+            out_c: 64,
+            in_c: 1,
+            filter_h: 3,
+            filter_w: 3,
+            depthwise: true,
+            elem_bytes: 1,
+        };
+        let cost = compute_cycles(&c, &g, Format::Depth, 4);
+        // 9-long dots pad to one 16-long vector cycle: 9/16 utilization.
+        let macs_per_cyc = (c.n * c.m) as u64;
+        let util = cost.utilization(g.macs() / 4, macs_per_cyc);
+        assert!(util < 0.60, "depthwise util should collapse, got {util}");
+    }
+
+    #[test]
+    fn shallow_layer_prefers_line_parallelism() {
+        let c = cfg();
+        // 8 output channels over 4 engines: depth parallelism strands MACs.
+        let g = dense(64, 64, 8, 3, 3);
+        let depth = compute_cycles(&c, &g, Format::Depth, 4).total();
+        let line = compute_cycles(&c, &g, Format::Line, 4).total();
+        assert!(
+            line < depth,
+            "line ({line}) should beat depth ({depth}) on shallow layers"
+        );
+    }
+
+    #[test]
+    fn deep_layer_prefers_depth_parallelism_bus_wise() {
+        let c = cfg();
+        // Many channels, few lines: depth splits channels across engines.
+        let g = dense(4, 4, 512, 512, 1);
+        let depth = compute_cycles(&c, &g, Format::Depth, 4);
+        let line = compute_cycles(&c, &g, Format::Line, 4);
+        // Line parallelism must broadcast ALL params to each engine: its
+        // bus traffic is ~4× higher here.
+        assert!(depth.bus_cycles < line.bus_cycles);
+        // And with only 4 lines, line parallelism pads rows per engine.
+        assert!(depth.total() <= line.total());
+    }
+
+    #[test]
+    fn int16_doubles_mac_cycles() {
+        let c = cfg();
+        let g8 = dense(8, 8, 32, 32, 3);
+        let g16 = JobGeometry { elem_bytes: 2, ..g8 };
+        let c8 = compute_cycles(&c, &g8, Format::Depth, 1);
+        let c16 = compute_cycles(&c, &g16, Format::Depth, 1);
+        assert_eq!(c16.mac_cycles, 2 * c8.mac_cycles);
+    }
+
+    #[test]
+    fn overhead_included_in_total() {
+        let c = cfg();
+        let g = dense(1, 1, 1, 1, 1);
+        let cost = compute_cycles(&c, &g, Format::Depth, 1);
+        assert!(cost.total() >= c.job_overhead_cycles);
+    }
+}

@@ -1,0 +1,147 @@
+//! Data-mover (DMA) latency model: DDR↔TCM and TCM↔TCM transfers with
+//! multi-dimensional strided access (Sec. III-C "Controller and Data
+//! Movement").
+
+use super::config::NeutronConfig;
+
+/// Kind of a data-transfer job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TransferKind {
+    /// DRAM → TCM (`fetch` transition of Fig. 5).
+    Fetch,
+    /// TCM → DRAM (`push`).
+    Push,
+    /// TCM → TCM rearrangement (`l-copy`: expansion to line-parallel
+    /// format, halo duplication across banks).
+    LCopy,
+    /// DRAM → TCM directly in line-parallel format (`l-fetch`).
+    LFetch,
+}
+
+impl TransferKind {
+    /// Does this transfer consume DDR bandwidth?
+    pub fn uses_ddr(self) -> bool {
+        matches!(self, TransferKind::Fetch | TransferKind::Push | TransferKind::LFetch)
+    }
+}
+
+/// One data-transfer job.
+#[derive(Debug, Clone, Copy)]
+pub struct Transfer {
+    pub kind: TransferKind,
+    pub bytes: u64,
+    /// Number of separate strided descriptors (dimension count splits):
+    /// each adds a descriptor-setup overhead.
+    pub descriptors: u32,
+}
+
+impl Transfer {
+    pub fn new(kind: TransferKind, bytes: u64) -> Self {
+        Self { kind, bytes, descriptors: 1 }
+    }
+
+    pub fn with_descriptors(mut self, d: u32) -> Self {
+        self.descriptors = d.max(1);
+        self
+    }
+
+    /// Latency in core cycles on `cfg`.
+    ///
+    /// DDR transfers are bound by DDR bandwidth; TCM↔TCM copies run at one
+    /// bus word per cycle per direction. Every descriptor adds a fixed
+    /// setup cost; outstanding-transaction support means back-to-back
+    /// descriptors pipeline (setup overlaps the previous burst), so setup
+    /// contributes only when larger than the burst itself.
+    pub fn cycles(&self, cfg: &NeutronConfig) -> u64 {
+        let setup_per_desc = 64u64;
+        let stream = if self.kind.uses_ddr() {
+            (self.bytes as f64 / cfg.ddr_bytes_per_cycle()).ceil() as u64
+        } else {
+            // TCM-to-TCM: read + write through the multilayer bus; the DMA
+            // moves one word per cycle.
+            self.bytes.div_ceil(cfg.bus_bytes as u64)
+        };
+        let per_desc_bytes = self.bytes / self.descriptors as u64;
+        let per_desc_stream = if self.kind.uses_ddr() {
+            (per_desc_bytes as f64 / cfg.ddr_bytes_per_cycle()).ceil() as u64
+        } else {
+            per_desc_bytes.div_ceil(cfg.bus_bytes as u64)
+        };
+        let exposed_setup = if per_desc_stream >= setup_per_desc {
+            setup_per_desc // only the first descriptor's setup is exposed
+        } else {
+            setup_per_desc * self.descriptors as u64
+        };
+        stream + exposed_setup + cfg.job_overhead_cycles
+    }
+}
+
+/// Aggregate DDR-traffic accountant (the δ·N_DM term of Eq. (8) penalizes
+/// hidden-but-bandwidth-consuming transfers; the simulator also uses this
+/// to report DDR bytes per inference).
+#[derive(Debug, Default, Clone)]
+pub struct DdrTraffic {
+    pub fetch_bytes: u64,
+    pub push_bytes: u64,
+    pub transfers: u64,
+}
+
+impl DdrTraffic {
+    pub fn record(&mut self, t: &Transfer) {
+        if t.kind.uses_ddr() {
+            self.transfers += 1;
+            match t.kind {
+                TransferKind::Push => self.push_bytes += t.bytes,
+                _ => self.fetch_bytes += t.bytes,
+            }
+        }
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.fetch_bytes + self.push_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::config::NeutronConfig;
+
+    #[test]
+    fn ddr_transfer_bound_by_bandwidth() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let t = Transfer::new(TransferKind::Fetch, 120_000);
+        // 120 kB at 12 B/cycle = 10k cycles + overheads.
+        let c = t.cycles(&cfg);
+        assert!(c >= 10_000 && c < 11_000, "cycles={c}");
+    }
+
+    #[test]
+    fn tcm_copy_runs_at_bus_speed() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let t = Transfer::new(TransferKind::LCopy, 16 * 1024);
+        let c = t.cycles(&cfg);
+        // 16 kB at 16 B/cycle = 1024 cycles + overheads.
+        assert!(c >= 1024 && c < 1500, "cycles={c}");
+    }
+
+    #[test]
+    fn many_small_descriptors_expose_setup() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let few = Transfer::new(TransferKind::Fetch, 4096).with_descriptors(1);
+        let many = Transfer::new(TransferKind::Fetch, 4096).with_descriptors(64);
+        assert!(many.cycles(&cfg) > few.cycles(&cfg));
+    }
+
+    #[test]
+    fn traffic_accounting() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let _ = cfg;
+        let mut acc = DdrTraffic::default();
+        acc.record(&Transfer::new(TransferKind::Fetch, 100));
+        acc.record(&Transfer::new(TransferKind::Push, 50));
+        acc.record(&Transfer::new(TransferKind::LCopy, 999)); // not DDR
+        assert_eq!(acc.total_bytes(), 150);
+        assert_eq!(acc.transfers, 2);
+    }
+}

@@ -1,0 +1,13 @@
+//! Architecture model of the eIQ Neutron NPU subsystem (Sec. III): core
+//! dot-product-array cycle model, TCM banks + V2P table, DMA latency model,
+//! and the subsystem configuration (N, M, A, W_C, cores, TCM, DDR).
+
+pub mod config;
+pub mod core;
+pub mod dma;
+pub mod tcm;
+
+pub use config::NeutronConfig;
+pub use core::{compute_cycles, ComputeCost, Format, JobGeometry};
+pub use dma::{DdrTraffic, Transfer, TransferKind};
+pub use tcm::{Bank, BankOccupancy, V2pTable};

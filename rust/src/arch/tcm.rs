@@ -1,0 +1,169 @@
+//! Tightly-coupled memory model: non-arbitrated banks with a
+//! virtual-to-physical (V2P) translation table (Sec. III-C).
+//!
+//! The compiler's allocation pass assigns tiles to *virtual* bank ranges;
+//! the V2P table remaps virtual banks to physical banks between jobs (in
+//! idle mode) so the compute engines always see contiguous data. This
+//! module provides the table the coordinator updates at runtime and the
+//! conflict checks the tests/simulator use to verify bank exclusivity.
+
+use super::config::NeutronConfig;
+
+/// Identifier of a virtual or physical bank.
+pub type Bank = usize;
+
+/// The V2P translation table: `virt → phys`, a bijection over banks.
+#[derive(Debug, Clone)]
+pub struct V2pTable {
+    map: Vec<Bank>,
+}
+
+impl V2pTable {
+    /// Identity mapping over `banks` banks.
+    pub fn identity(banks: usize) -> Self {
+        Self { map: (0..banks).collect() }
+    }
+
+    pub fn banks(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Physical bank backing a virtual bank.
+    pub fn translate(&self, virt: Bank) -> Bank {
+        self.map[virt]
+    }
+
+    /// Remap a set of virtual banks to new physical banks (idle-mode V2P
+    /// update). Panics if the result is not a bijection — the hardware
+    /// table cannot alias two virtual banks to one physical bank.
+    pub fn remap(&mut self, updates: &[(Bank, Bank)]) {
+        for &(v, p) in updates {
+            self.map[v] = p;
+        }
+        let mut seen = vec![false; self.map.len()];
+        for &p in &self.map {
+            assert!(!seen[p], "V2P update aliases physical bank {p}");
+            seen[p] = true;
+        }
+    }
+
+    /// Swap the physical backing of two virtual banks (the common update:
+    /// making a freshly-written tensor appear contiguous).
+    pub fn swap(&mut self, a: Bank, b: Bank) {
+        self.map.swap(a, b);
+    }
+}
+
+/// Occupancy tracker over physical banks for one timestep — used by the
+/// simulator to verify the compiler's bank-exclusivity guarantees (a
+/// violated claim means a real-hardware bus conflict, so it panics in
+/// checked mode rather than silently serializing).
+#[derive(Debug, Clone)]
+pub struct BankOccupancy {
+    /// Owner tag per bank (None = free).
+    owners: Vec<Option<u32>>,
+}
+
+impl BankOccupancy {
+    pub fn new(cfg: &NeutronConfig) -> Self {
+        Self { owners: vec![None; cfg.tcm_banks] }
+    }
+
+    /// Claim `banks` for `owner` (a tensor/tile id). Returns false if any
+    /// bank is already held by a different owner.
+    pub fn claim(&mut self, owner: u32, banks: impl IntoIterator<Item = Bank>) -> bool {
+        let banks: Vec<Bank> = banks.into_iter().collect();
+        if banks
+            .iter()
+            .any(|&b| self.owners[b].map_or(false, |o| o != owner))
+        {
+            return false;
+        }
+        for b in banks {
+            self.owners[b] = Some(owner);
+        }
+        true
+    }
+
+    /// Release every bank held by `owner`.
+    pub fn release(&mut self, owner: u32) {
+        for o in &mut self.owners {
+            if *o == Some(owner) {
+                *o = None;
+            }
+        }
+    }
+
+    /// Number of free banks.
+    pub fn free(&self) -> usize {
+        self.owners.iter().filter(|o| o.is_none()).count()
+    }
+
+    /// Find `count` contiguous free banks (first-fit), if any.
+    pub fn find_contiguous(&self, count: usize) -> Option<Bank> {
+        let mut run = 0;
+        for (i, o) in self.owners.iter().enumerate() {
+            if o.is_none() {
+                run += 1;
+                if run == count {
+                    return Some(i + 1 - count);
+                }
+            } else {
+                run = 0;
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::config::NeutronConfig;
+
+    #[test]
+    fn v2p_identity_and_swap() {
+        let mut t = V2pTable::identity(8);
+        assert_eq!(t.translate(3), 3);
+        t.swap(1, 5);
+        assert_eq!(t.translate(1), 5);
+        assert_eq!(t.translate(5), 1);
+    }
+
+    #[test]
+    fn v2p_remap_keeps_bijection() {
+        let mut t = V2pTable::identity(4);
+        t.remap(&[(0, 2), (2, 0)]);
+        assert_eq!(t.translate(0), 2);
+        assert_eq!(t.translate(2), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "aliases")]
+    fn v2p_detects_aliasing() {
+        let mut t = V2pTable::identity(4);
+        t.remap(&[(0, 1)]); // two virtual banks now point at phys 1
+    }
+
+    #[test]
+    fn occupancy_claims_and_conflicts() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let mut occ = BankOccupancy::new(&cfg);
+        assert!(occ.claim(1, 0..4));
+        assert!(!occ.claim(2, 3..6), "bank 3 is taken");
+        assert!(occ.claim(1, 3..6), "same owner may extend");
+        occ.release(1);
+        assert_eq!(occ.free(), cfg.tcm_banks);
+    }
+
+    #[test]
+    fn contiguous_first_fit() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let mut occ = BankOccupancy::new(&cfg);
+        occ.claim(1, 2..5);
+        assert_eq!(occ.find_contiguous(2), Some(0));
+        assert_eq!(occ.find_contiguous(5), Some(5));
+        occ.claim(2, 0..2);
+        assert_eq!(occ.find_contiguous(1), Some(5));
+    }
+}

@@ -1,0 +1,16 @@
+//! Baseline accelerator models for the Table I/III comparisons: an
+//! Ethos-class embedded NPU (eNPU-A/B), a Hailo-class 11-TOPS vision-SoC
+//! NPU (iNPU), and a 4×Cortex-A55 CPU cluster (Gen-AI claim, Sec. VI).
+//!
+//! These replace the vendor toolchains/model zoos the paper measured; see
+//! DESIGN.md §2 for the substitution rationale. Parameters are calibrated
+//! so the *shape* of Table III (who wins where, rough factors) reproduces —
+//! absolute numbers are not the claim.
+
+pub mod cpu;
+pub mod enpu;
+pub mod inpu;
+
+pub use cpu::CpuConfig;
+pub use enpu::{EnpuConfig, EnpuReport};
+pub use inpu::{InpuConfig, InpuReport};

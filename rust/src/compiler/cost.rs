@@ -1,0 +1,198 @@
+//! Layer-level latency estimation used by format selection and the
+//! scheduling objective.
+//!
+//! Bridges the IR to the architecture cycle model: for an op (or an H-tile
+//! of an op) under a given spatial format, estimate compute cycles, the
+//! DMA cost of its operand/result movement, and the pre-compute TCM-to-TCM
+//! copies line parallelism needs (Sec. IV-A).
+
+use crate::arch::{compute_cycles, ComputeCost, Format, JobGeometry, NeutronConfig, Transfer, TransferKind};
+use crate::ir::{Graph, Op, OpKind};
+
+/// Static per-op facts the compiler passes share.
+#[derive(Debug, Clone)]
+pub struct OpProfile {
+    /// Output geometry (full layer, before temporal tiling).
+    pub out_h: usize,
+    pub out_w: usize,
+    pub out_c: usize,
+    pub in_c: usize,
+    /// Filter height (drives line-parallel halos).
+    pub filter_h: usize,
+    pub stride_h: usize,
+    /// Parameter bytes (weights + bias) fetched from DRAM.
+    pub param_bytes: u64,
+    /// Input activation bytes (sum over activation inputs, padded C).
+    pub input_bytes: u64,
+    /// Output activation bytes (padded C).
+    pub output_bytes: u64,
+    /// Runs on the dot-product array (vs pure data movement).
+    pub is_compute: bool,
+    pub depthwise: bool,
+}
+
+impl OpProfile {
+    /// Extract from the graph.
+    pub fn of(graph: &Graph, op: &Op, cfg: &NeutronConfig) -> Self {
+        let out = graph.tensor(op.output);
+        let (out_h, out_w, out_c) = (out.shape.h(), out.shape.w(), out.shape.c());
+        let in_c = op
+            .inputs
+            .first()
+            .map(|&t| graph.tensor(t).shape.c())
+            .unwrap_or(1);
+        let (filter_h, stride_h) = match &op.kind {
+            OpKind::Conv2d { geom, .. } | OpKind::DepthwiseConv2d { geom } => {
+                (geom.filter_h, geom.stride_h)
+            }
+            OpKind::Pool { size, stride, .. } => (*size, *stride),
+            _ => (1, 1),
+        };
+        let param_bytes = op
+            .params
+            .map(|p| graph.tensor(p).size_bytes() as u64)
+            .unwrap_or(0);
+        let input_bytes: u64 = op
+            .inputs
+            .iter()
+            .map(|&t| graph.tensor(t).padded_size_bytes(cfg.bus_bytes) as u64)
+            .sum();
+        let output_bytes = out.padded_size_bytes(cfg.bus_bytes) as u64;
+        Self {
+            out_h,
+            out_w,
+            out_c,
+            in_c,
+            filter_h,
+            stride_h,
+            param_bytes,
+            input_bytes,
+            output_bytes,
+            is_compute: op.is_compute(),
+            depthwise: op.is_depthwise_style(),
+        }
+    }
+
+    /// Compute-job cost of an H-slice of this op (`rows` output rows) under
+    /// `format`, lockstepped across all cores.
+    pub fn tile_compute_cost(
+        &self,
+        graph_op: &Op,
+        rows: usize,
+        cfg: &NeutronConfig,
+        format: Format,
+    ) -> ComputeCost {
+        let geom = JobGeometry::from_op(graph_op, rows, self.out_w, self.out_c, self.in_c);
+        compute_cycles(cfg, &geom, format, cfg.cores)
+    }
+
+    /// Bytes of the pre-compute TCM-to-TCM halo copy line parallelism
+    /// requires when the kernel height exceeds one (Sec. IV-A): the input
+    /// windows of adjacent engines overlap by `filter_h - 1` rows, and the
+    /// overlapping rows must be duplicated into each engine's banks.
+    pub fn line_halo_bytes(&self, rows: usize, cfg: &NeutronConfig) -> u64 {
+        if self.filter_h <= 1 {
+            return 0;
+        }
+        let halo_rows = (self.filter_h - 1) * (cfg.cores - 1);
+        let row_bytes = self.out_w * self.in_c.max(1);
+        (halo_rows.min(rows * self.stride_h) * row_bytes) as u64
+    }
+
+    /// DMA transfer for fetching this op's parameters.
+    pub fn param_fetch(&self) -> Transfer {
+        Transfer::new(TransferKind::Fetch, self.param_bytes)
+    }
+}
+
+/// Latency estimate for a whole layer executed in isolation: compute plus
+/// exposed parameter fetch (inputs assumed resident — the scheduler refines
+/// this; format selection only needs a consistent relative measure).
+pub fn layer_latency_cycles(
+    graph: &Graph,
+    op: &Op,
+    cfg: &NeutronConfig,
+    format: Format,
+) -> u64 {
+    let p = OpProfile::of(graph, op, cfg);
+    if !p.is_compute {
+        // Pure data movement: TCM-to-TCM rearrangement cost.
+        return Transfer::new(TransferKind::LCopy, p.output_bytes).cycles(cfg);
+    }
+    let compute = p.tile_compute_cost(op, p.out_h, cfg, format).total();
+    let halo = if format == Format::Line {
+        Transfer::new(TransferKind::LCopy, p.line_halo_bytes(p.out_h, cfg)).cycles(cfg)
+    } else {
+        0
+    };
+    compute + halo
+}
+
+/// Cost of switching the stored format of a tensor between two ops (the
+/// "extra operators in the library" for format conversion, Sec. IV-A): a
+/// full TCM-to-TCM rewrite of the tensor.
+pub fn format_switch_cycles(bytes: u64, cfg: &NeutronConfig) -> u64 {
+    Transfer::new(TransferKind::LCopy, bytes).cycles(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Activation, ConvGeometry, GraphBuilder, Padding};
+
+    fn graph_with_conv(h: usize, c_in: usize, c_out: usize, k: usize) -> Graph {
+        let mut b = GraphBuilder::with_input("t", h, h, c_in);
+        b.conv("c", c_out, ConvGeometry::square(k, 1, Padding::Same), Activation::Relu);
+        b.finish()
+    }
+
+    #[test]
+    fn profile_extracts_geometry() {
+        let g = graph_with_conv(32, 16, 64, 3);
+        let cfg = NeutronConfig::flagship_2tops();
+        let op = &g.ops[0];
+        let p = OpProfile::of(&g, op, &cfg);
+        assert_eq!((p.out_h, p.out_w, p.out_c, p.in_c), (32, 32, 64, 16));
+        assert_eq!(p.filter_h, 3);
+        assert_eq!(p.param_bytes, 64 * 3 * 3 * 16);
+        assert!(p.is_compute);
+    }
+
+    #[test]
+    fn halo_zero_for_1x1() {
+        let g = graph_with_conv(32, 16, 64, 1);
+        let cfg = NeutronConfig::flagship_2tops();
+        let p = OpProfile::of(&g, &g.ops[0], &cfg);
+        assert_eq!(p.line_halo_bytes(32, &cfg), 0);
+    }
+
+    #[test]
+    fn halo_grows_with_kernel_and_cores() {
+        let g = graph_with_conv(32, 16, 64, 3);
+        let cfg = NeutronConfig::flagship_2tops();
+        let p = OpProfile::of(&g, &g.ops[0], &cfg);
+        // (3-1)·(4-1) = 6 rows of 32·16 bytes
+        assert_eq!(p.line_halo_bytes(32, &cfg), 6 * 32 * 16);
+    }
+
+    #[test]
+    fn line_beats_depth_for_shallow_wide_layer() {
+        // Stem-like layer: 3 input channels, 16 outputs, big resolution.
+        let g = graph_with_conv(112, 3, 16, 3);
+        let cfg = NeutronConfig::flagship_2tops();
+        let op = &g.ops[0];
+        let line = layer_latency_cycles(&g, op, &cfg, Format::Line);
+        let depth = layer_latency_cycles(&g, op, &cfg, Format::Depth);
+        assert!(line < depth, "line={line} depth={depth}");
+    }
+
+    #[test]
+    fn depth_beats_line_for_deep_narrow_layer() {
+        let g = graph_with_conv(7, 512, 512, 1);
+        let cfg = NeutronConfig::flagship_2tops();
+        let op = &g.ops[0];
+        let line = layer_latency_cycles(&g, op, &cfg, Format::Line);
+        let depth = layer_latency_cycles(&g, op, &cfg, Format::Depth);
+        assert!(depth < line, "line={line} depth={depth}");
+    }
+}

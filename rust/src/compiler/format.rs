@@ -1,0 +1,185 @@
+//! Format selection (Sec. IV-A): per layer, choose depth parallelism or
+//! line parallelism, accounting for the cost of switching formats between
+//! consecutive layers.
+//!
+//! "The compiler chooses the most suitable format for each layer of the NN
+//! by estimating execution latencies and taking into account the overhead
+//! of switching formats between consecutive layers." — modeled as a
+//! shortest-path (Viterbi) pass over the topological layer order: state =
+//! stored format of the op's output, edge cost = layer latency under the
+//! consumer's format + conversion cost when the producer's stored format
+//! differs.
+
+use std::collections::HashMap;
+
+use super::cost::{format_switch_cycles, layer_latency_cycles, OpProfile};
+use crate::arch::{Format, NeutronConfig};
+use crate::ir::{Graph, OpId, TensorId, TensorKind};
+
+/// Chosen format per op, plus the estimated per-op cycles that drove the
+/// choice (reused by scheduling as tick compute latencies).
+#[derive(Debug, Clone)]
+pub struct FormatPlan {
+    pub per_op: HashMap<OpId, Format>,
+    pub est_cycles: HashMap<OpId, u64>,
+    /// Ops whose *input* needs a format conversion (producer stored the
+    /// other format) — lowered to l-copy jobs by the scheduler.
+    pub conversions: Vec<(OpId, TensorId, u64)>,
+}
+
+impl FormatPlan {
+    pub fn format_of(&self, op: OpId) -> Format {
+        self.per_op.get(&op).copied().unwrap_or(Format::Depth)
+    }
+}
+
+/// Run format selection over the graph.
+///
+/// Dynamic program over topological order. For ops with multiple activation
+/// inputs the dominant (first) input's format drives the conversion cost —
+/// element-wise ops are format-agnostic as long as both inputs agree, which
+/// the plan enforces by converting mismatched secondary inputs too.
+pub fn select_formats(graph: &Graph, cfg: &NeutronConfig) -> FormatPlan {
+    let order = graph.topo_order();
+    // best[op][format] = (cumulative cycles, predecessor format choice)
+    let mut best: HashMap<(OpId, Format), (u64, Option<Format>)> = HashMap::new();
+    // Stored format of each tensor under a given hypothesis is the format
+    // of its producing op; graph inputs/parameters are stored depth-major
+    // (HWC fragmented by C), the natural DRAM layout.
+    let producer_of: HashMap<TensorId, OpId> =
+        graph.ops.iter().map(|o| (o.output, o.id)).collect();
+
+    for &oid in &order {
+        let op = graph.op(oid);
+        for fmt in [Format::Depth, Format::Line] {
+            let own = layer_latency_cycles(graph, op, cfg, fmt);
+            // Conversion cost: for each activation input whose producer's
+            // best stored format differs from `fmt`.
+            let mut total_in_cost = 0u64;
+            let mut pred_fmt = None;
+            for &inp in &op.inputs {
+                let t = graph.tensor(inp);
+                if t.kind == TensorKind::Parameter {
+                    continue;
+                }
+                match producer_of.get(&inp) {
+                    Some(&pid) => {
+                        // Choose the producer hypothesis minimizing
+                        // cumulative cost + conversion.
+                        let bytes = t.padded_size_bytes(cfg.bus_bytes) as u64;
+                        let mut best_choice = u64::MAX;
+                        for pfmt in [Format::Depth, Format::Line] {
+                            if let Some(&(c, _)) = best.get(&(pid, pfmt)) {
+                                let conv = if pfmt != fmt && graph.op(pid).is_compute() {
+                                    format_switch_cycles(bytes, cfg)
+                                } else {
+                                    0
+                                };
+                                if c + conv < best_choice {
+                                    best_choice = c + conv;
+                                    pred_fmt = Some(pfmt);
+                                }
+                            }
+                        }
+                        if best_choice != u64::MAX {
+                            total_in_cost = total_in_cost.saturating_add(best_choice);
+                        }
+                    }
+                    None => {
+                        // Graph input: stored depth-major; converting to
+                        // line costs one rewrite.
+                        if fmt == Format::Line {
+                            let bytes = t.padded_size_bytes(cfg.bus_bytes) as u64;
+                            total_in_cost += format_switch_cycles(bytes, cfg);
+                        }
+                    }
+                }
+            }
+            let cum = own + total_in_cost;
+            let entry = best.entry((oid, fmt)).or_insert((u64::MAX, None));
+            if cum < entry.0 {
+                *entry = (cum, pred_fmt);
+            }
+        }
+    }
+
+    // Commit: per op pick the cheaper hypothesis; derive conversions.
+    let mut per_op = HashMap::new();
+    let mut est_cycles = HashMap::new();
+    let mut conversions = Vec::new();
+    for &oid in &order {
+        let op = graph.op(oid);
+        let d = best[&(oid, Format::Depth)].0;
+        let l = best[&(oid, Format::Line)].0;
+        let fmt = if l < d { Format::Line } else { Format::Depth };
+        per_op.insert(oid, fmt);
+        est_cycles.insert(oid, layer_latency_cycles(graph, op, cfg, fmt));
+    }
+    // Second sweep: record conversions where committed producer/consumer
+    // formats disagree.
+    for &oid in &order {
+        let op = graph.op(oid);
+        let fmt = per_op[&oid];
+        for &inp in &op.inputs {
+            let t = graph.tensor(inp);
+            if t.kind == TensorKind::Parameter {
+                continue;
+            }
+            if let Some(&pid) = producer_of.get(&inp) {
+                if graph.op(pid).is_compute() && per_op[&pid] != fmt {
+                    let bytes = t.padded_size_bytes(cfg.bus_bytes) as u64;
+                    conversions.push((oid, inp, format_switch_cycles(bytes, cfg)));
+                }
+            }
+        }
+    }
+    FormatPlan { per_op, est_cycles, conversions }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Activation, ConvGeometry, GraphBuilder, Padding};
+    use crate::zoo;
+
+    #[test]
+    fn stem_layers_get_line_parallelism() {
+        // MobileNetV1: the 3-channel stem cannot fill 4 engines by depth.
+        let g = zoo::mobilenet::mobilenet_v1();
+        let cfg = NeutronConfig::flagship_2tops();
+        let plan = select_formats(&g, &cfg);
+        let stem = g.ops.iter().find(|o| o.name == "stem").unwrap();
+        assert_eq!(plan.format_of(stem.id), Format::Line);
+    }
+
+    #[test]
+    fn deep_tail_layers_get_depth_parallelism() {
+        let g = zoo::mobilenet::mobilenet_v1();
+        let cfg = NeutronConfig::flagship_2tops();
+        let plan = select_formats(&g, &cfg);
+        // The 1024-channel pointwise near the end: depth parallelism.
+        let tail = g.ops.iter().find(|o| o.name == "b12.pw").unwrap();
+        assert_eq!(plan.format_of(tail.id), Format::Depth);
+    }
+
+    #[test]
+    fn every_compute_op_has_a_format_and_cycles() {
+        let g = zoo::mobilenet::mobilenet_v2();
+        let cfg = NeutronConfig::flagship_2tops();
+        let plan = select_formats(&g, &cfg);
+        for op in &g.ops {
+            assert!(plan.per_op.contains_key(&op.id), "{} missing", op.name);
+            assert!(plan.est_cycles[&op.id] > 0, "{} zero cycles", op.name);
+        }
+    }
+
+    #[test]
+    fn single_layer_graph_picks_cheaper_format() {
+        let mut b = GraphBuilder::with_input("one", 64, 64, 3);
+        b.conv("c", 8, ConvGeometry::square(3, 1, Padding::Same), Activation::Relu);
+        let g = b.finish();
+        let cfg = NeutronConfig::flagship_2tops();
+        let plan = select_formats(&g, &cfg);
+        assert_eq!(plan.format_of(g.ops[0].id), Format::Line);
+    }
+}

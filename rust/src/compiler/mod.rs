@@ -1,0 +1,18 @@
+//! Compiler mid-end (Sec. IV): format selection, temporal tiling + layer
+//! fusion (CP, Eq. 9–12), DAE scheduling (CP, Eq. 1–8), and memory
+//! allocation (CP, Sec. IV-D), with the problem partitioning that gives the
+//! compile-time/inference-time trade-off of Table II.
+
+pub mod allocation;
+pub mod cost;
+pub mod format;
+pub mod pipeline;
+pub mod scheduling;
+pub mod tiling;
+
+pub use allocation::{allocate, Allocation, Placement};
+pub use cost::{layer_latency_cycles, OpProfile};
+pub use format::{select_formats, FormatPlan};
+pub use pipeline::{compile, Compiled, CompileOptions};
+pub use scheduling::{schedule, Schedule, SchedulingOptions, Tick};
+pub use tiling::{tile_graph, ComputeStep, Tile, TileId, TiledProgram, TilingOptions};

@@ -1,0 +1,160 @@
+//! End-to-end compilation driver: graph → formats → tiles → schedule →
+//! allocation → job program, with the compile/inference-time metrics
+//! Table II reports.
+
+use std::time::Instant;
+
+use super::allocation::{allocate, Allocation};
+use super::format::{select_formats, FormatPlan};
+use super::scheduling::{schedule, Schedule, SchedulingOptions};
+use super::tiling::{tile_graph, TiledProgram, TilingOptions};
+use crate::arch::NeutronConfig;
+use crate::cp::SearchConfig;
+use crate::ir::Graph;
+
+/// Compilation options — the Table II matrix is spanned by the two
+/// partitioning switches.
+#[derive(Debug, Clone, Default)]
+pub struct CompileOptions {
+    pub tiling: TilingOptions,
+    pub scheduling: SchedulingOptions,
+    pub allocation_solver: SearchConfig,
+}
+
+impl CompileOptions {
+    /// Both partitionings on (production default, "Both" row).
+    pub fn default_partitioned() -> Self {
+        Self::default()
+    }
+
+    /// Solver budget for monolithic CPs: the whole-network problem gets a
+    /// much larger budget, mirroring the paper's 3480-s "no partitioning"
+    /// compile (our B&B at this budget still may not close the gap a
+    /// commercial CP solver would — see EXPERIMENTS.md Table II notes).
+    fn monolithic_solver() -> SearchConfig {
+        SearchConfig { time_limit_ms: Some(20_000), ..Default::default() }
+    }
+
+    /// "No partitioning" row: monolithic optimization + scheduling CPs.
+    pub fn monolithic() -> Self {
+        Self {
+            tiling: TilingOptions { partition: false, solver: Self::monolithic_solver() },
+            scheduling: SchedulingOptions {
+                partition: false,
+                solver: Self::monolithic_solver(),
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    /// "Only optimizations" row: tiling/fusion partitioned, scheduling not.
+    pub fn partition_optimizations_only() -> Self {
+        Self {
+            tiling: TilingOptions { partition: true, ..Default::default() },
+            scheduling: SchedulingOptions {
+                partition: false,
+                solver: Self::monolithic_solver(),
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    /// "Only scheduling" row.
+    pub fn partition_scheduling_only() -> Self {
+        Self {
+            tiling: TilingOptions { partition: false, solver: Self::monolithic_solver() },
+            scheduling: SchedulingOptions { partition: true, ..Default::default() },
+            ..Default::default()
+        }
+    }
+}
+
+/// Compiled artifact: everything the coordinator/simulator needs.
+#[derive(Debug, Clone)]
+pub struct Compiled {
+    pub formats: FormatPlan,
+    pub program: TiledProgram,
+    pub schedule: Schedule,
+    pub allocation: Allocation,
+    /// Wall-clock compilation time (ms) — Table II's x-axis.
+    pub compile_ms: u64,
+    /// Estimated end-to-end inference latency (ms) on the target config.
+    pub inference_ms: f64,
+}
+
+impl Compiled {
+    /// Latency·TOPS product (Eq. 13) on `cfg`.
+    pub fn ltp(&self, cfg: &NeutronConfig) -> f64 {
+        self.inference_ms * cfg.peak_tops()
+    }
+
+    /// Effective TOPS: executed ops / latency (Table I's metric).
+    pub fn effective_tops(&self, graph: &Graph) -> f64 {
+        let ops = 2.0 * graph.total_macs() as f64;
+        ops / (self.inference_ms * 1e-3) / 1e12
+    }
+}
+
+/// Compile `graph` for `cfg`.
+pub fn compile(graph: &Graph, cfg: &NeutronConfig, opts: &CompileOptions) -> Compiled {
+    let t0 = Instant::now();
+    let formats = select_formats(graph, cfg);
+    let program = tile_graph(graph, &formats, cfg, &opts.tiling);
+    let sched = schedule(&program, cfg, &opts.scheduling);
+    let allocation = allocate(&program, &sched, cfg, &opts.allocation_solver);
+    let compile_ms = t0.elapsed().as_millis() as u64;
+    let inference_ms = cfg.cycles_to_ms(sched.total_cycles());
+    Compiled {
+        formats,
+        program,
+        schedule: sched,
+        allocation,
+        compile_ms,
+        inference_ms,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zoo::{self, ModelId};
+
+    #[test]
+    fn compiles_mobilenet_v2_end_to_end() {
+        let g = zoo::mobilenet::mobilenet_v2();
+        let cfg = NeutronConfig::flagship_2tops();
+        let c = compile(&g, &cfg, &CompileOptions::default_partitioned());
+        assert!(c.inference_ms > 0.0);
+        assert!(c.inference_ms < 100.0, "V2 should be ~1 ms, got {}", c.inference_ms);
+        assert!(!c.allocation.placements.is_empty());
+    }
+
+    #[test]
+    fn effective_tops_below_peak() {
+        let g = zoo::mobilenet::mobilenet_v1();
+        let cfg = NeutronConfig::flagship_2tops();
+        let c = compile(&g, &cfg, &CompileOptions::default_partitioned());
+        let eff = c.effective_tops(&g);
+        assert!(eff > 0.0 && eff <= cfg.peak_tops(), "eff={eff}");
+    }
+
+    #[test]
+    fn ltp_scales_with_tops() {
+        let g = zoo::mobilenet::mobilenet_v2();
+        let cfg = NeutronConfig::flagship_2tops();
+        let c = compile(&g, &cfg, &CompileOptions::default_partitioned());
+        assert!((c.ltp(&cfg) - c.inference_ms * cfg.peak_tops()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn all_models_compile() {
+        let cfg = NeutronConfig::flagship_2tops();
+        for id in [ModelId::MobileNetV3Min, ModelId::EfficientNetLite0, ModelId::ResNet50V1] {
+            let g = id.build();
+            let c = compile(&g, &cfg, &CompileOptions::default_partitioned());
+            assert!(c.inference_ms > 0.0, "{id:?}");
+        }
+    }
+}

@@ -1,0 +1,663 @@
+//! DAE scheduling (Sec. IV-B): convert the tiled program into a sequence of
+//! timed ticks, each hosting at most one compute job and any number of
+//! datamover jobs, minimizing `δ·N_DM + Σ_t max(l_DM(t), l_C(t))` (Eq. 8).
+//!
+//! Faithful to the paper's split of concerns: the tile computation *order*
+//! comes from the tiling/fusion pass; scheduling optimizes **memory latency
+//! hiding** under the platform constraints. Tick `t` hosts compute step `t`
+//! (the paper's model admits empty timesteps but eliminates them after
+//! solving, which collapses to this). The CP decides *when*, within a
+//! bounded lookahead window, each data transfer runs:
+//!
+//!   * persistency/dependency (Eq. 1–2) are enforced by construction: a
+//!     fetch candidate range ends strictly before the consuming tick, and a
+//!     residency expression `Σ_{t'≤t} fetch(τ,t')` feeds the capacity
+//!     constraint;
+//!   * bus-conflict constraints (Eq. 3) remove candidate ticks where the
+//!     transferred tile shares banks (same tensor) with a tile the compute
+//!     unit touches;
+//!   * memory constraints (Eq. 7) bound resident banks per tick by C;
+//!   * spills are decided by a Belady-style pre-pass (farthest next use)
+//!     and their *placement* is optimized by the CP — partitioned solving
+//!     loses exactly the cross-window spill freedom the paper describes as
+//!     the partitioning trade-off (Table II).
+
+use std::collections::HashMap;
+
+use super::tiling::{TiledProgram, TileId};
+use crate::arch::{DdrTraffic, NeutronConfig, Transfer, TransferKind};
+use crate::cp::{CpModel, LinExpr, SearchConfig, Status, Var};
+
+/// A scheduled data transfer inside a tick.
+#[derive(Debug, Clone)]
+pub struct ScheduledTransfer {
+    pub tile: TileId,
+    pub kind: TransferKind,
+    pub cycles: u64,
+    pub bytes: u64,
+}
+
+/// One tick: ≤1 compute job + concurrent datamover jobs.
+#[derive(Debug, Clone, Default)]
+pub struct Tick {
+    /// Index into `TiledProgram::steps`.
+    pub compute: Option<usize>,
+    pub transfers: Vec<ScheduledTransfer>,
+    pub compute_cycles: u64,
+    pub dm_cycles: u64,
+}
+
+impl Tick {
+    /// Tick latency: compute and datamover run concurrently (DAE).
+    pub fn latency(&self) -> u64 {
+        self.compute_cycles.max(self.dm_cycles)
+    }
+}
+
+/// The schedule: ticks + aggregate statistics.
+#[derive(Debug, Clone, Default)]
+pub struct Schedule {
+    pub ticks: Vec<Tick>,
+    pub ddr: DdrTraffic,
+    /// Total CP solve wall time (compilation-time metric of Table II).
+    pub solve_ms: u64,
+    /// Number of CP subproblems solved.
+    pub subproblems: usize,
+    /// Total decision variables across subproblems.
+    pub variables: usize,
+}
+
+impl Schedule {
+    /// End-to-end latency in cycles (Σ_t max(l_DM, l_C)).
+    pub fn total_cycles(&self) -> u64 {
+        self.ticks.iter().map(|t| t.latency()).sum()
+    }
+
+    /// Latency with NO latency hiding (monolithic pipeline of Fig. 4:
+    /// every tick serializes datamover after compute) — the Fig. 4
+    /// comparison baseline.
+    pub fn serialized_cycles(&self) -> u64 {
+        self.ticks.iter().map(|t| t.compute_cycles + t.dm_cycles).sum()
+    }
+}
+
+/// Scheduling options (Table II knobs).
+#[derive(Debug, Clone)]
+pub struct SchedulingOptions {
+    /// Partition into fixed-size windows (on) vs one monolithic CP (off).
+    pub partition: bool,
+    /// Steps per window when partitioned.
+    pub window: usize,
+    /// δ: penalty per datamover op in the objective (Eq. 8).
+    pub delta: u64,
+    /// Lookahead ticks for transfer placement when partitioned (the
+    /// monolithic problem gets double — the "complete view" of the paper).
+    pub lookahead: usize,
+    pub solver: SearchConfig,
+}
+
+impl Default for SchedulingOptions {
+    fn default() -> Self {
+        Self {
+            partition: true,
+            window: 16,
+            delta: 8,
+            lookahead: 5,
+            solver: SearchConfig { time_limit_ms: Some(2_000), ..Default::default() },
+        }
+    }
+}
+
+/// A transfer that must be placed in some tick.
+#[derive(Debug, Clone)]
+struct Candidate {
+    tile: TileId,
+    kind: TransferKind,
+    cycles: u64,
+    bytes: u64,
+    banks: usize,
+    /// Inclusive tick range the transfer may occupy.
+    range: (usize, usize),
+    /// While un-issued the tile is resident (push) or not (fetch): fetch
+    /// transfers ADD residency from their tick on; pushes REMOVE it after.
+    adds_residency: bool,
+}
+
+/// Spill pre-pass + transfer enumeration + per-window CP solve.
+pub fn schedule(prog: &TiledProgram, cfg: &NeutronConfig, opts: &SchedulingOptions) -> Schedule {
+    let n = prog.steps.len();
+    if n == 0 {
+        return Schedule::default();
+    }
+
+    // --- Liveness ---
+    let mut first_use: HashMap<TileId, usize> = HashMap::new();
+    let mut last_use: HashMap<TileId, usize> = HashMap::new();
+    let mut produced_at: HashMap<TileId, usize> = HashMap::new();
+    for (si, s) in prog.steps.iter().enumerate() {
+        produced_at.insert(s.out_tile, si);
+        for t in s.in_tiles.iter().chain(s.param_tile.iter()) {
+            first_use.entry(*t).or_insert(si);
+            last_use.insert(*t, si);
+        }
+        last_use.entry(s.out_tile).or_insert(si);
+        first_use.entry(s.out_tile).or_insert(si);
+    }
+
+    // --- Tick layout: tick 0 is a pure-datamover preamble (initial
+    // fetches); compute step `si` runs at tick `si + 1`. ---
+    let n_ticks = n + 1;
+    let tick_of = |si: usize| si + 1;
+
+    // --- Mandatory transfers ---
+    let mut candidates: Vec<Candidate> = Vec::new();
+    // Partitioned windows see a short placement horizon; the monolithic
+    // problem gives every transfer (nearly) the full horizon — this is
+    // exactly the quadratic tiles×timesteps variable growth the paper
+    // describes (Sec. IV-B "Scalability"), and why unpartitioned compiles
+    // are orders of magnitude slower (Table II).
+    let look = if opts.partition { opts.lookahead } else { opts.lookahead.max(32) };
+    let mut add_fetch = |cands: &mut Vec<Candidate>, tile: TileId, use_tick: usize, kind: TransferKind| {
+        let tl = prog.tile(tile);
+        let hi = use_tick.saturating_sub(1);
+        let lo = use_tick.saturating_sub(look).min(hi);
+        // §Perf: large fetches (big weight sets) are split into multiple
+        // DMA descriptors so the scheduler can spread them over several
+        // ticks — a single multi-hundred-µs burst can never hide behind a
+        // tens-of-µs compute tick (this is what lifted ResNet50's
+        // datamover hiding, see EXPERIMENTS.md §Perf).
+        const CHUNK: u64 = 256 * 1024;
+        let chunks = (tl.bytes.div_ceil(CHUNK)).clamp(1, (hi - lo + 1) as u64);
+        let per = tl.bytes / chunks;
+        for c in 0..chunks {
+            let bytes = if c == chunks - 1 { tl.bytes - per * (chunks - 1) } else { per };
+            let t = Transfer::new(kind, bytes);
+            cands.push(Candidate {
+                tile,
+                kind,
+                cycles: t.cycles(cfg),
+                bytes,
+                banks: if c == 0 { tl.banks } else { 0 },
+                range: (lo, hi),
+                adds_residency: c == 0,
+            });
+        }
+    };
+
+    // DRAM-resident tiles (params, graph inputs): fetch before first use.
+    // Line-format consumers fetch directly in line layout (l-fetch).
+    let mut fetched: HashMap<TileId, ()> = HashMap::new();
+    for (si, s) in prog.steps.iter().enumerate() {
+        for t in s.in_tiles.iter().chain(s.param_tile.iter()) {
+            let tl = prog.tile(*t);
+            if tl.starts_in_dram && !fetched.contains_key(t) {
+                fetched.insert(*t, ());
+                let kind = if s.needs_line_expand && s.param_tile != Some(*t) {
+                    TransferKind::LFetch
+                } else {
+                    TransferKind::Fetch
+                };
+                add_fetch(&mut candidates, *t, tick_of(si), kind);
+            }
+        }
+        // Line-parallel expansion of on-chip inputs: halo l-copy right
+        // before the compute tick.
+        if s.needs_line_expand {
+            for &t in &s.in_tiles {
+                let tl = prog.tile(t);
+                if !tl.starts_in_dram {
+                    // Halo bytes ≈ tile bytes scaled by (cores-1)·(fh-1)/rows;
+                    // conservative: 1/8 of the tile.
+                    let bytes = (tl.bytes / 8).max(cfg.bus_bytes as u64);
+                    let tr = Transfer::new(TransferKind::LCopy, bytes);
+                    let hi = tick_of(si).saturating_sub(1);
+                    candidates.push(Candidate {
+                        tile: t,
+                        kind: TransferKind::LCopy,
+                        cycles: tr.cycles(cfg),
+                        bytes,
+                        banks: 0, // expansion reuses the tensor's own banks
+                        range: (hi.saturating_sub(1), hi),
+                        adds_residency: false,
+                    });
+                }
+            }
+        }
+    }
+    // Graph outputs: push after production.
+    for (si, s) in prog.steps.iter().enumerate() {
+        let tl = prog.tile(s.out_tile);
+        if tl.is_graph_output {
+            let tr = Transfer::new(TransferKind::Push, tl.bytes);
+            let lo = (tick_of(si) + 1).min(n_ticks - 1);
+            let hi = (tick_of(si) + look).min(n_ticks - 1);
+            candidates.push(Candidate {
+                tile: s.out_tile,
+                kind: TransferKind::Push,
+                cycles: tr.cycles(cfg),
+                bytes: tl.bytes,
+                banks: tl.banks,
+                range: (lo, hi),
+                adds_residency: false,
+            });
+        }
+    }
+
+    // --- Belady spill pre-pass: determine which activation tiles must
+    // round-trip to DRAM because TCM cannot hold them until their next
+    // use. Adds push+fetch candidate pairs (tick indices = step + 1). ---
+    {
+        let mut resident: Vec<TileId> = Vec::new();
+        let mut resident_banks = 0usize;
+        let cap = cfg.tcm_banks;
+        for (si, s) in prog.steps.iter().enumerate() {
+            let mut need: Vec<TileId> = s.in_tiles.clone();
+            need.push(s.out_tile);
+            if let Some(p) = s.param_tile {
+                need.push(p);
+            }
+            for &t in &need {
+                if !resident.contains(&t) {
+                    resident_banks += prog.tile(t).banks;
+                    resident.push(t);
+                }
+            }
+            // Evict: drop dead tiles first (free), then spill the live tile
+            // with the farthest next use.
+            resident.retain(|&t| {
+                let dead = last_use.get(&t).is_none_or(|&l| l <= si) && !need.contains(&t);
+                if dead {
+                    resident_banks -= prog.tile(t).banks;
+                }
+                !dead
+            });
+            while resident_banks > cap {
+                let victim = resident
+                    .iter()
+                    .filter(|t| !need.contains(t))
+                    .max_by_key(|&&t| next_use_after(prog, &t, si))
+                    .copied();
+                let Some(v) = victim else { break };
+                resident.retain(|&t| t != v);
+                resident_banks -= prog.tile(v).banks;
+                let tl = prog.tile(v);
+                let nu = next_use_after(prog, &v, si);
+                if nu < usize::MAX {
+                    // Activation spill: push now-ish, fetch before next use.
+                    if !tl.starts_in_dram {
+                        let tr = Transfer::new(TransferKind::Push, tl.bytes);
+                        let pt = tick_of(si).min(n_ticks - 1);
+                        candidates.push(Candidate {
+                            tile: v,
+                            kind: TransferKind::Push,
+                            cycles: tr.cycles(cfg),
+                            bytes: tl.bytes,
+                            banks: tl.banks,
+                            range: (pt, pt),
+                            adds_residency: false,
+                        });
+                    }
+                    add_fetch(&mut candidates, v, tick_of(nu), TransferKind::Fetch);
+                }
+            }
+        }
+    }
+
+    // --- Per-window CP placement ---
+    let window = if opts.partition { opts.window } else { n_ticks };
+    let mut ticks: Vec<Tick> = (0..n_ticks)
+        .map(|ti| Tick {
+            compute: ti.checked_sub(1),
+            compute_cycles: ti.checked_sub(1).map_or(0, |si| prog.steps[si].cycles),
+            ..Default::default()
+        })
+        .collect();
+    let mut ddr = DdrTraffic::default();
+    let mut solve_ms = 0u64;
+    let mut subproblems = 0usize;
+    let mut variables = 0usize;
+
+    let mut w_start = 0;
+    while w_start < n_ticks {
+        let w_end = (w_start + window).min(n_ticks);
+        // Candidates whose range intersects the window; clamp to window.
+        let in_window: Vec<(usize, (usize, usize))> = candidates
+            .iter()
+            .enumerate()
+            .filter_map(|(ci, c)| {
+                let lo = c.range.0.max(w_start);
+                let hi = c.range.1.min(w_end - 1);
+                (lo <= hi).then_some((ci, (lo, hi)))
+            })
+            .collect();
+
+        let (placed, stats) = place_window(
+            prog,
+            cfg,
+            opts,
+            &ticks[w_start..w_end],
+            &candidates,
+            &in_window,
+            w_start,
+        );
+        subproblems += 1;
+        solve_ms += stats.0;
+        variables += stats.1;
+        for (ci, tick) in placed {
+            let c = &candidates[ci];
+            let tr = ScheduledTransfer {
+                tile: c.tile,
+                kind: c.kind,
+                cycles: c.cycles,
+                bytes: c.bytes,
+            };
+            ddr.record(&Transfer::new(c.kind, c.bytes));
+            ticks[tick].dm_cycles += c.cycles;
+            ticks[tick].transfers.push(tr);
+        }
+        w_start = w_end;
+    }
+
+    Schedule { ticks, ddr, solve_ms, subproblems, variables }
+}
+
+fn next_use_after(prog: &TiledProgram, tile: &TileId, after: usize) -> usize {
+    prog.steps
+        .iter()
+        .enumerate()
+        .skip(after + 1)
+        .find(|(_, s)| s.in_tiles.contains(tile) || s.param_tile == Some(*tile))
+        .map(|(i, _)| i)
+        .unwrap_or(usize::MAX)
+}
+
+/// CP placement of the window's transfer candidates. Returns
+/// `(placements, (solve_ms, vars))`.
+fn place_window(
+    prog: &TiledProgram,
+    cfg: &NeutronConfig,
+    opts: &SchedulingOptions,
+    window_ticks: &[Tick],
+    candidates: &[Candidate],
+    in_window: &[(usize, (usize, usize))],
+    w_start: usize,
+) -> (Vec<(usize, usize)>, (u64, usize)) {
+    if in_window.is_empty() {
+        return (Vec::new(), (0, 0));
+    }
+    let w = window_ticks.len();
+    let mut m = CpModel::new();
+
+    // x[ci][t]: transfer ci runs at window-local tick t.
+    let mut x: HashMap<(usize, usize), Var> = HashMap::new();
+    for &(ci, (lo, hi)) in in_window {
+        let c = &candidates[ci];
+        let mut vars = Vec::new();
+        for t in lo..=hi {
+            let lt = t - w_start;
+            // Bus-conflict (Eq. 3): skip ticks whose compute step touches a
+            // sibling tile (same tensor) of the transferred tile.
+            if let Some(si) = window_ticks[lt].compute {
+                let s = &prog.steps[si];
+                let same_tensor = |a: TileId, b: TileId| {
+                    prog.tile(a).tensor == prog.tile(b).tensor && a != b
+                };
+                let conflict = s.in_tiles.iter().any(|&it| same_tensor(it, c.tile))
+                    || same_tensor(s.out_tile, c.tile);
+                if conflict && c.kind != TransferKind::LCopy {
+                    continue;
+                }
+            }
+            let v = m.bool_var(format!("x_{ci}_{t}"));
+            x.insert((ci, lt), v);
+            vars.push(v);
+        }
+        if vars.is_empty() {
+            // All ticks conflicted: fall back to the earliest allowed tick.
+            let v = m.bool_var(format!("x_{ci}_forced"));
+            m.add_ge(LinExpr::var(v), 1);
+            x.insert((ci, lo - w_start), v);
+            vars.push(v);
+        }
+        m.add_exactly_one(vars);
+    }
+
+    // Capacity (Eq. 7): resident banks at tick t ≤ C. Residency from
+    // fetch-style transfers accumulates from their tick; pushes free banks
+    // after their tick. Const part: tiles produced by computes in/before
+    // this window and still live (approximated by the tiling pass's
+    // residency, which the Belady pre-pass already reduced below C).
+    for lt in 0..w {
+        let base = window_ticks[lt]
+            .compute
+            .and_then(|si| prog.residency_banks.get(si))
+            .copied()
+            .unwrap_or(0) as i64;
+        let mut expr = LinExpr::new();
+        for &(ci, (lo, hi)) in in_window {
+            let c = &candidates[ci];
+            if c.banks == 0 {
+                continue;
+            }
+            if c.adds_residency {
+                // Early fetch extends residency: count if fetched at ≤ lt
+                // but the "natural" (latest) tick is > lt.
+                for t in lo..=hi {
+                    let tl = t - w_start;
+                    if tl <= lt && t < hi {
+                        if let Some(&v) = x.get(&(ci, tl)) {
+                            expr.push(c.banks as i64, v);
+                        }
+                    }
+                }
+            }
+        }
+        if !expr.is_empty() {
+            m.add_le(expr, (cfg.tcm_banks as i64 - base).max(0));
+        }
+    }
+
+    // Tick latency vars: L_t ≥ compute (const), L_t ≥ Σ cycles·x.
+    let scale = 1024u64; // cycles are large; scale to keep i64 comfy
+    let mut obj = LinExpr::new();
+    let mut l_vars = Vec::with_capacity(w);
+    for lt in 0..w {
+        let comp = (window_ticks[lt].compute_cycles / scale) as i64;
+        let max_dm: i64 = in_window
+            .iter()
+            .map(|&(ci, _)| (candidates[ci].cycles / scale) as i64)
+            .sum::<i64>()
+            + comp;
+        let l = m.int_var(comp, max_dm.max(comp), format!("L_{lt}"));
+        l_vars.push(l);
+        // L_t ≥ Σ cycles·x(·, t)  ⇔  L_t − Σ cycles·x ≥ 0.
+        let mut con = LinExpr::var(l);
+        for &(ci, _) in in_window {
+            if let Some(&v) = x.get(&(ci, lt)) {
+                con.push(-((candidates[ci].cycles / scale) as i64), v);
+            }
+        }
+        m.add_ge(con, 0);
+        obj.push(1, l);
+    }
+    // δ·N_DM term.
+    for (&(_, _), &v) in &x {
+        obj.push(opts.delta as i64, v);
+    }
+    m.minimize(obj);
+
+    // Greedy warm start: place each transfer (largest first) at the
+    // feasible tick that minimizes the resulting tick datamover load. The
+    // CP can only improve on this incumbent — without it, time-limited
+    // searches on big windows return clustered (poor-overlap) placements.
+    let hint = {
+        let mut assignment = vec![0i64; m.num_vars()];
+        let mut dm_load = vec![0u64; w];
+        let mut cand_order: Vec<usize> = in_window.iter().map(|&(ci, _)| ci).collect();
+        cand_order.sort_by_key(|&ci| std::cmp::Reverse(candidates[ci].cycles));
+        cand_order.dedup();
+        for ci in cand_order {
+            // Feasible local ticks for this candidate.
+            let ticks: Vec<usize> = (0..w).filter(|&lt| x.contains_key(&(ci, lt))).collect();
+            if ticks.is_empty() {
+                continue;
+            }
+            let best = ticks
+                .iter()
+                .copied()
+                .min_by_key(|&lt| {
+                    let after = dm_load[lt] + candidates[ci].cycles;
+                    // Prefer ticks where the transfer hides under compute.
+                    after.saturating_sub(window_ticks[lt].compute_cycles)
+                })
+                .unwrap();
+            dm_load[best] += candidates[ci].cycles;
+            assignment[x[&(ci, best)].index()] = 1;
+        }
+        for lt in 0..w {
+            let comp = (window_ticks[lt].compute_cycles / scale) as i64;
+            assignment[l_vars[lt].index()] = comp.max((dm_load[lt] / scale) as i64);
+        }
+        assignment
+    };
+
+    let vars = m.num_vars();
+    let solver_cfg = SearchConfig { hint: Some(hint), ..opts.solver.clone() };
+    let sol = crate::cp::solve(&m, solver_cfg);
+    let mut placed = Vec::new();
+    match sol.status {
+        Status::Optimal | Status::Feasible => {
+            for (&(ci, lt), &v) in &x {
+                if sol.value(v) == 1 {
+                    placed.push((ci, w_start + lt));
+                }
+            }
+        }
+        _ => {
+            // Solver exhausted without a solution (shouldn't happen — the
+            // model is trivially satisfiable by latest-tick placement):
+            // fall back deterministically.
+            let mut seen = std::collections::HashSet::new();
+            for &(ci, (_, hi)) in in_window {
+                if seen.insert(ci) {
+                    placed.push((ci, hi));
+                }
+            }
+        }
+    }
+    placed.sort();
+    (placed, (sol.solve_ms, vars))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::format::select_formats;
+    use crate::compiler::tiling::{tile_graph, TilingOptions};
+    use crate::zoo;
+
+    fn sched(g: &crate::ir::Graph, opts: &SchedulingOptions) -> (TiledProgram, Schedule) {
+        let cfg = NeutronConfig::flagship_2tops();
+        let plan = select_formats(g, &cfg);
+        let prog = tile_graph(g, &plan, &cfg, &TilingOptions::default());
+        let s = schedule(&prog, &cfg, opts);
+        (prog, s)
+    }
+
+    #[test]
+    fn schedule_covers_all_steps() {
+        let g = zoo::mobilenet::mobilenet_v2();
+        let (prog, s) = sched(&g, &SchedulingOptions::default());
+        // One tick per compute step plus the pure-DM preamble tick.
+        assert_eq!(s.ticks.len(), prog.steps.len() + 1);
+        assert!(s.ticks[0].compute.is_none());
+        assert!(s.total_cycles() > 0);
+    }
+
+    #[test]
+    fn dae_beats_serialized_execution() {
+        let g = zoo::mobilenet::mobilenet_v1();
+        let (_, s) = sched(&g, &SchedulingOptions::default());
+        // Latency hiding must help: Σ max(c, d) < Σ (c + d).
+        assert!(
+            s.total_cycles() < s.serialized_cycles(),
+            "dae {} !< serial {}",
+            s.total_cycles(),
+            s.serialized_cycles()
+        );
+    }
+
+    #[test]
+    fn every_fetch_lands_before_first_use() {
+        let g = zoo::mobilenet::mobilenet_v2();
+        let (prog, s) = sched(&g, &SchedulingOptions::default());
+        // Track fetch tick per tile; any compute step consuming a
+        // DRAM-origin tile must come strictly after its fetch.
+        let mut fetch_tick: HashMap<TileId, usize> = HashMap::new();
+        for (ti, tick) in s.ticks.iter().enumerate() {
+            for tr in &tick.transfers {
+                if matches!(tr.kind, TransferKind::Fetch | TransferKind::LFetch) {
+                    fetch_tick.entry(tr.tile).or_insert(ti);
+                }
+            }
+        }
+        for (ti, tick) in s.ticks.iter().enumerate() {
+            if let Some(si) = tick.compute {
+                let step = &prog.steps[si];
+                for t in step.in_tiles.iter().chain(step.param_tile.iter()) {
+                    if prog.tile(*t).starts_in_dram {
+                        let ft = fetch_tick.get(t).copied();
+                        assert!(
+                            ft.is_some_and(|f| f < ti),
+                            "tile {t:?} used at tick {ti} fetched at {ft:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn graph_outputs_are_pushed() {
+        let g = zoo::mobilenet::mobilenet_v1();
+        let (prog, s) = sched(&g, &SchedulingOptions::default());
+        let out_tiles: Vec<TileId> = prog
+            .tiles
+            .iter()
+            .filter(|t| t.is_graph_output)
+            .map(|t| t.id)
+            .collect();
+        for ot in out_tiles {
+            let pushed = s
+                .ticks
+                .iter()
+                .any(|tk| tk.transfers.iter().any(|tr| tr.tile == ot && tr.kind == TransferKind::Push));
+            assert!(pushed, "output tile {ot:?} never pushed to DRAM");
+        }
+    }
+
+    #[test]
+    fn monolithic_schedule_is_at_least_as_good() {
+        let g = zoo::mobilenet::mobilenet_v2();
+        let part = sched(&g, &SchedulingOptions::default()).1;
+        let mono = sched(
+            &g,
+            &SchedulingOptions { partition: false, ..Default::default() },
+        )
+        .1;
+        // The monolithic problem sees the full horizon, but a budgeted
+        // B&B may not close the gap on the big model — the two must stay
+        // within 10% of each other (the paper measures +3.3% inference
+        // cost for partitioning on YOLOv8n, Table II).
+        let lo = part.total_cycles() * 90 / 100;
+        let hi = part.total_cycles() * 110 / 100;
+        assert!(
+            (lo..=hi).contains(&mono.total_cycles()),
+            "mono {} vs part {}",
+            mono.total_cycles(),
+            part.total_cycles()
+        );
+        assert_eq!(mono.subproblems, 1);
+        assert!(part.subproblems > 1);
+    }
+}

@@ -1,0 +1,170 @@
+//! Coordinator executor: the L3 "leader" loop that drives an inference.
+//!
+//! Plays the role of the on-device RISC-V controller + host runtime:
+//! consumes a [`JobProgram`] tick by tick, advances the virtual clock with
+//! the architecture timing model (compute ∥ datamover per tick), maintains
+//! the V2P table, and — when a PJRT executable is attached — produces the
+//! *actual numerics* of the model by running the AOT artifact once per
+//! request. Timing comes from the model; numbers come from PJRT; Python is
+//! never involved.
+
+use anyhow::Result;
+
+use super::jobs::{Job, JobProgram};
+use super::metrics::Metrics;
+use crate::arch::{NeutronConfig, V2pTable};
+
+/// Execution result of one inference request.
+#[derive(Debug, Clone, Default)]
+pub struct InferenceResult {
+    /// Simulated on-device latency.
+    pub sim_cycles: u64,
+    pub sim_ms: f64,
+    /// Wall-clock host time spent driving the program (coordinator cost).
+    pub host_us: u64,
+    /// Model outputs (present when a PJRT executable was attached).
+    pub logits: Option<Vec<i32>>,
+    pub ticks: usize,
+}
+
+/// The coordinator: owns the job program and the device state.
+pub struct Executor {
+    cfg: NeutronConfig,
+    program: JobProgram,
+    v2p: V2pTable,
+    pub metrics: Metrics,
+}
+
+impl Executor {
+    pub fn new(cfg: NeutronConfig, program: JobProgram) -> Self {
+        let v2p = V2pTable::identity(cfg.tcm_banks);
+        Self { cfg, program, v2p, metrics: Metrics::default() }
+    }
+
+    /// Drive one inference through the job program. `run_numerics` is the
+    /// optional PJRT closure producing the request's actual outputs.
+    pub fn run_request(
+        &mut self,
+        run_numerics: Option<&dyn Fn() -> Result<Vec<i32>>>,
+    ) -> Result<InferenceResult> {
+        let t0 = std::time::Instant::now();
+        let mut total_cycles = 0u64;
+        let mut tick_compute = 0u64;
+        let mut tick_dm = 0u64;
+        let mut ticks = 0usize;
+
+        for job in &self.program.jobs {
+            match job {
+                Job::Compute { cycles, .. } => {
+                    tick_compute += cycles;
+                    self.metrics.compute_jobs += 1;
+                }
+                Job::Dma { cycles, bytes, kind, .. } => {
+                    tick_dm += cycles;
+                    self.metrics.dma_jobs += 1;
+                    if kind.uses_ddr() {
+                        self.metrics.ddr_bytes += bytes;
+                    }
+                }
+                Job::V2p { virt_bank, phys_bank } => {
+                    // Idle-mode remap: swap so the table stays a bijection.
+                    let cur = self.v2p.translate(*virt_bank);
+                    if cur != *phys_bank {
+                        // Find which virtual bank currently maps to phys.
+                        let other = (0..self.v2p.banks())
+                            .find(|&v| self.v2p.translate(v) == *phys_bank)
+                            .expect("bijection");
+                        self.v2p.swap(*virt_bank, other);
+                    }
+                    self.metrics.v2p_updates += 1;
+                }
+                Job::Barrier => {
+                    // DAE tick: compute and datamover overlap.
+                    total_cycles += tick_compute.max(tick_dm);
+                    tick_compute = 0;
+                    tick_dm = 0;
+                    ticks += 1;
+                }
+            }
+        }
+        total_cycles += tick_compute.max(tick_dm);
+
+        let logits = match run_numerics {
+            Some(f) => Some(f()?),
+            None => None,
+        };
+
+        let host_us = t0.elapsed().as_micros() as u64;
+        self.metrics.requests += 1;
+        self.metrics.total_sim_cycles += total_cycles;
+        self.metrics.total_host_us += host_us;
+
+        Ok(InferenceResult {
+            sim_cycles: total_cycles,
+            sim_ms: self.cfg.cycles_to_ms(total_cycles),
+            host_us,
+            logits,
+            ticks,
+        })
+    }
+
+    pub fn program(&self) -> &JobProgram {
+        &self.program
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOptions};
+    use crate::coordinator::jobs::emit;
+    use crate::zoo;
+
+    fn executor_for(g: &crate::ir::Graph) -> Executor {
+        let cfg = NeutronConfig::flagship_2tops();
+        let c = compile(g, &cfg, &CompileOptions::default_partitioned());
+        let p = emit(&c, &g.name);
+        Executor::new(cfg, p)
+    }
+
+    #[test]
+    fn run_request_accumulates_ticks_and_cycles() {
+        let g = zoo::mobilenet::mobilenet_v2();
+        let mut ex = executor_for(&g);
+        let r = ex.run_request(None).unwrap();
+        assert!(r.sim_cycles > 0);
+        assert!(r.ticks > 0);
+        assert!(r.sim_ms > 0.0);
+        assert_eq!(ex.metrics.requests, 1);
+    }
+
+    #[test]
+    fn repeated_requests_are_deterministic() {
+        let g = zoo::mobilenet::mobilenet_v1();
+        let mut ex = executor_for(&g);
+        let a = ex.run_request(None).unwrap();
+        let b = ex.run_request(None).unwrap();
+        assert_eq!(a.sim_cycles, b.sim_cycles);
+        assert_eq!(ex.metrics.requests, 2);
+    }
+
+    #[test]
+    fn numerics_closure_is_invoked() {
+        let g = zoo::mobilenet::mobilenet_v2();
+        let mut ex = executor_for(&g);
+        let f = || Ok(vec![1, 2, 3]);
+        let r = ex.run_request(Some(&f)).unwrap();
+        assert_eq!(r.logits, Some(vec![1, 2, 3]));
+    }
+
+    #[test]
+    fn executor_latency_matches_schedule_estimate() {
+        let g = zoo::mobilenet::mobilenet_v2();
+        let cfg = NeutronConfig::flagship_2tops();
+        let c = compile(&g, &cfg, &CompileOptions::default_partitioned());
+        let p = emit(&c, "m");
+        let mut ex = Executor::new(cfg, p);
+        let r = ex.run_request(None).unwrap();
+        assert_eq!(r.sim_cycles, c.schedule.total_cycles());
+    }
+}

@@ -1,0 +1,65 @@
+//! Coordinator metrics: request counters, job counts, traffic, timing.
+
+/// Aggregate execution metrics across requests.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub requests: u64,
+    pub compute_jobs: u64,
+    pub dma_jobs: u64,
+    pub v2p_updates: u64,
+    pub ddr_bytes: u64,
+    pub total_sim_cycles: u64,
+    pub total_host_us: u64,
+}
+
+impl Metrics {
+    /// Mean simulated latency per request, ms, at the given clock.
+    pub fn mean_sim_ms(&self, freq_ghz: f64) -> f64 {
+        if self.requests == 0 {
+            return 0.0;
+        }
+        self.total_sim_cycles as f64 / self.requests as f64 / (freq_ghz * 1e9) * 1e3
+    }
+
+    /// Mean host-side coordination overhead per request, µs.
+    pub fn mean_host_us(&self) -> f64 {
+        if self.requests == 0 {
+            return 0.0;
+        }
+        self.total_host_us as f64 / self.requests as f64
+    }
+
+    /// One-line report.
+    pub fn summary(&self, freq_ghz: f64) -> String {
+        format!(
+            "requests={} compute_jobs={} dma_jobs={} v2p={} ddr={:.1}MB sim={:.2}ms/req host={:.0}µs/req",
+            self.requests,
+            self.compute_jobs,
+            self.dma_jobs,
+            self.v2p_updates,
+            self.ddr_bytes as f64 / 1e6,
+            self.mean_sim_ms(freq_ghz),
+            self.mean_host_us(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn means_handle_zero_requests() {
+        let m = Metrics::default();
+        assert_eq!(m.mean_sim_ms(1.0), 0.0);
+        assert_eq!(m.mean_host_us(), 0.0);
+    }
+
+    #[test]
+    fn summary_mentions_requests() {
+        let m = Metrics { requests: 3, total_sim_cycles: 3_000_000, ..Default::default() };
+        let s = m.summary(1.0);
+        assert!(s.contains("requests=3"));
+        assert!(s.contains("sim=1.00ms"));
+    }
+}

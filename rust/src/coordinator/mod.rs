@@ -1,0 +1,12 @@
+//! L3 coordinator: the job-program representation the compiler backend
+//! emits (compute / DMA / V2P / barrier jobs for the RISC-V controller),
+//! the executor loop that drives inferences (simulated timing + PJRT
+//! numerics), and runtime metrics.
+
+pub mod executor;
+pub mod jobs;
+pub mod metrics;
+
+pub use executor::{Executor, InferenceResult};
+pub use jobs::{emit, Job, JobProgram};
+pub use metrics::Metrics;

@@ -1,0 +1,377 @@
+//! Constraint-programming model: integer/boolean variables, linear
+//! expressions, and linear constraints.
+//!
+//! This is the substrate the paper's compiler mid-end builds its three CP
+//! problems on (tiling+fusion, scheduling, allocation — Sec. IV-B/C/D).
+//! The model is a bounded-integer linear CP: every variable has finite
+//! bounds, every constraint is `Σ aᵢ·xᵢ ⋈ b` with `⋈ ∈ {≤, =, ≥}`, and the
+//! objective (if any) is a linear expression to minimize.
+
+use std::fmt;
+
+/// Handle to a decision variable inside a [`CpModel`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Var(pub(crate) u32);
+
+impl Var {
+    /// Index of this variable in the owning model.
+    #[inline]
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Comparison operator of a linear constraint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cmp {
+    /// `expr ≤ rhs`
+    Le,
+    /// `expr = rhs`
+    Eq,
+    /// `expr ≥ rhs`
+    Ge,
+}
+
+/// A linear expression `Σ coef·var + constant` over model variables.
+#[derive(Debug, Clone, Default)]
+pub struct LinExpr {
+    pub(crate) terms: Vec<(i64, Var)>,
+    pub(crate) constant: i64,
+}
+
+impl LinExpr {
+    /// The zero expression.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Expression consisting of a single variable with coefficient 1.
+    pub fn var(v: Var) -> Self {
+        Self { terms: vec![(1, v)], constant: 0 }
+    }
+
+    /// Expression consisting of a constant only.
+    pub fn constant(c: i64) -> Self {
+        Self { terms: Vec::new(), constant: c }
+    }
+
+    /// Add `coef * v` to the expression (builder style).
+    pub fn add(mut self, coef: i64, v: Var) -> Self {
+        self.push(coef, v);
+        self
+    }
+
+    /// Add a constant offset (builder style).
+    pub fn add_const(mut self, c: i64) -> Self {
+        self.constant += c;
+        self
+    }
+
+    /// Push `coef * v` in place.
+    pub fn push(&mut self, coef: i64, v: Var) {
+        if coef != 0 {
+            self.terms.push((coef, v));
+        }
+    }
+
+    /// Sum of unit-coefficient variables.
+    pub fn sum(vars: impl IntoIterator<Item = Var>) -> Self {
+        let mut e = Self::new();
+        for v in vars {
+            e.push(1, v);
+        }
+        e
+    }
+
+    /// Weighted sum.
+    pub fn weighted_sum(terms: impl IntoIterator<Item = (i64, Var)>) -> Self {
+        let mut e = Self::new();
+        for (c, v) in terms {
+            e.push(c, v);
+        }
+        e
+    }
+
+    /// Merge duplicate variables, dropping zero coefficients. Keeps the
+    /// expression canonical so propagation bounds are as tight as possible.
+    pub fn normalize(&mut self) {
+        self.terms.sort_by_key(|&(_, v)| v);
+        let mut out: Vec<(i64, Var)> = Vec::with_capacity(self.terms.len());
+        for &(c, v) in &self.terms {
+            match out.last_mut() {
+                Some(last) if last.1 == v => last.0 += c,
+                _ => out.push((c, v)),
+            }
+        }
+        out.retain(|&(c, _)| c != 0);
+        self.terms = out;
+    }
+
+    /// Evaluate under a full assignment (slice indexed by var index).
+    pub fn eval(&self, assignment: &[i64]) -> i64 {
+        self.constant
+            + self
+                .terms
+                .iter()
+                .map(|&(c, v)| c * assignment[v.index()])
+                .sum::<i64>()
+    }
+
+    /// Number of terms.
+    pub fn len(&self) -> usize {
+        self.terms.len()
+    }
+
+    /// True if the expression has no variable terms.
+    pub fn is_empty(&self) -> bool {
+        self.terms.is_empty()
+    }
+}
+
+/// A linear constraint `expr ⋈ rhs` (rhs folded into expr's constant at
+/// construction: stored as `Σ aᵢxᵢ ⋈ b`).
+#[derive(Debug, Clone)]
+pub struct LinCon {
+    pub(crate) terms: Vec<(i64, Var)>,
+    pub(crate) cmp: Cmp,
+    pub(crate) rhs: i64,
+    /// Optional label for debugging / infeasibility reporting.
+    pub(crate) name: Option<String>,
+}
+
+impl LinCon {
+    /// Check the constraint under a full assignment.
+    pub fn check(&self, assignment: &[i64]) -> bool {
+        let lhs: i64 = self
+            .terms
+            .iter()
+            .map(|&(c, v)| c * assignment[v.index()])
+            .sum();
+        match self.cmp {
+            Cmp::Le => lhs <= self.rhs,
+            Cmp::Eq => lhs == self.rhs,
+            Cmp::Ge => lhs >= self.rhs,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub(crate) struct VarInfo {
+    pub lb: i64,
+    pub ub: i64,
+    pub name: Option<String>,
+}
+
+/// A constraint-programming model: variables + linear constraints + an
+/// optional linear minimization objective.
+#[derive(Debug, Default, Clone)]
+pub struct CpModel {
+    pub(crate) vars: Vec<VarInfo>,
+    pub(crate) cons: Vec<LinCon>,
+    pub(crate) objective: Option<LinExpr>,
+}
+
+impl CpModel {
+    /// Empty model.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// New integer variable with inclusive bounds `[lb, ub]`.
+    pub fn int_var(&mut self, lb: i64, ub: i64, name: impl Into<String>) -> Var {
+        assert!(lb <= ub, "int_var: empty domain [{lb}, {ub}]");
+        let v = Var(self.vars.len() as u32);
+        self.vars.push(VarInfo { lb, ub, name: Some(name.into()) });
+        v
+    }
+
+    /// New boolean (0/1) variable.
+    pub fn bool_var(&mut self, name: impl Into<String>) -> Var {
+        self.int_var(0, 1, name)
+    }
+
+    /// New variable fixed to a constant.
+    pub fn const_var(&mut self, value: i64) -> Var {
+        self.int_var(value, value, format!("const_{value}"))
+    }
+
+    /// Number of variables.
+    pub fn num_vars(&self) -> usize {
+        self.vars.len()
+    }
+
+    /// Number of constraints.
+    pub fn num_constraints(&self) -> usize {
+        self.cons.len()
+    }
+
+    /// Current bounds of a variable.
+    pub fn bounds(&self, v: Var) -> (i64, i64) {
+        let info = &self.vars[v.index()];
+        (info.lb, info.ub)
+    }
+
+    /// Add `expr ⋈ rhs`. The expression's constant is folded into the rhs.
+    pub fn add(&mut self, mut expr: LinExpr, cmp: Cmp, rhs: i64) {
+        self.add_named(std::mem::take(&mut expr), cmp, rhs, None)
+    }
+
+    /// Add a named constraint (name used in infeasibility diagnostics).
+    pub fn add_named(&mut self, mut expr: LinExpr, cmp: Cmp, rhs: i64, name: Option<String>) {
+        expr.normalize();
+        let rhs = rhs - expr.constant;
+        if expr.terms.is_empty() {
+            // Constant constraint: record as trivially-checkable sentinel so
+            // infeasible models are caught at solve time, not silently.
+            let ok = match cmp {
+                Cmp::Le => 0 <= rhs,
+                Cmp::Eq => 0 == rhs,
+                Cmp::Ge => 0 >= rhs,
+            };
+            if ok {
+                return;
+            }
+        }
+        self.cons.push(LinCon { terms: expr.terms, cmp, rhs, name });
+    }
+
+    /// `expr ≤ rhs`
+    pub fn add_le(&mut self, expr: LinExpr, rhs: i64) {
+        self.add(expr, Cmp::Le, rhs);
+    }
+
+    /// `expr = rhs`
+    pub fn add_eq(&mut self, expr: LinExpr, rhs: i64) {
+        self.add(expr, Cmp::Eq, rhs);
+    }
+
+    /// `expr ≥ rhs`
+    pub fn add_ge(&mut self, expr: LinExpr, rhs: i64) {
+        self.add(expr, Cmp::Ge, rhs);
+    }
+
+    /// Boolean implication `a ⇒ b` encoded as `a ≤ b`.
+    pub fn add_implication(&mut self, a: Var, b: Var) {
+        self.add_le(LinExpr::var(a).add(-1, b), 0);
+    }
+
+    /// At most one of `vars` is 1.
+    pub fn add_at_most_one(&mut self, vars: impl IntoIterator<Item = Var>) {
+        self.add_le(LinExpr::sum(vars), 1);
+    }
+
+    /// Exactly one of `vars` is 1.
+    pub fn add_exactly_one(&mut self, vars: impl IntoIterator<Item = Var>) {
+        self.add_eq(LinExpr::sum(vars), 1);
+    }
+
+    /// `target ≥ expr` for each expr — used for max-style variables
+    /// (e.g. highest TCM bank used by a tensor, Eq. (5) in the paper).
+    pub fn add_max_ge(&mut self, target: Var, exprs: impl IntoIterator<Item = LinExpr>) {
+        for e in exprs {
+            // target - e >= 0
+            let mut ex = LinExpr::var(target);
+            ex.constant -= e.constant;
+            for (c, v) in e.terms {
+                ex.push(-c, v);
+            }
+            self.add_ge(ex, 0);
+        }
+    }
+
+    /// `target ≤ expr` for each expr — min-style variables (Eq. (4)).
+    pub fn add_min_le(&mut self, target: Var, exprs: impl IntoIterator<Item = LinExpr>) {
+        for e in exprs {
+            let mut ex = LinExpr::var(target);
+            ex.constant -= e.constant;
+            for (c, v) in e.terms {
+                ex.push(-c, v);
+            }
+            self.add_le(ex, 0);
+        }
+    }
+
+    /// Set (replace) the minimization objective.
+    pub fn minimize(&mut self, mut obj: LinExpr) {
+        obj.normalize();
+        self.objective = Some(obj);
+    }
+
+    /// Verify a full assignment against every constraint; returns the first
+    /// violated constraint's description, if any.
+    pub fn violated(&self, assignment: &[i64]) -> Option<String> {
+        for (i, (info, &val)) in self.vars.iter().zip(assignment).enumerate() {
+            if val < info.lb || val > info.ub {
+                return Some(format!(
+                    "var {} ({:?}) = {} outside [{}, {}]",
+                    i, info.name, val, info.lb, info.ub
+                ));
+            }
+        }
+        for (i, c) in self.cons.iter().enumerate() {
+            if !c.check(assignment) {
+                return Some(format!("constraint {} ({:?}) violated", i, c.name));
+            }
+        }
+        None
+    }
+}
+
+impl fmt::Display for CpModel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "CpModel({} vars, {} constraints, objective: {})",
+            self.vars.len(),
+            self.cons.len(),
+            if self.objective.is_some() { "min" } else { "none" }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linexpr_normalize_merges_and_drops_zeros() {
+        let mut m = CpModel::new();
+        let a = m.bool_var("a");
+        let b = m.bool_var("b");
+        let mut e = LinExpr::new().add(2, a).add(3, b).add(-2, a).add(1, b);
+        e.normalize();
+        assert_eq!(e.terms, vec![(4, b)]);
+    }
+
+    #[test]
+    fn linexpr_eval() {
+        let mut m = CpModel::new();
+        let a = m.int_var(0, 10, "a");
+        let b = m.int_var(0, 10, "b");
+        let e = LinExpr::new().add(2, a).add(-1, b).add_const(5);
+        assert_eq!(e.eval(&[3, 4]), 2 * 3 - 4 + 5);
+        let _ = (a, b);
+    }
+
+    #[test]
+    fn constant_constraint_checked() {
+        let mut m = CpModel::new();
+        // 0 <= -1 is infeasible and must be recorded.
+        m.add_le(LinExpr::constant(1), 0);
+        assert_eq!(m.num_constraints(), 1);
+        // 0 <= 1 is trivially true and dropped.
+        let mut m2 = CpModel::new();
+        m2.add_le(LinExpr::constant(-1), 0);
+        assert_eq!(m2.num_constraints(), 0);
+    }
+
+    #[test]
+    fn violated_detects_bad_assignment() {
+        let mut m = CpModel::new();
+        let a = m.bool_var("a");
+        let b = m.bool_var("b");
+        m.add_le(LinExpr::sum([a, b]), 1);
+        assert!(m.violated(&[1, 1]).is_some());
+        assert!(m.violated(&[1, 0]).is_none());
+    }
+}

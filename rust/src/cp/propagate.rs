@@ -1,0 +1,430 @@
+//! Bounds propagation for linear constraints.
+//!
+//! Classic activity-based bound tightening: for `Σ aᵢxᵢ ≤ b`, the minimum
+//! activity of all terms but one bounds the remaining term, which tightens
+//! that variable's domain. Runs to fixpoint over a work queue; equalities
+//! propagate in both directions. Used both at the root (presolve) and at
+//! every node of the branch-and-bound search.
+
+use super::model::{Cmp, CpModel, LinCon, Var};
+
+/// Mutable view of variable domains during search. Bounds are trailed by the
+/// search layer for backtracking.
+#[derive(Debug, Clone)]
+pub struct Domains {
+    pub(crate) lb: Vec<i64>,
+    pub(crate) ub: Vec<i64>,
+}
+
+impl Domains {
+    /// Initial domains from the model's declared variable bounds.
+    pub fn from_model(model: &CpModel) -> Self {
+        Self {
+            lb: model.vars.iter().map(|v| v.lb).collect(),
+            ub: model.vars.iter().map(|v| v.ub).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn lb(&self, v: Var) -> i64 {
+        self.lb[v.index()]
+    }
+
+    #[inline]
+    pub fn ub(&self, v: Var) -> i64 {
+        self.ub[v.index()]
+    }
+
+    #[inline]
+    pub fn is_fixed(&self, v: Var) -> bool {
+        self.lb[v.index()] == self.ub[v.index()]
+    }
+
+    /// Every variable fixed?
+    pub fn all_fixed(&self) -> bool {
+        self.lb.iter().zip(&self.ub).all(|(l, u)| l == u)
+    }
+
+    /// Extract the (unique) assignment of fully-fixed domains.
+    pub fn assignment(&self) -> Vec<i64> {
+        debug_assert!(self.all_fixed());
+        self.lb.clone()
+    }
+}
+
+/// One bound change, recorded so the search can undo it on backtrack.
+#[derive(Debug, Clone, Copy)]
+pub enum TrailEntry {
+    /// Variable's lower bound was raised from `old`.
+    Lb(Var, i64),
+    /// Variable's upper bound was lowered from `old`.
+    Ub(Var, i64),
+}
+
+/// Result of a propagation round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PropResult {
+    /// Fixpoint reached, domains consistent.
+    Consistent,
+    /// Some domain emptied — the current node is infeasible.
+    Infeasible,
+}
+
+/// Per-constraint cached activity bounds would be faster still, but the
+/// compiler's partitioned subproblems stay small (see `compiler::partition`),
+/// so a recompute-per-visit scheme with a var→constraints index is the
+/// simplicity/speed sweet spot here.
+pub struct Propagator {
+    /// For each var, indices of constraints that mention it.
+    watch: Vec<Vec<u32>>,
+    /// Scratch queue of constraint indices to revisit.
+    queue: Vec<u32>,
+    /// Dedup flags for the queue.
+    in_queue: Vec<bool>,
+}
+
+impl Propagator {
+    /// Build the var→constraint watch lists for a model.
+    pub fn new(model: &CpModel) -> Self {
+        let mut watch = vec![Vec::new(); model.vars.len()];
+        for (ci, c) in model.cons.iter().enumerate() {
+            for &(_, v) in &c.terms {
+                watch[v.index()].push(ci as u32);
+            }
+        }
+        Self {
+            watch,
+            queue: Vec::new(),
+            in_queue: vec![false; model.cons.len()],
+        }
+    }
+
+    /// Propagate all constraints to fixpoint (root call).
+    pub fn propagate_all(
+        &mut self,
+        model: &CpModel,
+        dom: &mut Domains,
+        trail: &mut Vec<TrailEntry>,
+    ) -> PropResult {
+        self.queue.clear();
+        self.in_queue.iter_mut().for_each(|f| *f = false);
+        for ci in 0..model.cons.len() {
+            self.queue.push(ci as u32);
+            self.in_queue[ci] = true;
+        }
+        self.run(model, dom, trail)
+    }
+
+    /// Propagate starting from the constraints watching `seed` (after the
+    /// search fixed/tightened that variable).
+    pub fn propagate_from(
+        &mut self,
+        model: &CpModel,
+        dom: &mut Domains,
+        trail: &mut Vec<TrailEntry>,
+        seed: Var,
+    ) -> PropResult {
+        self.queue.clear();
+        self.in_queue.iter_mut().for_each(|f| *f = false);
+        for &ci in &self.watch[seed.index()] {
+            if !self.in_queue[ci as usize] {
+                self.queue.push(ci);
+                self.in_queue[ci as usize] = true;
+            }
+        }
+        self.run(model, dom, trail)
+    }
+
+    fn run(
+        &mut self,
+        model: &CpModel,
+        dom: &mut Domains,
+        trail: &mut Vec<TrailEntry>,
+    ) -> PropResult {
+        while let Some(ci) = self.queue.pop() {
+            self.in_queue[ci as usize] = false;
+            let con = &model.cons[ci as usize];
+            let mut changed: Vec<Var> = Vec::new();
+            if !tighten(con, dom, trail, &mut changed) {
+                return PropResult::Infeasible;
+            }
+            for v in changed {
+                for &cj in &self.watch[v.index()] {
+                    if cj != ci && !self.in_queue[cj as usize] {
+                        self.queue.push(cj);
+                        self.in_queue[cj as usize] = true;
+                    }
+                }
+            }
+        }
+        PropResult::Consistent
+    }
+}
+
+/// Tighten domains w.r.t. one constraint. Returns false on infeasibility;
+/// records changed variables in `changed` and bound changes on `trail`.
+fn tighten(
+    con: &LinCon,
+    dom: &mut Domains,
+    trail: &mut Vec<TrailEntry>,
+    changed: &mut Vec<Var>,
+) -> bool {
+    // Treat Eq as both Le and Ge.
+    let (do_le, do_ge) = match con.cmp {
+        Cmp::Le => (true, false),
+        Cmp::Ge => (false, true),
+        Cmp::Eq => (true, true),
+    };
+    if do_le && !tighten_le(&con.terms, con.rhs, dom, trail, changed) {
+        return false;
+    }
+    if do_ge {
+        // Σ aᵢxᵢ ≥ b  ⇔  Σ (-aᵢ)xᵢ ≤ -b
+        if !tighten_le_neg(&con.terms, -con.rhs, dom, trail, changed) {
+            return false;
+        }
+    }
+    true
+}
+
+#[inline]
+fn term_min(c: i64, lb: i64, ub: i64) -> i64 {
+    if c >= 0 {
+        c * lb
+    } else {
+        c * ub
+    }
+}
+
+#[inline]
+fn term_max(c: i64, lb: i64, ub: i64) -> i64 {
+    if c >= 0 {
+        c * ub
+    } else {
+        c * lb
+    }
+}
+
+fn set_ub(v: Var, new_ub: i64, dom: &mut Domains, trail: &mut Vec<TrailEntry>, changed: &mut Vec<Var>) -> bool {
+    let i = v.index();
+    if new_ub < dom.ub[i] {
+        trail.push(TrailEntry::Ub(v, dom.ub[i]));
+        dom.ub[i] = new_ub;
+        changed.push(v);
+        if dom.lb[i] > new_ub {
+            return false;
+        }
+    }
+    true
+}
+
+fn set_lb(v: Var, new_lb: i64, dom: &mut Domains, trail: &mut Vec<TrailEntry>, changed: &mut Vec<Var>) -> bool {
+    let i = v.index();
+    if new_lb > dom.lb[i] {
+        trail.push(TrailEntry::Lb(v, dom.lb[i]));
+        dom.lb[i] = new_lb;
+        changed.push(v);
+        if dom.ub[i] < new_lb {
+            return false;
+        }
+    }
+    true
+}
+
+/// Tighten for `Σ aᵢxᵢ ≤ b` with coefficients as stored.
+fn tighten_le(
+    terms: &[(i64, Var)],
+    rhs: i64,
+    dom: &mut Domains,
+    trail: &mut Vec<TrailEntry>,
+    changed: &mut Vec<Var>,
+) -> bool {
+    let min_act: i64 = terms
+        .iter()
+        .map(|&(c, v)| term_min(c, dom.lb(v), dom.ub(v)))
+        .sum();
+    if min_act > rhs {
+        return false;
+    }
+    for &(c, v) in terms {
+        let rest = min_act - term_min(c, dom.lb(v), dom.ub(v));
+        // c*x ≤ rhs - rest
+        let cap = rhs - rest;
+        if c > 0 {
+            let new_ub = cap.div_euclid(c);
+            if !set_ub(v, new_ub, dom, trail, changed) {
+                return false;
+            }
+        } else if c < 0 {
+            // x ≥ ceil(cap / c) with c negative
+            let new_lb = -((-cap).div_euclid(-c)); // careful integer division
+            let new_lb = if c * new_lb > cap { new_lb + 1 } else { new_lb };
+            // Simpler: smallest x with c*x ≤ cap is ceil(cap/c) for c<0.
+            let exact = div_ceil(cap, c);
+            debug_assert!(c * exact <= cap);
+            let _ = new_lb;
+            if !set_lb(v, exact, dom, trail, changed) {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Tighten for `Σ (-aᵢ)xᵢ ≤ b` (negated view for ≥ constraints).
+fn tighten_le_neg(
+    terms: &[(i64, Var)],
+    rhs: i64,
+    dom: &mut Domains,
+    trail: &mut Vec<TrailEntry>,
+    changed: &mut Vec<Var>,
+) -> bool {
+    let min_act: i64 = terms
+        .iter()
+        .map(|&(c, v)| term_min(-c, dom.lb(v), dom.ub(v)))
+        .sum();
+    if min_act > rhs {
+        return false;
+    }
+    for &(c, v) in terms {
+        let nc = -c;
+        let rest = min_act - term_min(nc, dom.lb(v), dom.ub(v));
+        let cap = rhs - rest;
+        if nc > 0 {
+            if !set_ub(v, cap.div_euclid(nc), dom, trail, changed) {
+                return false;
+            }
+        } else if nc < 0 {
+            if !set_lb(v, div_ceil(cap, nc), dom, trail, changed) {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Ceiling division for possibly-negative divisor: smallest x with d*x ≤ cap
+/// when d < 0 is x = ceil(cap/d).
+#[inline]
+fn div_ceil(cap: i64, d: i64) -> i64 {
+    debug_assert!(d != 0);
+    let q = cap / d;
+    if cap % d != 0 && ((cap < 0) == (d < 0)) {
+        q + 1
+    } else {
+        q
+    }
+}
+
+/// Minimum possible value of a linear expression under current domains —
+/// the objective lower bound used for pruning.
+pub fn expr_min(terms: &[(i64, Var)], constant: i64, dom: &Domains) -> i64 {
+    constant
+        + terms
+            .iter()
+            .map(|&(c, v)| term_min(c, dom.lb(v), dom.ub(v)))
+            .sum::<i64>()
+}
+
+/// Maximum possible value of a linear expression under current domains.
+pub fn expr_max(terms: &[(i64, Var)], constant: i64, dom: &Domains) -> i64 {
+    constant
+        + terms
+            .iter()
+            .map(|&(c, v)| term_max(c, dom.lb(v), dom.ub(v)))
+            .sum::<i64>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cp::model::LinExpr;
+
+    fn prop(model: &CpModel) -> (Domains, PropResult) {
+        let mut dom = Domains::from_model(model);
+        let mut p = Propagator::new(model);
+        let mut trail = Vec::new();
+        let r = p.propagate_all(model, &mut dom, &mut trail);
+        (dom, r)
+    }
+
+    #[test]
+    fn le_tightens_upper_bounds() {
+        let mut m = CpModel::new();
+        let a = m.int_var(0, 10, "a");
+        let b = m.int_var(0, 10, "b");
+        m.add_le(LinExpr::new().add(1, a).add(1, b), 4);
+        let (dom, r) = prop(&m);
+        assert_eq!(r, PropResult::Consistent);
+        assert_eq!(dom.ub(a), 4);
+        assert_eq!(dom.ub(b), 4);
+    }
+
+    #[test]
+    fn eq_fixes_when_forced() {
+        let mut m = CpModel::new();
+        let a = m.int_var(0, 10, "a");
+        let b = m.int_var(3, 3, "b");
+        m.add_eq(LinExpr::new().add(1, a).add(1, b), 5);
+        let (dom, r) = prop(&m);
+        assert_eq!(r, PropResult::Consistent);
+        assert_eq!((dom.lb(a), dom.ub(a)), (2, 2));
+    }
+
+    #[test]
+    fn detects_infeasible() {
+        let mut m = CpModel::new();
+        let a = m.int_var(0, 1, "a");
+        let b = m.int_var(0, 1, "b");
+        m.add_ge(LinExpr::new().add(1, a).add(1, b), 3);
+        let (_, r) = prop(&m);
+        assert_eq!(r, PropResult::Infeasible);
+    }
+
+    #[test]
+    fn negative_coefficients() {
+        let mut m = CpModel::new();
+        let a = m.int_var(0, 10, "a");
+        let b = m.int_var(0, 10, "b");
+        // a - b ≤ -5  ⇒  a ≤ b - 5 ⇒ a ≤ 5, b ≥ 5
+        m.add_le(LinExpr::new().add(1, a).add(-1, b), -5);
+        let (dom, r) = prop(&m);
+        assert_eq!(r, PropResult::Consistent);
+        assert_eq!(dom.ub(a), 5);
+        assert_eq!(dom.lb(b), 5);
+    }
+
+    #[test]
+    fn implication_chain_propagates() {
+        let mut m = CpModel::new();
+        let a = m.bool_var("a");
+        let b = m.bool_var("b");
+        let c = m.bool_var("c");
+        m.add_implication(a, b);
+        m.add_implication(b, c);
+        m.add_ge(LinExpr::var(a), 1); // a = 1
+        let (dom, r) = prop(&m);
+        assert_eq!(r, PropResult::Consistent);
+        assert_eq!(dom.lb(b), 1);
+        assert_eq!(dom.lb(c), 1);
+    }
+
+    #[test]
+    fn expr_min_max() {
+        let mut m = CpModel::new();
+        let a = m.int_var(1, 3, "a");
+        let b = m.int_var(-2, 2, "b");
+        let dom = Domains::from_model(&m);
+        let terms = [(2i64, a), (-1i64, b)];
+        assert_eq!(expr_min(&terms, 0, &dom), 2 * 1 - 2);
+        assert_eq!(expr_max(&terms, 0, &dom), 2 * 3 + 2);
+    }
+
+    #[test]
+    fn div_ceil_signs() {
+        assert_eq!(div_ceil(7, -2), -3); // smallest x with -2x ≤ 7 → x ≥ -3.5 → -3
+        assert_eq!(div_ceil(-7, -2), 4); // -2x ≤ -7 → x ≥ 3.5 → 4
+        assert_eq!(div_ceil(6, -3), -2);
+        assert_eq!(div_ceil(-6, -3), 2);
+    }
+}

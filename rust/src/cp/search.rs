@@ -1,0 +1,447 @@
+//! Branch-and-bound search over a [`CpModel`].
+//!
+//! Depth-first search with trail-based backtracking:
+//!   * presolve propagation at the root;
+//!   * deterministic variable selection (smallest remaining domain, ties by
+//!     index — keeps compile results reproducible run-to-run);
+//!   * value ordering steered by the objective (try the value that pulls the
+//!     objective down first);
+//!   * objective-bound pruning against the incumbent;
+//!   * node and wall-time limits with best-effort (incumbent) results, the
+//!     behaviour the paper relies on when it trades schedule quality for
+//!     compile time (Table II).
+
+use std::time::Instant;
+
+use super::model::{CpModel, Var};
+use super::propagate::{expr_min, Domains, PropResult, Propagator, TrailEntry};
+
+/// Search configuration.
+#[derive(Debug, Clone)]
+pub struct SearchConfig {
+    /// Abort after this many explored nodes (None = unlimited).
+    pub node_limit: Option<u64>,
+    /// Abort after this wall-clock budget in milliseconds (None = unlimited).
+    pub time_limit_ms: Option<u64>,
+    /// Stop at the first feasible solution (ignore optimality).
+    pub first_solution_only: bool,
+    /// Warm-start hint: a full assignment (indexed by var index). If it
+    /// satisfies the model it becomes the initial incumbent, so the search
+    /// can only improve on it — and prunes against it from node one.
+    pub hint: Option<Vec<i64>>,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        Self {
+            node_limit: Some(2_000_000),
+            time_limit_ms: Some(20_000),
+            first_solution_only: false,
+            hint: None,
+        }
+    }
+}
+
+/// Why the search returned.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Status {
+    /// Proven optimal (or proven feasible with no objective).
+    Optimal,
+    /// A solution was found but the search hit a limit before proving
+    /// optimality.
+    Feasible,
+    /// Proven infeasible.
+    Infeasible,
+    /// Limit hit before any solution was found.
+    Unknown,
+}
+
+/// Search outcome.
+#[derive(Debug, Clone)]
+pub struct Solution {
+    pub status: Status,
+    /// Best assignment found (indexed by var index), if any.
+    pub assignment: Option<Vec<i64>>,
+    /// Objective of the best assignment.
+    pub objective: Option<i64>,
+    /// Explored node count.
+    pub nodes: u64,
+    /// Wall time of the solve in milliseconds.
+    pub solve_ms: u64,
+}
+
+impl Solution {
+    /// Value of a variable in the best assignment (panics if none).
+    pub fn value(&self, v: Var) -> i64 {
+        self.assignment.as_ref().expect("no solution")[v.index()]
+    }
+
+    /// True if a usable assignment exists.
+    pub fn has_solution(&self) -> bool {
+        self.assignment.is_some()
+    }
+}
+
+struct SearchCtx<'m> {
+    model: &'m CpModel,
+    prop: Propagator,
+    dom: Domains,
+    trail: Vec<TrailEntry>,
+    /// Objective terms (empty if satisfaction problem).
+    obj_terms: Vec<(i64, Var)>,
+    obj_const: i64,
+    best: Option<(i64, Vec<i64>)>,
+    nodes: u64,
+    start: Instant,
+    cfg: SearchConfig,
+    limit_hit: bool,
+}
+
+impl<'m> SearchCtx<'m> {
+    fn undo_to(&mut self, mark: usize) {
+        while self.trail.len() > mark {
+            match self.trail.pop().unwrap() {
+                TrailEntry::Lb(v, old) => self.dom.lb[v.index()] = old,
+                TrailEntry::Ub(v, old) => self.dom.ub[v.index()] = old,
+            }
+        }
+    }
+
+    fn limits_exceeded(&mut self) -> bool {
+        if self.limit_hit {
+            return true;
+        }
+        if let Some(n) = self.cfg.node_limit {
+            if self.nodes >= n {
+                self.limit_hit = true;
+                return true;
+            }
+        }
+        if let Some(ms) = self.cfg.time_limit_ms {
+            // Check time only periodically — Instant::now is not free.
+            if self.nodes % 256 == 0 && self.start.elapsed().as_millis() as u64 >= ms {
+                self.limit_hit = true;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Pick the branching variable: unfixed var with the smallest domain,
+    /// ties broken by index for determinism. Returns None if all fixed.
+    fn select_var(&self) -> Option<Var> {
+        let mut best: Option<(i64, usize)> = None;
+        for i in 0..self.dom.lb.len() {
+            let w = self.dom.ub[i] - self.dom.lb[i];
+            if w > 0 {
+                match best {
+                    Some((bw, _)) if bw <= w => {}
+                    _ => best = Some((w, i)),
+                }
+            }
+        }
+        best.map(|(_, i)| Var(i as u32))
+    }
+
+    /// Objective coefficient of `v` (0 if absent). Objective terms are
+    /// normalized, so binary search applies.
+    fn obj_coef(&self, v: Var) -> i64 {
+        self.obj_terms
+            .binary_search_by_key(&v, |&(_, var)| var)
+            .map(|i| self.obj_terms[i].0)
+            .unwrap_or(0)
+    }
+
+    fn dfs(&mut self) {
+        self.nodes += 1;
+        if self.limits_exceeded() {
+            return;
+        }
+
+        // Objective-bound pruning.
+        if let Some((best_obj, _)) = &self.best {
+            let lb = expr_min(&self.obj_terms, self.obj_const, &self.dom);
+            if lb >= *best_obj {
+                return;
+            }
+        }
+
+        let Some(v) = self.select_var() else {
+            // All vars fixed ⇒ propagation already verified consistency.
+            let assignment = self.dom.assignment();
+            let obj = expr_min(&self.obj_terms, self.obj_const, &self.dom);
+            debug_assert!(self.model.violated(&assignment).is_none());
+            let better = match &self.best {
+                Some((b, _)) => obj < *b,
+                None => true,
+            };
+            if better {
+                self.best = Some((obj, assignment));
+            }
+            return;
+        };
+
+        // Value ordering: if the objective rewards small values (coef ≥ 0)
+        // try lb first, else ub first. Branch as x = bound vs x ≠ bound.
+        let coef = self.obj_coef(v);
+        let lb_first = coef >= 0;
+        let (first_is_lb, second_is_lb) = (lb_first, !lb_first);
+        for is_lb in [first_is_lb, second_is_lb] {
+            if self.limit_hit {
+                return;
+            }
+            // With an incumbent we still need to explore both branches.
+            let mark = self.trail.len();
+            let ok = if is_lb {
+                let val = self.dom.lb(v);
+                // x = lb branch: set ub := lb
+                let old = self.dom.ub[v.index()];
+                if old != val {
+                    self.trail.push(TrailEntry::Ub(v, old));
+                    self.dom.ub[v.index()] = val;
+                }
+                true
+            } else {
+                let val = self.dom.ub(v);
+                let old = self.dom.lb[v.index()];
+                if old != val {
+                    self.trail.push(TrailEntry::Lb(v, old));
+                    self.dom.lb[v.index()] = val;
+                }
+                true
+            };
+            if ok {
+                let res = self
+                    .prop
+                    .propagate_from(self.model, &mut self.dom, &mut self.trail, v);
+                if res == PropResult::Consistent {
+                    self.dfs();
+                    if self.cfg.first_solution_only && self.best.is_some() {
+                        self.undo_to(mark);
+                        return;
+                    }
+                }
+            }
+            self.undo_to(mark);
+
+            // Second branch excludes the tried bound: x ≥ lb+1 (or ≤ ub-1).
+            // Applied before the loop's second iteration via domain shrink.
+            if is_lb == first_is_lb {
+                let mark2 = self.trail.len();
+                let feas = if first_is_lb {
+                    let old = self.dom.lb[v.index()];
+                    let nv = old + 1;
+                    if nv > self.dom.ub(v) {
+                        false
+                    } else {
+                        self.trail.push(TrailEntry::Lb(v, old));
+                        self.dom.lb[v.index()] = nv;
+                        true
+                    }
+                } else {
+                    let old = self.dom.ub[v.index()];
+                    let nv = old - 1;
+                    if nv < self.dom.lb(v) {
+                        false
+                    } else {
+                        self.trail.push(TrailEntry::Ub(v, old));
+                        self.dom.ub[v.index()] = nv;
+                        true
+                    }
+                };
+                if !feas {
+                    self.undo_to(mark2);
+                    return; // domain exhausted; both branches done
+                }
+                let res = self
+                    .prop
+                    .propagate_from(self.model, &mut self.dom, &mut self.trail, v);
+                if res == PropResult::Infeasible {
+                    self.undo_to(mark2);
+                    return;
+                }
+                // Recurse over the reduced domain instead of a literal
+                // second value: gives binary-tree branching on ranges.
+                self.dfs();
+                self.undo_to(mark2);
+                return;
+            }
+        }
+    }
+}
+
+/// Solve `model` with the given configuration.
+pub fn solve(model: &CpModel, cfg: SearchConfig) -> Solution {
+    let start = Instant::now();
+    let mut dom = Domains::from_model(model);
+    let mut prop = Propagator::new(model);
+    let mut trail = Vec::new();
+
+    // Root presolve.
+    if prop.propagate_all(model, &mut dom, &mut trail) == PropResult::Infeasible {
+        return Solution {
+            status: Status::Infeasible,
+            assignment: None,
+            objective: None,
+            nodes: 0,
+            solve_ms: start.elapsed().as_millis() as u64,
+        };
+    }
+
+    let (obj_terms, obj_const) = match &model.objective {
+        Some(o) => (o.terms.clone(), o.constant),
+        None => (Vec::new(), 0),
+    };
+    let mut obj_terms = obj_terms;
+    obj_terms.sort_by_key(|&(_, v)| v);
+
+    // Warm start: adopt a valid hint as the initial incumbent.
+    let initial_best = cfg.hint.as_ref().and_then(|h| {
+        if h.len() == model.vars.len() && model.violated(h).is_none() {
+            let obj = obj_const
+                + obj_terms
+                    .iter()
+                    .map(|&(c, v)| c * h[v.index()])
+                    .sum::<i64>();
+            Some((obj, h.clone()))
+        } else {
+            None
+        }
+    });
+
+    let mut ctx = SearchCtx {
+        model,
+        prop,
+        dom,
+        trail,
+        obj_terms,
+        obj_const,
+        best: initial_best,
+        nodes: 0,
+        start,
+        cfg,
+        limit_hit: false,
+    };
+    ctx.dfs();
+
+    let solve_ms = ctx.start.elapsed().as_millis() as u64;
+    match ctx.best {
+        Some((obj, assignment)) => Solution {
+            status: if ctx.limit_hit { Status::Feasible } else { Status::Optimal },
+            objective: Some(obj),
+            assignment: Some(assignment),
+            nodes: ctx.nodes,
+            solve_ms,
+        },
+        None => Solution {
+            status: if ctx.limit_hit { Status::Unknown } else { Status::Infeasible },
+            objective: None,
+            assignment: None,
+            nodes: ctx.nodes,
+            solve_ms,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cp::model::LinExpr;
+
+    #[test]
+    fn optimal_simple_lp() {
+        // min x + y  s.t. x + y >= 3, x,y in [0,5]
+        let mut m = CpModel::new();
+        let x = m.int_var(0, 5, "x");
+        let y = m.int_var(0, 5, "y");
+        m.add_ge(LinExpr::sum([x, y]), 3);
+        m.minimize(LinExpr::sum([x, y]));
+        let s = solve(&m, SearchConfig::default());
+        assert_eq!(s.status, Status::Optimal);
+        assert_eq!(s.objective, Some(3));
+    }
+
+    #[test]
+    fn infeasible_model() {
+        let mut m = CpModel::new();
+        let x = m.bool_var("x");
+        m.add_ge(LinExpr::var(x), 1);
+        m.add_le(LinExpr::var(x), 0);
+        let s = solve(&m, SearchConfig::default());
+        assert_eq!(s.status, Status::Infeasible);
+    }
+
+    #[test]
+    fn knapsack_optimal() {
+        // max 6a+5b+4c st 2a+3b+4c <= 5 → min -(...)
+        let mut m = CpModel::new();
+        let a = m.bool_var("a");
+        let b = m.bool_var("b");
+        let c = m.bool_var("c");
+        m.add_le(LinExpr::new().add(2, a).add(3, b).add(4, c), 5);
+        m.minimize(LinExpr::new().add(-6, a).add(-5, b).add(-4, c));
+        let s = solve(&m, SearchConfig::default());
+        assert_eq!(s.status, Status::Optimal);
+        assert_eq!(s.objective, Some(-11)); // a + b
+        assert_eq!(s.value(a), 1);
+        assert_eq!(s.value(b), 1);
+        assert_eq!(s.value(c), 0);
+    }
+
+    #[test]
+    fn exactly_one_selection() {
+        // min cost with exactly-one constraint: costs 7, 3, 9
+        let mut m = CpModel::new();
+        let v: Vec<_> = (0..3).map(|i| m.bool_var(format!("s{i}"))).collect();
+        m.add_exactly_one(v.clone());
+        m.minimize(LinExpr::weighted_sum([(7, v[0]), (3, v[1]), (9, v[2])]));
+        let s = solve(&m, SearchConfig::default());
+        assert_eq!(s.objective, Some(3));
+        assert_eq!(s.value(v[1]), 1);
+    }
+
+    #[test]
+    fn satisfaction_without_objective() {
+        let mut m = CpModel::new();
+        let x = m.int_var(0, 9, "x");
+        let y = m.int_var(0, 9, "y");
+        m.add_eq(LinExpr::new().add(1, x).add(1, y), 9);
+        m.add_eq(LinExpr::new().add(1, x).add(-1, y), 3);
+        let s = solve(&m, SearchConfig::default());
+        assert!(s.has_solution());
+        assert_eq!(s.value(x), 6);
+        assert_eq!(s.value(y), 3);
+    }
+
+    #[test]
+    fn node_limit_returns_feasible_or_unknown() {
+        let mut m = CpModel::new();
+        let vars: Vec<_> = (0..30).map(|i| m.bool_var(format!("b{i}"))).collect();
+        // Loose parity-ish constraints to make a big tree.
+        for w in vars.windows(2) {
+            m.add_le(LinExpr::sum(w.to_vec()), 1);
+        }
+        m.minimize(LinExpr::weighted_sum(
+            vars.iter().enumerate().map(|(i, &v)| (-(i as i64 % 7 + 1), v)),
+        ));
+        let s = solve(
+            &m,
+            SearchConfig { node_limit: Some(50), ..Default::default() },
+        );
+        assert!(matches!(s.status, Status::Feasible | Status::Unknown | Status::Optimal));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut m = CpModel::new();
+        let vars: Vec<_> = (0..12).map(|i| m.bool_var(format!("b{i}"))).collect();
+        m.add_le(LinExpr::sum(vars.clone()), 6);
+        m.minimize(LinExpr::weighted_sum(
+            vars.iter().enumerate().map(|(i, &v)| ((i as i64 * 13 % 11) - 5, v)),
+        ));
+        let s1 = solve(&m, SearchConfig::default());
+        let s2 = solve(&m, SearchConfig::default());
+        assert_eq!(s1.assignment, s2.assignment);
+        assert_eq!(s1.objective, s2.objective);
+    }
+}

@@ -1,0 +1,502 @@
+//! The NN graph: tensors + ops with shape inference and MAC accounting.
+
+use super::op::{Activation, ConvGeometry, Op, OpId, OpKind, PoolKind};
+use super::quant::QuantParams;
+use super::tensor::{DType, Shape, TensorId, TensorInfo, TensorKind};
+
+/// A directed acyclic graph of operators over tensors. Built by the `zoo`
+/// model builders, consumed by the compiler pipeline.
+#[derive(Debug, Default, Clone)]
+pub struct Graph {
+    pub name: String,
+    pub tensors: Vec<TensorInfo>,
+    pub ops: Vec<Op>,
+    pub inputs: Vec<TensorId>,
+    pub outputs: Vec<TensorId>,
+}
+
+impl Graph {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), ..Default::default() }
+    }
+
+    /// Register a tensor.
+    pub fn add_tensor(
+        &mut self,
+        name: impl Into<String>,
+        shape: Shape,
+        dtype: DType,
+        kind: TensorKind,
+    ) -> TensorId {
+        let id = TensorId(self.tensors.len() as u32);
+        self.tensors.push(TensorInfo {
+            id,
+            name: name.into(),
+            shape,
+            dtype,
+            kind,
+            quant: Some(QuantParams::new(0.05, 0)),
+        });
+        if kind == TensorKind::Input {
+            self.inputs.push(id);
+        }
+        id
+    }
+
+    /// Register an op; returns its id.
+    pub fn add_op(
+        &mut self,
+        name: impl Into<String>,
+        kind: OpKind,
+        inputs: Vec<TensorId>,
+        params: Option<TensorId>,
+        output: TensorId,
+        fused_activation: Activation,
+    ) -> OpId {
+        let id = OpId(self.ops.len() as u32);
+        self.ops.push(Op { id, name: name.into(), kind, inputs, params, output, fused_activation });
+        id
+    }
+
+    pub fn tensor(&self, id: TensorId) -> &TensorInfo {
+        &self.tensors[id.index()]
+    }
+
+    pub fn op(&self, id: OpId) -> &Op {
+        &self.ops[id.index()]
+    }
+
+    /// The op producing a tensor, if any.
+    pub fn producer(&self, t: TensorId) -> Option<&Op> {
+        self.ops.iter().find(|o| o.output == t)
+    }
+
+    /// Ops consuming a tensor as an activation input.
+    pub fn consumers(&self, t: TensorId) -> Vec<&Op> {
+        self.ops.iter().filter(|o| o.inputs.contains(&t)).collect()
+    }
+
+    /// Mark a tensor as a network output.
+    pub fn mark_output(&mut self, t: TensorId) {
+        self.tensors[t.index()].kind = TensorKind::Output;
+        if !self.outputs.contains(&t) {
+            self.outputs.push(t);
+        }
+    }
+
+    /// MAC count of one op (0 for data-movement ops). Element-wise and pool
+    /// ops are counted at one op/output-element like the paper's G-MACs
+    /// accounting (dominated by convs anyway).
+    pub fn op_macs(&self, op: &Op) -> u64 {
+        let out = &self.tensor(op.output).shape;
+        let (oh, ow, oc) = (out.h() as u64, out.w() as u64, out.c() as u64);
+        match &op.kind {
+            OpKind::Conv2d { geom, .. } => {
+                let in_c = self.tensor(op.inputs[0]).shape.c() as u64;
+                oh * ow * oc * geom.filter_h as u64 * geom.filter_w as u64 * in_c
+            }
+            OpKind::DepthwiseConv2d { geom } => {
+                oh * ow * oc * geom.filter_h as u64 * geom.filter_w as u64
+            }
+            OpKind::FullyConnected { .. } | OpKind::MatMul { .. } => {
+                let in_c = self.tensor(op.inputs[0]).shape.c() as u64;
+                oh * ow * oc * in_c
+            }
+            OpKind::Add | OpKind::Mul | OpKind::ScalarAddMul | OpKind::ActivationOnly(_) => 0,
+            OpKind::Pool { size, .. } => oh * ow * oc * (*size as u64).pow(2) / 2,
+            OpKind::GlobalAvgPool => {
+                let inp = &self.tensor(op.inputs[0]).shape;
+                (inp.num_elements() as u64) / 2
+            }
+            OpKind::Softmax
+            | OpKind::Reshape
+            | OpKind::Concat
+            | OpKind::ResizeNearest { .. }
+            | OpKind::ResizeTo { .. }
+            | OpKind::SpaceToDepth { .. } => 0,
+        }
+    }
+
+    /// Total MACs of the graph.
+    pub fn total_macs(&self) -> u64 {
+        self.ops.iter().map(|o| self.op_macs(o)).sum()
+    }
+
+    /// Total parameter count (weights + biases).
+    pub fn total_params(&self) -> u64 {
+        self.tensors
+            .iter()
+            .filter(|t| t.kind == TensorKind::Parameter)
+            .map(|t| t.shape.num_elements() as u64)
+            .sum()
+    }
+
+    /// Ops in topological order (the builders emit them in order; verify).
+    pub fn topo_order(&self) -> Vec<OpId> {
+        // Builders append in dependency order. Validate with a ready-set
+        // sweep so a malformed zoo model fails loudly.
+        let mut ready: Vec<bool> = self
+            .tensors
+            .iter()
+            .map(|t| matches!(t.kind, TensorKind::Input | TensorKind::Parameter))
+            .collect();
+        let mut order = Vec::with_capacity(self.ops.len());
+        let mut emitted = vec![false; self.ops.len()];
+        loop {
+            let mut progressed = false;
+            for op in &self.ops {
+                if emitted[op.id.index()] {
+                    continue;
+                }
+                if op.inputs.iter().all(|t| ready[t.index()]) {
+                    ready[op.output.index()] = true;
+                    emitted[op.id.index()] = true;
+                    order.push(op.id);
+                    progressed = true;
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+        assert_eq!(
+            order.len(),
+            self.ops.len(),
+            "graph {} has a cycle or dangling input",
+            self.name
+        );
+        order
+    }
+
+    /// Structural sanity check: shapes consistent with op geometry.
+    pub fn validate(&self) -> Result<(), String> {
+        for op in &self.ops {
+            let out = &self.tensor(op.output).shape;
+            match &op.kind {
+                OpKind::Conv2d { geom, out_c } => {
+                    let inp = &self.tensor(op.inputs[0]).shape;
+                    let eh = geom.out_dim(inp.h(), geom.filter_h, geom.stride_h);
+                    let ew = geom.out_dim(inp.w(), geom.filter_w, geom.stride_w);
+                    if (out.h(), out.w(), out.c()) != (eh, ew, *out_c) {
+                        return Err(format!(
+                            "{}: conv output {:?} != expected ({eh},{ew},{out_c})",
+                            op.name, out.0
+                        ));
+                    }
+                }
+                OpKind::DepthwiseConv2d { geom } => {
+                    let inp = &self.tensor(op.inputs[0]).shape;
+                    if out.c() != inp.c() {
+                        return Err(format!("{}: depthwise changes channels", op.name));
+                    }
+                    let eh = geom.out_dim(inp.h(), geom.filter_h, geom.stride_h);
+                    if out.h() != eh {
+                        return Err(format!("{}: depthwise H {} != {}", op.name, out.h(), eh));
+                    }
+                }
+                OpKind::Add | OpKind::Mul => {
+                    let a = &self.tensor(op.inputs[0]).shape;
+                    let b = &self.tensor(op.inputs[1]).shape;
+                    if a != b || a != out {
+                        return Err(format!("{}: eltwise shape mismatch", op.name));
+                    }
+                }
+                OpKind::Concat => {
+                    let total_c: usize =
+                        op.inputs.iter().map(|&t| self.tensor(t).shape.c()).sum();
+                    if out.c() != total_c {
+                        return Err(format!("{}: concat channels {} != {}", op.name, out.c(), total_c));
+                    }
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Fluent helper for the zoo builders: tracks the "current" tensor and
+/// appends quantized conv blocks with correct shape inference.
+pub struct GraphBuilder {
+    pub graph: Graph,
+    cur: TensorId,
+    /// Default activation used by zoo helpers that are parametric over the
+    /// model family's nonlinearity (e.g. SiLU for YOLOv8, ReLU for the
+    /// DAMO-YOLO edge deployment).
+    default_act: Activation,
+}
+
+impl GraphBuilder {
+    /// Start a graph with an HWC input image.
+    pub fn with_input(name: impl Into<String>, h: usize, w: usize, c: usize) -> Self {
+        let mut graph = Graph::new(name);
+        let cur = graph.add_tensor("input", Shape::hwc(h, w, c), DType::Int8, TensorKind::Input);
+        Self { graph, cur, default_act: Activation::Relu }
+    }
+
+    /// Set the family default activation (see `default_act`).
+    pub fn set_default_activation(&mut self, a: Activation) {
+        self.default_act = a;
+    }
+
+    /// The family default activation.
+    pub fn act_override(&self) -> Activation {
+        self.default_act
+    }
+
+    pub fn current(&self) -> TensorId {
+        self.cur
+    }
+
+    pub fn set_current(&mut self, t: TensorId) {
+        self.cur = t;
+    }
+
+    pub fn current_shape(&self) -> &Shape {
+        &self.graph.tensor(self.cur).shape
+    }
+
+    fn act_tensor(&mut self, name: String, shape: Shape) -> TensorId {
+        self.graph.add_tensor(name, shape, DType::Int8, TensorKind::Activation)
+    }
+
+    /// Conv2d + fused activation, updating the current tensor.
+    pub fn conv(
+        &mut self,
+        name: &str,
+        out_c: usize,
+        geom: ConvGeometry,
+        act: Activation,
+    ) -> TensorId {
+        self.conv_from(self.cur, name, out_c, geom, act)
+    }
+
+    /// Conv2d from an explicit input tensor.
+    pub fn conv_from(
+        &mut self,
+        src: TensorId,
+        name: &str,
+        out_c: usize,
+        geom: ConvGeometry,
+        act: Activation,
+    ) -> TensorId {
+        let inp = self.graph.tensor(src).shape.clone();
+        let oh = geom.out_dim(inp.h(), geom.filter_h, geom.stride_h);
+        let ow = geom.out_dim(inp.w(), geom.filter_w, geom.stride_w);
+        let w = self.graph.add_tensor(
+            format!("{name}.w"),
+            Shape(vec![out_c, geom.filter_h, geom.filter_w, inp.c()]),
+            DType::Int8,
+            TensorKind::Parameter,
+        );
+        let out = self.act_tensor(format!("{name}.out"), Shape::hwc(oh, ow, out_c));
+        self.graph.add_op(name, OpKind::Conv2d { geom, out_c }, vec![src], Some(w), out, act);
+        self.cur = out;
+        out
+    }
+
+    /// Depthwise conv + fused activation.
+    pub fn dwconv(&mut self, name: &str, geom: ConvGeometry, act: Activation) -> TensorId {
+        let inp = self.graph.tensor(self.cur).shape.clone();
+        let oh = geom.out_dim(inp.h(), geom.filter_h, geom.stride_h);
+        let ow = geom.out_dim(inp.w(), geom.filter_w, geom.stride_w);
+        let c = inp.c();
+        let w = self.graph.add_tensor(
+            format!("{name}.w"),
+            Shape(vec![c, geom.filter_h, geom.filter_w, 1]),
+            DType::Int8,
+            TensorKind::Parameter,
+        );
+        let out = self.act_tensor(format!("{name}.out"), Shape::hwc(oh, ow, c));
+        self.graph.add_op(
+            name,
+            OpKind::DepthwiseConv2d { geom },
+            vec![self.cur],
+            Some(w),
+            out,
+            act,
+        );
+        self.cur = out;
+        out
+    }
+
+    /// Element-wise residual add.
+    pub fn add(&mut self, name: &str, a: TensorId, b: TensorId) -> TensorId {
+        let shape = self.graph.tensor(a).shape.clone();
+        let out = self.act_tensor(format!("{name}.out"), shape);
+        self.graph.add_op(name, OpKind::Add, vec![a, b], None, out, Activation::None);
+        self.cur = out;
+        out
+    }
+
+    /// Element-wise multiply (e.g. SE gates, attention masks).
+    pub fn mul(&mut self, name: &str, a: TensorId, b: TensorId) -> TensorId {
+        let shape = self.graph.tensor(a).shape.clone();
+        let out = self.act_tensor(format!("{name}.out"), shape);
+        self.graph.add_op(name, OpKind::Mul, vec![a, b], None, out, Activation::None);
+        self.cur = out;
+        out
+    }
+
+    /// Max/avg pool.
+    pub fn pool(&mut self, name: &str, kind: PoolKind, size: usize, stride: usize) -> TensorId {
+        let inp = self.graph.tensor(self.cur).shape.clone();
+        let oh = inp.h().div_ceil(stride);
+        let ow = inp.w().div_ceil(stride);
+        let out = self.act_tensor(format!("{name}.out"), Shape::hwc(oh, ow, inp.c()));
+        self.graph.add_op(
+            name,
+            OpKind::Pool { kind, size, stride },
+            vec![self.cur],
+            None,
+            out,
+            Activation::None,
+        );
+        self.cur = out;
+        out
+    }
+
+    /// Global average pool to 1×1×C.
+    pub fn global_avg_pool(&mut self, name: &str) -> TensorId {
+        let c = self.graph.tensor(self.cur).shape.c();
+        let out = self.act_tensor(format!("{name}.out"), Shape::hwc(1, 1, c));
+        self.graph.add_op(name, OpKind::GlobalAvgPool, vec![self.cur], None, out, Activation::None);
+        self.cur = out;
+        out
+    }
+
+    /// Fully connected head.
+    pub fn fc(&mut self, name: &str, out_features: usize, act: Activation) -> TensorId {
+        let inp = self.graph.tensor(self.cur).shape.clone();
+        let w = self.graph.add_tensor(
+            format!("{name}.w"),
+            Shape(vec![out_features, 1, 1, inp.num_elements()]),
+            DType::Int8,
+            TensorKind::Parameter,
+        );
+        let out = self.act_tensor(format!("{name}.out"), Shape::hwc(1, 1, out_features));
+        self.graph.add_op(
+            name,
+            OpKind::FullyConnected { out_features },
+            vec![self.cur],
+            Some(w),
+            out,
+            act,
+        );
+        self.cur = out;
+        out
+    }
+
+    /// Nearest-neighbour resize to an explicit spatial size.
+    pub fn resize_to(&mut self, name: &str, h: usize, w: usize) -> TensorId {
+        let c = self.graph.tensor(self.cur).shape.c();
+        let out = self.act_tensor(format!("{name}.out"), Shape::hwc(h, w, c));
+        self.graph.add_op(
+            name,
+            OpKind::ResizeTo { h, w },
+            vec![self.cur],
+            None,
+            out,
+            Activation::None,
+        );
+        self.cur = out;
+        out
+    }
+
+    /// Nearest-neighbour upsample.
+    pub fn resize(&mut self, name: &str, scale: usize) -> TensorId {
+        let inp = self.graph.tensor(self.cur).shape.clone();
+        let out = self.act_tensor(
+            format!("{name}.out"),
+            Shape::hwc(inp.h() * scale, inp.w() * scale, inp.c()),
+        );
+        self.graph.add_op(
+            name,
+            OpKind::ResizeNearest { scale },
+            vec![self.cur],
+            None,
+            out,
+            Activation::None,
+        );
+        self.cur = out;
+        out
+    }
+
+    /// Channel concat.
+    pub fn concat(&mut self, name: &str, parts: Vec<TensorId>) -> TensorId {
+        let h = self.graph.tensor(parts[0]).shape.h();
+        let w = self.graph.tensor(parts[0]).shape.w();
+        let c: usize = parts.iter().map(|&t| self.graph.tensor(t).shape.c()).sum();
+        let out = self.act_tensor(format!("{name}.out"), Shape::hwc(h, w, c));
+        self.graph.add_op(name, OpKind::Concat, parts, None, out, Activation::None);
+        self.cur = out;
+        out
+    }
+
+    /// Finish: mark current tensor as output and return the graph.
+    pub fn finish(mut self) -> Graph {
+        self.graph.mark_output(self.cur);
+        self.graph
+    }
+
+    /// Finish with several explicit outputs (detection heads).
+    pub fn finish_multi(mut self, outs: Vec<TensorId>) -> Graph {
+        for o in outs {
+            self.graph.mark_output(o);
+        }
+        self.graph
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Graph {
+        let mut b = GraphBuilder::with_input("tiny", 8, 8, 3);
+        b.conv("c1", 16, ConvGeometry::square(3, 2, crate::ir::op::Padding::Same), Activation::Relu);
+        b.dwconv("dw1", ConvGeometry::square(3, 1, crate::ir::op::Padding::Same), Activation::Relu);
+        b.conv("c2", 32, ConvGeometry::unit(), Activation::None);
+        b.global_avg_pool("gap");
+        b.fc("fc", 10, Activation::None);
+        b.finish()
+    }
+
+    #[test]
+    fn builder_shapes() {
+        let g = tiny();
+        g.validate().unwrap();
+        let out = g.tensor(g.outputs[0]);
+        assert_eq!(out.shape.c(), 10);
+    }
+
+    #[test]
+    fn macs_counted() {
+        let g = tiny();
+        // c1: 4*4*16*3*3*3, dw1: 4*4*16*9, c2: 4*4*32*16, fc: 32*10
+        let expect = 4 * 4 * 16 * 27 + 4 * 4 * 16 * 9 + 4 * 4 * 32 * 16 + 320;
+        let gap = 16 * 2 / 2 + 0; // gap counted as elems/2 = 4*4*32/2
+        let gap = 4 * 4 * 32 / 2;
+        assert_eq!(g.total_macs(), (expect + gap) as u64);
+        let _ = gap;
+    }
+
+    #[test]
+    fn topo_order_covers_all_ops() {
+        let g = tiny();
+        let order = g.topo_order();
+        assert_eq!(order.len(), g.ops.len());
+    }
+
+    #[test]
+    fn residual_add_and_concat() {
+        let mut b = GraphBuilder::with_input("res", 16, 16, 8);
+        let x = b.current();
+        let y = b.conv("c", 8, ConvGeometry::unit(), Activation::Relu);
+        let s = b.add("add", x, y);
+        let cat = b.concat("cat", vec![s, y]);
+        let g = b.finish();
+        g.validate().unwrap();
+        assert_eq!(g.tensor(cat).shape.c(), 16);
+    }
+}

@@ -1,0 +1,17 @@
+//! Graph intermediate representation.
+//!
+//! Frontend-agnostic IR equivalent to the paper's mid-end input (Sec. IV):
+//! tensors with HWC shapes + INT8 quantization metadata, and an operator set
+//! covering the benchmarked vision models. Fully-connected / matmul /
+//! element-wise / scalar ops are represented directly but *lowered* by the
+//! compiler using the paper's rules (1×1 convs, paired depthwise ops).
+
+pub mod graph;
+pub mod op;
+pub mod quant;
+pub mod tensor;
+
+pub use graph::{Graph, GraphBuilder};
+pub use op::{Activation, ConvGeometry, Op, OpId, OpKind, Padding, PoolKind};
+pub use quant::{clamp_i8, QuantParams, Requant};
+pub use tensor::{DType, Shape, TensorId, TensorInfo, TensorKind};

@@ -1,0 +1,211 @@
+//! Operator set of the IR.
+//!
+//! Mirrors the paper's lowering rules (Sec. IV-A): fully-connected layers
+//! and matmuls are 1×1 convolutions; element-wise add/mul are paired
+//! depthwise ops; scalar ops are 1×1 depthwise ops. Every op carries enough
+//! metadata for the cost model (MACs, operand footprints) and for the
+//! format-selection pass (spatial structure).
+
+use super::tensor::TensorId;
+
+/// Activation functions applied by the dedicated activation engine
+/// (Sec. III-B) — fused into the compute job, zero extra memory traffic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    None,
+    Relu,
+    Relu6,
+    /// Swish / SiLU (EfficientNet, YOLOv8).
+    Swish,
+    /// Hard-swish (MobileNetV3).
+    HardSwish,
+    Sigmoid,
+    Mish,
+}
+
+/// Padding mode for spatial ops.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Padding {
+    Same,
+    Valid,
+}
+
+/// Convolution geometry shared by conv / depthwise-conv.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvGeometry {
+    pub filter_h: usize,
+    pub filter_w: usize,
+    pub stride_h: usize,
+    pub stride_w: usize,
+    pub padding: Padding,
+    pub dilation: usize,
+}
+
+impl ConvGeometry {
+    pub fn unit() -> Self {
+        Self { filter_h: 1, filter_w: 1, stride_h: 1, stride_w: 1, padding: Padding::Same, dilation: 1 }
+    }
+
+    pub fn square(k: usize, s: usize, padding: Padding) -> Self {
+        Self { filter_h: k, filter_w: k, stride_h: s, stride_w: s, padding, dilation: 1 }
+    }
+
+    /// Output spatial size given input spatial size.
+    pub fn out_dim(&self, in_dim: usize, filter: usize, stride: usize) -> usize {
+        match self.padding {
+            Padding::Same => in_dim.div_ceil(stride),
+            Padding::Valid => {
+                let eff = (filter - 1) * self.dilation + 1;
+                if in_dim < eff {
+                    0
+                } else {
+                    (in_dim - eff) / stride + 1
+                }
+            }
+        }
+    }
+}
+
+/// Pooling flavour (on-the-fly min/max pooling is fused by the activation
+/// engine; average pooling is a standalone kernel-library op).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolKind {
+    Max,
+    Avg,
+}
+
+/// Operator kinds.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpKind {
+    /// Standard convolution: ifmap (H,W,Cin) ⊛ params (Cout,fh,fw,Cin).
+    Conv2d { geom: ConvGeometry, out_c: usize },
+    /// Depthwise convolution (multiplier 1).
+    DepthwiseConv2d { geom: ConvGeometry },
+    /// Fully connected == 1×1 conv over a 1×1 spatial map (paper IV-A).
+    FullyConnected { out_features: usize },
+    /// Matmul over (tokens, emb) treated as H=tokens, C=emb (paper IV-A).
+    MatMul { out_features: usize },
+    /// Element-wise add of two tensors (paired depthwise op).
+    Add,
+    /// Element-wise multiply (Hadamard; paired depthwise op).
+    Mul,
+    /// Scalar op (constant operand): 1×1 depthwise.
+    ScalarAddMul,
+    /// Pooling.
+    Pool { kind: PoolKind, size: usize, stride: usize },
+    /// Global average pool to 1×1×C.
+    GlobalAvgPool,
+    /// Resize (nearest) — upsampling in detection heads / FPN necks.
+    ResizeNearest { scale: usize },
+    /// Resize (nearest) to an explicit spatial size — BiFPN levels with
+    /// odd sizes (e.g. 5→3) that integer scaling cannot express.
+    ResizeTo { h: usize, w: usize },
+    /// Channel concat of inputs.
+    Concat,
+    /// Spatial reshape/flatten — zero-compute, may need data rearrangement.
+    Reshape,
+    /// Softmax — host/activation-engine op in classifiers and heads.
+    Softmax,
+    /// Standalone activation (when not fuseable into a producer).
+    ActivationOnly(Activation),
+    /// Space-to-depth style stem (YOLO focus) — data movement only.
+    SpaceToDepth { block: usize },
+}
+
+/// Unique op id inside a graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct OpId(pub u32);
+
+impl OpId {
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// One operator node.
+#[derive(Debug, Clone)]
+pub struct Op {
+    pub id: OpId,
+    pub name: String,
+    pub kind: OpKind,
+    /// Activation-tensor inputs (order matters: ifmap first).
+    pub inputs: Vec<TensorId>,
+    /// Parameter tensor (weights+bias), if any.
+    pub params: Option<TensorId>,
+    pub output: TensorId,
+    /// Fused activation applied by the activation engine.
+    pub fused_activation: Activation,
+}
+
+impl Op {
+    /// True if this op runs on the dot-product array (vs pure data movement
+    /// / host fallback).
+    pub fn is_compute(&self) -> bool {
+        !matches!(
+            self.kind,
+            OpKind::Reshape
+                | OpKind::Concat
+                | OpKind::SpaceToDepth { .. }
+                | OpKind::ResizeTo { .. }
+        )
+    }
+
+    /// True if lowered as a depthwise-style op (each engine only needs its
+    /// own channel slice of the inputs — Sec. IV-A special case).
+    pub fn is_depthwise_style(&self) -> bool {
+        matches!(
+            self.kind,
+            OpKind::DepthwiseConv2d { .. }
+                | OpKind::Add
+                | OpKind::Mul
+                | OpKind::ScalarAddMul
+                | OpKind::Pool { .. }
+                | OpKind::ActivationOnly(_)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_out_dims_same_padding() {
+        let g = ConvGeometry::square(3, 2, Padding::Same);
+        assert_eq!(g.out_dim(224, 3, 2), 112);
+        assert_eq!(g.out_dim(7, 3, 2), 4);
+    }
+
+    #[test]
+    fn conv_out_dims_valid_padding() {
+        let g = ConvGeometry::square(3, 1, Padding::Valid);
+        assert_eq!(g.out_dim(224, 3, 1), 222);
+        let g2 = ConvGeometry::square(7, 2, Padding::Valid);
+        assert_eq!(g2.out_dim(224, 7, 2), 109);
+    }
+
+    #[test]
+    fn depthwise_style_classification() {
+        let op = Op {
+            id: OpId(0),
+            name: "dw".into(),
+            kind: OpKind::DepthwiseConv2d { geom: ConvGeometry::square(3, 1, Padding::Same) },
+            inputs: vec![TensorId(0)],
+            params: Some(TensorId(1)),
+            output: TensorId(2),
+            fused_activation: Activation::Relu6,
+        };
+        assert!(op.is_depthwise_style());
+        assert!(op.is_compute());
+        let reshape = Op {
+            id: OpId(1),
+            name: "rs".into(),
+            kind: OpKind::Reshape,
+            inputs: vec![TensorId(2)],
+            params: None,
+            output: TensorId(3),
+            fused_activation: Activation::None,
+        };
+        assert!(!reshape.is_compute());
+    }
+}

@@ -1,0 +1,148 @@
+//! INT8/INT16 affine quantization metadata and requantization arithmetic.
+//!
+//! Matches the LiteRT integer-quantization scheme the paper benchmarks with
+//! (INT8 activations + weights, INT32 bias, per-tensor or per-channel
+//! scales): `real = scale * (q - zero_point)`. Requantization of the 32-bit
+//! accumulator to 8 bits uses the standard fixed-point multiplier+shift
+//! decomposition so the rust reference executor and the Pallas kernel agree
+//! bit-exactly.
+
+/// Affine quantization parameters for one tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantParams {
+    /// Per-tensor scale (per-channel handled as a vector at op level).
+    pub scale: f64,
+    /// Zero point in the quantized domain.
+    pub zero_point: i32,
+}
+
+impl QuantParams {
+    pub fn new(scale: f64, zero_point: i32) -> Self {
+        assert!(scale > 0.0, "quant scale must be positive");
+        Self { scale, zero_point }
+    }
+
+    /// Quantize a real value to i32 (caller clamps to the target dtype).
+    pub fn quantize(&self, real: f64) -> i32 {
+        (real / self.scale).round() as i32 + self.zero_point
+    }
+
+    /// Dequantize.
+    pub fn dequantize(&self, q: i32) -> f64 {
+        self.scale * (q - self.zero_point) as f64
+    }
+}
+
+/// Fixed-point requantization multiplier: `real_multiplier ≈ m * 2^(-shift)`
+/// with `m` a 31-bit normalized mantissa — the exact scheme LiteRT kernels
+/// and our Pallas kernel use to rescale INT32 accumulators to INT8.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Requant {
+    /// Normalized multiplier in [2^30, 2^31).
+    pub multiplier: i32,
+    /// Right shift (>= 0 for multipliers < 1, the common case).
+    pub shift: i32,
+}
+
+impl Requant {
+    /// Decompose `real` (must be in (0, 1) for typical conv rescales, but
+    /// any positive value is supported) into multiplier+shift.
+    pub fn from_real(real: f64) -> Self {
+        assert!(real > 0.0, "requant multiplier must be positive");
+        let mut shift = 0i32;
+        let mut r = real;
+        while r < 0.5 {
+            r *= 2.0;
+            shift += 1;
+        }
+        while r >= 1.0 {
+            r /= 2.0;
+            shift -= 1;
+        }
+        // r in [0.5, 1): mantissa in [2^30, 2^31)
+        let mut multiplier = (r * (1i64 << 31) as f64).round() as i64;
+        if multiplier == (1i64 << 31) {
+            multiplier /= 2;
+            shift -= 1;
+        }
+        Self { multiplier: multiplier as i32, shift }
+    }
+
+    /// The effective real multiplier this pair encodes.
+    pub fn to_real(self) -> f64 {
+        self.multiplier as f64 / (1i64 << 31) as f64 / 2f64.powi(self.shift)
+    }
+
+    /// Apply to an accumulator: rounding high multiply (`round(acc·m/2³¹)`)
+    /// followed by a rounding right shift — the fixed-point rescale the
+    /// Pallas kernel mirrors, so rust and python agree bit-exactly.
+    pub fn apply(self, acc: i32) -> i32 {
+        let prod = (acc as i64) * (self.multiplier as i64);
+        // Rounding high part: round(prod / 2^31).
+        let high = (prod + (1i64 << 30)) >> 31;
+        if self.shift <= 0 {
+            (high << (-self.shift) as u32).clamp(i32::MIN as i64, i32::MAX as i64) as i32
+        } else {
+            let s = self.shift as u32;
+            let round = 1i64 << (s - 1);
+            ((high + round) >> s) as i32
+        }
+    }
+}
+
+/// Saturate an i32 to the i8 range.
+#[inline]
+pub fn clamp_i8(v: i32) -> i8 {
+    v.clamp(i8::MIN as i32, i8::MAX as i32) as i8
+}
+
+/// Saturate an i32 to the i16 range.
+#[inline]
+pub fn clamp_i16(v: i32) -> i16 {
+    v.clamp(i16::MIN as i32, i16::MAX as i32) as i16
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_round_trip() {
+        let q = QuantParams::new(0.05, -3);
+        let real = 1.25;
+        let qi = q.quantize(real);
+        let back = q.dequantize(qi);
+        assert!((back - real).abs() <= 0.05 / 2.0 + 1e-9);
+    }
+
+    #[test]
+    fn requant_decomposition_accuracy() {
+        for &real in &[0.0003, 0.01, 0.25, 0.49, 0.5, 0.77, 0.999, 1.5, 3.25] {
+            let r = Requant::from_real(real);
+            let err = (r.to_real() - real).abs() / real;
+            assert!(err < 1e-8, "real={real} err={err}");
+            assert!(r.multiplier >= (1 << 30), "normalized mantissa");
+        }
+    }
+
+    #[test]
+    fn requant_apply_matches_float() {
+        let real = 0.0123;
+        let r = Requant::from_real(real);
+        for acc in [-100_000, -1234, -1, 0, 1, 999, 54_321, 1_000_000] {
+            let got = r.apply(acc);
+            let want = (acc as f64 * real).round() as i32;
+            assert!(
+                (got - want).abs() <= 1,
+                "acc={acc} got={got} want={want}"
+            );
+        }
+    }
+
+    #[test]
+    fn clamps() {
+        assert_eq!(clamp_i8(300), 127);
+        assert_eq!(clamp_i8(-300), -128);
+        assert_eq!(clamp_i16(40_000), 32_767);
+    }
+}

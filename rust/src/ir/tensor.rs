@@ -1,0 +1,166 @@
+//! Tensor metadata: shapes, dtypes, and quantization-aware sizing.
+//!
+//! The compiler only needs shapes, element types and quantization metadata —
+//! actual INT8 payloads live either in the rust reference executor
+//! (`exec/`) or in the AOT-compiled PJRT executables (`runtime/`).
+
+use super::quant::QuantParams;
+
+/// Element types supported by the NPU datapath (Sec. III-B: 8-bit MACs with
+/// a two-cycle 8×16 decomposition; 32-bit accumulators never leave the core).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    /// 8-bit signed integer (activations + weights in the benchmarks).
+    Int8,
+    /// 8-bit unsigned integer (LiteRT-style activation quantization).
+    UInt8,
+    /// 16-bit signed integer (high-accuracy activations, 2-cycle dot product).
+    Int16,
+    /// 32-bit signed accumulator / bias type.
+    Int32,
+    /// Float32 — host-fallback ops only, never on the NPU datapath.
+    Float32,
+}
+
+impl DType {
+    /// Bytes per element.
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::Int8 | DType::UInt8 => 1,
+            DType::Int16 => 2,
+            DType::Int32 | DType::Float32 => 4,
+        }
+    }
+
+    /// True for the integer types the dot-product array consumes.
+    pub fn is_npu_native(self) -> bool {
+        !matches!(self, DType::Float32)
+    }
+}
+
+/// Feature-map / parameter shape. Activations use HWC (the compute format,
+/// Sec. IV-A); parameters use (outC, fH, fW, inC).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Shape(pub Vec<usize>);
+
+impl Shape {
+    pub fn hwc(h: usize, w: usize, c: usize) -> Self {
+        Shape(vec![h, w, c])
+    }
+
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn num_elements(&self) -> usize {
+        self.0.iter().product()
+    }
+
+    /// Height of an HWC activation shape (1 for vectors).
+    pub fn h(&self) -> usize {
+        match self.0.len() {
+            3 => self.0[0],
+            _ => 1,
+        }
+    }
+
+    pub fn w(&self) -> usize {
+        match self.0.len() {
+            3 => self.0[1],
+            2 => self.0[0],
+            _ => 1,
+        }
+    }
+
+    /// Channel (innermost) dimension.
+    pub fn c(&self) -> usize {
+        *self.0.last().unwrap_or(&1)
+    }
+}
+
+/// Unique tensor id inside a [`super::graph::Graph`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TensorId(pub u32);
+
+impl TensorId {
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// What a tensor is, from the scheduler's point of view (initial state in
+/// the tile state machine of Fig. 5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TensorKind {
+    /// Network input: starts in DRAM.
+    Input,
+    /// Weights/biases: start in DRAM (flash/DDR resident).
+    Parameter,
+    /// Produced by a compute job: starts N/E.
+    Activation,
+    /// Network output: activation that must be pushed back to DRAM.
+    Output,
+}
+
+/// Tensor metadata record.
+#[derive(Debug, Clone)]
+pub struct TensorInfo {
+    pub id: TensorId,
+    pub name: String,
+    pub shape: Shape,
+    pub dtype: DType,
+    pub kind: TensorKind,
+    pub quant: Option<QuantParams>,
+}
+
+impl TensorInfo {
+    /// Payload size in bytes (unpadded).
+    pub fn size_bytes(&self) -> usize {
+        self.shape.num_elements() * self.dtype.size_bytes()
+    }
+
+    /// Size in bytes with the channel dimension padded to a multiple of the
+    /// bus word (Sec. IV-A: "ifmap and ofmap are stored in TCM padded out
+    /// in C to a multiple of the bus/word-width").
+    pub fn padded_size_bytes(&self, word_bytes: usize) -> usize {
+        let c = self.shape.c().max(1);
+        let padded_c = c.div_ceil(word_bytes) * word_bytes;
+        self.shape.num_elements() / c.max(1) * padded_c * self.dtype.size_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(DType::Int8.size_bytes(), 1);
+        assert_eq!(DType::Int16.size_bytes(), 2);
+        assert_eq!(DType::Int32.size_bytes(), 4);
+        assert!(DType::Int8.is_npu_native());
+        assert!(!DType::Float32.is_npu_native());
+    }
+
+    #[test]
+    fn shape_accessors() {
+        let s = Shape::hwc(224, 224, 3);
+        assert_eq!((s.h(), s.w(), s.c()), (224, 224, 3));
+        assert_eq!(s.num_elements(), 224 * 224 * 3);
+    }
+
+    #[test]
+    fn padded_size_rounds_channels_to_word() {
+        let t = TensorInfo {
+            id: TensorId(0),
+            name: "x".into(),
+            shape: Shape::hwc(8, 8, 3),
+            dtype: DType::Int8,
+            kind: TensorKind::Activation,
+            quant: None,
+        };
+        // 3 channels pad to 16 with a 16-byte bus word.
+        assert_eq!(t.padded_size_bytes(16), 8 * 8 * 16);
+        assert_eq!(t.size_bytes(), 8 * 8 * 3);
+    }
+}

@@ -1,0 +1,24 @@
+//! # eIQ Neutron reproduction
+//!
+//! Production-quality reproduction of *"eIQ Neutron: Redefining Edge-AI
+//! Inference with Integrated NPU and Compiler Innovations"* (Bamberg et al.,
+//! 2025): a near-memory-compute NPU architecture model, a constraint-
+//! programming compiler mid-end (format selection, temporal tiling + layer
+//! fusion, DAE scheduling, memory allocation), a tick-based decoupled
+//! access-execute simulator, baseline NPU models, and a PJRT runtime that
+//! executes AOT-lowered JAX/Pallas kernels for numerics.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured record of every table and figure.
+
+pub mod arch;
+pub mod baselines;
+pub mod compiler;
+pub mod coordinator;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod cp;
+pub mod ir;
+pub mod util;
+pub mod zoo;

@@ -1,0 +1,162 @@
+//! `neutron` — the eIQ-Neutron reproduction CLI.
+//!
+//! Subcommands:
+//!   compile   --model <name> [--monolithic]     compile + report stats
+//!   simulate  --model <name> [--serialize-dae]  compile + cycle simulation
+//!   infer     [--requests N]                    e2e PJRT inference (needs artifacts)
+//!   report    table1|table2|table3|table4|fig4|fig6|genai
+//!   list                                        list zoo models
+
+use anyhow::{bail, Result};
+
+use eiq_neutron::arch::NeutronConfig;
+use eiq_neutron::compiler::{compile, CompileOptions};
+use eiq_neutron::coordinator::{emit, Executor};
+use eiq_neutron::report;
+use eiq_neutron::runtime::{literal_i8, literal_to_i32s, Manifest, Runtime};
+use eiq_neutron::sim::{simulate, SimOptions};
+use eiq_neutron::util::cli::Args;
+use eiq_neutron::zoo::ModelId;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("list") => {
+            for id in ModelId::all() {
+                let (gm, mp) = id.table_iv_reference();
+                println!("{:<22} {:>6.2} GMACs  {:>5.1} M params", id.display_name(), gm, mp);
+            }
+            Ok(())
+        }
+        Some("compile") => cmd_compile(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("infer") => cmd_infer(&args),
+        Some("report") => cmd_report(&args),
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand {o:?}");
+            }
+            eprintln!(
+                "usage: neutron <list|compile|simulate|infer|report> \
+                 [--model NAME] [--monolithic] [--requests N]"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn model_from(args: &Args) -> Result<ModelId> {
+    let name = args.opt("model", "mobilenet-v2");
+    match ModelId::parse(&name) {
+        Some(id) => Ok(id),
+        None => bail!("unknown model {name:?} — try `neutron list`"),
+    }
+}
+
+fn opts_from(args: &Args) -> CompileOptions {
+    if args.has_flag("monolithic") {
+        CompileOptions::monolithic()
+    } else {
+        CompileOptions::default_partitioned()
+    }
+}
+
+fn cmd_compile(args: &Args) -> Result<()> {
+    let id = model_from(args)?;
+    let g = id.build();
+    let cfg = NeutronConfig::flagship_2tops();
+    let c = compile(&g, &cfg, &opts_from(args));
+    println!("model:        {}", id.display_name());
+    println!("ops / tiles:  {} / {}", g.ops.len(), c.program.tiles.len());
+    println!("ticks:        {}", c.schedule.ticks.len());
+    println!(
+        "compile time: {} ms ({} CP subproblems, {} vars)",
+        c.compile_ms, c.schedule.subproblems, c.schedule.variables
+    );
+    println!("est latency:  {:.2} ms", c.inference_ms);
+    println!("eff TOPS:     {:.2}", c.effective_tops(&g));
+    println!("LTP:          {:.1}", c.ltp(&cfg));
+    println!("DDR traffic:  {:.1} MB", c.schedule.ddr.total_bytes() as f64 / 1e6);
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let id = model_from(args)?;
+    let g = id.build();
+    let cfg = NeutronConfig::flagship_2tops();
+    let c = compile(&g, &cfg, &opts_from(args));
+    let sim_opts = SimOptions {
+        serialize_dae: args.has_flag("serialize-dae"),
+        ..Default::default()
+    };
+    let r = simulate(&c, &cfg, &sim_opts);
+    println!("model:          {}", id.display_name());
+    println!("sim latency:    {:.2} ms ({} cycles)", r.latency_ms, r.total_cycles);
+    println!("effective TOPS: {:.2}", r.effective_tops(g.total_macs()));
+    println!("DDR traffic:    {:.1} MB", r.ddr_bytes as f64 / 1e6);
+    println!("peak TCM banks: {} / {}", r.peak_resident_banks, cfg.tcm_banks);
+    println!("DM hiding:      {:.0}%", r.hiding_ratio() * 100.0);
+    println!("bank conflicts: {}", r.bank_conflicts);
+    Ok(())
+}
+
+fn cmd_infer(args: &Args) -> Result<()> {
+    let requests: usize = args.opt_parse("requests", 4);
+    let manifest = Manifest::discover()?;
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let exe = rt.load_hlo_text(manifest.artifact_path("model.path")?)?;
+
+    // The quickstart model: simulated timing from the compiler over an
+    // equivalent IR graph + real numerics from the AOT artifact.
+    let shape: Vec<usize> = manifest
+        .get("model.input_shape")?
+        .split('x')
+        .map(|s| s.parse().unwrap())
+        .collect();
+    let cfg = NeutronConfig::flagship_2tops();
+    let g = report::quickstart_graph(shape[0], shape[2]);
+    let c = compile(&g, &cfg, &CompileOptions::default_partitioned());
+    let p = emit(&c, "quickstart");
+    let mut ex = Executor::new(cfg.clone(), p);
+
+    let n = shape.iter().product::<usize>();
+    for req in 0..requests {
+        let payload = eiq_neutron::runtime::deterministic_i8(req as u64, n);
+        let lit = literal_i8(&payload, &shape)?;
+        let run = || -> Result<Vec<i32>> {
+            let outs = exe.run(&[lit.clone()])?;
+            literal_to_i32s(&outs[0])
+        };
+        let r = ex.run_request(Some(&run))?;
+        let logits = r.logits.as_ref().unwrap();
+        let argmax = logits
+            .iter()
+            .enumerate()
+            .max_by_key(|&(_, &v)| v)
+            .map(|(i, _)| i)
+            .unwrap();
+        println!(
+            "req {req}: class={argmax} sim={:.3} ms host={} µs logits[0..4]={:?}",
+            r.sim_ms,
+            r.host_us,
+            &logits[..4.min(logits.len())]
+        );
+    }
+    println!("{}", ex.metrics.summary(cfg.freq_ghz));
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    match args.positionals.first().map(String::as_str) {
+        Some("table1") => report::table1(),
+        Some("table2") => report::table2(args.has_flag("quick")),
+        Some("table3") => report::table3(),
+        Some("table4") => report::table4(),
+        Some("fig4") => report::fig4(),
+        Some("fig6") => report::fig6(),
+        Some("genai") => report::genai(),
+        other => bail!("unknown report {other:?} (table1..4, fig4, fig6, genai)"),
+    }
+    Ok(())
+}

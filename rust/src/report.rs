@@ -1,0 +1,283 @@
+//! Paper-table regeneration: one function per table/figure in the paper's
+//! evaluation, printing the same rows/series the paper reports. Shared by
+//! the `neutron report` CLI and the `benches/` harnesses; EXPERIMENTS.md
+//! records paper-vs-measured from these outputs.
+
+use crate::arch::NeutronConfig;
+use crate::baselines::{cpu, enpu, inpu, CpuConfig, EnpuConfig, InpuConfig};
+use crate::compiler::{compile, CompileOptions, Compiled};
+use crate::ir::{Activation, ConvGeometry, Graph, GraphBuilder, Padding};
+use crate::sim::{simulate, SimOptions};
+use crate::util::table::Table;
+use crate::zoo::{decoder_prefill, ModelId, TransformerConfig};
+
+/// The quickstart CNN as an IR graph — mirrors `python/compile/model.py`
+/// (the timing side of the e2e example; numerics come from the artifact).
+pub fn quickstart_graph(hw: usize, c_in: usize) -> Graph {
+    let mut b = GraphBuilder::with_input("quickstart", hw, hw, c_in);
+    b.conv("conv1", 16, ConvGeometry::square(3, 2, Padding::Same), Activation::Relu);
+    b.conv("conv2", 32, ConvGeometry::square(3, 2, Padding::Same), Activation::Relu);
+    b.conv("conv3", 64, ConvGeometry::square(3, 2, Padding::Same), Activation::Relu);
+    b.conv("head", 10, ConvGeometry::unit(), Activation::None);
+    b.global_avg_pool("gap");
+    b.finish()
+}
+
+/// Compile + simulate one zoo model on the flagship config.
+pub fn ours(id: ModelId) -> (Graph, Compiled, f64) {
+    let g = id.build();
+    let cfg = NeutronConfig::flagship_2tops();
+    let c = compile(&g, &cfg, &CompileOptions::default_partitioned());
+    let r = simulate(&c, &cfg, &SimOptions::default());
+    (g, c, r.latency_ms)
+}
+
+/// Table I: effective TOPS of the two industry NPUs on ResNet50V1 and
+/// EfficientNet-Lite0 (paper: eNPU 4T → 0.73 / 0.82; iNPU 11T → 0.89 / 0.26).
+pub fn table1() {
+    let mut t = Table::new(&["NPU", "Peak TOPS", "ResNet50 V1", "EfficientNet Lite0"]);
+    let models = [ModelId::ResNet50V1, ModelId::EfficientNetLite0];
+    let eff = |latency_ms: f64, g: &Graph| 2.0 * g.total_macs() as f64 / (latency_ms * 1e-3) / 1e12;
+
+    let e = EnpuConfig::enpu_b(); // the 4-TOPS eNPU of Table I
+    let mut row = vec![e.name.to_string(), format!("{:.0}", e.peak_tops())];
+    for id in models {
+        let g = id.build();
+        let r = enpu::estimate(&g, &e);
+        row.push(format!("{:.2}", eff(r.latency_ms, &g)));
+    }
+    t.row(row);
+
+    let i = InpuConfig::vision_11tops();
+    let mut row = vec![i.name.to_string(), format!("{:.0}", i.peak_tops)];
+    for id in models {
+        let g = id.build();
+        let r = inpu::estimate(&g, &i);
+        row.push(format!("{:.2}", eff(r.latency_ms, &g)));
+    }
+    t.row(row);
+
+    println!("\nTable I — effective TOPS on real-world benchmarks");
+    println!("(paper: eNPU 4T → 0.73 / 0.82; iNPU 11T → 0.89 / 0.26)\n");
+    t.print();
+}
+
+/// Table II: problem-partitioning impact on YOLOv8N-det compilation and
+/// inference time (paper: 3480 s → 667 s compile, 23.9 → 24.7 ms infer).
+/// `quick` swaps YOLOv8n for MobileNetV2 to keep CI fast.
+pub fn table2(quick: bool) {
+    let id = if quick { ModelId::MobileNetV2 } else { ModelId::YoloV8nDet };
+    let g = id.build();
+    let cfg = NeutronConfig::flagship_2tops();
+    let variants: [(&str, CompileOptions); 4] = [
+        ("No partitioning", CompileOptions::monolithic()),
+        ("Only optimizations", CompileOptions::partition_optimizations_only()),
+        ("Only scheduling", CompileOptions::partition_scheduling_only()),
+        ("Both", CompileOptions::default_partitioned()),
+    ];
+    let mut t = Table::new(&["Problem partitioning", "Compilation Time (ms)", "Inference Time (ms)"]);
+    let mut base: Option<(f64, f64)> = None;
+    for (name, opts) in variants {
+        let c = compile(&g, &cfg, &opts);
+        let r = simulate(&c, &cfg, &SimOptions::default());
+        let (ct, it) = (c.compile_ms as f64, r.latency_ms);
+        let (b_ct, b_it) = *base.get_or_insert((ct, it));
+        t.row(vec![
+            name.to_string(),
+            format!("{ct:.0} ({:+.1}%)", (ct - b_ct) / b_ct * 100.0),
+            format!("{it:.2} ({:+.1}%)", (it - b_it) / b_it * 100.0),
+        ]);
+    }
+    println!("\nTable II — problem partitioning on {} ({})", id.display_name(), if quick { "quick mode" } else { "full" });
+    println!("(paper, YOLOv8n: compile 3480→667 s (−80.8%), inference 23.9→24.7 ms (+3.3%))\n");
+    t.print();
+}
+
+/// Table III: latency + LTP for all 12 models × 4 NPUs.
+pub fn table3() {
+    let enpu_a = EnpuConfig::enpu_a();
+    let enpu_b = EnpuConfig::enpu_b();
+    let inpu_c = InpuConfig::vision_11tops();
+    let cfg = NeutronConfig::flagship_2tops();
+
+    let mut t = Table::new(&[
+        "Model", "Ours [ms]", "LTP", "eNPU-A [ms]", "LTP", "eNPU-B [ms]", "LTP", "iNPU [ms]", "LTP",
+    ]);
+    let mut speedup_a = Vec::new();
+    let mut speedup_b = Vec::new();
+    let mut speedup_i = Vec::new();
+    let mut best_ltp_ours = 0usize;
+
+    for id in ModelId::table3() {
+        let (g, _c, ours_ms) = ours(id);
+        let a = enpu::estimate(&g, &enpu_a).latency_ms;
+        let b = enpu::estimate(&g, &enpu_b).latency_ms;
+        let i = inpu::estimate(&g, &inpu_c).latency_ms;
+        let ltp = |ms: f64, tops: f64| ms * tops;
+        let ltps = [
+            ltp(ours_ms, cfg.peak_tops()),
+            ltp(a, enpu_a.peak_tops()),
+            ltp(b, enpu_b.peak_tops()),
+            ltp(i, inpu_c.peak_tops),
+        ];
+        if ltps[0] <= ltps[1].min(ltps[2]).min(ltps[3]) {
+            best_ltp_ours += 1;
+        }
+        speedup_a.push(a / ours_ms);
+        speedup_b.push(b / ours_ms);
+        speedup_i.push(i / ours_ms);
+        t.row(vec![
+            id.display_name().to_string(),
+            format!("{ours_ms:.1}"),
+            format!("{:.1}", ltps[0]),
+            format!("{a:.1}"),
+            format!("{:.1}", ltps[1]),
+            format!("{b:.1}"),
+            format!("{:.1}", ltps[2]),
+            format!("{i:.1}"),
+            format!("{:.1}", ltps[3]),
+        ]);
+    }
+    println!("\nTable III — inference latency and LTP (latency·TOPS)");
+    println!("(paper: 1.8x mean vs eNPU-A (max 4x); 1.3x vs eNPU-B (max 3.3x); 1.25x vs iNPU; best LTP on all rows)\n");
+    t.print();
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let max = |v: &[f64]| v.iter().cloned().fold(f64::MIN, f64::max);
+    println!(
+        "\nspeedup vs eNPU-A: mean {:.2}x max {:.2}x | vs eNPU-B: mean {:.2}x max {:.2}x | vs iNPU: mean {:.2}x max {:.2}x",
+        mean(&speedup_a), max(&speedup_a),
+        mean(&speedup_b), max(&speedup_b),
+        mean(&speedup_i), max(&speedup_i),
+    );
+    println!("best LTP rows: {best_ltp_ours}/12 (paper: 12/12)");
+}
+
+/// Table IV: model characteristics (MACs, params) vs the paper's values.
+pub fn table4() {
+    let mut t = Table::new(&[
+        "Model", "GMACs (ours)", "GMACs (paper)", "MParams (ours)", "MParams (paper)",
+    ]);
+    for id in ModelId::all() {
+        let g = id.build();
+        let (gm_ref, mp_ref) = id.table_iv_reference();
+        t.row(vec![
+            id.display_name().to_string(),
+            format!("{:.2}", g.total_macs() as f64 / 1e9),
+            format!("{gm_ref:.2}"),
+            format!("{:.1}", g.total_params() as f64 / 1e6),
+            format!("{mp_ref:.1}"),
+        ]);
+    }
+    println!("\nTable IV — models used for validation");
+    println!("(note: paper's ResNet50 '2.0' halves the fvcore MAC count; V1-SSD uses the 6.8M-param public predictor — see EXPERIMENTS.md)\n");
+    t.print();
+}
+
+/// Fig. 4: DAE pipeline vs monolithic execution — per-model latency with
+/// and without compute/datamover overlap.
+pub fn fig4() {
+    let cfg = NeutronConfig::flagship_2tops();
+    let mut t = Table::new(&["Model", "DAE [ms]", "Monolithic [ms]", "speedup"]);
+    for id in [ModelId::MobileNetV1, ModelId::MobileNetV2, ModelId::ResNet50V1, ModelId::EfficientNetLite0] {
+        let g = id.build();
+        let c = compile(&g, &cfg, &CompileOptions::default_partitioned());
+        let dae = simulate(&c, &cfg, &SimOptions::default());
+        let ser = simulate(&c, &cfg, &SimOptions { serialize_dae: true, ..Default::default() });
+        t.row(vec![
+            id.display_name().to_string(),
+            format!("{:.2}", dae.latency_ms),
+            format!("{:.2}", ser.latency_ms),
+            format!("{:.2}x", ser.latency_ms / dae.latency_ms),
+        ]);
+    }
+    println!("\nFig. 4 — decoupled access-execute vs monolithic pipeline\n");
+    t.print();
+
+    // ASCII timeline of the first ticks of MobileNetV2 (the figure's shape).
+    let g = ModelId::MobileNetV2.build();
+    let c = compile(&g, &cfg, &CompileOptions::default_partitioned());
+    let r = simulate(&c, &cfg, &SimOptions::default());
+    println!("\nfirst 12 ticks (C=compute-bound, D=datamover-bound, .=idle side):");
+    let mut line_c = String::from("compute : ");
+    let mut line_d = String::from("datamove: ");
+    for tick in r.ticks.iter().take(12) {
+        let c_ch = if tick.compute_cycles == 0 { '.' } else if tick.compute_cycles >= tick.ddr_cycles { 'C' } else { 'c' };
+        let d_ch = if tick.ddr_cycles + tick.tcm_copy_cycles == 0 { '.' } else if tick.ddr_cycles > tick.compute_cycles { 'D' } else { 'd' };
+        line_c.push(c_ch);
+        line_d.push(d_ch);
+    }
+    println!("{line_c}\n{line_d}");
+}
+
+/// Fig. 6: memory usage over time for the first five layers of MobileNetV2
+/// with and without fusion+tiling.
+pub fn fig6() {
+    let cfg = NeutronConfig::flagship_2tops();
+    // First five layers of MobileNetV2 (stem + ir0 expand/dw/project + ir1 expand).
+    let g_full = ModelId::MobileNetV2.build();
+    let mut b = GraphBuilder::with_input("mnv2_prefix", 224, 224, 3);
+    b.conv("stem", 32, ConvGeometry::square(3, 2, Padding::Same), Activation::Relu6);
+    b.dwconv("ir0.dw", ConvGeometry::square(3, 1, Padding::Same), Activation::Relu6);
+    b.conv("ir0.project", 16, ConvGeometry::unit(), Activation::None);
+    b.conv("ir1.expand", 96, ConvGeometry::unit(), Activation::Relu6);
+    b.dwconv("ir1.dw", ConvGeometry::square(3, 2, Padding::Same), Activation::Relu6);
+    let g = b.finish();
+    let _ = g_full;
+
+    // With the optimization: fused+tiled compile. Without: force 1-tile
+    // layer-by-layer (monolithic tiles) by compiling with huge TCM and
+    // replaying residency against the real capacity.
+    let c_opt = compile(&g, &cfg, &CompileOptions::default_partitioned());
+    let r_opt = simulate(&c_opt, &cfg, &SimOptions::default());
+
+    let mut cfg_big = cfg.clone();
+    cfg_big.tcm_bytes = 64 << 20; // effectively infinite: no tiling/fusion pressure
+    cfg_big.tcm_banks = 2048;
+    let c_raw = compile(&g, &cfg_big, &CompileOptions::default_partitioned());
+    let r_raw = simulate(&c_raw, &cfg_big, &SimOptions::default());
+
+    println!("\nFig. 6 — memory over time, first 5 layers of MobileNetV2");
+    println!("(paper: optimized stays within TCM; unoptimized peaks far above)\n");
+    let peak_opt = r_opt.ticks.iter().map(|t| t.resident_bytes).max().unwrap_or(0);
+    let peak_raw = r_raw.ticks.iter().map(|t| t.resident_bytes).max().unwrap_or(0);
+    println!("TCM capacity:            {:>8} KiB", cfg.tcm_bytes / 1024);
+    println!("peak memory (optimized): {:>8} KiB over {} ticks", peak_opt / 1024, r_opt.ticks.len());
+    println!("peak memory (layerwise): {:>8} KiB over {} ticks", peak_raw / 1024, r_raw.ticks.len());
+    println!("reduction: {:.1}x", peak_raw as f64 / peak_opt.max(1) as f64);
+
+    // ASCII sparkline of resident KiB per tick (optimized).
+    let spark = |ticks: &[crate::sim::TickTrace]| -> String {
+        let max = ticks.iter().map(|t| t.resident_bytes).max().unwrap_or(1).max(1);
+        ticks
+            .iter()
+            .map(|t| {
+                let lvl = (t.resident_bytes * 7 / max) as usize;
+                char::from_u32(0x2581 + lvl as u32).unwrap_or('.')
+            })
+            .collect()
+    };
+    println!("\noptimized : {}", spark(&r_opt.ticks));
+    println!("layerwise : {}", spark(&r_raw.ticks));
+}
+
+/// Sec. VI Gen-AI claim: transformer GEMMs ~10× faster than 4×A55 @1.8GHz.
+pub fn genai() {
+    let cfg = NeutronConfig::flagship_2tops();
+    let cpu_cfg = CpuConfig::quad_a55_1_8ghz();
+    let mut t = Table::new(&["Workload", "NPU [ms]", "4xA55 [ms]", "speedup"]);
+    for (label, tokens) in [("prefill 64 tok", 64), ("prefill 128 tok", 128), ("prefill 256 tok", 256)] {
+        let g = decoder_prefill(TransformerConfig::gpt_100m(tokens));
+        let c = compile(&g, &cfg, &CompileOptions::default_partitioned());
+        let r = simulate(&c, &cfg, &SimOptions::default());
+        let cpu_ms = cpu::estimate_ms(&g, &cpu_cfg);
+        t.row(vec![
+            label.to_string(),
+            format!("{:.1}", r.latency_ms),
+            format!("{cpu_ms:.1}"),
+            format!("{:.1}x", cpu_ms / r.latency_ms),
+        ]);
+    }
+    println!("\nSec. VI — decoder-only transformer (~100M params) GEMMs");
+    println!("(paper: \"tenfold speedups compared to execution on four Cortex-A55 cores at 1.8x the clock frequency\")\n");
+    t.print();
+}

@@ -1,0 +1,102 @@
+//! Artifact discovery: locate `artifacts/` and parse the build manifest the
+//! AOT exporter writes (shapes, seeds, expected outputs for self-checks).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed `manifest.txt`.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    entries: HashMap<String, String>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let mut entries = HashMap::new();
+        for line in text.lines() {
+            if let Some((k, v)) = line.split_once('=') {
+                entries.insert(k.trim().to_string(), v.trim().to_string());
+            }
+        }
+        Ok(Self { entries, dir })
+    }
+
+    /// Find the artifacts directory relative to the repo root (walks up
+    /// from the current dir so examples/tests work from any cwd).
+    pub fn discover() -> Result<Self> {
+        let mut dir = std::env::current_dir()?;
+        loop {
+            let cand = dir.join("artifacts");
+            if cand.join("manifest.txt").exists() {
+                return Self::load(cand);
+            }
+            if !dir.pop() {
+                bail!("no artifacts/manifest.txt found — run `make artifacts`");
+            }
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Result<&str> {
+        self.entries
+            .get(key)
+            .map(String::as_str)
+            .with_context(|| format!("manifest key {key} missing"))
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize> {
+        Ok(self.get(key)?.parse()?)
+    }
+
+    /// Comma-separated i32 list.
+    pub fn get_i32s(&self, key: &str) -> Result<Vec<i32>> {
+        self.get(key)?
+            .split(',')
+            .map(|s| s.trim().parse().context("bad int in manifest"))
+            .collect()
+    }
+
+    /// Absolute path of an artifact file referenced by a `*.path` key.
+    pub fn artifact_path(&self, key: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(self.get(key)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn temp_manifest(content: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("eiq_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut f = std::fs::File::create(dir.join("manifest.txt")).unwrap();
+        f.write_all(content.as_bytes()).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parses_key_values() {
+        let dir = temp_manifest("a=1\nb.path=x.hlo.txt\nlist=1,2,-3\n");
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.get_usize("a").unwrap(), 1);
+        assert_eq!(m.get_i32s("list").unwrap(), vec![1, 2, -3]);
+        assert!(m.artifact_path("b.path").unwrap().ends_with("x.hlo.txt"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_key_errors() {
+        let dir = temp_manifest("a=1\n");
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.get("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,138 @@
+//! PJRT runtime: load AOT-lowered HLO-text artifacts and execute them from
+//! the L3 hot path. Python is never on the request path — the artifacts
+//! are produced once by `make artifacts`.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`
+//! (pattern from /opt/xla-example/load_hlo).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A PJRT client with a cache-free set of loaded executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled executable (one model variant / kernel instance).
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Runtime {
+    /// CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        Ok(Executable {
+            exe,
+            name: path.file_name().unwrap().to_string_lossy().into_owned(),
+        })
+    }
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the tuple elements of the
+    /// (single, tupled) output — aot.py lowers with `return_tuple=True`.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .context("executing PJRT computation")?;
+        let mut out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // aot.py always returns a tuple; decompose robustly.
+        match out.decompose_tuple() {
+            Ok(elems) if !elems.is_empty() => Ok(elems),
+            _ => Ok(vec![out]),
+        }
+    }
+}
+
+/// Build an int8 literal of the given shape (the `xla` crate's `vec1` has
+/// no i8 instantiation, so go through untyped bytes).
+pub fn literal_i8(data: &[i8], dims: &[usize]) -> Result<xla::Literal> {
+    assert_eq!(data.len(), dims.iter().product::<usize>());
+    let bytes: &[u8] = unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S8,
+        dims,
+        bytes,
+    )?)
+}
+
+/// Build an int32 literal vector.
+pub fn literal_i32_1d(data: &[i32]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data))
+}
+
+/// Read an i32 vector out of a literal (converting from S8/S32 payloads).
+pub fn literal_to_i32s(lit: &xla::Literal) -> Result<Vec<i32>> {
+    match lit.ty()? {
+        xla::ElementType::S32 => Ok(lit.to_vec::<i32>()?),
+        xla::ElementType::S64 => {
+            // jax with x64 enabled promotes integer reductions to i64.
+            let v = lit.to_vec::<i64>()?;
+            Ok(v.into_iter().map(|x| x as i32).collect())
+        }
+        xla::ElementType::S8 => {
+            let v = lit.to_vec::<i8>()?;
+            Ok(v.into_iter().map(|x| x as i32).collect())
+        }
+        other => anyhow::bail!("unsupported literal type {other:?}"),
+    }
+}
+
+/// SplitMix64 — mirrors numpy's role for deterministic check vectors. The
+/// manifest seeds use numpy's PCG64 streams, so the runtime tests load the
+/// expected outputs from the manifest instead of regenerating inputs; this
+/// generator is only for synthetic request payloads.
+pub fn deterministic_i8(seed: u64, len: usize) -> Vec<i8> {
+    let mut rng = crate::util::prop::Rng::new(seed);
+    (0..len).map(|_| rng.i8()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // PJRT tests are integration-level (rust/tests/runtime_integration.rs)
+    // because they need built artifacts; here only the literal helpers.
+
+    #[test]
+    fn literal_shapes() {
+        let l = literal_i8(&[1, 2, 3, 4, 5, 6], &[2, 3]).unwrap();
+        assert_eq!(l.element_count(), 6);
+        let back = l.to_vec::<i8>().unwrap();
+        assert_eq!(back, vec![1, 2, 3, 4, 5, 6]);
+        let l3 = literal_i8(&vec![0i8; 24], &[2, 3, 4]).unwrap();
+        assert_eq!(l3.element_count(), 24);
+    }
+
+    #[test]
+    fn deterministic_payloads_repeat() {
+        assert_eq!(deterministic_i8(9, 32), deterministic_i8(9, 32));
+        assert_ne!(deterministic_i8(9, 32), deterministic_i8(10, 32));
+    }
+}

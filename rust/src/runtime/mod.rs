@@ -1,0 +1,11 @@
+//! PJRT runtime layer: loads AOT-compiled HLO-text artifacts (produced once
+//! by `make artifacts`) and executes them on the request path. Python is
+//! never invoked at runtime.
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::Manifest;
+pub use client::{
+    deterministic_i8, literal_i32_1d, literal_i8, literal_to_i32s, Executable, Runtime,
+};

@@ -1,0 +1,7 @@
+//! Tick-based decoupled-access-execute simulator: replays compiled
+//! schedules against the architecture model with bank/bus/DDR contention,
+//! producing the traces behind Fig. 4 and Fig. 6.
+
+pub mod npu;
+
+pub use npu::{simulate, simulate_parts, SimOptions, SimReport, TickTrace};

@@ -1,0 +1,118 @@
+//! Benchmark timing harness (criterion replacement for offline builds).
+//!
+//! `harness = false` benches are plain binaries; this module gives them
+//! warmup + repeated measurement with median/mean/stddev reporting so the
+//! §Perf numbers in EXPERIMENTS.md are statistically meaningful.
+
+use std::time::{Duration, Instant};
+
+/// Result of a measured benchmark.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: Vec<Duration>,
+}
+
+impl Measurement {
+    pub fn median(&self) -> Duration {
+        let mut s = self.samples.clone();
+        s.sort();
+        s[s.len() / 2]
+    }
+
+    pub fn mean(&self) -> Duration {
+        let total: Duration = self.samples.iter().sum();
+        total / self.samples.len() as u32
+    }
+
+    pub fn stddev_us(&self) -> f64 {
+        let mean = self.mean().as_secs_f64();
+        let var = self
+            .samples
+            .iter()
+            .map(|d| (d.as_secs_f64() - mean).powi(2))
+            .sum::<f64>()
+            / self.samples.len() as f64;
+        var.sqrt() * 1e6
+    }
+
+    /// One-line report like criterion's.
+    pub fn report(&self) {
+        println!(
+            "{:<48} median {:>12?}  mean {:>12?}  σ {:>9.1}µs  ({} samples)",
+            self.name,
+            self.median(),
+            self.mean(),
+            self.stddev_us(),
+            self.samples.len()
+        );
+    }
+}
+
+/// Benchmark runner with warmup and sample count control.
+pub struct Bencher {
+    pub warmup: u32,
+    pub samples: u32,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self { warmup: 2, samples: 10 }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Self { warmup: 1, samples: 5 }
+    }
+
+    /// Measure `f`, returning per-sample durations. The closure's return
+    /// value is black-boxed to prevent the optimizer from deleting work.
+    pub fn bench<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Measurement {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.samples as usize);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed());
+        }
+        let m = Measurement { name: name.to_string(), samples };
+        m.report();
+        m
+    }
+}
+
+/// Optimization barrier (std::hint::black_box re-export point so benches
+/// don't reach into std::hint directly everywhere).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_reports() {
+        let b = Bencher { warmup: 0, samples: 3 };
+        let m = b.bench("noop", || 42);
+        assert_eq!(m.samples.len(), 3);
+        assert!(m.median() < Duration::from_millis(10));
+    }
+
+    #[test]
+    fn stddev_is_finite() {
+        let b = Bencher { warmup: 0, samples: 4 };
+        let m = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(m.stddev_us().is_finite());
+    }
+}

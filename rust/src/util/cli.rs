@@ -1,0 +1,94 @@
+//! Minimal CLI argument parsing (`--key value` / `--flag` / positionals).
+
+use std::collections::HashMap;
+
+/// Parsed command line: subcommand, flags, key-value options, positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse(raw: impl IntoIterator<Item = String>) -> Self {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        // First non-flag token is the subcommand.
+        while let Some(tok) = iter.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                // `--key=value` is unambiguous; `--key value` consumes the
+                // next token as the value when one is available.
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else {
+                    match iter.peek() {
+                        Some(v) if !v.starts_with("--") => {
+                            let v = iter.next().unwrap();
+                            out.options.insert(name.to_string(), v);
+                        }
+                        _ => out.flags.push(name.to_string()),
+                    }
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positionals.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Option value or default.
+    pub fn opt(&self, key: &str, default: &str) -> String {
+        self.options.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Typed option value.
+    pub fn opt_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.options
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// Was a flag passed? (A `--name value` option also counts as the flag
+    /// `name` being present.)
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.options.contains_key(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = args("compile out.bin --model yolov8n --ticks=12 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("compile"));
+        assert_eq!(a.opt("model", ""), "yolov8n");
+        assert_eq!(a.opt_parse("ticks", 0usize), 12);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positionals, vec!["out.bin"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = args("run");
+        assert_eq!(a.opt("model", "mobilenet-v2"), "mobilenet-v2");
+        assert_eq!(a.opt_parse("n", 7i64), 7);
+        assert!(!a.has_flag("verbose"));
+    }
+}

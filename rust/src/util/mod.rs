@@ -1,0 +1,8 @@
+//! In-tree utilities replacing external dev-dependencies (the build is
+//! fully offline): a tiny CLI argument parser, a bench-timing harness, and
+//! a deterministic property-test driver.
+
+pub mod bench;
+pub mod cli;
+pub mod prop;
+pub mod table;

@@ -1,0 +1,121 @@
+//! Deterministic property-test driver (proptest replacement for offline
+//! builds): a splitmix64/xoshiro-style PRNG + a `for_each_case` runner that
+//! reports the failing seed so cases are reproducible.
+
+/// SplitMix64 PRNG — tiny, fast, well-distributed; good enough for test
+/// case generation (NOT cryptographic).
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[lo, hi]` inclusive.
+    pub fn int(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        let span = (hi - lo) as u64 + 1;
+        lo + (self.next_u64() % span) as i64
+    }
+
+    /// Uniform usize in `[lo, hi]` inclusive.
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.int(lo as i64, hi as i64) as usize
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    /// i8 across the full range (quantized tensor payloads).
+    pub fn i8(&mut self) -> i8 {
+        self.next_u64() as i8
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize(0, xs.len() - 1)]
+    }
+}
+
+/// Run `cases` property cases; on failure panics with the case seed so the
+/// exact case can be replayed with `Rng::new(seed)`.
+pub fn for_each_case(cases: u64, base_seed: u64, mut body: impl FnMut(&mut Rng)) {
+    for case in 0..cases {
+        let seed = base_seed ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&mut rng)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed at case {case} (replay: Rng::new({seed:#x})): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn int_respects_bounds() {
+        let mut r = Rng::new(42);
+        for _ in 0..10_000 {
+            let v = r.int(-5, 17);
+            assert!((-5..=17).contains(&v));
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(1);
+        for _ in 0..10_000 {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn failing_case_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            for_each_case(10, 99, |rng| {
+                assert!(rng.int(0, 10) < 100, "never fails");
+                // Force a failure on a later case:
+                assert!(rng.int(0, 10) <= 10);
+            });
+        });
+        assert!(r.is_ok());
+        let r2 = std::panic::catch_unwind(|| {
+            for_each_case(5, 3, |_| panic!("boom"));
+        });
+        assert!(r2.is_err());
+    }
+}

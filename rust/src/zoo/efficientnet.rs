@@ -1,0 +1,178 @@
+//! EfficientNet-Lite0 and EfficientDet-Lite0 builders (Table IV).
+//!
+//! Lite variants (the quantization-friendly family the paper benchmarks):
+//! no squeeze-excite, ReLU6 instead of Swish in the -Lite classifier, fixed
+//! stem/head widths. EfficientDet-Lite0 = Lite0 backbone @320 + 3×BiFPN
+//! (64 ch) + 3-layer box/class heads over 5 pyramid levels.
+
+use crate::ir::{Activation, ConvGeometry, Graph, GraphBuilder, Padding, TensorId};
+
+/// MBConv block with explicit kernel size; no SE in the Lite family.
+fn mbconv(
+    b: &mut GraphBuilder,
+    name: &str,
+    expand: usize,
+    out_c: usize,
+    kernel: usize,
+    stride: usize,
+    act: Activation,
+) {
+    let input = b.current();
+    let in_c = b.current_shape().c();
+    if expand != 1 {
+        b.conv(&format!("{name}.expand"), in_c * expand, ConvGeometry::unit(), act);
+    }
+    b.dwconv(&format!("{name}.dw"), ConvGeometry::square(kernel, stride, Padding::Same), act);
+    b.conv(&format!("{name}.project"), out_c, ConvGeometry::unit(), Activation::None);
+    if stride == 1 && in_c == out_c {
+        let proj = b.current();
+        b.add(&format!("{name}.residual"), input, proj);
+    }
+}
+
+/// Backbone stage table for Lite0 (== B0 widths/depths, SE removed).
+/// (expand, out_c, repeats, first stride, kernel)
+const LITE0_STAGES: [(usize, usize, usize, usize, usize); 7] = [
+    (1, 16, 1, 1, 3),
+    (6, 24, 2, 2, 3),
+    (6, 40, 2, 2, 5),
+    (6, 80, 3, 2, 3),
+    (6, 112, 3, 1, 5),
+    (6, 192, 4, 2, 5),
+    (6, 320, 1, 1, 3),
+];
+
+fn lite0_backbone(b: &mut GraphBuilder, act: Activation, taps: &mut Vec<TensorId>) {
+    b.conv("stem", 32, ConvGeometry::square(3, 2, Padding::Same), act);
+    for (si, &(t, c, n, s, k)) in LITE0_STAGES.iter().enumerate() {
+        for r in 0..n {
+            let stride = if r == 0 { s } else { 1 };
+            mbconv(b, &format!("s{si}r{r}"), t, c, k, stride, act);
+        }
+        // Feature taps at stride 8/16/32 ends (stages 2, 4, 6).
+        if matches!(si, 2 | 4 | 6) {
+            taps.push(b.current());
+        }
+    }
+}
+
+/// EfficientNet-Lite0 @ 224 classifier.
+pub fn efficientnet_lite0() -> Graph {
+    let mut b = GraphBuilder::with_input("EfficientNetLite0", 224, 224, 3);
+    let act = Activation::Relu6;
+    let mut taps = Vec::new();
+    lite0_backbone(&mut b, act, &mut taps);
+    b.conv("head", 1280, ConvGeometry::unit(), act);
+    b.global_avg_pool("gap");
+    b.fc("classifier", 1000, Activation::None);
+    b.finish()
+}
+
+/// One BiFPN-ish fusion node: resize partner to this level, add, then a
+/// depthwise-separable conv (the Lite BiFPN uses dw-separable convs).
+fn bifpn_fuse(b: &mut GraphBuilder, name: &str, a: TensorId, partner: TensorId, ch: usize) -> TensorId {
+    let (ha, wa) = {
+        let s = &b.graph.tensor(a).shape;
+        (s.h(), s.w())
+    };
+    let hp = b.graph.tensor(partner).shape.h();
+    b.set_current(partner);
+    if hp != ha {
+        // BiFPN levels have odd sizes (40,20,10,5,3 @320) — resize to the
+        // exact partner size rather than by an integer factor.
+        b.resize_to(&format!("{name}.rs"), ha, wa);
+    }
+    let resized = b.current();
+    let sum = b.add(&format!("{name}.fuse"), a, resized);
+    b.set_current(sum);
+    b.dwconv(&format!("{name}.dw"), ConvGeometry::square(3, 1, Padding::Same), Activation::Relu6);
+    b.conv(&format!("{name}.pw"), ch, ConvGeometry::unit(), Activation::None)
+}
+
+/// EfficientDet-Lite0 @ 320: Lite0 backbone + P3..P7 pyramid, 3 BiFPN
+/// repeats at 64 channels, 3-layer dw-separable box + class heads.
+pub fn efficientdet_lite0() -> Graph {
+    let mut b = GraphBuilder::with_input("EfficientDetLite0", 320, 320, 3);
+    let act = Activation::Relu6;
+    let mut taps = Vec::new();
+    lite0_backbone(&mut b, act, &mut taps);
+    let ch = 64usize;
+    // Lateral 1×1s to BiFPN width.
+    let mut levels: Vec<TensorId> = Vec::new();
+    for (i, &t) in taps.iter().enumerate() {
+        b.set_current(t);
+        levels.push(b.conv(&format!("lat{i}"), ch, ConvGeometry::unit(), Activation::None));
+    }
+    // P6, P7 from the deepest tap.
+    b.set_current(*levels.last().unwrap());
+    let p6 = b.conv("p6", ch, ConvGeometry::square(3, 2, Padding::Same), Activation::None);
+    b.set_current(p6);
+    let p7 = b.conv("p7", ch, ConvGeometry::square(3, 2, Padding::Same), Activation::None);
+    levels.push(p6);
+    levels.push(p7);
+
+    // 3 BiFPN repeats: top-down then bottom-up fusion per repeat.
+    for rep in 0..3 {
+        // top-down
+        for i in (0..levels.len() - 1).rev() {
+            levels[i] = bifpn_fuse(&mut b, &format!("bifpn{rep}.td{i}"), levels[i], levels[i + 1], ch);
+        }
+        // bottom-up
+        for i in 1..levels.len() {
+            levels[i] = bifpn_fuse(&mut b, &format!("bifpn{rep}.bu{i}"), levels[i], levels[i - 1], ch);
+        }
+    }
+
+    // Shared heads: 3 dw-separable layers + prediction convs per level.
+    let num_anchors = 9;
+    let num_classes = 90;
+    let mut outs = Vec::new();
+    for (li, &lvl) in levels.iter().enumerate() {
+        b.set_current(lvl);
+        for d in 0..3 {
+            b.dwconv(&format!("boxhead{li}.{d}.dw"), ConvGeometry::square(3, 1, Padding::Same), act);
+            b.conv(&format!("boxhead{li}.{d}.pw"), ch, ConvGeometry::unit(), act);
+        }
+        let box_out = b.conv(&format!("boxpred{li}"), num_anchors * 4, ConvGeometry::unit(), Activation::None);
+        b.set_current(lvl);
+        for d in 0..3 {
+            b.dwconv(&format!("clshead{li}.{d}.dw"), ConvGeometry::square(3, 1, Padding::Same), act);
+            b.conv(&format!("clshead{li}.{d}.pw"), ch, ConvGeometry::unit(), act);
+        }
+        let cls_out = b.conv(&format!("clspred{li}"), num_anchors * num_classes, ConvGeometry::unit(), Activation::None);
+        outs.push(box_out);
+        outs.push(cls_out);
+    }
+    b.finish_multi(outs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lite0_matches_table_iv() {
+        let g = efficientnet_lite0();
+        g.validate().unwrap();
+        let gmacs = g.total_macs() as f64 / 1e9;
+        let mparams = g.total_params() as f64 / 1e6;
+        assert!((gmacs - 0.41).abs() / 0.41 < 0.15, "Lite0 GMACs={gmacs}");
+        assert!((mparams - 4.7).abs() / 4.7 < 0.15, "Lite0 Mparams={mparams}");
+    }
+
+    #[test]
+    fn efficientdet_matches_table_iv() {
+        let g = efficientdet_lite0();
+        g.validate().unwrap();
+        let gmacs = g.total_macs() as f64 / 1e9;
+        let mparams = g.total_params() as f64 / 1e6;
+        assert!((gmacs - 1.27).abs() / 1.27 < 0.25, "EffDet GMACs={gmacs}");
+        assert!((mparams - 3.9).abs() / 3.9 < 0.25, "EffDet Mparams={mparams}");
+    }
+
+    #[test]
+    fn efficientdet_has_five_levels_of_outputs() {
+        let g = efficientdet_lite0();
+        assert_eq!(g.outputs.len(), 10); // box + class per 5 levels
+    }
+}

@@ -1,0 +1,209 @@
+//! MobileNet V1 / V2 / V3-Large-Minimalistic builders (Table IV rows 1–3).
+//!
+//! Architectures follow the public papers/repos; parameters and MAC counts
+//! are verified against Table IV by the zoo tests. The V3 variant is the
+//! *large minimalistic* one the paper uses ("highest accuracy under
+//! quantization"): no squeeze-excite, no hard-swish, 3×3 kernels only.
+
+use crate::ir::{Activation, ConvGeometry, Graph, GraphBuilder, Padding};
+
+fn dw_sep(
+    b: &mut GraphBuilder,
+    name: &str,
+    out_c: usize,
+    stride: usize,
+    act: Activation,
+) {
+    b.dwconv(
+        &format!("{name}.dw"),
+        ConvGeometry::square(3, stride, Padding::Same),
+        act,
+    );
+    b.conv(&format!("{name}.pw"), out_c, ConvGeometry::unit(), act);
+}
+
+/// MobileNetV1 1.0 @ 224 — 13 depthwise-separable blocks.
+pub fn mobilenet_v1() -> Graph {
+    let mut b = GraphBuilder::with_input("MobileNetV1", 224, 224, 3);
+    let a = Activation::Relu6;
+    b.conv("stem", 32, ConvGeometry::square(3, 2, Padding::Same), a);
+    // (out_c, stride) per block, standard V1 schedule.
+    let blocks = [
+        (64, 1),
+        (128, 2),
+        (128, 1),
+        (256, 2),
+        (256, 1),
+        (512, 2),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (1024, 2),
+        (1024, 1),
+    ];
+    for (i, &(c, s)) in blocks.iter().enumerate() {
+        dw_sep(&mut b, &format!("b{i}"), c, s, a);
+    }
+    b.global_avg_pool("gap");
+    b.fc("classifier", 1000, Activation::None);
+    b.finish()
+}
+
+/// One inverted-residual (MBConv) block; returns output tensor.
+fn inverted_residual(
+    b: &mut GraphBuilder,
+    name: &str,
+    expand: usize,
+    out_c: usize,
+    stride: usize,
+    kernel: usize,
+    act: Activation,
+) {
+    let input = b.current();
+    let in_c = b.current_shape().c();
+    let exp_c = in_c * expand;
+    if expand != 1 {
+        b.conv(&format!("{name}.expand"), exp_c, ConvGeometry::unit(), act);
+    }
+    b.dwconv(
+        &format!("{name}.dw"),
+        ConvGeometry::square(kernel, stride, Padding::Same),
+        act,
+    );
+    b.conv(&format!("{name}.project"), out_c, ConvGeometry::unit(), Activation::None);
+    if stride == 1 && in_c == out_c {
+        let proj = b.current();
+        b.add(&format!("{name}.residual"), input, proj);
+    }
+}
+
+/// MobileNetV2 1.0 @ 224.
+pub fn mobilenet_v2() -> Graph {
+    let mut b = GraphBuilder::with_input("MobileNetV2", 224, 224, 3);
+    let a = Activation::Relu6;
+    b.conv("stem", 32, ConvGeometry::square(3, 2, Padding::Same), a);
+    // (expansion t, out channels c, repeats n, first stride s)
+    let cfg = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    let mut bi = 0;
+    for &(t, c, n, s) in &cfg {
+        for r in 0..n {
+            let stride = if r == 0 { s } else { 1 };
+            inverted_residual(&mut b, &format!("ir{bi}"), t, c, stride, 3, a);
+            bi += 1;
+        }
+    }
+    b.conv("head", 1280, ConvGeometry::unit(), a);
+    b.global_avg_pool("gap");
+    b.fc("classifier", 1000, Activation::None);
+    b.finish()
+}
+
+/// One V3 bneck block with explicit expansion width (not a multiple of
+/// input channels, unlike V2).
+fn bneck_v3(
+    b: &mut GraphBuilder,
+    name: &str,
+    exp_c: usize,
+    out_c: usize,
+    stride: usize,
+    act: Activation,
+) {
+    let input = b.current();
+    let in_c = b.current_shape().c();
+    if exp_c != in_c {
+        b.conv(&format!("{name}.expand"), exp_c, ConvGeometry::unit(), act);
+    }
+    b.dwconv(&format!("{name}.dw"), ConvGeometry::square(3, stride, Padding::Same), act);
+    b.conv(&format!("{name}.project"), out_c, ConvGeometry::unit(), Activation::None);
+    if stride == 1 && in_c == out_c {
+        let proj = b.current();
+        b.add(&format!("{name}.residual"), input, proj);
+    }
+}
+
+/// MobileNetV3-Large *minimalistic* @ 224: ReLU everywhere, all kernels 3×3,
+/// no squeeze-excite (the quantization-friendly variant of the V3 paper).
+pub fn mobilenet_v3_large_min() -> Graph {
+    let mut b = GraphBuilder::with_input("MobileNetV3-LargeMin", 224, 224, 3);
+    let a = Activation::Relu;
+    b.conv("stem", 16, ConvGeometry::square(3, 2, Padding::Same), a);
+    // (expansion width, out channels, stride) — V3-Large schedule with the
+    // minimalistic substitutions (k=3 everywhere, no SE).
+    let cfg: [(usize, usize, usize); 15] = [
+        (16, 16, 1),
+        (64, 24, 2),
+        (72, 24, 1),
+        (72, 40, 2),
+        (120, 40, 1),
+        (120, 40, 1),
+        (240, 80, 2),
+        (200, 80, 1),
+        (184, 80, 1),
+        (184, 80, 1),
+        (480, 112, 1),
+        (672, 112, 1),
+        (672, 160, 2),
+        (960, 160, 1),
+        (960, 160, 1),
+    ];
+    for (i, &(e, c, s)) in cfg.iter().enumerate() {
+        bneck_v3(&mut b, &format!("bneck{i}"), e, c, s, a);
+    }
+    b.conv("head", 960, ConvGeometry::unit(), a);
+    b.global_avg_pool("gap");
+    b.conv("head2", 1280, ConvGeometry::unit(), a);
+    b.fc("classifier", 1000, Activation::None);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn v1_matches_table_iv() {
+        let g = mobilenet_v1();
+        g.validate().unwrap();
+        let gmacs = g.total_macs() as f64 / 1e9;
+        let mparams = g.total_params() as f64 / 1e6;
+        assert!((gmacs - 0.57).abs() / 0.57 < 0.10, "V1 GMACs={gmacs}");
+        assert!((mparams - 4.2).abs() / 4.2 < 0.10, "V1 Mparams={mparams}");
+    }
+
+    #[test]
+    fn v2_matches_table_iv() {
+        let g = mobilenet_v2();
+        g.validate().unwrap();
+        let gmacs = g.total_macs() as f64 / 1e9;
+        let mparams = g.total_params() as f64 / 1e6;
+        assert!((gmacs - 0.30).abs() / 0.30 < 0.10, "V2 GMACs={gmacs}");
+        assert!((mparams - 3.4).abs() / 3.4 < 0.10, "V2 Mparams={mparams}");
+    }
+
+    #[test]
+    fn v3_min_matches_table_iv() {
+        let g = mobilenet_v3_large_min();
+        g.validate().unwrap();
+        let gmacs = g.total_macs() as f64 / 1e9;
+        let mparams = g.total_params() as f64 / 1e6;
+        assert!((gmacs - 0.21).abs() / 0.21 < 0.15, "V3 GMACs={gmacs}");
+        assert!((mparams - 3.9).abs() / 3.9 < 0.15, "V3 Mparams={mparams}");
+    }
+
+    #[test]
+    fn v2_has_residual_adds() {
+        let g = mobilenet_v2();
+        let adds = g.ops.iter().filter(|o| matches!(o.kind, crate::ir::OpKind::Add)).count();
+        assert_eq!(adds, 10); // V2 has 10 residual connections
+    }
+}

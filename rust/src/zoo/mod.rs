@@ -1,0 +1,160 @@
+//! Model zoo: programmatic builders for every model in the paper's Table IV
+//! plus the Gen-AI transformer workload of Sec. VI.
+//!
+//! These builders replace the LiteRT flatbuffer binaries the paper feeds its
+//! compiler: the mid-end only consumes shapes, op kinds and quantization
+//! metadata, all of which are public for these architectures. The zoo tests
+//! assert MACs/params against Table IV.
+
+pub mod efficientnet;
+pub mod mobilenet;
+pub mod resnet;
+pub mod ssd;
+pub mod transformer;
+pub mod yolo;
+
+use crate::ir::Graph;
+
+pub use transformer::{decoder_prefill, TransformerConfig};
+
+/// Model identifiers matching Table III/IV rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelId {
+    MobileNetV1,
+    MobileNetV2,
+    MobileNetV3Min,
+    ResNet50V1,
+    EfficientNetLite0,
+    EfficientDetLite0,
+    YoloV8nDet,
+    YoloV8s,
+    YoloV8nSeg,
+    MobileNetV1Ssd,
+    MobileNetV2Ssd,
+    DamoYoloNl,
+}
+
+impl ModelId {
+    /// All Table-IV models in the paper's row order.
+    pub fn all() -> [ModelId; 12] {
+        use ModelId::*;
+        [
+            MobileNetV1,
+            MobileNetV2,
+            MobileNetV3Min,
+            ResNet50V1,
+            EfficientNetLite0,
+            EfficientDetLite0,
+            YoloV8nDet,
+            YoloV8s,
+            YoloV8nSeg,
+            MobileNetV1Ssd,
+            MobileNetV2Ssd,
+            DamoYoloNl,
+        ]
+    }
+
+    /// The Table-III benchmark subset (YOLOv8S appears in Table IV but not
+    /// in Table III; the second detection row pairs YOLOv8N-det + YOLOv8S).
+    pub fn table3() -> [ModelId; 12] {
+        Self::all()
+    }
+
+    /// Human-readable name matching the paper's tables.
+    pub fn display_name(self) -> &'static str {
+        use ModelId::*;
+        match self {
+            MobileNetV1 => "MobileNet V1",
+            MobileNetV2 => "MobileNet V2",
+            MobileNetV3Min => "MobileNet V3",
+            ResNet50V1 => "ResNet 50V1",
+            EfficientNetLite0 => "EfficientNet Lite0",
+            EfficientDetLite0 => "EfficientDet Lite0",
+            YoloV8nDet => "YOLOv8 N-det.",
+            YoloV8s => "YOLOv8 S",
+            YoloV8nSeg => "YOLOv8 N-seg.",
+            MobileNetV1Ssd => "MobileNet V1 SSD",
+            MobileNetV2Ssd => "MobileNet V2 SSD",
+            DamoYoloNl => "DAMO YOLO-NL",
+        }
+    }
+
+    /// Parse from a CLI string (kebab-case).
+    pub fn parse(s: &str) -> Option<ModelId> {
+        use ModelId::*;
+        Some(match s.to_ascii_lowercase().as_str() {
+            "mobilenet-v1" | "mobilenetv1" => MobileNetV1,
+            "mobilenet-v2" | "mobilenetv2" => MobileNetV2,
+            "mobilenet-v3" | "mobilenetv3" | "mobilenet-v3-min" => MobileNetV3Min,
+            "resnet50" | "resnet50v1" => ResNet50V1,
+            "efficientnet-lite0" => EfficientNetLite0,
+            "efficientdet-lite0" => EfficientDetLite0,
+            "yolov8n" | "yolov8n-det" => YoloV8nDet,
+            "yolov8s" => YoloV8s,
+            "yolov8n-seg" => YoloV8nSeg,
+            "mobilenet-v1-ssd" => MobileNetV1Ssd,
+            "mobilenet-v2-ssd" | "mobilenet-v2-ssdlite" => MobileNetV2Ssd,
+            "damo-yolo" | "damo-yolo-nl" => DamoYoloNl,
+            _ => return None,
+        })
+    }
+
+    /// Build the IR graph.
+    pub fn build(self) -> Graph {
+        use ModelId::*;
+        match self {
+            MobileNetV1 => mobilenet::mobilenet_v1(),
+            MobileNetV2 => mobilenet::mobilenet_v2(),
+            MobileNetV3Min => mobilenet::mobilenet_v3_large_min(),
+            ResNet50V1 => resnet::resnet50_v1(),
+            EfficientNetLite0 => efficientnet::efficientnet_lite0(),
+            EfficientDetLite0 => efficientnet::efficientdet_lite0(),
+            YoloV8nDet => yolo::yolov8n_det(),
+            YoloV8s => yolo::yolov8s_det(),
+            YoloV8nSeg => yolo::yolov8n_seg(),
+            MobileNetV1Ssd => ssd::mobilenet_v1_ssd(),
+            MobileNetV2Ssd => ssd::mobilenet_v2_ssdlite(),
+            DamoYoloNl => yolo::damo_yolo_nl(),
+        }
+    }
+
+    /// (GMACs, M params) reference values from Table IV.
+    pub fn table_iv_reference(self) -> (f64, f64) {
+        use ModelId::*;
+        match self {
+            MobileNetV1 => (0.57, 4.2),
+            MobileNetV2 => (0.30, 3.4),
+            MobileNetV3Min => (0.21, 3.9),
+            ResNet50V1 => (2.0, 25.6),
+            EfficientNetLite0 => (0.41, 4.7),
+            EfficientDetLite0 => (1.27, 3.9),
+            YoloV8nDet => (4.35, 3.2),
+            YoloV8s => (14.3, 11.2),
+            YoloV8nSeg => (6.3, 3.4),
+            MobileNetV1Ssd => (1.3, 5.1),
+            MobileNetV2Ssd => (0.8, 4.3),
+            DamoYoloNl => (3.0, 5.7),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_models_build_and_validate() {
+        for id in ModelId::all() {
+            let g = id.build();
+            g.validate().unwrap_or_else(|e| panic!("{:?}: {e}", id));
+            assert!(g.total_macs() > 0, "{id:?} has no MACs");
+            assert_eq!(g.topo_order().len(), g.ops.len(), "{id:?} topo");
+        }
+    }
+
+    #[test]
+    fn parse_round_trip() {
+        assert_eq!(ModelId::parse("yolov8n-det"), Some(ModelId::YoloV8nDet));
+        assert_eq!(ModelId::parse("nope"), None);
+    }
+}

@@ -1,0 +1,79 @@
+//! ResNet50 V1 builder (Table IV).
+
+use crate::ir::{Activation, ConvGeometry, Graph, GraphBuilder, Padding, PoolKind};
+
+/// One bottleneck block: 1×1 reduce → 3×3 → 1×1 expand (+ projection
+/// shortcut on the first block of each stage).
+fn bottleneck(b: &mut GraphBuilder, name: &str, mid_c: usize, out_c: usize, stride: usize, project: bool) {
+    let input = b.current();
+    b.conv(&format!("{name}.reduce"), mid_c, ConvGeometry::unit(), Activation::Relu);
+    b.conv(
+        &format!("{name}.conv3"),
+        mid_c,
+        ConvGeometry::square(3, stride, Padding::Same),
+        Activation::Relu,
+    );
+    let main = b.conv(&format!("{name}.expand"), out_c, ConvGeometry::unit(), Activation::None);
+    let shortcut = if project {
+        b.conv_from(
+            input,
+            &format!("{name}.shortcut"),
+            out_c,
+            ConvGeometry { stride_h: stride, stride_w: stride, ..ConvGeometry::unit() },
+            Activation::None,
+        )
+    } else {
+        input
+    };
+    b.add(&format!("{name}.add"), main, shortcut);
+}
+
+/// ResNet50 V1 @ 224 (stride-2 in the 3×3, post-add ReLU folded into the
+/// add's consumer cost — the activation engine applies it for free).
+pub fn resnet50_v1() -> Graph {
+    let mut b = GraphBuilder::with_input("ResNet50V1", 224, 224, 3);
+    b.conv("stem", 64, ConvGeometry::square(7, 2, Padding::Same), Activation::Relu);
+    b.pool("maxpool", PoolKind::Max, 3, 2);
+    let stages: [(usize, usize, usize, usize); 4] = [
+        // (blocks, mid channels, out channels, first stride)
+        (3, 64, 256, 1),
+        (4, 128, 512, 2),
+        (6, 256, 1024, 2),
+        (3, 512, 2048, 2),
+    ];
+    for (si, &(n, mid, out, s)) in stages.iter().enumerate() {
+        for bi in 0..n {
+            let stride = if bi == 0 { s } else { 1 };
+            bottleneck(&mut b, &format!("s{si}b{bi}"), mid, out, stride, bi == 0);
+        }
+    }
+    b.global_avg_pool("gap");
+    b.fc("classifier", 1000, Activation::None);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet50_matches_published_counts() {
+        let g = resnet50_v1();
+        g.validate().unwrap();
+        let gmacs = g.total_macs() as f64 / 1e9;
+        let mparams = g.total_params() as f64 / 1e6;
+        // The TorchVision ResNet-50 the paper cites counts 4.09 G
+        // multiply-adds (fvcore). Table IV lists "2.0", i.e. the fvcore
+        // number halved — we assert against the architecture's true MAC
+        // count and report both in the Table IV bench (see EXPERIMENTS.md).
+        assert!((gmacs - 4.09).abs() / 4.09 < 0.10, "ResNet50 GMACs={gmacs}");
+        assert!((mparams - 25.6).abs() / 25.6 < 0.10, "ResNet50 Mparams={mparams}");
+    }
+
+    #[test]
+    fn has_16_bottlenecks() {
+        let g = resnet50_v1();
+        let adds = g.ops.iter().filter(|o| matches!(o.kind, crate::ir::OpKind::Add)).count();
+        assert_eq!(adds, 16);
+    }
+}

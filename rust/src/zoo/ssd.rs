@@ -1,0 +1,218 @@
+//! MobileNetV1-SSD and MobileNetV2-SSDLite builders (Table IV).
+//!
+//! Standard TF Object Detection API configurations at 300×300: V1-SSD uses
+//! full conv prediction heads over 6 feature levels; V2-SSDLite uses
+//! depthwise-separable heads (the "Lite" part) — which is why it has fewer
+//! MACs despite the deeper backbone.
+
+use crate::ir::{Activation, ConvGeometry, Graph, GraphBuilder, Padding, TensorId};
+
+const NUM_CLASSES: usize = 91; // COCO + background, TF-ODAPI convention
+
+fn dw_sep(b: &mut GraphBuilder, name: &str, out_c: usize, stride: usize, act: Activation) -> TensorId {
+    b.dwconv(&format!("{name}.dw"), ConvGeometry::square(3, stride, Padding::Same), act);
+    b.conv(&format!("{name}.pw"), out_c, ConvGeometry::unit(), act)
+}
+
+/// MobileNetV1 backbone @300 returning the two SSD taps (conv11, conv13).
+fn mnv1_backbone_300(b: &mut GraphBuilder) -> (TensorId, TensorId) {
+    let a = Activation::Relu6;
+    b.conv("stem", 32, ConvGeometry::square(3, 2, Padding::Same), a);
+    let blocks = [
+        (64, 1),
+        (128, 2),
+        (128, 1),
+        (256, 2),
+        (256, 1),
+        (512, 2),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (1024, 2),
+        (1024, 1),
+    ];
+    let mut tap11 = None;
+    let mut tap13 = None;
+    for (i, &(c, s)) in blocks.iter().enumerate() {
+        let t = dw_sep(b, &format!("b{i}"), c, s, a);
+        if i == 10 {
+            tap11 = Some(t);
+        }
+        if i == 12 {
+            tap13 = Some(t);
+        }
+    }
+    (tap11.unwrap(), tap13.unwrap())
+}
+
+/// SSD extra feature layers: 1×1 reduce + 3×3 stride-2, four times. The
+/// `lite` flavour (SSDLite) replaces the 3×3 with a depthwise-separable
+/// pair, matching the TF-ODAPI ssdlite config.
+fn ssd_extras(
+    b: &mut GraphBuilder,
+    from: TensorId,
+    chans: &[(usize, usize)],
+    lite: bool,
+) -> Vec<TensorId> {
+    let a = Activation::Relu6;
+    let mut taps = Vec::new();
+    b.set_current(from);
+    for (i, &(mid, out)) in chans.iter().enumerate() {
+        b.conv(&format!("extra{i}.reduce"), mid, ConvGeometry::unit(), a);
+        let t = if lite {
+            b.dwconv(&format!("extra{i}.dw"), ConvGeometry::square(3, 2, Padding::Same), a);
+            b.conv(&format!("extra{i}.pw"), out, ConvGeometry::unit(), a)
+        } else {
+            b.conv(&format!("extra{i}.conv"), out, ConvGeometry::square(3, 2, Padding::Same), a)
+        };
+        taps.push(t);
+    }
+    taps
+}
+
+/// SSD prediction heads (V1 flavour): 1×1 convolutional predictors, the
+/// configuration of the quantized TFLite detection models the paper runs.
+fn ssd_heads(b: &mut GraphBuilder, levels: &[TensorId], anchors: &[usize], outs: &mut Vec<TensorId>) {
+    for (i, (&lvl, &na)) in levels.iter().zip(anchors).enumerate() {
+        b.set_current(lvl);
+        let box_out = b.conv(&format!("box{i}"), na * 4, ConvGeometry::unit(), Activation::None);
+        b.set_current(lvl);
+        let cls_out = b.conv(
+            &format!("cls{i}"),
+            na * NUM_CLASSES,
+            ConvGeometry::unit(),
+            Activation::None,
+        );
+        outs.push(box_out);
+        outs.push(cls_out);
+    }
+}
+
+/// Depthwise-separable SSDLite heads (V2 flavour).
+fn ssdlite_heads(b: &mut GraphBuilder, levels: &[TensorId], anchors: &[usize], outs: &mut Vec<TensorId>) {
+    for (i, (&lvl, &na)) in levels.iter().zip(anchors).enumerate() {
+        b.set_current(lvl);
+        b.dwconv(&format!("box{i}.dw"), ConvGeometry::square(3, 1, Padding::Same), Activation::Relu6);
+        let box_out = b.conv(&format!("box{i}.pw"), na * 4, ConvGeometry::unit(), Activation::None);
+        b.set_current(lvl);
+        b.dwconv(&format!("cls{i}.dw"), ConvGeometry::square(3, 1, Padding::Same), Activation::Relu6);
+        let cls_out = b.conv(&format!("cls{i}.pw"), na * NUM_CLASSES, ConvGeometry::unit(), Activation::None);
+        outs.push(box_out);
+        outs.push(cls_out);
+    }
+}
+
+/// MobileNetV1-SSD @ 300.
+pub fn mobilenet_v1_ssd() -> Graph {
+    let mut b = GraphBuilder::with_input("MobileNetV1-SSD", 300, 300, 3);
+    let (c11, c13) = mnv1_backbone_300(&mut b);
+    let extras = ssd_extras(
+        &mut b,
+        c13,
+        &[(256, 512), (128, 256), (128, 256), (64, 128)],
+        false,
+    );
+    let mut levels = vec![c11, c13];
+    levels.extend(extras);
+    let anchors = [3, 6, 6, 6, 6, 6];
+    let mut outs = Vec::new();
+    ssd_heads(&mut b, &levels, &anchors, &mut outs);
+    b.finish_multi(outs)
+}
+
+/// Inverted-residual helper (duplicated from mobilenet.rs at the widths
+/// SSDLite taps need — the tap is the *expansion* output of block 13).
+fn ir_block(b: &mut GraphBuilder, name: &str, t: usize, out_c: usize, stride: usize) -> (TensorId, TensorId) {
+    let a = Activation::Relu6;
+    let input = b.current();
+    let in_c = b.current_shape().c();
+    let mut expand_out = input;
+    if t != 1 {
+        expand_out = b.conv(&format!("{name}.expand"), in_c * t, ConvGeometry::unit(), a);
+    }
+    b.dwconv(&format!("{name}.dw"), ConvGeometry::square(3, stride, Padding::Same), a);
+    let proj = b.conv(&format!("{name}.project"), out_c, ConvGeometry::unit(), Activation::None);
+    let out = if stride == 1 && in_c == out_c {
+        b.add(&format!("{name}.residual"), input, proj)
+    } else {
+        proj
+    };
+    b.set_current(out);
+    (expand_out, out)
+}
+
+/// MobileNetV2-SSDLite @ 300.
+pub fn mobilenet_v2_ssdlite() -> Graph {
+    let mut b = GraphBuilder::with_input("MobileNetV2-SSD", 300, 300, 3);
+    let a = Activation::Relu6;
+    b.conv("stem", 32, ConvGeometry::square(3, 2, Padding::Same), a);
+    let cfg = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    let mut tap_expand13 = None;
+    let mut bi = 0;
+    for &(t, c, n, s) in &cfg {
+        for r in 0..n {
+            let stride = if r == 0 { s } else { 1 };
+            let (expand, _) = ir_block(&mut b, &format!("ir{bi}"), t, c, stride);
+            // SSDLite taps the expansion of the first stride-2 block of the
+            // 160-channel stage (block index 13 in the standard numbering).
+            if bi == 13 {
+                tap_expand13 = Some(expand);
+            }
+            bi += 1;
+        }
+    }
+    let head = b.conv("head", 1280, ConvGeometry::unit(), a);
+    let extras =
+        ssd_extras(&mut b, head, &[(256, 512), (128, 256), (128, 256), (64, 128)], true);
+    let mut levels = vec![tap_expand13.unwrap(), head];
+    levels.extend(extras);
+    let anchors = [3, 6, 6, 6, 6, 6];
+    let mut outs = Vec::new();
+    ssdlite_heads(&mut b, &levels, &anchors, &mut outs);
+    b.finish_multi(outs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn v1_ssd_matches_published_counts() {
+        let g = mobilenet_v1_ssd();
+        g.validate().unwrap();
+        let gmacs = g.total_macs() as f64 / 1e9;
+        let mparams = g.total_params() as f64 / 1e6;
+        assert!((gmacs - 1.3).abs() / 1.3 < 0.20, "V1-SSD GMACs={gmacs}");
+        // The public TF-ODAPI ssd_mobilenet_v1 checkpoint has 6.8 M params;
+        // the paper's Table IV lists 5.1 M (likely a trimmed predictor
+        // variant). We assert the architecture we actually built and report
+        // both values in the Table IV bench.
+        assert!((mparams - 6.8).abs() / 6.8 < 0.15, "V1-SSD Mparams={mparams}");
+    }
+
+    #[test]
+    fn v2_ssdlite_matches_table_iv() {
+        let g = mobilenet_v2_ssdlite();
+        g.validate().unwrap();
+        let gmacs = g.total_macs() as f64 / 1e9;
+        let mparams = g.total_params() as f64 / 1e6;
+        assert!((gmacs - 0.8).abs() / 0.8 < 0.25, "V2-SSD GMACs={gmacs}");
+        assert!((mparams - 4.3).abs() / 4.3 < 0.25, "V2-SSD Mparams={mparams}");
+    }
+
+    #[test]
+    fn both_emit_six_levels() {
+        assert_eq!(mobilenet_v1_ssd().outputs.len(), 12);
+        assert_eq!(mobilenet_v2_ssdlite().outputs.len(), 12);
+    }
+}

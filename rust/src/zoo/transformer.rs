@@ -1,0 +1,175 @@
+//! Decoder-only transformer workload for the paper's Gen-AI claim (Sec. VI):
+//! "tenfold speedups [for matrix-matrix multiplications] compared to
+//! execution on four Cortex-A55 cores at 1.8× the clock frequency".
+//!
+//! Per Sec. IV-A, transformer GEMMs map onto the two tiling strategies by
+//! treating the embedding dimension as C and the token dimension as H. The
+//! builder emits the per-block GEMMs of a prefill pass (batch of `tokens`
+//! tokens) as MatMul ops.
+
+use crate::ir::{Activation, DType, Graph, OpKind, Shape, TensorKind};
+
+/// Configuration of a decoder-only transformer.
+#[derive(Debug, Clone, Copy)]
+pub struct TransformerConfig {
+    pub layers: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub heads: usize,
+    pub tokens: usize,
+    pub vocab: usize,
+}
+
+impl TransformerConfig {
+    /// ~100 M-parameter GPT-style config (12 × 768, ff 3072), 128-token
+    /// prefill — the "small real model" scale of the e2e example.
+    pub fn gpt_100m(tokens: usize) -> Self {
+        Self { layers: 12, d_model: 768, d_ff: 3072, heads: 12, tokens, vocab: 32000 }
+    }
+
+    /// Tiny config for tests.
+    pub fn tiny(tokens: usize) -> Self {
+        Self { layers: 2, d_model: 64, d_ff: 256, heads: 4, tokens, vocab: 512 }
+    }
+}
+
+/// Build the prefill compute graph: tokens×d_model activations flowing
+/// through QKV / attention-out / FFN GEMMs per layer (attention score
+/// GEMMs included as MatMul with token-sized operands).
+pub fn decoder_prefill(cfg: TransformerConfig) -> Graph {
+    let mut g = Graph::new(format!(
+        "decoder{}x{}t{}",
+        cfg.layers, cfg.d_model, cfg.tokens
+    ));
+    // Activations are (tokens, d) with H=tokens, C=d per the paper's rule.
+    let mut cur = g.add_tensor(
+        "embeddings",
+        Shape::hwc(cfg.tokens, 1, cfg.d_model),
+        DType::Int8,
+        TensorKind::Input,
+    );
+    let gemm = |g: &mut Graph, name: String, inp, in_f: usize, out_f: usize, rows: usize| {
+        let w = g.add_tensor(
+            format!("{name}.w"),
+            Shape(vec![out_f, 1, 1, in_f]),
+            DType::Int8,
+            TensorKind::Parameter,
+        );
+        let out = g.add_tensor(
+            format!("{name}.out"),
+            Shape::hwc(rows, 1, out_f),
+            DType::Int8,
+            TensorKind::Activation,
+        );
+        g.add_op(
+            name,
+            OpKind::MatMul { out_features: out_f },
+            vec![inp],
+            Some(w),
+            out,
+            Activation::None,
+        );
+        out
+    };
+    for l in 0..cfg.layers {
+        let d = cfg.d_model;
+        let q = gemm(&mut g, format!("l{l}.q"), cur, d, d, cfg.tokens);
+        let _k = gemm(&mut g, format!("l{l}.k"), cur, d, d, cfg.tokens);
+        let _v = gemm(&mut g, format!("l{l}.v"), cur, d, d, cfg.tokens);
+        // Attention scores + context: tokens×tokens and tokens×d GEMMs.
+        // Modeled as parameter-free MatMuls would misreport params; use
+        // MatMul with the K/V tensor as the "parameter" operand shape-wise.
+        let scores = g.add_tensor(
+            format!("l{l}.scores"),
+            Shape::hwc(cfg.tokens, 1, cfg.tokens),
+            DType::Int8,
+            TensorKind::Activation,
+        );
+        g.add_op(
+            format!("l{l}.qk"),
+            OpKind::MatMul { out_features: cfg.tokens },
+            vec![q, _k],
+            None,
+            scores,
+            Activation::None,
+        );
+        let smax = g.add_tensor(
+            format!("l{l}.smax"),
+            Shape::hwc(cfg.tokens, 1, cfg.tokens),
+            DType::Int8,
+            TensorKind::Activation,
+        );
+        g.add_op(
+            format!("l{l}.softmax"),
+            OpKind::Softmax,
+            vec![scores],
+            None,
+            smax,
+            Activation::None,
+        );
+        let ctx = g.add_tensor(
+            format!("l{l}.ctx"),
+            Shape::hwc(cfg.tokens, 1, d),
+            DType::Int8,
+            TensorKind::Activation,
+        );
+        g.add_op(
+            format!("l{l}.sv"),
+            OpKind::MatMul { out_features: d },
+            vec![smax, _v],
+            None,
+            ctx,
+            Activation::None,
+        );
+        let o = gemm(&mut g, format!("l{l}.o"), ctx, d, d, cfg.tokens);
+        // Residual add.
+        let res1 = g.add_tensor(
+            format!("l{l}.res1"),
+            Shape::hwc(cfg.tokens, 1, d),
+            DType::Int8,
+            TensorKind::Activation,
+        );
+        g.add_op(format!("l{l}.add1"), OpKind::Add, vec![cur, o], None, res1, Activation::None);
+        // FFN.
+        let up = gemm(&mut g, format!("l{l}.ffn_up"), res1, d, cfg.d_ff, cfg.tokens);
+        let down = gemm(&mut g, format!("l{l}.ffn_down"), up, cfg.d_ff, d, cfg.tokens);
+        let res2 = g.add_tensor(
+            format!("l{l}.res2"),
+            Shape::hwc(cfg.tokens, 1, d),
+            DType::Int8,
+            TensorKind::Activation,
+        );
+        g.add_op(format!("l{l}.add2"), OpKind::Add, vec![res1, down], None, res2, Activation::None);
+        cur = res2;
+    }
+    let logits = gemm(&mut g, "lm_head".into(), cur, cfg.d_model, cfg.vocab, cfg.tokens);
+    g.mark_output(logits);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpt_100m_has_about_100m_params() {
+        let g = decoder_prefill(TransformerConfig::gpt_100m(128));
+        let mparams = g.total_params() as f64 / 1e6;
+        // 12×(4·768² + 2·768·3072) + 768·32000 ≈ 109 M
+        assert!((mparams - 109.0).abs() / 109.0 < 0.10, "Mparams={mparams}");
+    }
+
+    #[test]
+    fn macs_scale_with_tokens() {
+        let a = decoder_prefill(TransformerConfig::tiny(16));
+        let b = decoder_prefill(TransformerConfig::tiny(32));
+        assert!(b.total_macs() > a.total_macs() * 3 / 2);
+    }
+
+    #[test]
+    fn graph_is_valid_and_topo_sortable() {
+        let g = decoder_prefill(TransformerConfig::tiny(8));
+        g.validate().unwrap();
+        assert_eq!(g.topo_order().len(), g.ops.len());
+    }
+}

@@ -1,0 +1,309 @@
+//! YOLOv8 (N-det / S-det / N-seg) and DAMO-YOLO-NL builders (Table IV).
+//!
+//! YOLOv8 structure per the Ultralytics repo: CSP-style backbone with C2f
+//! blocks, SPPF, PAN neck, anchor-free decoupled head with DFL (reg_max=16).
+//! Scaling: n → depth 1/3, width 1/4 of the base-64 channel schedule;
+//! s → depth 1/3, width 1/2. The seg variant adds a prototype-mask branch
+//! and per-level mask-coefficient heads.
+//!
+//! DAMO-YOLO-NL is approximated at graph level (TinyNAS-style CSP backbone,
+//! GFPN-like neck, ZeroHead) with widths chosen to land on the published
+//! 3.0 GMACs / 5.7 M params budget — the compiler consumes only shapes.
+
+use crate::ir::{Activation, ConvGeometry, Graph, GraphBuilder, Padding, PoolKind, TensorId};
+
+const ACT: Activation = Activation::Swish;
+
+/// Conv-BN-SiLU (BN folds into the conv at INT8 deploy time).
+fn cbs(b: &mut GraphBuilder, name: &str, c: usize, k: usize, s: usize) -> TensorId {
+    b.conv(name, c, ConvGeometry::square(k, s, Padding::Same), b.act_override())
+}
+
+/// C2f block: split, n bottleneck(3×3,3×3) with residual, concat, fuse 1×1.
+fn c2f(b: &mut GraphBuilder, name: &str, out_c: usize, n: usize, shortcut: bool) -> TensorId {
+    let hidden = out_c / 2;
+    // Entry 1×1 producing 2*hidden, conceptually split into two halves.
+    cbs(b, &format!("{name}.cv1"), 2 * hidden, 1, 1);
+    // Model the split as a reshape-free slice: two half-channel tensors.
+    // For cost purposes we materialize the halves via 1×1 "slice" convs is
+    // wrong (adds MACs); instead track the full tensor and let bottlenecks
+    // run at `hidden` width from the second half.
+    let split_src = b.current();
+    let mut parts: Vec<TensorId> = vec![split_src];
+    // Each bottleneck consumes the previous part at `hidden` channels. We
+    // approximate the half-width view with a Reshape (zero-MAC) op.
+    let half = {
+        let h = b.graph.tensor(split_src).shape.h();
+        let w = b.graph.tensor(split_src).shape.w();
+        let t = b.graph.add_tensor(
+            format!("{name}.half"),
+            crate::ir::Shape::hwc(h, w, hidden),
+            crate::ir::DType::Int8,
+            crate::ir::TensorKind::Activation,
+        );
+        b.graph.add_op(
+            format!("{name}.split"),
+            crate::ir::OpKind::Reshape,
+            vec![split_src],
+            None,
+            t,
+            Activation::None,
+        );
+        t
+    };
+    let mut cur = half;
+    for i in 0..n {
+        b.set_current(cur);
+        cbs(b, &format!("{name}.m{i}.cv1"), hidden, 3, 1);
+        let y = cbs(b, &format!("{name}.m{i}.cv2"), hidden, 3, 1);
+        cur = if shortcut { b.add(&format!("{name}.m{i}.add"), half, y) } else { y };
+        parts.push(cur);
+    }
+    let cat = b.concat(&format!("{name}.cat"), parts);
+    b.set_current(cat);
+    cbs(b, &format!("{name}.cv2"), out_c, 1, 1)
+}
+
+/// SPPF: 1×1 reduce, 3 chained 5×5 maxpools, concat, 1×1 fuse.
+fn sppf(b: &mut GraphBuilder, name: &str, c: usize) -> TensorId {
+    let hidden = c / 2;
+    cbs(b, &format!("{name}.cv1"), hidden, 1, 1);
+    let x0 = b.current();
+    let x1 = b.pool(&format!("{name}.p1"), PoolKind::Max, 5, 1);
+    b.set_current(x1);
+    let x2 = b.pool(&format!("{name}.p2"), PoolKind::Max, 5, 1);
+    b.set_current(x2);
+    let x3 = b.pool(&format!("{name}.p3"), PoolKind::Max, 5, 1);
+    let cat = b.concat(&format!("{name}.cat"), vec![x0, x1, x2, x3]);
+    b.set_current(cat);
+    cbs(b, &format!("{name}.cv2"), c, 1, 1)
+}
+
+/// YOLOv8 channel schedule for a width multiple. Base (=1.0): 64,128,256,
+/// 512,1024(capped per variant); depth base 3.
+struct V8Scale {
+    w: f64,
+    d: f64,
+    max_c: usize,
+}
+
+impl V8Scale {
+    fn n() -> Self {
+        Self { w: 0.25, d: 1.0 / 3.0, max_c: 1024 }
+    }
+    fn s() -> Self {
+        Self { w: 0.50, d: 1.0 / 3.0, max_c: 1024 }
+    }
+    fn c(&self, base: usize) -> usize {
+        ((base.min(self.max_c)) as f64 * self.w).round() as usize
+    }
+    fn d(&self, base: usize) -> usize {
+        ((base as f64) * self.d).ceil() as usize
+    }
+}
+
+/// Backbone; returns (p3, p4, p5) taps.
+fn v8_backbone(b: &mut GraphBuilder, s: &V8Scale) -> (TensorId, TensorId, TensorId) {
+    cbs(b, "stem", s.c(64), 3, 2); // P1
+    cbs(b, "down2", s.c(128), 3, 2); // P2
+    c2f(b, "c2f_2", s.c(128), s.d(3), true);
+    cbs(b, "down3", s.c(256), 3, 2); // P3
+    let p3 = c2f(b, "c2f_3", s.c(256), s.d(6), true);
+    cbs(b, "down4", s.c(512), 3, 2); // P4
+    let p4 = c2f(b, "c2f_4", s.c(512), s.d(6), true);
+    cbs(b, "down5", s.c(1024), 3, 2); // P5
+    c2f(b, "c2f_5", s.c(1024), s.d(3), true);
+    let p5 = sppf(b, "sppf", s.c(1024));
+    (p3, p4, p5)
+}
+
+/// PAN neck; returns per-level feature maps (n3, n4, n5).
+fn v8_neck(
+    b: &mut GraphBuilder,
+    s: &V8Scale,
+    p3: TensorId,
+    p4: TensorId,
+    p5: TensorId,
+) -> (TensorId, TensorId, TensorId) {
+    // top-down
+    b.set_current(p5);
+    b.resize("up5", 2);
+    let cat4 = b.concat("cat_td4", vec![b.current(), p4]);
+    b.set_current(cat4);
+    let td4 = c2f(b, "c2f_td4", s.c(512), s.d(3), false);
+    b.set_current(td4);
+    b.resize("up4", 2);
+    let cat3 = b.concat("cat_td3", vec![b.current(), p3]);
+    b.set_current(cat3);
+    let n3 = c2f(b, "c2f_td3", s.c(256), s.d(3), false);
+    // bottom-up
+    b.set_current(n3);
+    cbs(b, "down_bu3", s.c(256), 3, 2);
+    let cat_bu4 = b.concat("cat_bu4", vec![b.current(), td4]);
+    b.set_current(cat_bu4);
+    let n4 = c2f(b, "c2f_bu4", s.c(512), s.d(3), false);
+    b.set_current(n4);
+    cbs(b, "down_bu4", s.c(512), 3, 2);
+    let cat_bu5 = b.concat("cat_bu5", vec![b.current(), p5]);
+    b.set_current(cat_bu5);
+    let n5 = c2f(b, "c2f_bu5", s.c(1024), s.d(3), false);
+    (n3, n4, n5)
+}
+
+/// Decoupled detect head (anchor-free, DFL reg_max=16) over 3 levels.
+fn v8_detect_head(
+    b: &mut GraphBuilder,
+    s: &V8Scale,
+    levels: [(TensorId, &str); 3],
+    num_classes: usize,
+    outs: &mut Vec<TensorId>,
+) {
+    let reg_ch = (16 * 4usize).max(s.c(256) / 4); // c2 in ultralytics
+    let cls_ch = s.c(256).max(num_classes);
+    for (t, name) in levels {
+        b.set_current(t);
+        cbs(b, &format!("{name}.reg0"), reg_ch, 3, 1);
+        cbs(b, &format!("{name}.reg1"), reg_ch, 3, 1);
+        let reg = b.conv(&format!("{name}.regp"), 64, ConvGeometry::unit(), Activation::None);
+        b.set_current(t);
+        cbs(b, &format!("{name}.cls0"), cls_ch, 3, 1);
+        cbs(b, &format!("{name}.cls1"), cls_ch, 3, 1);
+        let cls = b.conv(&format!("{name}.clsp"), num_classes, ConvGeometry::unit(), Activation::None);
+        outs.push(reg);
+        outs.push(cls);
+    }
+}
+
+fn yolov8(name: &str, scale: V8Scale, seg: bool) -> Graph {
+    let mut b = GraphBuilder::with_input(name, 640, 640, 3);
+    b.set_default_activation(ACT);
+    let (p3, p4, p5) = v8_backbone(&mut b, &scale);
+    let (n3, n4, n5) = v8_neck(&mut b, &scale, p3, p4, p5);
+    let mut outs = Vec::new();
+    v8_detect_head(&mut b, &scale, [(n3, "det3"), (n4, "det4"), (n5, "det5")], 80, &mut outs);
+    if seg {
+        // Prototype branch from n3: upsample ×2 with convs to 32 protos.
+        let proto_c = scale.c(256);
+        b.set_current(n3);
+        cbs(&mut b, "proto.cv1", proto_c, 3, 1);
+        b.resize("proto.up", 2);
+        cbs(&mut b, "proto.cv2", proto_c, 3, 1);
+        let protos = b.conv("proto.out", 32, ConvGeometry::unit(), ACT);
+        outs.push(protos);
+        // Mask-coefficient heads per level (32 coeffs).
+        for (t, nm) in [(n3, "seg3"), (n4, "seg4"), (n5, "seg5")] {
+            b.set_current(t);
+            let mc = scale.c(256).max(32);
+            cbs(&mut b, &format!("{nm}.cv0"), mc, 3, 1);
+            cbs(&mut b, &format!("{nm}.cv1"), mc, 3, 1);
+            let m = b.conv(&format!("{nm}.mc"), 32, ConvGeometry::unit(), Activation::None);
+            outs.push(m);
+        }
+    }
+    b.finish_multi(outs)
+}
+
+/// YOLOv8N detection @ 640.
+pub fn yolov8n_det() -> Graph {
+    yolov8("YOLOv8N-det", V8Scale::n(), false)
+}
+
+/// YOLOv8S detection @ 640.
+pub fn yolov8s_det() -> Graph {
+    yolov8("YOLOv8S", V8Scale::s(), false)
+}
+
+/// YOLOv8N segmentation @ 640.
+pub fn yolov8n_seg() -> Graph {
+    yolov8("YOLOv8N-seg", V8Scale::n(), true)
+}
+
+/// DAMO-YOLO-NL @ 416 — graph-level approximation of the Nano-Large
+/// variant (published: 6.09 GFLOPs ≈ 3.05 GMACs, 5.69 M params at 416²).
+/// The edge deployment of DAMO-YOLO ships ReLU activations (the repo's
+/// "industry" models), unlike YOLOv8's SiLU — relevant to the eNPU's host
+/// fallback behaviour in Table III.
+pub fn damo_yolo_nl() -> Graph {
+    let mut b = GraphBuilder::with_input("DAMO-YOLO-NL", 416, 416, 3);
+    b.set_default_activation(Activation::Relu);
+    // TinyNAS-ish CSP backbone.
+    cbs(&mut b, "stem", 24, 3, 2);
+    cbs(&mut b, "down2", 48, 3, 2);
+    c2f(&mut b, "csp2", 48, 1, true);
+    cbs(&mut b, "down3", 96, 3, 2);
+    let p3 = c2f(&mut b, "csp3", 96, 2, true);
+    cbs(&mut b, "down4", 192, 3, 2);
+    let p4 = c2f(&mut b, "csp4", 192, 2, true);
+    cbs(&mut b, "down5", 384, 3, 2);
+    c2f(&mut b, "csp5", 384, 1, true);
+    let p5 = sppf(&mut b, "sppf", 384);
+    // GFPN-like neck (c(256)=96, c(512)=192, c(1024)=384).
+    let (n3, n4, n5) =
+        v8_neck(&mut b, &V8Scale { w: 0.375, d: 1.0 / 3.0, max_c: 1024 }, p3, p4, p5);
+    let mut outs = Vec::new();
+    // ZeroHead: one conv per level per branch + 1×1 predictors.
+    for (t, nm) in [(n3, "h3"), (n4, "h4"), (n5, "h5")] {
+        b.set_current(t);
+        cbs(&mut b, &format!("{nm}.c"), 96, 3, 1);
+        let reg = b.conv(&format!("{nm}.reg"), 68, ConvGeometry::unit(), Activation::None);
+        b.set_current(t);
+        cbs(&mut b, &format!("{nm}.c2"), 96, 3, 1);
+        let cls = b.conv(&format!("{nm}.cls"), 80, ConvGeometry::unit(), Activation::None);
+        outs.push(reg);
+        outs.push(cls);
+    }
+    b.finish_multi(outs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check(g: &Graph, gmacs_ref: f64, mparams_ref: f64, tol: f64) {
+        g.validate().unwrap();
+        let gmacs = g.total_macs() as f64 / 1e9;
+        let mparams = g.total_params() as f64 / 1e6;
+        assert!(
+            (gmacs - gmacs_ref).abs() / gmacs_ref < tol,
+            "{}: GMACs={gmacs} ref={gmacs_ref}",
+            g.name
+        );
+        assert!(
+            (mparams - mparams_ref).abs() / mparams_ref < tol,
+            "{}: Mparams={mparams} ref={mparams_ref}",
+            g.name
+        );
+    }
+
+    #[test]
+    fn yolov8n_det_matches_table_iv() {
+        check(&yolov8n_det(), 4.35, 3.2, 0.25);
+    }
+
+    #[test]
+    fn yolov8s_matches_table_iv() {
+        check(&yolov8s_det(), 14.3, 11.2, 0.25);
+    }
+
+    #[test]
+    fn yolov8n_seg_matches_table_iv() {
+        check(&yolov8n_seg(), 6.3, 3.4, 0.30);
+    }
+
+    #[test]
+    fn damo_yolo_matches_table_iv() {
+        check(&damo_yolo_nl(), 3.0, 5.7, 0.35);
+    }
+
+    #[test]
+    fn det_head_emits_six_outputs() {
+        let g = yolov8n_det();
+        assert_eq!(g.outputs.len(), 6);
+    }
+
+    #[test]
+    fn seg_adds_proto_and_mask_outputs() {
+        let g = yolov8n_seg();
+        assert_eq!(g.outputs.len(), 6 + 1 + 3);
+    }
+}

@@ -1,0 +1,168 @@
+//! Integration tests across the whole compiler + simulator stack,
+//! including property-based invariants driven by the in-tree prop harness.
+
+use eiq_neutron::arch::{Format, NeutronConfig};
+use eiq_neutron::compiler::{compile, CompileOptions};
+use eiq_neutron::coordinator::{emit, Executor};
+use eiq_neutron::ir::{Activation, ConvGeometry, GraphBuilder, Padding};
+use eiq_neutron::sim::{simulate, SimOptions};
+use eiq_neutron::util::prop::{for_each_case, Rng};
+use eiq_neutron::zoo::ModelId;
+
+/// Random small CNNs: the whole pipeline must hold its invariants on
+/// arbitrary (valid) graphs, not just the zoo.
+fn random_cnn(rng: &mut Rng) -> eiq_neutron::ir::Graph {
+    let hw = *rng.choose(&[16usize, 32, 56, 64]);
+    let mut b = GraphBuilder::with_input("prop_cnn", hw, hw, rng.usize(1, 8));
+    let layers = rng.usize(2, 7);
+    let mut residual_from = None;
+    for i in 0..layers {
+        let k = *rng.choose(&[1usize, 3, 5]);
+        let s = *rng.choose(&[1usize, 1, 2]);
+        let act = *rng.choose(&[Activation::Relu, Activation::Relu6, Activation::Swish]);
+        if rng.f64() < 0.25 {
+            b.dwconv(&format!("dw{i}"), ConvGeometry::square(k, s, Padding::Same), act);
+        } else {
+            let c = rng.usize(4, 96);
+            b.conv(&format!("c{i}"), c, ConvGeometry::square(k, s, Padding::Same), act);
+        }
+        if rng.f64() < 0.2 {
+            residual_from = Some(b.current());
+        }
+        if let Some(r) = residual_from {
+            let cur = b.current();
+            let (rs, cs) = {
+                let g = &b.graph;
+                (g.tensor(r).shape.clone(), g.tensor(cur).shape.clone())
+            };
+            if rs == cs && r != cur && rng.f64() < 0.5 {
+                b.add(&format!("res{i}"), r, cur);
+                residual_from = None;
+            }
+        }
+    }
+    b.global_avg_pool("gap");
+    b.fc("fc", rng.usize(2, 20), Activation::None);
+    b.finish()
+}
+
+#[test]
+fn prop_pipeline_invariants_on_random_graphs() {
+    let cfg = NeutronConfig::flagship_2tops();
+    for_each_case(25, 0xC0FFEE, |rng| {
+        let g = random_cnn(rng);
+        g.validate().expect("generated graph must validate");
+        let c = compile(&g, &cfg, &CompileOptions::default_partitioned());
+
+        // Invariant 1: every compute step's inputs were produced/fetched
+        // before its tick (checked structurally by the scheduler test; here
+        // via simulation which recomputes residency).
+        let r = simulate(&c, &cfg, &SimOptions::default());
+        assert!(r.total_cycles > 0);
+
+        // Invariant 2: simulated latency within 2x of compiler estimate.
+        let ratio = r.latency_ms / c.inference_ms.max(1e-9);
+        assert!((0.4..2.5).contains(&ratio), "ratio {ratio}");
+
+        // Invariant 3: effective TOPS never exceeds peak.
+        let eff = r.effective_tops(g.total_macs());
+        assert!(eff <= cfg.peak_tops() * 1.001, "eff {eff}");
+
+        // Invariant 4: every tile placed by allocation fits the bank space.
+        for p in c.allocation.placements.values() {
+            assert!(p.first_bank < cfg.tcm_banks);
+            assert!(p.first_bank + p.banks <= cfg.tcm_banks);
+        }
+
+        // Invariant 5: DAE ≤ serialized latency.
+        let ser = simulate(&c, &cfg, &SimOptions { serialize_dae: true, ..Default::default() });
+        assert!(r.total_cycles <= ser.total_cycles);
+    });
+}
+
+#[test]
+fn prop_format_choice_is_never_catastrophic() {
+    // The DP trades per-layer optimality against format-conversion cost:
+    // a layer may run in the locally-worse format when converting its
+    // input would cost more than the difference. The bound is therefore
+    // (best + conversion cost of its inputs), not best alone.
+    let cfg = NeutronConfig::flagship_2tops();
+    for_each_case(15, 0xF0F0, |rng| {
+        let g = random_cnn(rng);
+        let plan = eiq_neutron::compiler::select_formats(&g, &cfg);
+        for op in &g.ops {
+            let chosen =
+                eiq_neutron::compiler::layer_latency_cycles(&g, op, &cfg, plan.format_of(op.id));
+            let best = [Format::Depth, Format::Line]
+                .into_iter()
+                .map(|f| eiq_neutron::compiler::layer_latency_cycles(&g, op, &cfg, f))
+                .min()
+                .unwrap();
+            let conv_slack: u64 = op
+                .inputs
+                .iter()
+                .map(|&t| {
+                    eiq_neutron::compiler::cost::format_switch_cycles(
+                        g.tensor(t).padded_size_bytes(cfg.bus_bytes) as u64,
+                        &cfg,
+                    )
+                })
+                .sum();
+            assert!(
+                chosen <= best + conv_slack + 1000,
+                "{}: chosen {chosen} vs best {best} (+slack {conv_slack})",
+                op.name
+            );
+        }
+    });
+}
+
+#[test]
+fn coordinator_replays_all_zoo_models() {
+    let cfg = NeutronConfig::flagship_2tops();
+    for id in [ModelId::MobileNetV1, ModelId::MobileNetV3Min, ModelId::MobileNetV2Ssd] {
+        let g = id.build();
+        let c = compile(&g, &cfg, &CompileOptions::default_partitioned());
+        let p = emit(&c, &g.name);
+        let mut ex = Executor::new(cfg.clone(), p);
+        let r = ex.run_request(None).unwrap();
+        assert_eq!(r.sim_cycles, c.schedule.total_cycles(), "{id:?}");
+    }
+}
+
+#[test]
+fn scaling_with_cores_is_monotonic() {
+    // More cores (same memory) must never be slower on a compute-heavy net.
+    let g = ModelId::ResNet50V1.build();
+    let mut last = f64::INFINITY;
+    for cores in [1usize, 2, 4] {
+        let cfg = NeutronConfig { cores, ..NeutronConfig::flagship_2tops() };
+        let c = compile(&g, &cfg, &CompileOptions::default_partitioned());
+        let r = simulate(&c, &cfg, &SimOptions::default());
+        assert!(
+            r.latency_ms <= last * 1.05,
+            "{cores} cores: {} vs previous {last}",
+            r.latency_ms
+        );
+        last = r.latency_ms;
+    }
+}
+
+#[test]
+fn bigger_tcm_never_hurts() {
+    let g = ModelId::YoloV8nDet.build();
+    let small = NeutronConfig::flagship_2tops();
+    let big = NeutronConfig { tcm_bytes: 2 << 20, tcm_banks: 64, ..small.clone() };
+    let cs = compile(&g, &small, &CompileOptions::default_partitioned());
+    let cb = compile(&g, &big, &CompileOptions::default_partitioned());
+    let rs = simulate(&cs, &small, &SimOptions::default());
+    let rb = simulate(&cb, &big, &SimOptions::default());
+    assert!(
+        rb.latency_ms <= rs.latency_ms * 1.1,
+        "2 MiB TCM {} vs 1 MiB {}",
+        rb.latency_ms,
+        rs.latency_ms
+    );
+    // And it must cut DDR traffic (fewer spills).
+    assert!(rb.ddr_bytes <= rs.ddr_bytes);
+}

@@ -1,0 +1,105 @@
+//! Integration tests over the PJRT runtime: load the AOT artifacts built by
+//! `make artifacts` and verify the rust-side numerics match the manifest's
+//! build-time expectations (which were themselves checked against the
+//! pure-jnp oracle by aot.py / pytest). Skipped gracefully when artifacts
+//! are absent.
+
+use eiq_neutron::ir::Requant;
+use eiq_neutron::runtime::{literal_i32_1d, literal_i8, literal_to_i32s, Manifest, Runtime};
+use eiq_neutron::util::prop::Rng;
+
+fn manifest() -> Option<Manifest> {
+    // Tests run from the crate root; artifacts/ lives beside Cargo.toml.
+    Manifest::load("artifacts").ok()
+}
+
+#[test]
+fn kernel_artifact_matches_rust_requant_reference() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_hlo_text(m.artifact_path("kernel.path").unwrap()).unwrap();
+
+    let km = m.get_usize("kernel.m").unwrap();
+    let kk = m.get_usize("kernel.k").unwrap();
+    let kn = m.get_usize("kernel.n").unwrap();
+    let mult: i32 = m.get("kernel.multiplier").unwrap().parse().unwrap();
+    let shift: i32 = m.get("kernel.shift").unwrap().parse().unwrap();
+    let rq = Requant { multiplier: mult, shift };
+
+    // Random operands generated on the rust side; the oracle is the rust
+    // reference implementation of the same integer arithmetic.
+    let mut rng = Rng::new(2024);
+    let lhs: Vec<i8> = (0..km * kk).map(|_| rng.i8()).collect();
+    let rhs: Vec<i8> = (0..kk * kn).map(|_| rng.i8()).collect();
+    let bias: Vec<i32> = (0..kn).map(|_| rng.int(-4096, 4096) as i32).collect();
+
+    let out = exe
+        .run(&[
+            literal_i8(&lhs, &[km, kk]).unwrap(),
+            literal_i8(&rhs, &[kk, kn]).unwrap(),
+            literal_i32_1d(&bias).unwrap(),
+        ])
+        .unwrap();
+    let got = literal_to_i32s(&out[0]).unwrap();
+    assert_eq!(got.len(), km * kn);
+
+    // Rust-side oracle.
+    for mi in 0..km {
+        for ni in 0..kn {
+            let mut acc: i64 = bias[ni] as i64;
+            for ki in 0..kk {
+                acc += lhs[mi * kk + ki] as i64 * rhs[ki * kn + ni] as i64;
+            }
+            let want = rq.apply(acc as i32).clamp(-128, 127);
+            let got_v = got[mi * kn + ni];
+            assert_eq!(
+                got_v, want,
+                "mismatch at ({mi},{ni}): pjrt={got_v} rust={want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn model_artifact_runs_and_is_deterministic() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_hlo_text(m.artifact_path("model.path").unwrap()).unwrap();
+    let shape: Vec<usize> = m
+        .get("model.input_shape")
+        .unwrap()
+        .split('x')
+        .map(|s| s.parse().unwrap())
+        .collect();
+    let n: usize = shape.iter().product();
+    let classes = m.get_usize("model.num_classes").unwrap();
+
+    let input = eiq_neutron::runtime::deterministic_i8(7, n);
+    let a = literal_to_i32s(&exe.run(&[literal_i8(&input, &shape).unwrap()]).unwrap()[0]).unwrap();
+    let b = literal_to_i32s(&exe.run(&[literal_i8(&input, &shape).unwrap()]).unwrap()[0]).unwrap();
+    assert_eq!(a, b, "model execution must be deterministic");
+    assert_eq!(a.len(), classes);
+    // Different inputs produce different logits (the artifact is not a
+    // constant function).
+    let input2 = eiq_neutron::runtime::deterministic_i8(8, n);
+    let c = literal_to_i32s(&exe.run(&[literal_i8(&input2, &shape).unwrap()]).unwrap()[0]).unwrap();
+    assert_ne!(a, c);
+}
+
+#[test]
+fn manifest_expected_logits_are_wellformed() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let logits = m.get_i32s("model.expected_logits").unwrap();
+    assert_eq!(logits.len(), m.get_usize("model.num_classes").unwrap());
+    let row0 = m.get_i32s("kernel.expected_row0").unwrap();
+    assert!(row0.iter().all(|&v| (-128..=127).contains(&v)));
+}
