@@ -1,0 +1,33 @@
+//! Bench: multi-tenant serving throughput — compile-cache cold vs warm,
+//! and scaling across virtual NPU instance counts (the utilization story
+//! of the paper, lifted to the serving layer).
+
+use eiq_neutron::arch::NeutronConfig;
+use eiq_neutron::serve::{serve, serve_with_cache, CompileCache, ServeOptions};
+use eiq_neutron::util::bench::Bencher;
+
+fn main() {
+    let cfg = NeutronConfig::flagship_2tops();
+    let opts = ServeOptions::default();
+    let b = Bencher::quick();
+
+    // Cold cache: every sample pays the full CP compile for each model.
+    b.bench("serve 200 req / 3 models, cold cache", || {
+        serve(&cfg, &opts).throughput_inf_s
+    });
+
+    // Warm cache: compiles amortized away; scaling is pure scheduling.
+    let mut cache = CompileCache::for_serving(cfg.clone());
+    for &model in &opts.models {
+        cache.get(model);
+    }
+    for instances in [1usize, 2, 4, 8] {
+        let o = ServeOptions { instances, ..opts.clone() };
+        b.bench(&format!("serve 200 req warm cache, {instances} instance(s)"), || {
+            serve_with_cache(&cfg, &o, &mut cache).throughput_inf_s
+        });
+    }
+
+    let report = serve_with_cache(&cfg, &ServeOptions::default(), &mut cache);
+    println!("\n{}", report.summary());
+}

@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Tier-1 verify in one command: release build, test suite, format check.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+cargo build --release
+cargo build --release --benches
+cargo test -q
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --check
+else
+    echo "cargo fmt unavailable — skipping format check"
+fi
+echo "tier-1 verify OK"

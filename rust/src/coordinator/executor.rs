@@ -7,6 +7,15 @@
 //! *actual numerics* of the model by running the AOT artifact once per
 //! request. Timing comes from the model; numbers come from PJRT; Python is
 //! never involved.
+//!
+//! The executor is **re-entrant**: [`Executor::run_program`] borrows the
+//! job program per request, so one executor (= one virtual NPU instance in
+//! the serving layer) can multiplex cached programs of different models,
+//! and a single cached program can be shared across many executors. The
+//! V2P table is re-initialized to identity per request (each program's
+//! remaps assume the allocator's starting state); all other per-request
+//! state lives in the returned [`InferenceResult`], and the executor's
+//! aggregate [`Metrics`] are folded from it via [`Metrics::record`].
 
 use anyhow::Result;
 
@@ -14,7 +23,8 @@ use super::jobs::{Job, JobProgram};
 use super::metrics::Metrics;
 use crate::arch::{NeutronConfig, V2pTable};
 
-/// Execution result of one inference request.
+/// Execution result of one inference request — the complete per-request
+/// state (timing, job counts, traffic, outputs).
 #[derive(Debug, Clone, Default)]
 pub struct InferenceResult {
     /// Simulated on-device latency.
@@ -25,9 +35,18 @@ pub struct InferenceResult {
     /// Model outputs (present when a PJRT executable was attached).
     pub logits: Option<Vec<i32>>,
     pub ticks: usize,
+    /// Compute jobs dispatched for this request.
+    pub compute_jobs: u64,
+    /// DMA jobs dispatched for this request.
+    pub dma_jobs: u64,
+    /// V2P remaps replayed for this request.
+    pub v2p_updates: u64,
+    /// DDR bytes moved for this request.
+    pub ddr_bytes: u64,
 }
 
-/// The coordinator: owns the job program and the device state.
+/// The coordinator: owns the device state and (optionally) a resident
+/// job program for the single-model fast path.
 pub struct Executor {
     cfg: NeutronConfig,
     program: JobProgram,
@@ -41,29 +60,56 @@ impl Executor {
         Self { cfg, program, v2p, metrics: Metrics::default() }
     }
 
-    /// Drive one inference through the job program. `run_numerics` is the
-    /// optional PJRT closure producing the request's actual outputs.
+    /// A program-less executor for multi-tenant serving: one per virtual
+    /// NPU instance, with each request supplying its (cached) program.
+    pub fn with_config(cfg: NeutronConfig) -> Self {
+        Self::new(cfg, JobProgram::default())
+    }
+
+    pub fn config(&self) -> &NeutronConfig {
+        &self.cfg
+    }
+
+    /// Drive one inference through the resident job program. `run_numerics`
+    /// is the optional PJRT closure producing the request's actual outputs.
     pub fn run_request(
         &mut self,
         run_numerics: Option<&dyn Fn() -> Result<Vec<i32>>>,
     ) -> Result<InferenceResult> {
+        let program = std::mem::take(&mut self.program);
+        let result = self.run_program(&program, run_numerics);
+        self.program = program;
+        result
+    }
+
+    /// Drive one inference through an arbitrary (borrowed) job program —
+    /// the re-entrant form the serving layer uses with cached programs.
+    pub fn run_program(
+        &mut self,
+        program: &JobProgram,
+        run_numerics: Option<&dyn Fn() -> Result<Vec<i32>>>,
+    ) -> Result<InferenceResult> {
         let t0 = std::time::Instant::now();
+        // Each program's V2P updates were planned by its allocator against
+        // an identity table; start every request from that state so
+        // interleaved models replay the mappings their compiles assumed.
+        self.v2p = V2pTable::identity(self.cfg.tcm_banks);
+        let mut result = InferenceResult::default();
         let mut total_cycles = 0u64;
         let mut tick_compute = 0u64;
         let mut tick_dm = 0u64;
-        let mut ticks = 0usize;
 
-        for job in &self.program.jobs {
+        for job in &program.jobs {
             match job {
                 Job::Compute { cycles, .. } => {
                     tick_compute += cycles;
-                    self.metrics.compute_jobs += 1;
+                    result.compute_jobs += 1;
                 }
                 Job::Dma { cycles, bytes, kind, .. } => {
                     tick_dm += cycles;
-                    self.metrics.dma_jobs += 1;
+                    result.dma_jobs += 1;
                     if kind.uses_ddr() {
-                        self.metrics.ddr_bytes += bytes;
+                        result.ddr_bytes += bytes;
                     }
                 }
                 Job::V2p { virt_bank, phys_bank } => {
@@ -76,36 +122,29 @@ impl Executor {
                             .expect("bijection");
                         self.v2p.swap(*virt_bank, other);
                     }
-                    self.metrics.v2p_updates += 1;
+                    result.v2p_updates += 1;
                 }
                 Job::Barrier => {
                     // DAE tick: compute and datamover overlap.
                     total_cycles += tick_compute.max(tick_dm);
                     tick_compute = 0;
                     tick_dm = 0;
-                    ticks += 1;
+                    result.ticks += 1;
                 }
             }
         }
         total_cycles += tick_compute.max(tick_dm);
 
-        let logits = match run_numerics {
+        result.logits = match run_numerics {
             Some(f) => Some(f()?),
             None => None,
         };
 
-        let host_us = t0.elapsed().as_micros() as u64;
-        self.metrics.requests += 1;
-        self.metrics.total_sim_cycles += total_cycles;
-        self.metrics.total_host_us += host_us;
-
-        Ok(InferenceResult {
-            sim_cycles: total_cycles,
-            sim_ms: self.cfg.cycles_to_ms(total_cycles),
-            host_us,
-            logits,
-            ticks,
-        })
+        result.sim_cycles = total_cycles;
+        result.sim_ms = self.cfg.cycles_to_ms(total_cycles);
+        result.host_us = t0.elapsed().as_micros() as u64;
+        self.metrics.record(&result);
+        Ok(result)
     }
 
     pub fn program(&self) -> &JobProgram {
@@ -166,5 +205,48 @@ mod tests {
         let mut ex = Executor::new(cfg, p);
         let r = ex.run_request(None).unwrap();
         assert_eq!(r.sim_cycles, c.schedule.total_cycles());
+    }
+
+    #[test]
+    fn run_program_is_reentrant_across_models() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let g1 = zoo::mobilenet::mobilenet_v1();
+        let g2 = zoo::mobilenet::mobilenet_v2();
+        let c1 = compile(&g1, &cfg, &CompileOptions::default_partitioned());
+        let c2 = compile(&g2, &cfg, &CompileOptions::default_partitioned());
+        let p1 = emit(&c1, "m1");
+        let p2 = emit(&c2, "m2");
+        let mut ex = Executor::with_config(cfg.clone());
+        let a1 = ex.run_program(&p1, None).unwrap();
+        let b = ex.run_program(&p2, None).unwrap();
+        let a2 = ex.run_program(&p1, None).unwrap();
+        // Interleaving different models' programs must not perturb timing.
+        assert_eq!(a1.sim_cycles, a2.sim_cycles);
+        assert_eq!(a1.sim_cycles, c1.schedule.total_cycles());
+        assert_eq!(b.sim_cycles, c2.schedule.total_cycles());
+        assert_eq!(ex.metrics.requests, 3);
+    }
+
+    #[test]
+    fn per_request_state_sums_to_aggregate_metrics() {
+        let g = zoo::mobilenet::mobilenet_v2();
+        let mut ex = executor_for(&g);
+        let rs: Vec<InferenceResult> =
+            (0..3).map(|_| ex.run_request(None).unwrap()).collect();
+        assert_eq!(ex.metrics.requests, 3);
+        assert_eq!(
+            ex.metrics.compute_jobs,
+            rs.iter().map(|r| r.compute_jobs).sum::<u64>()
+        );
+        assert_eq!(ex.metrics.dma_jobs, rs.iter().map(|r| r.dma_jobs).sum::<u64>());
+        assert_eq!(
+            ex.metrics.v2p_updates,
+            rs.iter().map(|r| r.v2p_updates).sum::<u64>()
+        );
+        assert_eq!(ex.metrics.ddr_bytes, rs.iter().map(|r| r.ddr_bytes).sum::<u64>());
+        assert_eq!(
+            ex.metrics.total_sim_cycles,
+            rs.iter().map(|r| r.sim_cycles).sum::<u64>()
+        );
     }
 }

@@ -7,7 +7,11 @@ use crate::compiler::TileId;
 use crate::ir::OpId;
 
 /// One job for the controller.
-#[derive(Debug, Clone)]
+///
+/// `PartialEq`/`Eq` support bit-identical program comparison — the serving
+/// layer's cache-coherence property checks a cache hit against a cold
+/// compile job-for-job.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Job {
     /// Program the compute cores with one kernel-library call.
     Compute {
@@ -30,7 +34,7 @@ pub enum Job {
 }
 
 /// The complete program for one inference.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct JobProgram {
     pub jobs: Vec<Job>,
     pub model: String,

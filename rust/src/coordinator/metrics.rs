@@ -1,7 +1,14 @@
 //! Coordinator metrics: request counters, job counts, traffic, timing.
+//!
+//! Aggregates are folded from per-request [`InferenceResult`]s via
+//! [`Metrics::record`]; the executor never mutates individual counters
+//! directly, which keeps per-request state and aggregate state consistent
+//! by construction (the serving layer relies on this).
+
+use super::executor::InferenceResult;
 
 /// Aggregate execution metrics across requests.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct Metrics {
     pub requests: u64,
     pub compute_jobs: u64,
@@ -13,6 +20,34 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Fold one request's result into the aggregates.
+    pub fn record(&mut self, r: &InferenceResult) {
+        self.requests += 1;
+        self.compute_jobs += r.compute_jobs;
+        self.dma_jobs += r.dma_jobs;
+        self.v2p_updates += r.v2p_updates;
+        self.ddr_bytes += r.ddr_bytes;
+        self.total_sim_cycles += r.sim_cycles;
+        self.total_host_us += r.host_us;
+    }
+
+    /// Reset to the zero state (e.g. between serving epochs).
+    pub fn reset(&mut self) {
+        *self = Metrics::default();
+    }
+
+    /// Merge another aggregate (e.g. per-instance metrics into a fleet
+    /// view).
+    pub fn merge(&mut self, other: &Metrics) {
+        self.requests += other.requests;
+        self.compute_jobs += other.compute_jobs;
+        self.dma_jobs += other.dma_jobs;
+        self.v2p_updates += other.v2p_updates;
+        self.ddr_bytes += other.ddr_bytes;
+        self.total_sim_cycles += other.total_sim_cycles;
+        self.total_host_us += other.total_host_us;
+    }
+
     /// Mean simulated latency per request, ms, at the given clock.
     pub fn mean_sim_ms(&self, freq_ghz: f64) -> f64 {
         if self.requests == 0 {
@@ -48,6 +83,19 @@ impl Metrics {
 mod tests {
     use super::*;
 
+    fn result(sim_cycles: u64, host_us: u64) -> InferenceResult {
+        InferenceResult {
+            sim_cycles,
+            host_us,
+            ticks: 4,
+            compute_jobs: 2,
+            dma_jobs: 3,
+            v2p_updates: 1,
+            ddr_bytes: 100,
+            ..Default::default()
+        }
+    }
+
     #[test]
     fn means_handle_zero_requests() {
         let m = Metrics::default();
@@ -61,5 +109,47 @@ mod tests {
         let s = m.summary(1.0);
         assert!(s.contains("requests=3"));
         assert!(s.contains("sim=1.00ms"));
+    }
+
+    #[test]
+    fn record_accumulates_across_requests() {
+        let mut m = Metrics::default();
+        m.record(&result(1_000, 5));
+        m.record(&result(3_000, 7));
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.total_sim_cycles, 4_000);
+        assert_eq!(m.total_host_us, 12);
+        assert_eq!(m.compute_jobs, 4);
+        assert_eq!(m.dma_jobs, 6);
+        assert_eq!(m.v2p_updates, 2);
+        assert_eq!(m.ddr_bytes, 200);
+        // 2000 cycles/request at 1 GHz = 2 µs = 0.002 ms.
+        assert!((m.mean_sim_ms(1.0) - 0.002).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reset_returns_to_zero_state() {
+        let mut m = Metrics::default();
+        m.record(&result(1_000, 5));
+        assert_ne!(m, Metrics::default());
+        m.reset();
+        assert_eq!(m, Metrics::default());
+        // The zero-request path stays division-safe after a reset.
+        assert_eq!(m.mean_sim_ms(1.0), 0.0);
+        assert_eq!(m.mean_host_us(), 0.0);
+    }
+
+    #[test]
+    fn merge_combines_aggregates() {
+        let mut a = Metrics::default();
+        a.record(&result(1_000, 5));
+        let mut b = Metrics::default();
+        b.record(&result(2_000, 6));
+        b.record(&result(3_000, 7));
+        a.merge(&b);
+        assert_eq!(a.requests, 3);
+        assert_eq!(a.total_sim_cycles, 6_000);
+        assert_eq!(a.total_host_us, 18);
+        assert_eq!(a.compute_jobs, 6);
     }
 }

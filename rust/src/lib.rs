@@ -5,8 +5,10 @@
 //! 2025): a near-memory-compute NPU architecture model, a constraint-
 //! programming compiler mid-end (format selection, temporal tiling + layer
 //! fusion, DAE scheduling, memory allocation), a tick-based decoupled
-//! access-execute simulator, baseline NPU models, and a PJRT runtime that
-//! executes AOT-lowered JAX/Pallas kernels for numerics.
+//! access-execute simulator, baseline NPU models, a PJRT runtime that
+//! executes AOT-lowered JAX/Pallas kernels for numerics, and a
+//! multi-tenant serving layer (compile cache + virtual-clock request
+//! scheduler over N simulated NPU instances).
 //!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured record of every table and figure.
@@ -17,6 +19,7 @@ pub mod compiler;
 pub mod coordinator;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod cp;
 pub mod ir;

@@ -4,6 +4,8 @@
 //!   compile   --model <name> [--monolithic]     compile + report stats
 //!   simulate  --model <name> [--serialize-dae]  compile + cycle simulation
 //!   infer     [--requests N]                    e2e PJRT inference (needs artifacts)
+//!   serve     [--requests N] [--instances K] [--models a,b,c] [--seed S]
+//!             [--mean-gap-cycles G]             multi-tenant serving simulation
 //!   report    table1|table2|table3|table4|fig4|fig6|genai
 //!   list                                        list zoo models
 
@@ -14,6 +16,7 @@ use eiq_neutron::compiler::{compile, CompileOptions};
 use eiq_neutron::coordinator::{emit, Executor};
 use eiq_neutron::report;
 use eiq_neutron::runtime::{literal_i8, literal_to_i32s, Manifest, Runtime};
+use eiq_neutron::serve::{serve, ServeOptions};
 use eiq_neutron::sim::{simulate, SimOptions};
 use eiq_neutron::util::cli::Args;
 use eiq_neutron::zoo::ModelId;
@@ -31,14 +34,16 @@ fn main() -> Result<()> {
         Some("compile") => cmd_compile(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("infer") => cmd_infer(&args),
+        Some("serve") => cmd_serve(&args),
         Some("report") => cmd_report(&args),
         other => {
             if let Some(o) = other {
                 eprintln!("unknown subcommand {o:?}");
             }
             eprintln!(
-                "usage: neutron <list|compile|simulate|infer|report> \
-                 [--model NAME] [--monolithic] [--requests N]"
+                "usage: neutron <list|compile|simulate|infer|serve|report> \
+                 [--model NAME] [--monolithic] [--requests N] [--instances K] \
+                 [--models a,b,c] [--seed S] [--mean-gap-cycles G]"
             );
             Ok(())
         }
@@ -144,6 +149,31 @@ fn cmd_infer(args: &Args) -> Result<()> {
         );
     }
     println!("{}", ex.metrics.summary(cfg.freq_ghz));
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let models_raw = args.opt("models", "mobilenet-v2,mobilenet-v1,efficientnet-lite0");
+    let mut models = Vec::new();
+    for name in models_raw.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        match ModelId::parse(name) {
+            Some(id) => models.push(id),
+            None => bail!("unknown model {name:?} — try `neutron list`"),
+        }
+    }
+    if models.is_empty() {
+        bail!("--models needs at least one model");
+    }
+    let opts = ServeOptions {
+        models,
+        requests: args.opt_parse("requests", 200),
+        instances: args.opt_parse("instances", 2),
+        mean_gap_cycles: args.opt_parse("mean-gap-cycles", 600_000),
+        seed: args.opt_parse("seed", 7),
+    };
+    let cfg = NeutronConfig::flagship_2tops();
+    let report = serve(&cfg, &opts);
+    print!("{}", report.summary());
     Ok(())
 }
 

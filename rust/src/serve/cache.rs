@@ -1,0 +1,188 @@
+//! Compile cache: memoizes the CP mid-end per (model, config fingerprint).
+//!
+//! Compilation dominates request cost by orders of magnitude (Table II:
+//! seconds of CP solving vs milliseconds of inference), so a multi-tenant
+//! server must never re-run the solver for a model it has already planned.
+//! Entries are `Arc`-shared: every virtual NPU instance replays the same
+//! immutable [`JobProgram`] without copying it.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::arch::NeutronConfig;
+use crate::compiler::{compile, CompileOptions, Compiled};
+use crate::coordinator::{emit, JobProgram};
+use crate::cp::SearchConfig;
+use crate::zoo::ModelId;
+
+/// FNV-1a over every architecture parameter. Two configs with equal
+/// fingerprints compile identically, so the fingerprint is the cache-key
+/// component that isolates tenants on different NPU configurations.
+pub fn config_fingerprint(cfg: &NeutronConfig) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    let mut mix = |v: u64| {
+        for b in v.to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(PRIME);
+        }
+    };
+    mix(cfg.n as u64);
+    mix(cfg.m as u64);
+    mix(cfg.a as u64);
+    mix(cfg.wc_bytes as u64);
+    mix(cfg.cores as u64);
+    mix(cfg.freq_ghz.to_bits());
+    mix(cfg.tcm_bytes as u64);
+    mix(cfg.tcm_banks as u64);
+    mix(cfg.ddr_gbps.to_bits());
+    mix(cfg.bus_bytes as u64);
+    mix(cfg.buses_per_core as u64);
+    mix(cfg.job_overhead_cycles);
+    h
+}
+
+/// Compile options for serving: identical inputs must yield bit-identical
+/// job programs across runs, so every CP budget is a **node limit**
+/// (deterministic) rather than a wall-clock limit. The branch-and-bound
+/// search itself is deterministic (smallest-domain/lowest-index selection),
+/// so with node budgets the whole mid-end is a pure function of
+/// `(graph, config)`.
+pub fn deterministic_compile_options() -> CompileOptions {
+    let solver = |nodes: u64| SearchConfig {
+        node_limit: Some(nodes),
+        time_limit_ms: None,
+        ..SearchConfig::default()
+    };
+    let mut opts = CompileOptions::default_partitioned();
+    opts.tiling.solver = solver(200_000);
+    opts.scheduling.solver = solver(60_000);
+    opts.allocation_solver = solver(60_000);
+    opts
+}
+
+/// One cached compile: the mid-end artifact plus the emitted job program.
+#[derive(Debug, Clone)]
+pub struct CachedModel {
+    pub model: ModelId,
+    pub compiled: Compiled,
+    pub program: JobProgram,
+}
+
+/// Memoizes `compile` + `emit` per `(ModelId, config fingerprint)` so
+/// repeat requests skip the CP solver.
+#[derive(Debug)]
+pub struct CompileCache {
+    cfg: NeutronConfig,
+    opts: CompileOptions,
+    entries: HashMap<(ModelId, u64), Arc<CachedModel>>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CompileCache {
+    pub fn new(cfg: NeutronConfig, opts: CompileOptions) -> Self {
+        Self { cfg, opts, entries: HashMap::new(), hits: 0, misses: 0 }
+    }
+
+    /// Serving default: deterministic solver budgets.
+    pub fn for_serving(cfg: NeutronConfig) -> Self {
+        Self::new(cfg, deterministic_compile_options())
+    }
+
+    /// Resolve a model's compiled program under the cache's default
+    /// config, compiling on the first request (miss) and returning the
+    /// shared entry afterwards (hit).
+    pub fn get(&mut self, model: ModelId) -> Arc<CachedModel> {
+        let cfg = self.cfg.clone();
+        self.get_for(model, &cfg)
+    }
+
+    /// Resolve under an explicit config (mixed per-tenant configurations):
+    /// entries for different fingerprints coexist in one cache.
+    pub fn get_for(&mut self, model: ModelId, cfg: &NeutronConfig) -> Arc<CachedModel> {
+        let key = (model, config_fingerprint(cfg));
+        if let Some(entry) = self.entries.get(&key) {
+            self.hits += 1;
+            return Arc::clone(entry);
+        }
+        self.misses += 1;
+        let graph = model.build();
+        let compiled = compile(&graph, cfg, &self.opts);
+        let program = emit(&compiled, &graph.name);
+        let entry = Arc::new(CachedModel { model, compiled, program });
+        self.entries.insert(key, Arc::clone(&entry));
+        entry
+    }
+
+    /// Look up without compiling (and without counting a hit/miss).
+    pub fn peek(&self, model: ModelId) -> Option<&Arc<CachedModel>> {
+        self.entries.get(&(model, config_fingerprint(&self.cfg)))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Fraction of `get` calls served from the cache (0 when never used).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingerprint_distinguishes_configs() {
+        let a = NeutronConfig::flagship_2tops();
+        let b = NeutronConfig::mcu_half_tops();
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&b));
+        assert_eq!(config_fingerprint(&a), config_fingerprint(&a.clone()));
+        let c = NeutronConfig { cores: 2, ..a.clone() };
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&c));
+    }
+
+    #[test]
+    fn miss_then_hits_share_one_compile() {
+        let mut cache = CompileCache::for_serving(NeutronConfig::flagship_2tops());
+        assert_eq!(cache.hit_rate(), 0.0);
+        assert!(cache.is_empty());
+        let a = cache.get(ModelId::MobileNetV3Min);
+        let b = cache.get(ModelId::MobileNetV3Min);
+        assert!(Arc::ptr_eq(&a, &b), "hit must return the cached entry");
+        assert_eq!((cache.hits, cache.misses), (1, 1));
+        assert_eq!(cache.len(), 1);
+        assert!(cache.peek(ModelId::MobileNetV3Min).is_some());
+        assert!(cache.peek(ModelId::MobileNetV1).is_none());
+        assert!((cache.hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(a.model, ModelId::MobileNetV3Min);
+        assert!(!a.program.jobs.is_empty());
+    }
+
+    #[test]
+    fn per_config_entries_coexist() {
+        let flagship = NeutronConfig::flagship_2tops();
+        let mcu = NeutronConfig::mcu_half_tops();
+        let mut cache = CompileCache::for_serving(flagship.clone());
+        let a = cache.get(ModelId::MobileNetV3Min);
+        let b = cache.get_for(ModelId::MobileNetV3Min, &mcu);
+        assert!(!Arc::ptr_eq(&a, &b), "different configs must compile separately");
+        assert_eq!(cache.len(), 2);
+        assert_eq!((cache.hits, cache.misses), (0, 2));
+        // The default-config entry is still a hit afterwards.
+        let c = cache.get_for(ModelId::MobileNetV3Min, &flagship);
+        assert!(Arc::ptr_eq(&a, &c));
+        assert_eq!(cache.hits, 1);
+    }
+}

@@ -1,0 +1,47 @@
+//! Multi-tenant serving layer: compile cache + admission queue + request
+//! scheduler over N virtual NPU instances.
+//!
+//! The paper's headline claim is *utilization*, not peak TOPS — the stack
+//! wins by keeping compute busy. This module turns the single-shot
+//! coordinator into a serving simulator for the realistic deployment
+//! shape: many models, many tenants, heavy traffic.
+//!
+//! Three pieces:
+//!
+//! * [`CompileCache`] — memoizes `compile` + `emit` per
+//!   `(ModelId, NeutronConfig fingerprint)`, so repeat requests skip the CP
+//!   solver entirely;
+//! * [`Scheduler`] — a FIFO admission queue dispatching onto the
+//!   earliest-idle of N virtual NPU instances (each a re-entrant
+//!   `coordinator::Executor`);
+//! * [`serve`] / [`ServeReport`] — runs a synthetic trace and reports
+//!   throughput, p50/p95/p99 latency, cache hit rate and utilization.
+//!
+//! ## Virtual-clock contract
+//!
+//! All serving time lives on a shared **virtual clock** denominated in NPU
+//! core cycles; the host wall clock never enters any reported number:
+//!
+//! * request arrivals come from a seeded PRNG trace
+//!   ([`synthetic_trace`]) — same `(models, requests, mean gap, seed)`
+//!   yields the identical trace;
+//! * the service time of a request is the simulated latency of its cached
+//!   job program — a pure function of `(model, config)`;
+//! * dispatch is FIFO in admission order onto the instance that goes idle
+//!   earliest, ties broken toward the lowest instance id;
+//! * per-request latency = queueing delay + simulated service time, both
+//!   in cycles on the shared clock.
+//!
+//! **Determinism:** same seed + same request trace (+ same config) →
+//! identical [`ServeReport`], across runs and across machines. To make the
+//! cached programs themselves reproducible, serving compiles under
+//! [`deterministic_compile_options`]: every CP budget is a node limit
+//! (deterministic) instead of a wall-clock limit.
+
+pub mod cache;
+pub mod queue;
+pub mod server;
+
+pub use cache::{config_fingerprint, deterministic_compile_options, CachedModel, CompileCache};
+pub use queue::{synthetic_trace, Completion, NpuInstance, Request, Scheduler};
+pub use server::{run_trace, serve, serve_with_cache, ModelStats, ServeOptions, ServeReport};

@@ -1,0 +1,358 @@
+//! Serving front-end: synthetic trace → compile cache → scheduler →
+//! [`ServeReport`].
+
+use crate::arch::NeutronConfig;
+use crate::zoo::ModelId;
+
+use super::cache::CompileCache;
+use super::queue::{synthetic_trace, Completion, Request, Scheduler};
+
+/// Serving scenario parameters.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Tenant model mix (requests draw uniformly from this list).
+    pub models: Vec<ModelId>,
+    pub requests: usize,
+    /// Virtual NPU instances sharing the admission queue.
+    pub instances: usize,
+    /// Mean inter-arrival gap on the virtual clock, cycles.
+    pub mean_gap_cycles: u64,
+    pub seed: u64,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            models: vec![
+                ModelId::MobileNetV2,
+                ModelId::MobileNetV1,
+                ModelId::EfficientNetLite0,
+            ],
+            requests: 200,
+            instances: 2,
+            // ~0.6 ms at 1 GHz: keeps two instances around 80% busy on
+            // the ~1 ms default model mix.
+            mean_gap_cycles: 600_000,
+            seed: 7,
+        }
+    }
+}
+
+/// Per-model serving statistics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelStats {
+    pub model: ModelId,
+    pub requests: u64,
+    /// Cycles this model kept instances busy (utilization numerator).
+    pub busy_cycles: u64,
+    pub mean_latency_ms: f64,
+}
+
+/// Aggregate serving report. Fully determined by `(config, options)`: no
+/// wall-clock value enters any field, so two runs with the same seed
+/// compare equal (see the virtual-clock contract in `serve/mod.rs`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeReport {
+    pub requests: u64,
+    pub instances: usize,
+    pub freq_ghz: f64,
+    /// Virtual-clock cycle when the last request finished.
+    pub makespan_cycles: u64,
+    pub throughput_inf_s: f64,
+    pub mean_latency_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_queue_ms: f64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub per_model: Vec<ModelStats>,
+    pub per_instance_busy_cycles: Vec<u64>,
+}
+
+impl ServeReport {
+    /// Fraction of compile-cache lookups served without running the CP
+    /// solver (0 when no lookups happened).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+
+    /// Mean fraction of the makespan the virtual instances spent busy.
+    pub fn utilization(&self) -> f64 {
+        if self.makespan_cycles == 0 || self.per_instance_busy_cycles.is_empty() {
+            return 0.0;
+        }
+        let busy: u64 = self.per_instance_busy_cycles.iter().sum();
+        busy as f64 / (self.makespan_cycles as f64 * self.per_instance_busy_cycles.len() as f64)
+    }
+
+    /// Multi-line human-readable report.
+    pub fn summary(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        writeln!(
+            s,
+            "requests:     {} over {} virtual NPU instance(s), {} model(s)",
+            self.requests,
+            self.instances,
+            self.per_model.len()
+        )
+        .unwrap();
+        writeln!(
+            s,
+            "makespan:     {:.2} ms  →  throughput {:.1} inf/s",
+            cycles_to_ms(self.makespan_cycles as f64, self.freq_ghz),
+            self.throughput_inf_s
+        )
+        .unwrap();
+        writeln!(
+            s,
+            "latency:      p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms  (mean {:.3} ms, queue {:.3} ms)",
+            self.p50_ms, self.p95_ms, self.p99_ms, self.mean_latency_ms, self.mean_queue_ms
+        )
+        .unwrap();
+        writeln!(
+            s,
+            "compile cache: {} hits / {} misses ({:.1}% hit rate)",
+            self.cache_hits,
+            self.cache_misses,
+            self.cache_hit_rate() * 100.0
+        )
+        .unwrap();
+        writeln!(s, "utilization:  {:.1}% mean across instances", self.utilization() * 100.0)
+            .unwrap();
+        for m in &self.per_model {
+            let share = if self.makespan_cycles == 0 || self.instances == 0 {
+                0.0
+            } else {
+                m.busy_cycles as f64
+                    / (self.makespan_cycles as f64 * self.instances as f64)
+                    * 100.0
+            };
+            writeln!(
+                s,
+                "  {:<20} {:>5} req  util {:>5.1}%  mean latency {:>8.3} ms",
+                m.model.display_name(),
+                m.requests,
+                share,
+                m.mean_latency_ms
+            )
+            .unwrap();
+        }
+        s
+    }
+}
+
+fn cycles_to_ms(cycles: f64, freq_ghz: f64) -> f64 {
+    cycles / (freq_ghz * 1e9) * 1e3
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice (0 when empty).
+fn percentile(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Run a prepared `trace` over `instances` virtual NPUs, resolving each
+/// request's program through `cache`. Returns the completions in dispatch
+/// (= admission) order plus per-instance busy cycles.
+pub fn run_trace(
+    cfg: &NeutronConfig,
+    trace: &[Request],
+    instances: usize,
+    cache: &mut CompileCache,
+) -> (Vec<Completion>, Vec<u64>) {
+    let mut scheduler = Scheduler::new(cfg, instances);
+    for &request in trace {
+        scheduler.admit(request);
+    }
+    let mut completions = Vec::with_capacity(trace.len());
+    while let Some(model) = scheduler.next_model() {
+        let entry = cache.get(model);
+        if let Some(c) = scheduler.dispatch_next(&entry.program) {
+            completions.push(c);
+        }
+    }
+    let busy = scheduler.instances().iter().map(|i| i.busy_cycles()).collect();
+    (completions, busy)
+}
+
+/// Serve a synthetic multi-tenant trace with a caller-owned cache (reuse
+/// the cache across calls to keep compiles warm).
+pub fn serve_with_cache(
+    cfg: &NeutronConfig,
+    opts: &ServeOptions,
+    cache: &mut CompileCache,
+) -> ServeReport {
+    assert!(!opts.models.is_empty(), "serving needs at least one model");
+    assert!(opts.instances >= 1, "serving needs at least one instance");
+    let (hits0, misses0) = (cache.hits, cache.misses);
+    let trace = synthetic_trace(&opts.models, opts.requests, opts.mean_gap_cycles, opts.seed);
+    let (completions, per_instance_busy) = run_trace(cfg, &trace, opts.instances, cache);
+    build_report(
+        cfg,
+        opts,
+        &completions,
+        per_instance_busy,
+        cache.hits - hits0,
+        cache.misses - misses0,
+    )
+}
+
+/// Serve with a fresh deterministic cache.
+pub fn serve(cfg: &NeutronConfig, opts: &ServeOptions) -> ServeReport {
+    let mut cache = CompileCache::for_serving(cfg.clone());
+    serve_with_cache(cfg, opts, &mut cache)
+}
+
+fn build_report(
+    cfg: &NeutronConfig,
+    opts: &ServeOptions,
+    completions: &[Completion],
+    per_instance_busy: Vec<u64>,
+    cache_hits: u64,
+    cache_misses: u64,
+) -> ServeReport {
+    let freq = cfg.freq_ghz;
+    let n = completions.len() as u64;
+    let mut latencies: Vec<u64> = completions.iter().map(|c| c.latency_cycles()).collect();
+    latencies.sort_unstable();
+    let makespan = completions.iter().map(|c| c.finish_cycles).max().unwrap_or(0);
+    let throughput = if makespan == 0 {
+        0.0
+    } else {
+        n as f64 * freq * 1e9 / makespan as f64
+    };
+    let mean_latency_cycles = if n == 0 {
+        0.0
+    } else {
+        latencies.iter().sum::<u64>() as f64 / n as f64
+    };
+    let mean_queue_cycles = if n == 0 {
+        0.0
+    } else {
+        completions.iter().map(|c| c.queue_cycles()).sum::<u64>() as f64 / n as f64
+    };
+
+    // Per-model stats in the caller's model order (first occurrence wins,
+    // so duplicate entries in `models` stay deterministic).
+    let mut per_model = Vec::new();
+    let mut seen: Vec<ModelId> = Vec::new();
+    for &model in &opts.models {
+        if seen.contains(&model) {
+            continue;
+        }
+        seen.push(model);
+        let mut requests = 0u64;
+        let mut busy = 0u64;
+        let mut latency_sum = 0u64;
+        for c in completions.iter().filter(|c| c.model == model) {
+            requests += 1;
+            busy += c.service_cycles();
+            latency_sum += c.latency_cycles();
+        }
+        per_model.push(ModelStats {
+            model,
+            requests,
+            busy_cycles: busy,
+            mean_latency_ms: if requests == 0 {
+                0.0
+            } else {
+                cycles_to_ms(latency_sum as f64 / requests as f64, freq)
+            },
+        });
+    }
+
+    ServeReport {
+        requests: n,
+        instances: opts.instances,
+        freq_ghz: freq,
+        makespan_cycles: makespan,
+        throughput_inf_s: throughput,
+        mean_latency_ms: cycles_to_ms(mean_latency_cycles, freq),
+        p50_ms: cycles_to_ms(percentile(&latencies, 0.50) as f64, freq),
+        p95_ms: cycles_to_ms(percentile(&latencies, 0.95) as f64, freq),
+        p99_ms: cycles_to_ms(percentile(&latencies, 0.99) as f64, freq),
+        mean_queue_ms: cycles_to_ms(mean_queue_cycles, freq),
+        cache_hits,
+        cache_misses,
+        per_model,
+        per_instance_busy_cycles: per_instance_busy,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        assert_eq!(percentile(&[], 0.5), 0);
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&v, 0.0), 1);
+        assert_eq!(percentile(&v, 1.0), 100);
+        assert_eq!(percentile(&v, 0.5), 51); // round(99·0.5) = 50 → v[50]
+        assert_eq!(percentile(&[7], 0.99), 7);
+    }
+
+    #[test]
+    fn small_serve_is_conserving_and_warm_reruns_match() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let opts = ServeOptions {
+            models: vec![ModelId::MobileNetV3Min, ModelId::MobileNetV1],
+            requests: 24,
+            instances: 2,
+            mean_gap_cycles: 400_000,
+            seed: 11,
+        };
+        let mut cache = CompileCache::for_serving(cfg.clone());
+        let a = serve_with_cache(&cfg, &opts, &mut cache);
+        assert_eq!(a.requests, 24);
+        assert_eq!(a.cache_misses, 2);
+        assert_eq!(a.cache_hits, 22);
+        assert!(a.cache_hit_rate() > 0.9);
+        assert!(a.p50_ms > 0.0);
+        assert!(a.p50_ms <= a.p95_ms && a.p95_ms <= a.p99_ms);
+        assert!(a.utilization() > 0.0 && a.utilization() <= 1.0);
+        assert_eq!(a.per_model.iter().map(|m| m.requests).sum::<u64>(), 24);
+        assert_eq!(a.per_instance_busy_cycles.len(), 2);
+
+        // Warm rerun: identical virtual-clock timing, all cache hits.
+        let b = serve_with_cache(&cfg, &opts, &mut cache);
+        assert_eq!(b.cache_misses, 0);
+        assert_eq!(b.cache_hits, 24);
+        assert_eq!(
+            (a.makespan_cycles, a.p50_ms, a.p95_ms, a.p99_ms, a.throughput_inf_s),
+            (b.makespan_cycles, b.p50_ms, b.p95_ms, b.p99_ms, b.throughput_inf_s)
+        );
+        assert_eq!(a.per_model, b.per_model);
+    }
+
+    #[test]
+    fn zero_requests_are_division_safe() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let opts = ServeOptions {
+            models: vec![ModelId::MobileNetV3Min],
+            requests: 0,
+            instances: 1,
+            mean_gap_cycles: 0,
+            seed: 1,
+        };
+        let r = serve(&cfg, &opts);
+        assert_eq!(r.requests, 0);
+        assert_eq!(r.throughput_inf_s, 0.0);
+        assert_eq!(r.p99_ms, 0.0);
+        assert_eq!(r.mean_latency_ms, 0.0);
+        assert_eq!(r.utilization(), 0.0);
+        assert_eq!(r.cache_hit_rate(), 0.0);
+        assert!(r.summary().contains("requests"));
+    }
+}

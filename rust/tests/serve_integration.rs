@@ -1,0 +1,186 @@
+//! Integration + property tests for the multi-tenant serving layer:
+//! conservation (every admitted request completes exactly once), scaling
+//! monotonicity (more instances never increase makespan), cache coherence
+//! (a hit is bit-identical to a cold compile), and virtual-clock
+//! determinism (same seed → identical `ServeReport`).
+
+use std::sync::Arc;
+
+use eiq_neutron::arch::NeutronConfig;
+use eiq_neutron::compiler::compile;
+use eiq_neutron::coordinator::emit;
+use eiq_neutron::serve::{
+    deterministic_compile_options, run_trace, serve, serve_with_cache, synthetic_trace,
+    Completion, CompileCache, ServeOptions,
+};
+use eiq_neutron::util::prop::{for_each_case, Rng};
+use eiq_neutron::zoo::ModelId;
+
+/// Cheap zoo subset for property cases (each model compiles once per
+/// cache, so shared caches keep the suite fast).
+const POOL: [ModelId; 4] = [
+    ModelId::MobileNetV1,
+    ModelId::MobileNetV2,
+    ModelId::MobileNetV3Min,
+    ModelId::EfficientNetLite0,
+];
+
+/// A random non-empty, duplicate-free subset of the pool.
+fn random_models(rng: &mut Rng) -> Vec<ModelId> {
+    let k = rng.usize(1, POOL.len());
+    let start = rng.usize(0, POOL.len() - 1);
+    (0..k).map(|i| POOL[(start + i) % POOL.len()]).collect()
+}
+
+fn makespan(completions: &[Completion]) -> u64 {
+    completions.iter().map(|c| c.finish_cycles).max().unwrap_or(0)
+}
+
+#[test]
+fn prop_conservation_every_admitted_request_completes_once() {
+    let cfg = NeutronConfig::flagship_2tops();
+    let mut cache = CompileCache::for_serving(cfg.clone());
+    for_each_case(16, 0x5E41, |rng| {
+        let models = random_models(rng);
+        let n = rng.usize(1, 40);
+        let instances = rng.usize(1, 5);
+        let gap = rng.int(0, 2_000_000) as u64;
+        let trace = synthetic_trace(&models, n, gap, rng.next_u64());
+        let (completions, busy) = run_trace(&cfg, &trace, instances, &mut cache);
+
+        assert_eq!(completions.len(), n, "every admitted request completes");
+        let mut ids: Vec<u64> = completions.iter().map(|c| c.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "no request completes twice");
+        assert_eq!(busy.len(), instances);
+        for c in &completions {
+            let req = trace[c.id as usize];
+            assert_eq!(req.model, c.model);
+            assert_eq!(req.arrival_cycles, c.arrival_cycles);
+            assert!(c.start_cycles >= c.arrival_cycles, "no request starts before arrival");
+            assert!(c.finish_cycles > c.start_cycles, "service time must be positive");
+            assert!(c.instance < instances);
+            assert_eq!(
+                c.latency_cycles(),
+                c.queue_cycles() + c.service_cycles(),
+                "latency decomposes into queueing delay + service time"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_more_instances_never_increase_makespan() {
+    let cfg = NeutronConfig::flagship_2tops();
+    let mut cache = CompileCache::for_serving(cfg.clone());
+    for_each_case(15, 0x9A7E, |rng| {
+        let models = random_models(rng);
+        let n = rng.usize(1, 30);
+        let gap = rng.int(0, 1_500_000) as u64;
+        let trace = synthetic_trace(&models, n, gap, rng.next_u64());
+        let k = rng.usize(1, 4);
+        let extra = rng.usize(1, 4);
+        let (small, _) = run_trace(&cfg, &trace, k, &mut cache);
+        let (big, _) = run_trace(&cfg, &trace, k + extra, &mut cache);
+        assert!(
+            makespan(&big) <= makespan(&small),
+            "{} instances (makespan {}) vs {} instances (makespan {})",
+            k + extra,
+            makespan(&big),
+            k,
+            makespan(&small)
+        );
+        // Pointwise: with FIFO earliest-idle dispatch, extra instances can
+        // only move every request earlier, never later.
+        for (a, b) in small.iter().zip(big.iter()) {
+            assert_eq!(a.id, b.id);
+            assert!(
+                b.finish_cycles <= a.finish_cycles,
+                "request {} finished later with more instances",
+                a.id
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_cache_hit_is_bit_identical_to_cold_compile() {
+    let cfg = NeutronConfig::flagship_2tops();
+    for_each_case(15, 0xCAC4E, |rng| {
+        // Cheapest three models — each case compiles twice (cache + cold).
+        let model = *rng.choose(&POOL[..3]);
+        let mut cache = CompileCache::for_serving(cfg.clone());
+        let miss = cache.get(model);
+        let hit = cache.get(model);
+        assert!(Arc::ptr_eq(&miss, &hit), "hit must return the cached entry");
+        assert_eq!((cache.hits, cache.misses), (1, 1));
+
+        // Bit-identical to an independent cold compile under the same
+        // (deterministic, node-limited) options.
+        let graph = model.build();
+        let cold = compile(&graph, &cfg, &deterministic_compile_options());
+        let cold_program = emit(&cold, &graph.name);
+        assert_eq!(
+            hit.program, cold_program,
+            "{model:?}: cached program differs from cold compile"
+        );
+        // Re-emission from the cached mid-end artifact is also stable.
+        assert_eq!(emit(&hit.compiled, &graph.name), hit.program);
+    });
+}
+
+#[test]
+fn prop_same_seed_produces_identical_reports() {
+    let cfg = NeutronConfig::flagship_2tops();
+    let mut cache = CompileCache::for_serving(cfg.clone());
+    // Pre-warm so both runs of a pair observe identical cache deltas.
+    for model in POOL {
+        cache.get(model);
+    }
+    for_each_case(15, 0xD37, |rng| {
+        let opts = ServeOptions {
+            models: random_models(rng),
+            requests: rng.usize(1, 30),
+            instances: rng.usize(1, 4),
+            mean_gap_cycles: rng.int(0, 1_000_000) as u64,
+            seed: rng.next_u64(),
+        };
+        let a = serve_with_cache(&cfg, &opts, &mut cache);
+        let b = serve_with_cache(&cfg, &opts, &mut cache);
+        assert_eq!(a, b, "same seed + same trace must give identical ServeReport");
+    });
+}
+
+/// The acceptance scenario from the issue: a 200-request mixed trace over
+/// 3 zoo models and 2 virtual NPU instances, ≥50% cache hit rate, sane
+/// percentiles, and cold-cache rerun reproducibility.
+#[test]
+fn acceptance_200_request_mixed_trace() {
+    let cfg = NeutronConfig::flagship_2tops();
+    let opts = ServeOptions::default();
+    assert!(opts.models.len() >= 3);
+    assert!(opts.instances >= 2);
+    assert_eq!(opts.requests, 200);
+
+    let r1 = serve(&cfg, &opts);
+    assert_eq!(r1.requests, 200);
+    assert_eq!(r1.cache_misses, opts.models.len() as u64);
+    assert!(
+        r1.cache_hit_rate() >= 0.5,
+        "cache hit rate {:.2} below the 50% floor",
+        r1.cache_hit_rate()
+    );
+    assert!(r1.p50_ms > 0.0);
+    assert!(r1.p50_ms <= r1.p95_ms && r1.p95_ms <= r1.p99_ms);
+    assert!(r1.throughput_inf_s > 0.0);
+    assert!(r1.utilization() > 0.0 && r1.utilization() <= 1.0);
+    assert_eq!(r1.per_model.iter().map(|m| m.requests).sum::<u64>(), 200);
+
+    // Second cold-cache run: the whole report must reproduce bit-for-bit.
+    let r2 = serve(&cfg, &opts);
+    assert_eq!(r1, r2);
+
+    let s = r1.summary();
+    assert!(s.contains("p50") && s.contains("hit rate"));
+}

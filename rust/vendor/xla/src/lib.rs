@@ -1,0 +1,272 @@
+//! Offline stub of the `xla` PJRT bindings used by the runtime layer.
+//!
+//! [`Literal`] is a fully functional in-memory implementation (element type
+//! + dims + little-endian bytes), so literal construction and inspection —
+//! and every unit test that touches them — work without PJRT. The
+//! client/executable surface exists so the crate compiles and links, but
+//! constructing a [`PjRtClient`] returns an error: real numerics need the
+//! actual PJRT bindings plus AOT artifacts, and the integration tests skip
+//! gracefully when those are absent.
+
+use std::fmt;
+
+/// Stub error type.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT unavailable (offline stub `xla` crate — build the real bindings to run numerics)"
+    ))
+}
+
+/// XLA element types used by this repo's artifacts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S32,
+    S64,
+    F32,
+}
+
+impl ElementType {
+    /// Bytes per element.
+    pub fn byte_size(self) -> usize {
+        match self {
+            ElementType::Pred | ElementType::S8 => 1,
+            ElementType::S32 | ElementType::F32 => 4,
+            ElementType::S64 => 8,
+        }
+    }
+}
+
+/// Rust scalar types with an XLA element-type mapping.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn write_le(self, out: &mut Vec<u8>);
+    fn read_le(bytes: &[u8]) -> Self;
+}
+
+impl NativeType for i8 {
+    const TY: ElementType = ElementType::S8;
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.push(self as u8);
+    }
+    fn read_le(bytes: &[u8]) -> Self {
+        bytes[0] as i8
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn read_le(bytes: &[u8]) -> Self {
+        Self::from_le_bytes(bytes.try_into().expect("4-byte chunk"))
+    }
+}
+
+impl NativeType for i64 {
+    const TY: ElementType = ElementType::S64;
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn read_le(bytes: &[u8]) -> Self {
+        Self::from_le_bytes(bytes.try_into().expect("8-byte chunk"))
+    }
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn read_le(bytes: &[u8]) -> Self {
+        Self::from_le_bytes(bytes.try_into().expect("4-byte chunk"))
+    }
+}
+
+/// An in-memory typed literal (the only fully working part of the stub).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    /// Build a literal from raw little-endian bytes.
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let expect = dims.iter().product::<usize>() * ty.byte_size();
+        if data.len() != expect {
+            return Err(Error(format!(
+                "shape {dims:?} of {ty:?} needs {expect} bytes, got {}",
+                data.len()
+            )));
+        }
+        Ok(Literal { ty, dims: dims.to_vec(), data: data.to_vec() })
+    }
+
+    /// Build a rank-1 literal from a typed slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        let mut bytes = Vec::with_capacity(data.len() * T::TY.byte_size());
+        for &v in data {
+            v.write_le(&mut bytes);
+        }
+        Literal { ty: T::TY, dims: vec![data.len()], data: bytes }
+    }
+
+    /// Read the payload back as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if T::TY != self.ty {
+            return Err(Error(format!(
+                "literal holds {:?}, requested {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        Ok(self
+            .data
+            .chunks_exact(self.ty.byte_size())
+            .map(T::read_le)
+            .collect())
+    }
+
+    /// Total element count.
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Element type.
+    pub fn ty(&self) -> Result<ElementType> {
+        Ok(self.ty)
+    }
+
+    /// Dimensions.
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Tuple decomposition — stub literals are never tuples, so this yields
+    /// an empty vector and callers fall back to the literal itself.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        Ok(Vec::new())
+    }
+}
+
+impl AsRef<Literal> for Literal {
+    fn as_ref(&self) -> &Literal {
+        self
+    }
+}
+
+/// Stub PJRT client — construction always fails offline.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Stub HLO module proto.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// Stub computation wrapper.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Stub loaded executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: AsRef<Literal>>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Stub device buffer.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_i8_and_i32() {
+        let l = Literal::create_from_shape_and_untyped_data(
+            ElementType::S8,
+            &[2, 3],
+            &[1, 2, 3, 0xFF, 5, 6],
+        )
+        .unwrap();
+        assert_eq!(l.element_count(), 6);
+        assert_eq!(l.ty().unwrap(), ElementType::S8);
+        assert_eq!(l.to_vec::<i8>().unwrap(), vec![1, 2, 3, -1, 5, 6]);
+
+        let v = Literal::vec1(&[10i32, -20, 30]);
+        assert_eq!(v.dims(), &[3]);
+        assert_eq!(v.to_vec::<i32>().unwrap(), vec![10, -20, 30]);
+    }
+
+    #[test]
+    fn wrong_type_or_size_errors() {
+        let l = Literal::vec1(&[1i32, 2]);
+        assert!(l.to_vec::<i64>().is_err());
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::S32, &[2], &[0u8; 3])
+            .is_err());
+    }
+
+    #[test]
+    fn client_is_unavailable_offline() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("PJRT unavailable"));
+    }
+
+    #[test]
+    fn decompose_tuple_is_empty() {
+        let mut l = Literal::vec1(&[1i8]);
+        assert!(l.decompose_tuple().unwrap().is_empty());
+    }
+}
