@@ -1,11 +1,15 @@
 #!/usr/bin/env bash
-# Tier-1 verify in one command: release build, test suite, format check.
+# Tier-1 verify in one command: release build, test suite, docs, format check.
 set -euo pipefail
 cd "$(dirname "$0")"
 
 cargo build --release
 cargo build --release --benches
 cargo test -q
+# Docs must not rot: fail on any rustdoc warning (missing docs in the
+# serve module, broken intra-doc links, …). Vendored stand-ins are not
+# documented (--no-deps + explicit package).
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --package eiq_neutron
 if cargo fmt --version >/dev/null 2>&1; then
     cargo fmt --check
 else

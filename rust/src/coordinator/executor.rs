@@ -27,13 +27,16 @@ use crate::arch::{NeutronConfig, V2pTable};
 /// state (timing, job counts, traffic, outputs).
 #[derive(Debug, Clone, Default)]
 pub struct InferenceResult {
-    /// Simulated on-device latency.
+    /// Simulated on-device latency, NPU core cycles.
     pub sim_cycles: u64,
+    /// Simulated on-device latency in milliseconds (derived from
+    /// `sim_cycles` at the config's core clock).
     pub sim_ms: f64,
     /// Wall-clock host time spent driving the program (coordinator cost).
     pub host_us: u64,
     /// Model outputs (present when a PJRT executable was attached).
     pub logits: Option<Vec<i32>>,
+    /// Barrier-delimited scheduler ticks replayed for this request.
     pub ticks: usize,
     /// Compute jobs dispatched for this request.
     pub compute_jobs: u64,
@@ -51,10 +54,13 @@ pub struct Executor {
     cfg: NeutronConfig,
     program: JobProgram,
     v2p: V2pTable,
+    /// Aggregate metrics folded from every request this executor ran.
     pub metrics: Metrics,
 }
 
 impl Executor {
+    /// Build an executor with `program` resident (the single-model fast
+    /// path driven by [`Executor::run_request`]).
     pub fn new(cfg: NeutronConfig, program: JobProgram) -> Self {
         let v2p = V2pTable::identity(cfg.tcm_banks);
         Self { cfg, program, v2p, metrics: Metrics::default() }
@@ -66,6 +72,7 @@ impl Executor {
         Self::new(cfg, JobProgram::default())
     }
 
+    /// The architecture configuration this executor simulates.
     pub fn config(&self) -> &NeutronConfig {
         &self.cfg
     }
@@ -95,18 +102,11 @@ impl Executor {
         // interleaved models replay the mappings their compiles assumed.
         self.v2p = V2pTable::identity(self.cfg.tcm_banks);
         let mut result = InferenceResult::default();
-        let mut total_cycles = 0u64;
-        let mut tick_compute = 0u64;
-        let mut tick_dm = 0u64;
 
         for job in &program.jobs {
             match job {
-                Job::Compute { cycles, .. } => {
-                    tick_compute += cycles;
-                    result.compute_jobs += 1;
-                }
-                Job::Dma { cycles, bytes, kind, .. } => {
-                    tick_dm += cycles;
+                Job::Compute { .. } => result.compute_jobs += 1,
+                Job::Dma { bytes, kind, .. } => {
                     result.dma_jobs += 1;
                     if kind.uses_ddr() {
                         result.ddr_bytes += bytes;
@@ -124,16 +124,12 @@ impl Executor {
                     }
                     result.v2p_updates += 1;
                 }
-                Job::Barrier => {
-                    // DAE tick: compute and datamover overlap.
-                    total_cycles += tick_compute.max(tick_dm);
-                    tick_compute = 0;
-                    tick_dm = 0;
-                    result.ticks += 1;
-                }
+                Job::Barrier => result.ticks += 1,
             }
         }
-        total_cycles += tick_compute.max(tick_dm);
+        // DAE tick timing (compute ∥ datamover) via the shared helper on
+        // the program, counting every DMA job.
+        let total_cycles = program.service_cycles_where(|_| true);
 
         result.logits = match run_numerics {
             Some(f) => Some(f()?),
@@ -147,6 +143,8 @@ impl Executor {
         Ok(result)
     }
 
+    /// The resident job program (empty for serving executors built with
+    /// [`Executor::with_config`]).
     pub fn program(&self) -> &JobProgram {
         &self.program
     }

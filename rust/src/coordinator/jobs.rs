@@ -36,7 +36,9 @@ pub enum Job {
 /// The complete program for one inference.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct JobProgram {
+    /// Job stream in controller order (barriers delimit ticks).
     pub jobs: Vec<Job>,
+    /// Name of the model this program was emitted for.
     pub model: String,
 }
 
@@ -44,6 +46,36 @@ impl JobProgram {
     /// Number of tick barriers (== scheduler ticks).
     pub fn tick_count(&self) -> usize {
         self.jobs.iter().filter(|j| matches!(j, Job::Barrier)).count()
+    }
+
+    /// Tick-accurate DAE service time of this program: within each
+    /// barrier-delimited tick, compute and datamover overlap
+    /// (`max(compute, dm)`), and ticks sum. `count_dma` selects which DMA
+    /// jobs contribute datamover cycles — the executor counts all of
+    /// them, while the serving layer prices batch followers with
+    /// parameter fetches excluded. Single source of truth for the tick
+    /// timing model, so the two cannot drift apart.
+    pub fn service_cycles_where(&self, mut count_dma: impl FnMut(&Job) -> bool) -> u64 {
+        let mut total = 0u64;
+        let mut tick_compute = 0u64;
+        let mut tick_dm = 0u64;
+        for job in &self.jobs {
+            match job {
+                Job::Compute { cycles, .. } => tick_compute += cycles,
+                Job::Dma { cycles, .. } => {
+                    if count_dma(job) {
+                        tick_dm += cycles;
+                    }
+                }
+                Job::V2p { .. } => {}
+                Job::Barrier => {
+                    total += tick_compute.max(tick_dm);
+                    tick_compute = 0;
+                    tick_dm = 0;
+                }
+            }
+        }
+        total + tick_compute.max(tick_dm)
     }
 
     /// Compute / DMA job counts.

@@ -10,12 +10,19 @@ use super::executor::InferenceResult;
 /// Aggregate execution metrics across requests.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct Metrics {
+    /// Requests recorded (executor runs, not batch members).
     pub requests: u64,
+    /// Compute jobs dispatched across all requests.
     pub compute_jobs: u64,
+    /// DMA jobs dispatched across all requests.
     pub dma_jobs: u64,
+    /// V2P table remaps replayed across all requests.
     pub v2p_updates: u64,
+    /// DDR bytes moved across all requests.
     pub ddr_bytes: u64,
+    /// Total simulated on-device cycles across all requests.
     pub total_sim_cycles: u64,
+    /// Total wall-clock host time spent driving programs, microseconds.
     pub total_host_us: u64,
 }
 

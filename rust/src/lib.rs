@@ -7,11 +7,11 @@
 //! fusion, DAE scheduling, memory allocation), a tick-based decoupled
 //! access-execute simulator, baseline NPU models, a PJRT runtime that
 //! executes AOT-lowered JAX/Pallas kernels for numerics, and a
-//! multi-tenant serving layer (compile cache + virtual-clock request
-//! scheduler over N simulated NPU instances).
+//! multi-tenant serving layer (compile cache + overload-aware
+//! virtual-clock scheduler over N simulated NPU instances).
 //!
-//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
-//! paper-vs-measured record of every table and figure.
+//! See `README.md` for the architecture map and `docs/serving.md` for
+//! the serving layer's contract.
 
 pub mod arch;
 pub mod baselines;

@@ -5,7 +5,9 @@
 //!   simulate  --model <name> [--serialize-dae]  compile + cycle simulation
 //!   infer     [--requests N]                    e2e PJRT inference (needs artifacts)
 //!   serve     [--requests N] [--instances K] [--models a,b,c] [--seed S]
-//!             [--mean-gap-cycles G]             multi-tenant serving simulation
+//!             [--mean-gap-cycles G] [--queue-capacity C] [--policy reject-newest|drop-oldest]
+//!             [--max-batch B] [--age-after-cycles A] [--priority-mix R,S,B]
+//!                                               multi-tenant serving simulation
 //!   report    table1|table2|table3|table4|fig4|fig6|genai
 //!   list                                        list zoo models
 
@@ -16,7 +18,9 @@ use eiq_neutron::compiler::{compile, CompileOptions};
 use eiq_neutron::coordinator::{emit, Executor};
 use eiq_neutron::report;
 use eiq_neutron::runtime::{literal_i8, literal_to_i32s, Manifest, Runtime};
-use eiq_neutron::serve::{serve, ServeOptions};
+use eiq_neutron::serve::{
+    serve, AdmissionPolicy, PriorityMix, SchedulerOptions, ServeOptions,
+};
 use eiq_neutron::sim::{simulate, SimOptions};
 use eiq_neutron::util::cli::Args;
 use eiq_neutron::zoo::ModelId;
@@ -43,7 +47,9 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage: neutron <list|compile|simulate|infer|serve|report> \
                  [--model NAME] [--monolithic] [--requests N] [--instances K] \
-                 [--models a,b,c] [--seed S] [--mean-gap-cycles G]"
+                 [--models a,b,c] [--seed S] [--mean-gap-cycles G] \
+                 [--queue-capacity C] [--policy reject-newest|drop-oldest] \
+                 [--max-batch B] [--age-after-cycles A] [--priority-mix R,S,B]"
             );
             Ok(())
         }
@@ -152,6 +158,18 @@ fn cmd_infer(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Numeric flag that bails on unparseable input instead of silently
+/// falling back to the default (a typo in an overload knob must not
+/// silently run a different experiment).
+fn strict_parse<T: std::str::FromStr>(args: &Args, key: &str, default: T) -> Result<T> {
+    match args.options.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--{key} wants a number, got {v:?}")),
+    }
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let models_raw = args.opt("models", "mobilenet-v2,mobilenet-v1,efficientnet-lite0");
     let mut models = Vec::new();
@@ -164,12 +182,45 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if models.is_empty() {
         bail!("--models needs at least one model");
     }
+    // 0 means "unbounded" / "disabled" for the optional knobs, so plain
+    // integer flags cover both shapes.
+    let queue_capacity = match strict_parse(args, "queue-capacity", 0usize)? {
+        0 => None,
+        cap => Some(cap),
+    };
+    let age_after_cycles = match strict_parse(args, "age-after-cycles", 0u64)? {
+        0 => None,
+        age => Some(age),
+    };
+    let policy_raw = args.opt("policy", "reject-newest");
+    let Some(policy) = AdmissionPolicy::parse(&policy_raw) else {
+        bail!("unknown admission policy {policy_raw:?} (reject-newest or drop-oldest)");
+    };
+    let mix_raw = args.opt("priority-mix", "1,2,1");
+    let weights: Vec<u32> = mix_raw
+        .split(',')
+        .map(|w| w.trim().parse::<u32>())
+        .collect::<Result<_, _>>()
+        .map_err(|_| anyhow::anyhow!("--priority-mix wants three integers, got {mix_raw:?}"))?;
+    let [realtime, standard, batch] = weights[..] else {
+        bail!("--priority-mix wants realtime,standard,batch weights, got {mix_raw:?}");
+    };
+    if realtime as u64 + standard as u64 + batch as u64 == 0 {
+        bail!("--priority-mix needs at least one non-zero weight");
+    }
     let opts = ServeOptions {
         models,
-        requests: args.opt_parse("requests", 200),
-        instances: args.opt_parse("instances", 2),
-        mean_gap_cycles: args.opt_parse("mean-gap-cycles", 600_000),
-        seed: args.opt_parse("seed", 7),
+        requests: strict_parse(args, "requests", 200)?,
+        mean_gap_cycles: strict_parse(args, "mean-gap-cycles", 600_000)?,
+        seed: strict_parse(args, "seed", 7)?,
+        priority_mix: PriorityMix { realtime, standard, batch },
+        scheduler: SchedulerOptions {
+            instances: strict_parse(args, "instances", 2)?,
+            queue_capacity,
+            policy,
+            max_batch: strict_parse(args, "max-batch", 1)?,
+            age_after_cycles,
+        },
     };
     let cfg = NeutronConfig::flagship_2tops();
     let report = serve(&cfg, &opts);

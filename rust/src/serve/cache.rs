@@ -64,8 +64,11 @@ pub fn deterministic_compile_options() -> CompileOptions {
 /// One cached compile: the mid-end artifact plus the emitted job program.
 #[derive(Debug, Clone)]
 pub struct CachedModel {
+    /// The model this entry was compiled from.
     pub model: ModelId,
+    /// The CP mid-end artifact (tiling, schedule, allocation).
     pub compiled: Compiled,
+    /// The emitted job program the virtual NPU instances replay.
     pub program: JobProgram,
 }
 
@@ -76,11 +79,15 @@ pub struct CompileCache {
     cfg: NeutronConfig,
     opts: CompileOptions,
     entries: HashMap<(ModelId, u64), Arc<CachedModel>>,
+    /// Lookups served from the cache.
     pub hits: u64,
+    /// Lookups that ran a cold compile.
     pub misses: u64,
 }
 
 impl CompileCache {
+    /// Build an empty cache that compiles under `opts` for `cfg` by
+    /// default (see [`CompileCache::get`]).
     pub fn new(cfg: NeutronConfig, opts: CompileOptions) -> Self {
         Self { cfg, opts, entries: HashMap::new(), hits: 0, misses: 0 }
     }
@@ -120,10 +127,12 @@ impl CompileCache {
         self.entries.get(&(model, config_fingerprint(&self.cfg)))
     }
 
+    /// Number of cached `(model, config)` entries.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// Is the cache cold (no entries yet)?
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }

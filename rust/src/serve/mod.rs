@@ -1,47 +1,72 @@
-//! Multi-tenant serving layer: compile cache + admission queue + request
-//! scheduler over N virtual NPU instances.
+//! Multi-tenant serving layer: compile cache + overload-aware scheduler
+//! (bounded admission, priority classes, same-model batching) over N
+//! virtual NPU instances.
 //!
 //! The paper's headline claim is *utilization*, not peak TOPS — the stack
 //! wins by keeping compute busy. This module turns the single-shot
 //! coordinator into a serving simulator for the realistic deployment
-//! shape: many models, many tenants, heavy traffic.
+//! shape: many models, many tenants, heavy traffic, and sustained
+//! overload.
 //!
 //! Three pieces:
 //!
 //! * [`CompileCache`] — memoizes `compile` + `emit` per
 //!   `(ModelId, NeutronConfig fingerprint)`, so repeat requests skip the CP
 //!   solver entirely;
-//! * [`Scheduler`] — a FIFO admission queue dispatching onto the
-//!   earliest-idle of N virtual NPU instances (each a re-entrant
-//!   `coordinator::Executor`);
+//! * [`Scheduler`] — a bounded admission queue (overflow shed per
+//!   [`AdmissionPolicy`]) feeding a deterministic priority dispatcher
+//!   (class first, then admission order, with an optional aging rule
+//!   against starvation) over the earliest-idle of N virtual NPU
+//!   instances, coalescing same-model same-class requests into batches of
+//!   up to [`SchedulerOptions::max_batch`] under backlog;
 //! * [`serve`] / [`ServeReport`] — runs a synthetic trace and reports
-//!   throughput, p50/p95/p99 latency, cache hit rate and utilization.
+//!   offered load vs. goodput, shed rate, latency percentiles, batching
+//!   activity, cache hit rate and utilization.
 //!
 //! ## Virtual-clock contract
 //!
 //! All serving time lives on a shared **virtual clock** denominated in NPU
 //! core cycles; the host wall clock never enters any reported number:
 //!
-//! * request arrivals come from a seeded PRNG trace
-//!   ([`synthetic_trace`]) — same `(models, requests, mean gap, seed)`
-//!   yields the identical trace;
+//! * request arrivals, models and priority classes come from a seeded PRNG
+//!   trace ([`synthetic_trace_with_mix`]) — same
+//!   `(models, requests, mean gap, seed, mix)` yields the identical trace;
 //! * the service time of a request is the simulated latency of its cached
-//!   job program — a pure function of `(model, config)`;
-//! * dispatch is FIFO in admission order onto the instance that goes idle
+//!   job program — a pure function of `(model, config)`; a batch follower
+//!   pays only [`marginal_service_cycles`] (weights already resident);
+//! * dispatch picks the pending request with the lowest
+//!   `(effective class rank, admission order)` key among requests that
+//!   have arrived by the decision time, onto the instance that goes idle
 //!   earliest, ties broken toward the lowest instance id;
-//! * per-request latency = queueing delay + simulated service time, both
-//!   in cycles on the shared clock.
+//! * event order is fixed: every dispatch whose start time is ≤ an
+//!   arrival's timestamp runs before that arrival is admitted ("service
+//!   precedes admission at equal times"), and admission-control decisions
+//!   see the queue in exactly that state;
+//! * per-request latency = queueing delay + service time, both in cycles
+//!   on the shared clock.
 //!
-//! **Determinism:** same seed + same request trace (+ same config) →
-//! identical [`ServeReport`], across runs and across machines. To make the
-//! cached programs themselves reproducible, serving compiles under
-//! [`deterministic_compile_options`]: every CP budget is a node limit
-//! (deterministic) instead of a wall-clock limit.
+//! **Determinism:** same seed + same request trace + same options (+ same
+//! config) → identical [`ServeReport`], across runs and across machines —
+//! including the shed set, the batch composition and every percentile. To
+//! make the cached programs themselves reproducible, serving compiles
+//! under [`deterministic_compile_options`]: every CP budget is a node
+//! limit (deterministic) instead of a wall-clock limit.
+//!
+//! See `docs/serving.md` for the end-to-end guide to this layer.
+
+#![warn(missing_docs)]
 
 pub mod cache;
 pub mod queue;
 pub mod server;
 
 pub use cache::{config_fingerprint, deterministic_compile_options, CachedModel, CompileCache};
-pub use queue::{synthetic_trace, Completion, NpuInstance, Request, Scheduler};
-pub use server::{run_trace, serve, serve_with_cache, ModelStats, ServeOptions, ServeReport};
+pub use queue::{
+    marginal_service_cycles, synthetic_trace, synthetic_trace_with_mix, Admission,
+    AdmissionPolicy, Completion, NpuInstance, Priority, PriorityMix, Request, Scheduler,
+    SchedulerOptions, MAX_MEAN_GAP_CYCLES,
+};
+pub use server::{
+    run_trace, serve, serve_with_cache, ClassStats, ModelStats, ServeOptions, ServeReport,
+    TraceOutcome,
+};

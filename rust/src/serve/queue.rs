@@ -1,36 +1,249 @@
-//! Admission queue + request scheduler over N virtual NPU instances.
+//! Overload-aware admission queue + priority scheduler over N virtual NPU
+//! instances.
 //!
 //! Event-driven simulation on the shared virtual clock (see the module doc
-//! in `serve/mod.rs` for the determinism contract): requests are admitted
-//! FIFO and dispatched onto the instance that goes idle earliest; a
-//! request's latency is its queueing delay plus the simulated latency of
-//! its job program.
+//! in `serve/mod.rs` for the determinism contract). Three mechanisms on
+//! top of the earliest-idle dispatch core:
+//!
+//! * **Bounded admission** — the queue holds at most
+//!   [`SchedulerOptions::queue_capacity`] requests; overflow is shed per
+//!   [`AdmissionPolicy`] (reject the newest arrival, or drop the oldest
+//!   queued request to make room). Shed requests never run and are
+//!   reported separately, so sustained overload bounds queueing delay
+//!   instead of growing it without limit.
+//! * **Priority classes** — each [`Request`] carries a [`Priority`];
+//!   dispatch picks the pending request with the best
+//!   `(effective class, admission order)` key. An optional aging rule
+//!   ([`SchedulerOptions::age_after_cycles`]) promotes a waiting request
+//!   one class per aging period so low classes cannot starve.
+//! * **Same-model batching** — when the head-of-queue request's model and
+//!   class match other queued requests, up to
+//!   [`SchedulerOptions::max_batch`] of them coalesce onto one instance.
+//!   The batch leader pays the full service time; each follower pays only
+//!   [`marginal_service_cycles`] (weights already resident, parameter
+//!   fetches skipped), so batching raises throughput under backlog at a
+//!   bounded latency cost.
+//!
+//! Dispatch-order determinism: the selection key is a pure function of
+//! the pending set and the decision time, ties break toward the earliest
+//! admission, and equally idle instances break toward the lowest id — no
+//! host-clock value ever enters a decision.
 
-use std::collections::VecDeque;
+use std::collections::HashSet;
 
 use crate::arch::NeutronConfig;
-use crate::coordinator::{Executor, JobProgram, Metrics};
+use crate::compiler::TileId;
+use crate::coordinator::{Executor, Job, JobProgram, Metrics};
 use crate::util::prop::Rng;
 use crate::zoo::ModelId;
 
-/// One admitted inference request on the virtual clock.
+/// Priority class carried on every request. Lower [`Priority::rank`]
+/// values dispatch first; within a class, admission order wins.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Interactive traffic: always dispatched before other classes.
+    Realtime,
+    /// Default class for ordinary requests.
+    Standard,
+    /// Best-effort background work: yields to everything (until aging
+    /// promotes it).
+    Batch,
+}
+
+impl Priority {
+    /// All classes, highest priority first.
+    pub fn all() -> [Priority; 3] {
+        [Priority::Realtime, Priority::Standard, Priority::Batch]
+    }
+
+    /// Dispatch rank: 0 is served first. Aging lowers the effective rank
+    /// of a waiting request, never past 0.
+    pub fn rank(self) -> u8 {
+        match self {
+            Priority::Realtime => 0,
+            Priority::Standard => 1,
+            Priority::Batch => 2,
+        }
+    }
+
+    /// Human-readable class name.
+    pub fn display_name(self) -> &'static str {
+        match self {
+            Priority::Realtime => "realtime",
+            Priority::Standard => "standard",
+            Priority::Batch => "batch",
+        }
+    }
+}
+
+/// Relative class weights for synthetic trace generation: each request's
+/// class is drawn with probability `weight / total`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PriorityMix {
+    /// Weight of [`Priority::Realtime`].
+    pub realtime: u32,
+    /// Weight of [`Priority::Standard`].
+    pub standard: u32,
+    /// Weight of [`Priority::Batch`].
+    pub batch: u32,
+}
+
+impl Default for PriorityMix {
+    /// The serving default: 1 realtime : 2 standard : 1 batch.
+    fn default() -> Self {
+        Self { realtime: 1, standard: 2, batch: 1 }
+    }
+}
+
+impl PriorityMix {
+    /// Every request is [`Priority::Standard`] — the mix that degenerates
+    /// to plain FIFO scheduling (no aging, no class reordering).
+    pub fn standard_only() -> Self {
+        Self { realtime: 0, standard: 1, batch: 0 }
+    }
+
+    /// Draw one class; consumes exactly one PRNG value, so traces stay
+    /// reproducible. Panics when all weights are zero. Weights sum in
+    /// u64, so extreme u32 weights cannot overflow into a wrong
+    /// distribution.
+    pub fn pick(&self, rng: &mut Rng) -> Priority {
+        let (realtime, standard) = (self.realtime as u64, self.standard as u64);
+        let total = realtime + standard + self.batch as u64;
+        assert!(total > 0, "priority mix needs at least one non-zero weight");
+        let draw = rng.int(0, total as i64 - 1) as u64;
+        if draw < realtime {
+            Priority::Realtime
+        } else if draw < realtime + standard {
+            Priority::Standard
+        } else {
+            Priority::Batch
+        }
+    }
+}
+
+/// What to do with an arrival when the admission queue is full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Shed the arriving request itself (the queue keeps its backlog).
+    RejectNewest,
+    /// Shed the oldest queued request — regardless of class — and admit
+    /// the arrival (bounded-staleness semantics: the longest-queued work
+    /// is the least likely to still be wanted).
+    DropOldest,
+}
+
+impl AdmissionPolicy {
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> Option<AdmissionPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "reject-newest" | "reject" => Some(AdmissionPolicy::RejectNewest),
+            "drop-oldest" | "drop" => Some(AdmissionPolicy::DropOldest),
+            _ => None,
+        }
+    }
+
+    /// Human-readable policy name (the CLI spelling).
+    pub fn display_name(self) -> &'static str {
+        match self {
+            AdmissionPolicy::RejectNewest => "reject-newest",
+            AdmissionPolicy::DropOldest => "drop-oldest",
+        }
+    }
+}
+
+/// Outcome of one [`Scheduler::admit`] call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// The request entered the queue.
+    Accepted,
+    /// The queue was full: the contained request was shed — the arrival
+    /// itself under [`AdmissionPolicy::RejectNewest`], the oldest queued
+    /// request under [`AdmissionPolicy::DropOldest`].
+    Shed(Request),
+}
+
+/// Scheduling knobs, grouped so every entry point (CLI, benches, tests)
+/// names them once.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SchedulerOptions {
+    /// Virtual NPU instances sharing the admission queue (≥ 1).
+    pub instances: usize,
+    /// Maximum queued (admitted, not yet dispatched) requests. `None`
+    /// means unbounded — the PR-1 behavior, where sustained overload
+    /// grows latency without limit.
+    pub queue_capacity: Option<usize>,
+    /// Load-shedding policy applied when the queue is full.
+    pub policy: AdmissionPolicy,
+    /// Largest same-model, same-class batch one dispatch may coalesce;
+    /// `1` disables batching.
+    pub max_batch: usize,
+    /// Starvation-avoidance aging: a waiting request is promoted one
+    /// class per this many cycles waited (`None` disables aging and makes
+    /// class order strict).
+    pub age_after_cycles: Option<u64>,
+}
+
+impl Default for SchedulerOptions {
+    /// Two instances, unbounded FIFO-per-class queue, no batching, no
+    /// aging — the exact PR-1 scheduler when every request is
+    /// [`Priority::Standard`].
+    fn default() -> Self {
+        Self {
+            instances: 2,
+            queue_capacity: None,
+            policy: AdmissionPolicy::RejectNewest,
+            max_batch: 1,
+            age_after_cycles: None,
+        }
+    }
+}
+
+impl SchedulerOptions {
+    fn validate(&self) {
+        assert!(self.instances >= 1, "need at least one NPU instance");
+        assert!(self.max_batch >= 1, "max_batch must be at least 1 (1 = batching off)");
+        if let Some(cap) = self.queue_capacity {
+            assert!(cap >= 1, "queue capacity must be at least 1 (use None for unbounded)");
+        }
+        if let Some(age) = self.age_after_cycles {
+            assert!(age >= 1, "age_after_cycles must be at least 1 (use None to disable)");
+        }
+    }
+}
+
+/// One inference request on the virtual clock.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Request {
+    /// Caller-assigned id; [`synthetic_trace`] uses the trace index.
     pub id: u64,
+    /// Which zoo model to run.
     pub model: ModelId,
+    /// Priority class (see [`Priority`]).
+    pub priority: Priority,
     /// Arrival time in NPU core cycles on the shared virtual clock.
     pub arrival_cycles: u64,
 }
 
-/// Completion record: latency = queueing delay + simulated service time.
+/// Completion record: latency = queueing delay + service time.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Completion {
+    /// Id of the completed request.
     pub id: u64,
+    /// Model the request ran.
     pub model: ModelId,
+    /// Priority class the request carried.
+    pub priority: Priority,
     /// Instance that served the request.
     pub instance: usize,
+    /// Position inside the dispatched batch: 0 is the leader (or a solo
+    /// request), followers count up from 1.
+    pub batch_index: u32,
+    /// When the request arrived.
     pub arrival_cycles: u64,
+    /// When its batch was dispatched onto the instance.
     pub start_cycles: u64,
+    /// When this request's result became available (followers finish
+    /// staggered, one marginal service time apart).
     pub finish_cycles: u64,
 }
 
@@ -45,98 +258,239 @@ impl Completion {
         self.start_cycles - self.arrival_cycles
     }
 
-    /// Simulated on-device service time.
+    /// Time from dispatch to this request's finish. For a batch follower
+    /// this includes the shared pipeline time ahead of it, so the
+    /// decomposition `latency = queue + service` always holds.
     pub fn service_cycles(&self) -> u64 {
         self.finish_cycles - self.start_cycles
     }
+
+    /// Did this request ride a batch as a follower?
+    pub fn batched(&self) -> bool {
+        self.batch_index > 0
+    }
 }
 
-/// Deterministic synthetic request trace: the model of each request is
-/// drawn uniformly from `models`, inter-arrival gaps uniformly from
+/// Largest admissible `mean_gap_cycles` for [`synthetic_trace`]: gaps are
+/// drawn uniformly from `[0, 2·mean]`, and `2·mean` must fit the PRNG's
+/// signed-integer range. ≈ 4.6e18 cycles — around 146 years at 1 GHz, so
+/// the bound never binds for realistic traces; it exists to make the
+/// overflow case loud instead of silently clamping the distribution.
+pub const MAX_MEAN_GAP_CYCLES: u64 = (i64::MAX / 2) as u64;
+
+/// Deterministic synthetic request trace with every request
+/// [`Priority::Standard`]: the model of each request is drawn uniformly
+/// from `models`, inter-arrival gaps uniformly from
 /// `[0, 2·mean_gap_cycles]` (mean `mean_gap_cycles`). Same inputs →
 /// identical trace; arrivals are non-decreasing and ids are `0..requests`.
+///
+/// Panics when `mean_gap_cycles` exceeds [`MAX_MEAN_GAP_CYCLES`].
 pub fn synthetic_trace(
     models: &[ModelId],
     requests: usize,
     mean_gap_cycles: u64,
     seed: u64,
 ) -> Vec<Request> {
+    synthetic_trace_with_mix(models, requests, mean_gap_cycles, seed, &PriorityMix::standard_only())
+}
+
+/// [`synthetic_trace`] with the priority class of each request drawn from
+/// `mix`. Per request the PRNG is consumed in a fixed order — model,
+/// class, gap — so traces are reproducible across runs and machines.
+pub fn synthetic_trace_with_mix(
+    models: &[ModelId],
+    requests: usize,
+    mean_gap_cycles: u64,
+    seed: u64,
+    mix: &PriorityMix,
+) -> Vec<Request> {
     assert!(!models.is_empty(), "trace needs at least one model");
-    let gap_hi = mean_gap_cycles.saturating_mul(2).min(i64::MAX as u64) as i64;
+    assert!(
+        mean_gap_cycles <= MAX_MEAN_GAP_CYCLES,
+        "mean_gap_cycles {mean_gap_cycles} exceeds MAX_MEAN_GAP_CYCLES {MAX_MEAN_GAP_CYCLES}"
+    );
+    let gap_hi = (mean_gap_cycles * 2) as i64;
     let mut rng = Rng::new(seed);
     let mut clock = 0u64;
     (0..requests as u64)
         .map(|id| {
             let model = *rng.choose(models);
-            clock += rng.int(0, gap_hi) as u64;
-            Request { id, model, arrival_cycles: clock }
+            let priority = mix.pick(&mut rng);
+            clock = clock.saturating_add(rng.int(0, gap_hi) as u64);
+            Request { id, model, priority, arrival_cycles: clock }
         })
         .collect()
+}
+
+/// Service time of a batch follower: the program's tick timing
+/// ([`JobProgram::service_cycles_where`], the same helper the executor
+/// uses for full service times) with every parameter-tile DMA job
+/// skipped — the leader already fetched the weights, and they stay
+/// resident for the batch — while all compute and all activation traffic
+/// is still paid. Dropping DMA cycles can only shrink a tick's
+/// `max(compute, dm)`, so the result is always ≤ the full service time.
+pub fn marginal_service_cycles(program: &JobProgram) -> u64 {
+    let param_tiles: HashSet<TileId> = program
+        .jobs
+        .iter()
+        .filter_map(|j| match j {
+            Job::Compute { param_tile, .. } => *param_tile,
+            _ => None,
+        })
+        .collect();
+    program.service_cycles_where(|job| match job {
+        Job::Dma { tile, .. } => !param_tiles.contains(tile),
+        _ => true,
+    })
 }
 
 /// One virtual NPU instance: a re-entrant executor plus its position on
 /// the shared clock.
 pub struct NpuInstance {
+    /// Stable instance id (also the dispatch tie-breaker).
     pub id: usize,
     executor: Executor,
     /// Clock cycle at which this instance next goes idle.
     pub busy_until_cycles: u64,
+    occupied_cycles: u64,
+    served: u64,
 }
 
 impl NpuInstance {
-    /// Aggregate metrics of this instance's executor.
+    /// Aggregate executor metrics (one executor run per dispatched batch;
+    /// batch followers replay the leader's program, so they do not run the
+    /// executor again).
     pub fn metrics(&self) -> &Metrics {
         &self.executor.metrics
     }
 
-    /// Total cycles spent serving (utilization numerator).
+    /// Total cycles this instance was occupied serving dispatches,
+    /// including the marginal tail of every batch (utilization numerator).
     pub fn busy_cycles(&self) -> u64 {
-        self.executor.metrics.total_sim_cycles
+        self.occupied_cycles
     }
 
-    /// Requests served.
+    /// Requests served, counting every batch member.
     pub fn served(&self) -> u64 {
-        self.executor.metrics.requests
+        self.served
     }
 }
 
-/// FIFO admission queue + earliest-idle-instance dispatch.
+/// Internal queue entry: the request plus its admission sequence number.
+/// `pending` stays sorted by `seq` (entries are only appended and
+/// removed), which makes "oldest" and FIFO-within-class O(1) to define.
+struct QueuedRequest {
+    request: Request,
+    seq: u64,
+}
+
+/// A planned dispatch: which pending entry, onto which instance, when.
+struct Plan {
+    pending_idx: usize,
+    instance_idx: usize,
+    start_cycles: u64,
+}
+
+/// Overload-aware scheduler: bounded admission queue + priority dispatch
+/// with aging + same-model batching over N virtual NPU instances.
 ///
-/// Determinism: dispatch order is admission order; ties between equally
-/// idle instances break toward the lowest instance id; all timing derives
-/// from the simulated program, never the host clock. With a fixed trace,
-/// adding instances can only move every start time earlier — makespan is
-/// monotone non-increasing in the instance count (the serve property suite
-/// checks this).
+/// Dispatch order is deterministic: among requests that have arrived by
+/// the decision time, the lowest `(effective class rank, admission order)`
+/// key wins; equally idle instances break toward the lowest id; all
+/// timing derives from the simulated program, never the host clock. With
+/// the default options and a single-class trace this degenerates to the
+/// FIFO earliest-idle scheduler, for which adding instances can only move
+/// every completion earlier (the serve property suite checks this).
+///
+/// The caller resolves the compiled program for the model named by
+/// [`Scheduler::next_model`] (usually through the compile cache) and
+/// passes it to [`Scheduler::dispatch_next`]; nothing may be admitted
+/// between the two calls, or the plan they agree on would change.
+///
+/// ```
+/// use eiq_neutron::arch::NeutronConfig;
+/// use eiq_neutron::serve::{CompileCache, Priority, Request, Scheduler, SchedulerOptions};
+/// use eiq_neutron::zoo::ModelId;
+///
+/// let cfg = NeutronConfig::flagship_2tops();
+/// let mut cache = CompileCache::for_serving(cfg.clone());
+/// let opts = SchedulerOptions { instances: 1, ..SchedulerOptions::default() };
+/// let mut scheduler = Scheduler::new(&cfg, &opts);
+/// for id in 0..3 {
+///     scheduler.admit(Request {
+///         id,
+///         model: ModelId::MobileNetV3Min,
+///         priority: Priority::Standard,
+///         arrival_cycles: 0,
+///     });
+/// }
+/// let mut completions = Vec::new();
+/// while let Some(model) = scheduler.next_model() {
+///     let entry = cache.get(model);
+///     completions.extend(scheduler.dispatch_next(model, &entry.program));
+/// }
+/// assert_eq!(completions.len(), 3);
+/// assert!(completions.windows(2).all(|w| w[0].finish_cycles <= w[1].finish_cycles));
+/// ```
 pub struct Scheduler {
+    opts: SchedulerOptions,
     instances: Vec<NpuInstance>,
-    pending: VecDeque<Request>,
+    pending: Vec<QueuedRequest>,
+    shed: Vec<Request>,
+    next_seq: u64,
 }
 
 impl Scheduler {
-    pub fn new(cfg: &NeutronConfig, instances: usize) -> Self {
-        assert!(instances >= 1, "need at least one NPU instance");
+    /// Build a scheduler with `opts.instances` fresh executor instances.
+    /// Panics when the options are inconsistent (see [`SchedulerOptions`]).
+    pub fn new(cfg: &NeutronConfig, opts: &SchedulerOptions) -> Self {
+        opts.validate();
         Self {
-            instances: (0..instances)
+            opts: opts.clone(),
+            instances: (0..opts.instances)
                 .map(|id| NpuInstance {
                     id,
                     executor: Executor::with_config(cfg.clone()),
                     busy_until_cycles: 0,
+                    occupied_cycles: 0,
+                    served: 0,
                 })
                 .collect(),
-            pending: VecDeque::new(),
+            pending: Vec::new(),
+            shed: Vec::new(),
+            next_seq: 0,
         }
     }
 
-    /// Admit a request into the FIFO queue.
-    pub fn admit(&mut self, request: Request) {
-        self.pending.push_back(request);
+    /// Offer a request to the admission queue. When the queue is at
+    /// capacity the configured [`AdmissionPolicy`] decides who is shed;
+    /// the victim is recorded in [`Scheduler::shed`] and returned.
+    pub fn admit(&mut self, request: Request) -> Admission {
+        if let Some(cap) = self.opts.queue_capacity {
+            if self.pending.len() >= cap {
+                match self.opts.policy {
+                    AdmissionPolicy::RejectNewest => {
+                        self.shed.push(request);
+                        return Admission::Shed(request);
+                    }
+                    AdmissionPolicy::DropOldest => {
+                        // `pending` is seq-sorted, so index 0 is oldest.
+                        let victim = self.pending.remove(0).request;
+                        self.shed.push(victim);
+                        self.push_pending(request);
+                        return Admission::Shed(victim);
+                    }
+                }
+            }
+        }
+        self.push_pending(request);
+        Admission::Accepted
     }
 
-    /// Model of the request at the head of the admission queue, so the
-    /// caller can resolve its compiled program before dispatching.
-    pub fn next_model(&self) -> Option<ModelId> {
-        self.pending.front().map(|r| r.model)
+    fn push_pending(&mut self, request: Request) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.pending.push(QueuedRequest { request, seq });
     }
 
     /// Requests still waiting in the admission queue.
@@ -144,30 +498,157 @@ impl Scheduler {
         self.pending.len()
     }
 
-    /// Dispatch the head request onto the earliest-idle instance. Returns
-    /// `None` when the queue is empty.
-    pub fn dispatch_next(&mut self, program: &JobProgram) -> Option<Completion> {
-        let request = self.pending.pop_front()?;
-        let instance = self
+    /// Every request shed so far, in shedding order.
+    pub fn shed(&self) -> &[Request] {
+        &self.shed
+    }
+
+    /// Effective dispatch rank of a request at `now`: the class rank,
+    /// minus one promotion per full aging period waited, floored at the
+    /// highest class.
+    fn effective_rank(&self, request: &Request, now: u64) -> u8 {
+        let base = request.priority.rank();
+        match self.opts.age_after_cycles {
+            Some(age) => {
+                let waited = now.saturating_sub(request.arrival_cycles);
+                base - (waited / age).min(base as u64) as u8
+            }
+            None => base,
+        }
+    }
+
+    /// Plan the next dispatch without committing it. The decision time is
+    /// `max(earliest instance idle, earliest pending arrival)` — the first
+    /// moment an instance is free *and* some request exists — and only
+    /// requests that have arrived by then are eligible (the scheduler
+    /// cannot see the future).
+    fn plan(&self) -> Option<Plan> {
+        let min_arrival = self.pending.iter().map(|q| q.request.arrival_cycles).min()?;
+        let instance_idx = self
             .instances
-            .iter_mut()
+            .iter()
             .min_by_key(|i| (i.busy_until_cycles, i.id))
-            .expect("at least one instance");
-        let result = instance
+            .expect("at least one instance")
+            .id;
+        let decision = self.instances[instance_idx].busy_until_cycles.max(min_arrival);
+        let pending_idx = self
+            .pending
+            .iter()
+            .enumerate()
+            .filter(|(_, q)| q.request.arrival_cycles <= decision)
+            .min_by_key(|(_, q)| (self.effective_rank(&q.request, decision), q.seq))
+            .map(|(i, _)| i)
+            .expect("min_arrival guarantees at least one eligible request");
+        Some(Plan { pending_idx, instance_idx, start_cycles: decision })
+    }
+
+    /// Model of the request the next [`Scheduler::dispatch_next`] will
+    /// serve, so the caller can resolve its compiled program first.
+    pub fn next_model(&self) -> Option<ModelId> {
+        self.plan().map(|p| self.pending[p.pending_idx].request.model)
+    }
+
+    /// Like [`Scheduler::next_model`], but only when that dispatch would
+    /// start at or before `horizon_cycles`. The event loop in
+    /// `serve::run_trace` uses this to run every service event up to (and
+    /// including) an arrival's timestamp before admitting the arrival —
+    /// the "service precedes admission at equal times" convention of the
+    /// determinism contract.
+    pub fn next_model_before(&self, horizon_cycles: u64) -> Option<ModelId> {
+        self.plan()
+            .filter(|p| p.start_cycles <= horizon_cycles)
+            .map(|p| self.pending[p.pending_idx].request.model)
+    }
+
+    /// Dispatch the planned request — plus, when batching is enabled and
+    /// every other instance is busy past the start time, up to
+    /// `max_batch − 1` already-arrived followers of the same model and
+    /// class — onto the earliest-idle instance. `model` and `program` are
+    /// the model the caller resolved via [`Scheduler::next_model`] and its
+    /// compiled program; if the plan has changed since (something was
+    /// admitted in between), the mismatch panics instead of silently
+    /// replaying the wrong model's timing. Returns the batch's
+    /// completions in batch order (empty when nothing is pending).
+    pub fn dispatch_next(&mut self, model: ModelId, program: &JobProgram) -> Vec<Completion> {
+        let Some(plan) = self.plan() else { return Vec::new() };
+        assert_eq!(
+            self.pending[plan.pending_idx].request.model, model,
+            "dispatch_next model mismatch: the plan changed between next_model() and \
+             dispatch_next() (never admit between the two calls)"
+        );
+        let head = self.pending.remove(plan.pending_idx).request;
+        let start = plan.start_cycles;
+        let idx = plan.instance_idx;
+
+        // Batching is a backlog optimization: coalesce only when no other
+        // instance is idle at the start time (a free instance would serve
+        // a follower sooner than the batch's marginal tail).
+        let others_busy = self
+            .instances
+            .iter()
+            .all(|i| i.id == idx || i.busy_until_cycles > start);
+        let mut followers: Vec<Request> = Vec::new();
+        if self.opts.max_batch > 1 && others_busy {
+            // `pending` is seq-sorted, so iteration order = admission order.
+            let picked: Vec<usize> = self
+                .pending
+                .iter()
+                .enumerate()
+                .filter(|(_, q)| {
+                    q.request.model == head.model
+                        && q.request.priority == head.priority
+                        && q.request.arrival_cycles <= start
+                })
+                .map(|(i, _)| i)
+                .take(self.opts.max_batch - 1)
+                .collect();
+            for &i in picked.iter().rev() {
+                followers.push(self.pending.remove(i).request);
+            }
+            followers.reverse();
+        }
+
+        let result = self.instances[idx]
             .executor
             .run_program(program, None)
-            .expect("sim-only request cannot fail");
-        let start = request.arrival_cycles.max(instance.busy_until_cycles);
-        let finish = start + result.sim_cycles;
-        instance.busy_until_cycles = finish;
-        Some(Completion {
-            id: request.id,
-            model: request.model,
-            instance: instance.id,
-            arrival_cycles: request.arrival_cycles,
+            .expect("sim-only dispatch cannot fail");
+        let full = result.sim_cycles;
+        let mut finish = start + full;
+        let mut completions = Vec::with_capacity(1 + followers.len());
+        completions.push(Completion {
+            id: head.id,
+            model: head.model,
+            priority: head.priority,
+            instance: idx,
+            batch_index: 0,
+            arrival_cycles: head.arrival_cycles,
             start_cycles: start,
             finish_cycles: finish,
-        })
+        });
+        if !followers.is_empty() {
+            // Followers replay the resident program: parameter fetches are
+            // skipped, and a floor of one cycle keeps service times
+            // positive for degenerate programs.
+            let marginal = marginal_service_cycles(program).max(1);
+            for (j, r) in followers.iter().enumerate() {
+                finish += marginal;
+                completions.push(Completion {
+                    id: r.id,
+                    model: r.model,
+                    priority: r.priority,
+                    instance: idx,
+                    batch_index: (j + 1) as u32,
+                    arrival_cycles: r.arrival_cycles,
+                    start_cycles: start,
+                    finish_cycles: finish,
+                });
+            }
+        }
+        let instance = &mut self.instances[idx];
+        instance.busy_until_cycles = finish;
+        instance.occupied_cycles += finish - start;
+        instance.served += completions.len() as u64;
+        completions
     }
 
     /// Clock cycle when the last instance goes idle (0 if nothing ran).
@@ -179,6 +660,7 @@ impl Scheduler {
             .unwrap_or(0)
     }
 
+    /// The virtual NPU instances, indexed by id.
     pub fn instances(&self) -> &[NpuInstance] {
         &self.instances
     }
@@ -187,8 +669,7 @@ impl Scheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::arch::Format;
-    use crate::compiler::TileId;
+    use crate::arch::{Format, TransferKind};
     use crate::coordinator::Job;
     use crate::ir::OpId;
 
@@ -209,6 +690,47 @@ mod tests {
         }
     }
 
+    /// Two-tick program with a 600-cycle parameter prologue fetch, a
+    /// 1000-cycle compute and a 300-cycle activation fetch:
+    /// full = 600 + max(1000, 300) = 1600, marginal = max(1000, 300) = 1000.
+    fn weighted_program() -> JobProgram {
+        JobProgram {
+            jobs: vec![
+                Job::Dma {
+                    tile: TileId(9),
+                    kind: TransferKind::Fetch,
+                    bytes: 4_096,
+                    cycles: 600,
+                },
+                Job::Barrier,
+                Job::Dma {
+                    tile: TileId(1),
+                    kind: TransferKind::Fetch,
+                    bytes: 1_024,
+                    cycles: 300,
+                },
+                Job::Compute {
+                    op: OpId(0),
+                    out_tile: TileId(0),
+                    in_tiles: vec![TileId(1)],
+                    param_tile: Some(TileId(9)),
+                    format: Format::Depth,
+                    cycles: 1_000,
+                },
+                Job::Barrier,
+            ],
+            model: "weighted".to_string(),
+        }
+    }
+
+    fn request(id: u64, priority: Priority, arrival: u64) -> Request {
+        Request { id, model: ModelId::MobileNetV1, priority, arrival_cycles: arrival }
+    }
+
+    fn fifo_opts(instances: usize) -> SchedulerOptions {
+        SchedulerOptions { instances, ..SchedulerOptions::default() }
+    }
+
     #[test]
     fn trace_is_deterministic_and_ordered() {
         let models = [ModelId::MobileNetV1, ModelId::MobileNetV2];
@@ -217,22 +739,46 @@ mod tests {
         assert_eq!(a, b);
         assert!(a.windows(2).all(|w| w[0].arrival_cycles <= w[1].arrival_cycles));
         assert!(a.windows(2).all(|w| w[0].id + 1 == w[1].id));
+        assert!(a.iter().all(|r| r.priority == Priority::Standard));
         let c = synthetic_trace(&models, 50, 1_000, 43);
         assert_ne!(a, c);
     }
 
     #[test]
+    fn mixed_trace_draws_all_classes() {
+        let models = [ModelId::MobileNetV1];
+        let mix = PriorityMix::default();
+        let t = synthetic_trace_with_mix(&models, 200, 1_000, 5, &mix);
+        for p in Priority::all() {
+            assert!(
+                t.iter().any(|r| r.priority == p),
+                "class {p:?} missing from a 200-request default-mix trace"
+            );
+        }
+        // Degenerate weights pin the class.
+        let rt = PriorityMix { realtime: 1, standard: 0, batch: 0 };
+        let t = synthetic_trace_with_mix(&models, 50, 1_000, 5, &rt);
+        assert!(t.iter().all(|r| r.priority == Priority::Realtime));
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds MAX_MEAN_GAP_CYCLES")]
+    fn oversized_mean_gap_is_rejected_loudly() {
+        synthetic_trace(&[ModelId::MobileNetV1], 1, MAX_MEAN_GAP_CYCLES + 1, 0);
+    }
+
+    #[test]
     fn fifo_earliest_idle_dispatch() {
         let cfg = NeutronConfig::flagship_2tops();
-        let mut s = Scheduler::new(&cfg, 2);
+        let mut s = Scheduler::new(&cfg, &fifo_opts(2));
         let p = toy_program(1_000);
         for id in 0..4 {
-            s.admit(Request { id, model: ModelId::MobileNetV1, arrival_cycles: 0 });
+            assert_eq!(s.admit(request(id, Priority::Standard, 0)), Admission::Accepted);
         }
         assert_eq!(s.queue_len(), 4);
         let mut done = Vec::new();
         while s.next_model().is_some() {
-            done.push(s.dispatch_next(&p).unwrap());
+            done.extend(s.dispatch_next(ModelId::MobileNetV1, &p));
         }
         // 4 × 1000-cycle requests over 2 instances: two waves.
         assert_eq!(done.len(), 4);
@@ -245,17 +791,18 @@ mod tests {
         assert_eq!(s.instances()[0].served() + s.instances()[1].served(), 4);
         assert_eq!(s.instances()[0].metrics().requests, 2);
         assert_eq!(s.instances()[0].busy_cycles(), 2_000);
+        assert!(s.shed().is_empty());
     }
 
     #[test]
     fn latency_is_queue_plus_service() {
         let cfg = NeutronConfig::flagship_2tops();
-        let mut s = Scheduler::new(&cfg, 1);
+        let mut s = Scheduler::new(&cfg, &fifo_opts(1));
         let p = toy_program(500);
-        s.admit(Request { id: 0, model: ModelId::MobileNetV1, arrival_cycles: 100 });
-        s.admit(Request { id: 1, model: ModelId::MobileNetV1, arrival_cycles: 150 });
-        let a = s.dispatch_next(&p).unwrap();
-        let b = s.dispatch_next(&p).unwrap();
+        s.admit(request(0, Priority::Standard, 100));
+        s.admit(request(1, Priority::Standard, 150));
+        let a = s.dispatch_next(ModelId::MobileNetV1, &p)[0];
+        let b = s.dispatch_next(ModelId::MobileNetV1, &p)[0];
         // The idle instance waits for the arrival; nothing starts early.
         assert_eq!(a.start_cycles, 100);
         assert_eq!(a.finish_cycles, 600);
@@ -269,9 +816,208 @@ mod tests {
     #[test]
     fn empty_scheduler_reports_zero_makespan() {
         let cfg = NeutronConfig::flagship_2tops();
-        let mut s = Scheduler::new(&cfg, 3);
+        let mut s = Scheduler::new(&cfg, &fifo_opts(3));
         assert_eq!(s.makespan_cycles(), 0);
         assert!(s.next_model().is_none());
-        assert!(s.dispatch_next(&toy_program(1)).is_none());
+        assert!(s.next_model_before(u64::MAX).is_none());
+        assert!(s.dispatch_next(ModelId::MobileNetV1, &toy_program(1)).is_empty());
+    }
+
+    #[test]
+    fn classes_dispatch_in_rank_then_admission_order() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let mut s = Scheduler::new(&cfg, &fifo_opts(1));
+        let p = toy_program(100);
+        s.admit(request(0, Priority::Batch, 0));
+        s.admit(request(1, Priority::Realtime, 0));
+        s.admit(request(2, Priority::Standard, 0));
+        s.admit(request(3, Priority::Realtime, 0));
+        let mut order = Vec::new();
+        while s.next_model().is_some() {
+            order.extend(s.dispatch_next(ModelId::MobileNetV1, &p).iter().map(|c| c.id));
+        }
+        assert_eq!(order, vec![1, 3, 2, 0], "class rank first, admission order within class");
+    }
+
+    #[test]
+    fn scheduler_cannot_dispatch_requests_before_they_arrive() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let mut s = Scheduler::new(&cfg, &fifo_opts(1));
+        let p = toy_program(100);
+        // A Realtime request that arrives at t=500 must not outrank a
+        // Standard request already waiting at t=0: at the decision time
+        // (t=0, instance idle) only the Standard request has arrived.
+        s.admit(request(0, Priority::Standard, 0));
+        s.admit(request(1, Priority::Realtime, 500));
+        let a = s.dispatch_next(ModelId::MobileNetV1, &p)[0];
+        assert_eq!(a.id, 0);
+        assert_eq!(a.start_cycles, 0);
+        let b = s.dispatch_next(ModelId::MobileNetV1, &p)[0];
+        assert_eq!(b.id, 1);
+        assert_eq!(b.start_cycles, 500, "idle instance waits for the arrival");
+    }
+
+    #[test]
+    fn aging_promotes_starved_batch_work() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let p = toy_program(1_000);
+        let run = |age: Option<u64>| {
+            let opts = SchedulerOptions {
+                instances: 1,
+                age_after_cycles: age,
+                ..SchedulerOptions::default()
+            };
+            let mut s = Scheduler::new(&cfg, &opts);
+            // Occupy the instance until t=1000, with a Batch request queued
+            // from t=0 and a Realtime request arriving just before the
+            // instance frees up.
+            s.admit(request(0, Priority::Standard, 0));
+            s.dispatch_next(ModelId::MobileNetV1, &p);
+            s.admit(request(1, Priority::Batch, 0));
+            s.admit(request(2, Priority::Realtime, 999));
+            s.dispatch_next(ModelId::MobileNetV1, &p)[0].id
+        };
+        // Strict classes: Realtime jumps the 1000-cycle-old Batch request.
+        assert_eq!(run(None), 2);
+        // Aging 100 cycles/class: by t=1000 the Batch request has been
+        // promoted to effective Realtime and its earlier admission wins.
+        assert_eq!(run(Some(100)), 1);
+    }
+
+    #[test]
+    fn bounded_queue_reject_newest_sheds_the_arrival() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let opts = SchedulerOptions {
+            instances: 1,
+            queue_capacity: Some(2),
+            policy: AdmissionPolicy::RejectNewest,
+            ..SchedulerOptions::default()
+        };
+        let mut s = Scheduler::new(&cfg, &opts);
+        assert_eq!(s.admit(request(0, Priority::Standard, 0)), Admission::Accepted);
+        assert_eq!(s.admit(request(1, Priority::Standard, 0)), Admission::Accepted);
+        let r2 = request(2, Priority::Standard, 10);
+        assert_eq!(s.admit(r2), Admission::Shed(r2));
+        assert_eq!(s.queue_len(), 2);
+        assert_eq!(s.shed(), &[r2]);
+        // The backlog is preserved: ids 0 and 1 still dispatch.
+        let p = toy_program(100);
+        assert_eq!(s.dispatch_next(ModelId::MobileNetV1, &p)[0].id, 0);
+        assert_eq!(s.dispatch_next(ModelId::MobileNetV1, &p)[0].id, 1);
+    }
+
+    #[test]
+    fn bounded_queue_drop_oldest_sheds_the_head() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let opts = SchedulerOptions {
+            instances: 1,
+            queue_capacity: Some(2),
+            policy: AdmissionPolicy::DropOldest,
+            ..SchedulerOptions::default()
+        };
+        let mut s = Scheduler::new(&cfg, &opts);
+        let r0 = request(0, Priority::Standard, 0);
+        s.admit(r0);
+        s.admit(request(1, Priority::Standard, 0));
+        assert_eq!(s.admit(request(2, Priority::Standard, 10)), Admission::Shed(r0));
+        assert_eq!(s.queue_len(), 2);
+        assert_eq!(s.shed(), &[r0]);
+        let p = toy_program(100);
+        assert_eq!(s.dispatch_next(ModelId::MobileNetV1, &p)[0].id, 1);
+        assert_eq!(s.dispatch_next(ModelId::MobileNetV1, &p)[0].id, 2);
+    }
+
+    #[test]
+    fn marginal_cycles_skip_parameter_fetches_only() {
+        assert_eq!(marginal_service_cycles(&toy_program(700)), 700);
+        let p = weighted_program();
+        assert_eq!(marginal_service_cycles(&p), 1_000);
+        // Sanity: the executor's full service time is 600 + 1000.
+        let cfg = NeutronConfig::flagship_2tops();
+        let mut ex = Executor::with_config(cfg);
+        let full = ex.run_program(&p, None).unwrap().sim_cycles;
+        assert_eq!(full, 1_600);
+    }
+
+    #[test]
+    fn batching_coalesces_same_model_requests_under_backlog() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let opts = SchedulerOptions {
+            instances: 1,
+            max_batch: 3,
+            ..SchedulerOptions::default()
+        };
+        let mut s = Scheduler::new(&cfg, &opts);
+        let p = weighted_program();
+        for id in 0..4 {
+            s.admit(request(id, Priority::Standard, 0));
+        }
+        // First dispatch: a full batch of 3 (leader 1600, followers +1000).
+        let batch = s.dispatch_next(ModelId::MobileNetV1, &p);
+        assert_eq!(batch.len(), 3);
+        assert_eq!(
+            batch.iter().map(|c| (c.id, c.batch_index, c.finish_cycles)).collect::<Vec<_>>(),
+            vec![(0, 0, 1_600), (1, 1, 2_600), (2, 2, 3_600)]
+        );
+        assert!(batch.iter().all(|c| c.start_cycles == 0));
+        assert!(!batch[0].batched() && batch[1].batched());
+        // Second dispatch: the leftover request rides solo.
+        let solo = s.dispatch_next(ModelId::MobileNetV1, &p);
+        assert_eq!(solo.len(), 1);
+        assert_eq!((solo[0].id, solo[0].start_cycles, solo[0].finish_cycles), (3, 3_600, 5_200));
+        // Batched makespan 5200 beats 4 solo services (4 × 1600 = 6400).
+        assert_eq!(s.makespan_cycles(), 5_200);
+        assert_eq!(s.instances()[0].served(), 4);
+        assert_eq!(s.instances()[0].busy_cycles(), 5_200);
+        // The executor ran once per batch, not once per request.
+        assert_eq!(s.instances()[0].metrics().requests, 2);
+    }
+
+    #[test]
+    fn batching_defers_to_an_idle_instance() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let opts = SchedulerOptions {
+            instances: 2,
+            max_batch: 4,
+            ..SchedulerOptions::default()
+        };
+        let mut s = Scheduler::new(&cfg, &opts);
+        let p = weighted_program();
+        s.admit(request(0, Priority::Standard, 0));
+        s.admit(request(1, Priority::Standard, 0));
+        // Instance 1 is idle at t=0, so the first dispatch must not absorb
+        // request 1 as a follower — it runs in parallel instead.
+        let first = s.dispatch_next(ModelId::MobileNetV1, &p);
+        assert_eq!(first.len(), 1);
+        let second = s.dispatch_next(ModelId::MobileNetV1, &p);
+        assert_eq!(second.len(), 1);
+        assert_eq!(second[0].instance, 1);
+        assert_eq!(s.makespan_cycles(), 1_600);
+    }
+
+    #[test]
+    fn batching_respects_class_and_model_boundaries() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let opts = SchedulerOptions {
+            instances: 1,
+            max_batch: 8,
+            ..SchedulerOptions::default()
+        };
+        let mut s = Scheduler::new(&cfg, &opts);
+        let p = weighted_program();
+        s.admit(request(0, Priority::Standard, 0));
+        s.admit(Request {
+            id: 1,
+            model: ModelId::MobileNetV2,
+            priority: Priority::Standard,
+            arrival_cycles: 0,
+        });
+        s.admit(request(2, Priority::Batch, 0));
+        s.admit(request(3, Priority::Standard, 0));
+        let batch = s.dispatch_next(ModelId::MobileNetV1, &p);
+        // Only id 3 matches the leader's (model, class); the other-model
+        // and other-class requests stay queued.
+        assert_eq!(batch.iter().map(|c| c.id).collect::<Vec<_>>(), vec![0, 3]);
+        assert_eq!(s.queue_len(), 2);
     }
 }

@@ -1,23 +1,35 @@
-//! Serving front-end: synthetic trace → compile cache → scheduler →
-//! [`ServeReport`].
+//! Serving front-end: synthetic trace → compile cache → overload-aware
+//! scheduler → [`ServeReport`].
+//!
+//! [`run_trace`] is the event loop that enforces the virtual-clock event
+//! order (all service events at or before an arrival's timestamp run
+//! before the arrival is admitted); [`serve`] / [`serve_with_cache`] wrap
+//! it with trace generation and report building.
 
 use crate::arch::NeutronConfig;
 use crate::zoo::ModelId;
 
 use super::cache::CompileCache;
-use super::queue::{synthetic_trace, Completion, Request, Scheduler};
+use super::queue::{
+    synthetic_trace_with_mix, Completion, Priority, PriorityMix, Request, Scheduler,
+    SchedulerOptions,
+};
 
-/// Serving scenario parameters.
+/// Serving scenario parameters: the trace shape plus the scheduler knobs.
 #[derive(Debug, Clone)]
 pub struct ServeOptions {
     /// Tenant model mix (requests draw uniformly from this list).
     pub models: Vec<ModelId>,
+    /// Offered requests in the synthetic trace.
     pub requests: usize,
-    /// Virtual NPU instances sharing the admission queue.
-    pub instances: usize,
     /// Mean inter-arrival gap on the virtual clock, cycles.
     pub mean_gap_cycles: u64,
+    /// Trace PRNG seed (same seed → identical trace → identical report).
     pub seed: u64,
+    /// Priority-class weights for the synthetic trace.
+    pub priority_mix: PriorityMix,
+    /// Admission, priority and batching configuration.
+    pub scheduler: SchedulerOptions,
 }
 
 impl Default for ServeOptions {
@@ -29,11 +41,12 @@ impl Default for ServeOptions {
                 ModelId::EfficientNetLite0,
             ],
             requests: 200,
-            instances: 2,
             // ~0.6 ms at 1 GHz: keeps two instances around 80% busy on
             // the ~1 ms default model mix.
             mean_gap_cycles: 600_000,
             seed: 7,
+            priority_mix: PriorityMix::default(),
+            scheduler: SchedulerOptions::default(),
         }
     }
 }
@@ -41,32 +54,97 @@ impl Default for ServeOptions {
 /// Per-model serving statistics.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelStats {
+    /// The model these rows describe.
     pub model: ModelId,
+    /// Completed requests for this model.
     pub requests: u64,
-    /// Cycles this model kept instances busy (utilization numerator).
+    /// Cycles this model kept instances occupied (utilization numerator;
+    /// batch followers count only their marginal tail).
     pub busy_cycles: u64,
+    /// Mean end-to-end latency of this model's requests, milliseconds.
     pub mean_latency_ms: f64,
+}
+
+/// Per-priority-class serving statistics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassStats {
+    /// The priority class these rows describe.
+    pub priority: Priority,
+    /// Completed requests in this class.
+    pub completed: u64,
+    /// Requests of this class shed by admission control.
+    pub shed: u64,
+    /// Mean end-to-end latency, milliseconds (0 when none completed).
+    pub mean_latency_ms: f64,
+    /// 99th-percentile end-to-end latency, milliseconds.
+    pub p99_ms: f64,
+}
+
+/// Everything a trace run produced: completions, shed requests and
+/// per-instance occupancy.
+///
+/// `completions` are in dispatch order, with each batch contiguous
+/// (leader first, followers in admission order) — report builders rely on
+/// that contiguity to attribute batch-marginal occupancy.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceOutcome {
+    /// Completed requests in dispatch order.
+    pub completions: Vec<Completion>,
+    /// Requests shed by admission control, in shedding order.
+    pub shed: Vec<Request>,
+    /// Cycles each instance spent occupied, indexed by instance id.
+    pub per_instance_busy_cycles: Vec<u64>,
 }
 
 /// Aggregate serving report. Fully determined by `(config, options)`: no
 /// wall-clock value enters any field, so two runs with the same seed
 /// compare equal (see the virtual-clock contract in `serve/mod.rs`).
+/// Every `*_cycles` field is in NPU core cycles; every `*_ms` / `*_inf_s`
+/// field is derived from cycles via the config's core clock `freq_ghz`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServeReport {
-    pub requests: u64,
+    /// Requests offered by the trace (completed + shed).
+    pub offered: u64,
+    /// Requests that completed service (the goodput numerator).
+    pub completed: u64,
+    /// Requests shed by admission control.
+    pub shed: u64,
+    /// Virtual NPU instances that served the trace.
     pub instances: usize,
+    /// Core clock used to convert cycles into seconds.
     pub freq_ghz: f64,
     /// Virtual-clock cycle when the last request finished.
     pub makespan_cycles: u64,
-    pub throughput_inf_s: f64,
+    /// Offered load: trace arrivals per second of arrival span (0 when
+    /// the whole trace arrives at cycle 0).
+    pub offered_load_inf_s: f64,
+    /// Goodput: completed requests per second of makespan.
+    pub goodput_inf_s: f64,
+    /// Mean end-to-end latency of completed requests, milliseconds.
     pub mean_latency_ms: f64,
+    /// Median end-to-end latency, milliseconds.
     pub p50_ms: f64,
+    /// 95th-percentile end-to-end latency, milliseconds.
     pub p95_ms: f64,
+    /// 99th-percentile end-to-end latency, milliseconds.
     pub p99_ms: f64,
+    /// Mean admission-queue wait, milliseconds.
     pub mean_queue_ms: f64,
+    /// Multi-request batches dispatched.
+    pub batches: u64,
+    /// Requests that rode a batch as a follower (paying only the marginal
+    /// service time).
+    pub batched_requests: u64,
+    /// Compile-cache hits during the run.
     pub cache_hits: u64,
+    /// Compile-cache misses (cold compiles) during the run.
     pub cache_misses: u64,
+    /// Per-model statistics, in the caller's model order.
     pub per_model: Vec<ModelStats>,
+    /// Per-priority-class statistics, highest class first (always all
+    /// three classes, so reports stay structurally comparable).
+    pub per_class: Vec<ClassStats>,
+    /// Cycles each instance spent occupied, indexed by instance id.
     pub per_instance_busy_cycles: Vec<u64>,
 }
 
@@ -79,6 +157,16 @@ impl ServeReport {
             0.0
         } else {
             self.cache_hits as f64 / total as f64
+        }
+    }
+
+    /// Fraction of offered requests shed by admission control (0 when
+    /// nothing was offered).
+    pub fn shed_rate(&self) -> f64 {
+        if self.offered == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.offered as f64
         }
     }
 
@@ -97,17 +185,26 @@ impl ServeReport {
         let mut s = String::new();
         writeln!(
             s,
-            "requests:     {} over {} virtual NPU instance(s), {} model(s)",
-            self.requests,
+            "offered:      {} requests over {} virtual NPU instance(s), {} model(s)",
+            self.offered,
             self.instances,
             self.per_model.len()
         )
         .unwrap();
         writeln!(
             s,
-            "makespan:     {:.2} ms  →  throughput {:.1} inf/s",
+            "admission:    {} served, {} shed ({:.1}% of offered load {:.1} inf/s)",
+            self.completed,
+            self.shed,
+            self.shed_rate() * 100.0,
+            self.offered_load_inf_s
+        )
+        .unwrap();
+        writeln!(
+            s,
+            "makespan:     {:.2} ms  →  goodput {:.1} inf/s",
             cycles_to_ms(self.makespan_cycles as f64, self.freq_ghz),
-            self.throughput_inf_s
+            self.goodput_inf_s
         )
         .unwrap();
         writeln!(
@@ -116,6 +213,24 @@ impl ServeReport {
             self.p50_ms, self.p95_ms, self.p99_ms, self.mean_latency_ms, self.mean_queue_ms
         )
         .unwrap();
+        writeln!(
+            s,
+            "batching:     {} batches coalesced {} follower request(s)",
+            self.batches, self.batched_requests
+        )
+        .unwrap();
+        for c in &self.per_class {
+            writeln!(
+                s,
+                "  class {:<9} {:>5} done {:>5} shed  mean {:>8.3} ms  p99 {:>8.3} ms",
+                c.priority.display_name(),
+                c.completed,
+                c.shed,
+                c.mean_latency_ms,
+                c.p99_ms
+            )
+            .unwrap();
+        }
         writeln!(
             s,
             "compile cache: {} hits / {} misses ({:.1}% hit rate)",
@@ -161,28 +276,59 @@ fn percentile(sorted: &[u64], q: f64) -> u64 {
     sorted[idx.min(sorted.len() - 1)]
 }
 
-/// Run a prepared `trace` over `instances` virtual NPUs, resolving each
-/// request's program through `cache`. Returns the completions in dispatch
-/// (= admission) order plus per-instance busy cycles.
+/// Cycles each completion kept its instance occupied: the full service
+/// for a batch leader or solo request, only the marginal tail for a batch
+/// follower. Relies on batches being contiguous in `completions` (see
+/// [`TraceOutcome`]).
+fn occupancy_cycles(completions: &[Completion]) -> Vec<u64> {
+    completions
+        .iter()
+        .enumerate()
+        .map(|(i, c)| {
+            if c.batch_index == 0 {
+                c.finish_cycles - c.start_cycles
+            } else {
+                c.finish_cycles - completions[i - 1].finish_cycles
+            }
+        })
+        .collect()
+}
+
+/// Run a prepared `trace` (arrivals must be non-decreasing) through the
+/// scheduler, resolving each dispatch's program through `cache`.
+///
+/// Event order is deterministic: before each arrival is admitted, every
+/// dispatch whose start time is ≤ the arrival's timestamp runs first
+/// ("service precedes admission at equal times"); after the last arrival
+/// the queue drains completely.
 pub fn run_trace(
     cfg: &NeutronConfig,
     trace: &[Request],
-    instances: usize,
+    scheduler_opts: &SchedulerOptions,
     cache: &mut CompileCache,
-) -> (Vec<Completion>, Vec<u64>) {
-    let mut scheduler = Scheduler::new(cfg, instances);
+) -> TraceOutcome {
+    assert!(
+        trace.windows(2).all(|w| w[0].arrival_cycles <= w[1].arrival_cycles),
+        "trace arrivals must be non-decreasing"
+    );
+    let mut scheduler = Scheduler::new(cfg, scheduler_opts);
+    let mut completions = Vec::with_capacity(trace.len());
     for &request in trace {
+        while let Some(model) = scheduler.next_model_before(request.arrival_cycles) {
+            let entry = cache.get(model);
+            completions.extend(scheduler.dispatch_next(model, &entry.program));
+        }
         scheduler.admit(request);
     }
-    let mut completions = Vec::with_capacity(trace.len());
     while let Some(model) = scheduler.next_model() {
         let entry = cache.get(model);
-        if let Some(c) = scheduler.dispatch_next(&entry.program) {
-            completions.push(c);
-        }
+        completions.extend(scheduler.dispatch_next(model, &entry.program));
     }
-    let busy = scheduler.instances().iter().map(|i| i.busy_cycles()).collect();
-    (completions, busy)
+    TraceOutcome {
+        completions,
+        shed: scheduler.shed().to_vec(),
+        per_instance_busy_cycles: scheduler.instances().iter().map(|i| i.busy_cycles()).collect(),
+    }
 }
 
 /// Serve a synthetic multi-tenant trace with a caller-owned cache (reuse
@@ -193,15 +339,20 @@ pub fn serve_with_cache(
     cache: &mut CompileCache,
 ) -> ServeReport {
     assert!(!opts.models.is_empty(), "serving needs at least one model");
-    assert!(opts.instances >= 1, "serving needs at least one instance");
     let (hits0, misses0) = (cache.hits, cache.misses);
-    let trace = synthetic_trace(&opts.models, opts.requests, opts.mean_gap_cycles, opts.seed);
-    let (completions, per_instance_busy) = run_trace(cfg, &trace, opts.instances, cache);
+    let trace = synthetic_trace_with_mix(
+        &opts.models,
+        opts.requests,
+        opts.mean_gap_cycles,
+        opts.seed,
+        &opts.priority_mix,
+    );
+    let outcome = run_trace(cfg, &trace, &opts.scheduler, cache);
     build_report(
         cfg,
         opts,
-        &completions,
-        per_instance_busy,
+        &trace,
+        &outcome,
         cache.hits - hits0,
         cache.misses - misses0,
     )
@@ -216,20 +367,28 @@ pub fn serve(cfg: &NeutronConfig, opts: &ServeOptions) -> ServeReport {
 fn build_report(
     cfg: &NeutronConfig,
     opts: &ServeOptions,
-    completions: &[Completion],
-    per_instance_busy: Vec<u64>,
+    trace: &[Request],
+    outcome: &TraceOutcome,
     cache_hits: u64,
     cache_misses: u64,
 ) -> ServeReport {
     let freq = cfg.freq_ghz;
+    let completions = &outcome.completions;
     let n = completions.len() as u64;
+    let occupancy = occupancy_cycles(completions);
     let mut latencies: Vec<u64> = completions.iter().map(|c| c.latency_cycles()).collect();
     latencies.sort_unstable();
     let makespan = completions.iter().map(|c| c.finish_cycles).max().unwrap_or(0);
-    let throughput = if makespan == 0 {
+    let goodput = if makespan == 0 {
         0.0
     } else {
         n as f64 * freq * 1e9 / makespan as f64
+    };
+    let arrival_span = trace.last().map(|r| r.arrival_cycles).unwrap_or(0);
+    let offered_load = if arrival_span == 0 {
+        0.0
+    } else {
+        trace.len() as f64 * freq * 1e9 / arrival_span as f64
     };
     let mean_latency_cycles = if n == 0 {
         0.0
@@ -241,6 +400,8 @@ fn build_report(
     } else {
         completions.iter().map(|c| c.queue_cycles()).sum::<u64>() as f64 / n as f64
     };
+    let batched_requests = completions.iter().filter(|c| c.batch_index > 0).count() as u64;
+    let batches = completions.iter().filter(|c| c.batch_index == 1).count() as u64;
 
     // Per-model stats in the caller's model order (first occurrence wins,
     // so duplicate entries in `models` stay deterministic).
@@ -254,10 +415,12 @@ fn build_report(
         let mut requests = 0u64;
         let mut busy = 0u64;
         let mut latency_sum = 0u64;
-        for c in completions.iter().filter(|c| c.model == model) {
-            requests += 1;
-            busy += c.service_cycles();
-            latency_sum += c.latency_cycles();
+        for (c, &occ) in completions.iter().zip(&occupancy) {
+            if c.model == model {
+                requests += 1;
+                busy += occ;
+                latency_sum += c.latency_cycles();
+            }
         }
         per_model.push(ModelStats {
             model,
@@ -271,27 +434,59 @@ fn build_report(
         });
     }
 
+    let per_class = Priority::all()
+        .into_iter()
+        .map(|priority| {
+            let mut lat: Vec<u64> = completions
+                .iter()
+                .filter(|c| c.priority == priority)
+                .map(|c| c.latency_cycles())
+                .collect();
+            lat.sort_unstable();
+            let completed = lat.len() as u64;
+            let shed = outcome.shed.iter().filter(|r| r.priority == priority).count() as u64;
+            ClassStats {
+                priority,
+                completed,
+                shed,
+                mean_latency_ms: if completed == 0 {
+                    0.0
+                } else {
+                    cycles_to_ms(lat.iter().sum::<u64>() as f64 / completed as f64, freq)
+                },
+                p99_ms: cycles_to_ms(percentile(&lat, 0.99) as f64, freq),
+            }
+        })
+        .collect();
+
     ServeReport {
-        requests: n,
-        instances: opts.instances,
+        offered: trace.len() as u64,
+        completed: n,
+        shed: outcome.shed.len() as u64,
+        instances: opts.scheduler.instances,
         freq_ghz: freq,
         makespan_cycles: makespan,
-        throughput_inf_s: throughput,
+        offered_load_inf_s: offered_load,
+        goodput_inf_s: goodput,
         mean_latency_ms: cycles_to_ms(mean_latency_cycles, freq),
         p50_ms: cycles_to_ms(percentile(&latencies, 0.50) as f64, freq),
         p95_ms: cycles_to_ms(percentile(&latencies, 0.95) as f64, freq),
         p99_ms: cycles_to_ms(percentile(&latencies, 0.99) as f64, freq),
         mean_queue_ms: cycles_to_ms(mean_queue_cycles, freq),
+        batches,
+        batched_requests,
         cache_hits,
         cache_misses,
         per_model,
-        per_instance_busy_cycles: per_instance_busy,
+        per_class,
+        per_instance_busy_cycles: outcome.per_instance_busy_cycles.clone(),
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::serve::queue::AdmissionPolicy;
 
     #[test]
     fn percentile_nearest_rank() {
@@ -309,20 +504,27 @@ mod tests {
         let opts = ServeOptions {
             models: vec![ModelId::MobileNetV3Min, ModelId::MobileNetV1],
             requests: 24,
-            instances: 2,
             mean_gap_cycles: 400_000,
             seed: 11,
+            scheduler: SchedulerOptions { instances: 2, ..SchedulerOptions::default() },
+            ..ServeOptions::default()
         };
         let mut cache = CompileCache::for_serving(cfg.clone());
         let a = serve_with_cache(&cfg, &opts, &mut cache);
-        assert_eq!(a.requests, 24);
+        assert_eq!(a.offered, 24);
+        assert_eq!(a.completed, 24);
+        assert_eq!(a.shed, 0, "unbounded queue never sheds");
+        assert_eq!(a.shed_rate(), 0.0);
         assert_eq!(a.cache_misses, 2);
         assert_eq!(a.cache_hits, 22);
         assert!(a.cache_hit_rate() > 0.9);
         assert!(a.p50_ms > 0.0);
         assert!(a.p50_ms <= a.p95_ms && a.p95_ms <= a.p99_ms);
         assert!(a.utilization() > 0.0 && a.utilization() <= 1.0);
+        assert!(a.offered_load_inf_s > 0.0);
         assert_eq!(a.per_model.iter().map(|m| m.requests).sum::<u64>(), 24);
+        assert_eq!(a.per_class.iter().map(|c| c.completed).sum::<u64>(), 24);
+        assert_eq!(a.per_class.len(), 3);
         assert_eq!(a.per_instance_busy_cycles.len(), 2);
 
         // Warm rerun: identical virtual-clock timing, all cache hits.
@@ -330,10 +532,51 @@ mod tests {
         assert_eq!(b.cache_misses, 0);
         assert_eq!(b.cache_hits, 24);
         assert_eq!(
-            (a.makespan_cycles, a.p50_ms, a.p95_ms, a.p99_ms, a.throughput_inf_s),
-            (b.makespan_cycles, b.p50_ms, b.p95_ms, b.p99_ms, b.throughput_inf_s)
+            (a.makespan_cycles, a.p50_ms, a.p95_ms, a.p99_ms, a.goodput_inf_s),
+            (b.makespan_cycles, b.p50_ms, b.p95_ms, b.p99_ms, b.goodput_inf_s)
         );
         assert_eq!(a.per_model, b.per_model);
+        assert_eq!(a.per_class, b.per_class);
+    }
+
+    #[test]
+    fn bounded_queue_sheds_under_overload_and_bounds_queueing() {
+        let cfg = NeutronConfig::flagship_2tops();
+        // Near-simultaneous arrivals of one model over one instance: the
+        // queue cannot keep up, so a bounded queue must shed.
+        let base = ServeOptions {
+            models: vec![ModelId::MobileNetV3Min],
+            requests: 40,
+            mean_gap_cycles: 1_000,
+            seed: 3,
+            priority_mix: PriorityMix::standard_only(),
+            scheduler: SchedulerOptions { instances: 1, ..SchedulerOptions::default() },
+        };
+        let mut cache = CompileCache::for_serving(cfg.clone());
+        let unbounded = serve_with_cache(&cfg, &base, &mut cache);
+        assert_eq!(unbounded.shed, 0);
+        assert_eq!(unbounded.completed, 40);
+
+        let bounded = ServeOptions {
+            scheduler: SchedulerOptions {
+                instances: 1,
+                queue_capacity: Some(4),
+                policy: AdmissionPolicy::RejectNewest,
+                ..SchedulerOptions::default()
+            },
+            ..base.clone()
+        };
+        let r = serve_with_cache(&cfg, &bounded, &mut cache);
+        assert_eq!(r.offered, 40);
+        assert_eq!(r.completed + r.shed, 40, "offered = served + shed");
+        assert!(r.shed > 0, "sustained overload must shed with a bounded queue");
+        assert!(r.shed_rate() > 0.0);
+        // Shedding bounds the backlog, so tail latency improves on the
+        // unbounded run.
+        assert!(r.p99_ms < unbounded.p99_ms);
+        assert!(r.makespan_cycles <= unbounded.makespan_cycles);
+        let s = r.summary();
+        assert!(s.contains("shed") && s.contains("goodput"));
     }
 
     #[test]
@@ -342,17 +585,22 @@ mod tests {
         let opts = ServeOptions {
             models: vec![ModelId::MobileNetV3Min],
             requests: 0,
-            instances: 1,
             mean_gap_cycles: 0,
             seed: 1,
+            scheduler: SchedulerOptions { instances: 1, ..SchedulerOptions::default() },
+            ..ServeOptions::default()
         };
         let r = serve(&cfg, &opts);
-        assert_eq!(r.requests, 0);
-        assert_eq!(r.throughput_inf_s, 0.0);
+        assert_eq!(r.offered, 0);
+        assert_eq!(r.completed, 0);
+        assert_eq!(r.shed, 0);
+        assert_eq!(r.goodput_inf_s, 0.0);
+        assert_eq!(r.offered_load_inf_s, 0.0);
         assert_eq!(r.p99_ms, 0.0);
         assert_eq!(r.mean_latency_ms, 0.0);
         assert_eq!(r.utilization(), 0.0);
         assert_eq!(r.cache_hit_rate(), 0.0);
-        assert!(r.summary().contains("requests"));
+        assert_eq!(r.shed_rate(), 0.0);
+        assert!(r.summary().contains("offered"));
     }
 }

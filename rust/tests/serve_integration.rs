@@ -1,17 +1,22 @@
 //! Integration + property tests for the multi-tenant serving layer:
-//! conservation (every admitted request completes exactly once), scaling
-//! monotonicity (more instances never increase makespan), cache coherence
-//! (a hit is bit-identical to a cold compile), and virtual-clock
-//! determinism (same seed → identical `ServeReport`).
+//! conservation under shedding (completed + shed == offered, exactly
+//! once each), scaling monotonicity (more instances never increase
+//! makespan for the FIFO configuration), strict class ordering (absent
+//! aging, lower-class work never dispatches while higher-class work
+//! waits), batching neutrality (batching re-times requests, never changes
+//! which requests complete), cache coherence (a hit is bit-identical to a
+//! cold compile), and virtual-clock determinism (same seed + same options
+//! → identical `ServeReport`, including shed sets and batch composition).
 
 use std::sync::Arc;
 
 use eiq_neutron::arch::NeutronConfig;
 use eiq_neutron::compiler::compile;
-use eiq_neutron::coordinator::emit;
+use eiq_neutron::coordinator::{emit, Executor};
 use eiq_neutron::serve::{
-    deterministic_compile_options, run_trace, serve, serve_with_cache, synthetic_trace,
-    Completion, CompileCache, ServeOptions,
+    deterministic_compile_options, marginal_service_cycles, run_trace, serve, serve_with_cache,
+    synthetic_trace, synthetic_trace_with_mix, AdmissionPolicy, Completion, CompileCache,
+    PriorityMix, SchedulerOptions, ServeOptions, TraceOutcome,
 };
 use eiq_neutron::util::prop::{for_each_case, Rng};
 use eiq_neutron::zoo::ModelId;
@@ -32,46 +37,117 @@ fn random_models(rng: &mut Rng) -> Vec<ModelId> {
     (0..k).map(|i| POOL[(start + i) % POOL.len()]).collect()
 }
 
+/// Random class weights with at least one non-zero entry.
+fn random_mix(rng: &mut Rng) -> PriorityMix {
+    let mut mix = PriorityMix {
+        realtime: rng.usize(0, 2) as u32,
+        standard: rng.usize(0, 2) as u32,
+        batch: rng.usize(0, 2) as u32,
+    };
+    if mix.realtime + mix.standard + mix.batch == 0 {
+        mix.standard = 1;
+    }
+    mix
+}
+
+/// Random scheduler knobs across the whole option space.
+fn random_scheduler(rng: &mut Rng) -> SchedulerOptions {
+    SchedulerOptions {
+        instances: rng.usize(1, 4),
+        queue_capacity: if rng.bool() { Some(rng.usize(1, 8)) } else { None },
+        policy: if rng.bool() {
+            AdmissionPolicy::RejectNewest
+        } else {
+            AdmissionPolicy::DropOldest
+        },
+        max_batch: rng.usize(1, 4),
+        age_after_cycles: if rng.bool() { Some(rng.int(1, 500_000) as u64) } else { None },
+    }
+}
+
 fn makespan(completions: &[Completion]) -> u64 {
     completions.iter().map(|c| c.finish_cycles).max().unwrap_or(0)
 }
 
+/// Total instance-occupancy of a completion list: full service for batch
+/// leaders and solo requests, marginal tail for followers (batches are
+/// contiguous in dispatch order, leader first).
+fn occupancy_total(completions: &[Completion]) -> u64 {
+    completions
+        .iter()
+        .enumerate()
+        .map(|(i, c)| {
+            if c.batch_index == 0 {
+                c.finish_cycles - c.start_cycles
+            } else {
+                c.finish_cycles - completions[i - 1].finish_cycles
+            }
+        })
+        .sum()
+}
+
 #[test]
-fn prop_conservation_every_admitted_request_completes_once() {
+fn prop_conservation_offered_equals_completed_plus_shed() {
     let cfg = NeutronConfig::flagship_2tops();
     let mut cache = CompileCache::for_serving(cfg.clone());
     for_each_case(16, 0x5E41, |rng| {
         let models = random_models(rng);
         let n = rng.usize(1, 40);
-        let instances = rng.usize(1, 5);
+        let sched = random_scheduler(rng);
         let gap = rng.int(0, 2_000_000) as u64;
-        let trace = synthetic_trace(&models, n, gap, rng.next_u64());
-        let (completions, busy) = run_trace(&cfg, &trace, instances, &mut cache);
+        let mix = random_mix(rng);
+        let trace = synthetic_trace_with_mix(&models, n, gap, rng.next_u64(), &mix);
+        let outcome = run_trace(&cfg, &trace, &sched, &mut cache);
 
-        assert_eq!(completions.len(), n, "every admitted request completes");
-        let mut ids: Vec<u64> = completions.iter().map(|c| c.id).collect();
+        // Every offered request either completes or is shed, exactly once.
+        assert_eq!(
+            outcome.completions.len() + outcome.shed.len(),
+            n,
+            "completed + shed must equal offered"
+        );
+        let mut ids: Vec<u64> = outcome
+            .completions
+            .iter()
+            .map(|c| c.id)
+            .chain(outcome.shed.iter().map(|r| r.id))
+            .collect();
         ids.sort_unstable();
-        ids.dedup();
-        assert_eq!(ids.len(), n, "no request completes twice");
-        assert_eq!(busy.len(), instances);
-        for c in &completions {
+        assert_eq!(ids, (0..n as u64).collect::<Vec<_>>(), "ids partition the trace");
+        if sched.queue_capacity.is_none() {
+            assert!(outcome.shed.is_empty(), "an unbounded queue never sheds");
+        }
+
+        for c in &outcome.completions {
             let req = trace[c.id as usize];
             assert_eq!(req.model, c.model);
+            assert_eq!(req.priority, c.priority);
             assert_eq!(req.arrival_cycles, c.arrival_cycles);
             assert!(c.start_cycles >= c.arrival_cycles, "no request starts before arrival");
             assert!(c.finish_cycles > c.start_cycles, "service time must be positive");
-            assert!(c.instance < instances);
+            assert!(c.instance < sched.instances);
+            assert!((c.batch_index as usize) < sched.max_batch);
             assert_eq!(
                 c.latency_cycles(),
                 c.queue_cycles() + c.service_cycles(),
                 "latency decomposes into queueing delay + service time"
             );
         }
+        assert_eq!(outcome.per_instance_busy_cycles.len(), sched.instances);
+        assert_eq!(
+            occupancy_total(&outcome.completions),
+            outcome.per_instance_busy_cycles.iter().sum::<u64>(),
+            "per-completion occupancy must sum to per-instance busy cycles"
+        );
     });
 }
 
 #[test]
 fn prop_more_instances_never_increase_makespan() {
+    // The pointwise claim is specific to the FIFO configuration (single
+    // class, no batching, unbounded queue): extra instances can only move
+    // every request earlier. Priority reordering and batch coalescing
+    // intentionally trade individual finish times, so the claim is not
+    // made for them.
     let cfg = NeutronConfig::flagship_2tops();
     let mut cache = CompileCache::for_serving(cfg.clone());
     for_each_case(15, 0x9A7E, |rng| {
@@ -81,8 +157,10 @@ fn prop_more_instances_never_increase_makespan() {
         let trace = synthetic_trace(&models, n, gap, rng.next_u64());
         let k = rng.usize(1, 4);
         let extra = rng.usize(1, 4);
-        let (small, _) = run_trace(&cfg, &trace, k, &mut cache);
-        let (big, _) = run_trace(&cfg, &trace, k + extra, &mut cache);
+        let small_opts = SchedulerOptions { instances: k, ..SchedulerOptions::default() };
+        let big_opts = SchedulerOptions { instances: k + extra, ..SchedulerOptions::default() };
+        let small = run_trace(&cfg, &trace, &small_opts, &mut cache).completions;
+        let big = run_trace(&cfg, &trace, &big_opts, &mut cache).completions;
         assert!(
             makespan(&big) <= makespan(&small),
             "{} instances (makespan {}) vs {} instances (makespan {})",
@@ -91,10 +169,8 @@ fn prop_more_instances_never_increase_makespan() {
             k,
             makespan(&small)
         );
-        // Pointwise: with FIFO earliest-idle dispatch, extra instances can
-        // only move every request earlier, never later.
         for (a, b) in small.iter().zip(big.iter()) {
-            assert_eq!(a.id, b.id);
+            assert_eq!(a.id, b.id, "FIFO dispatch order is the admission order");
             assert!(
                 b.finish_cycles <= a.finish_cycles,
                 "request {} finished later with more instances",
@@ -102,6 +178,125 @@ fn prop_more_instances_never_increase_makespan() {
             );
         }
     });
+}
+
+#[test]
+fn prop_higher_class_never_waits_behind_later_lower_class_dispatch() {
+    // Absent aging, the scheduler must never dispatch a lower-class
+    // request while a higher-class request that has already arrived is
+    // still waiting — in particular a `Realtime` request never waits
+    // behind a later-admitted `Batch` request. Batching cannot leak
+    // around this: followers share their leader's class.
+    let cfg = NeutronConfig::flagship_2tops();
+    let mut cache = CompileCache::for_serving(cfg.clone());
+    for_each_case(12, 0xB477, |rng| {
+        let models = random_models(rng);
+        let n = rng.usize(2, 50);
+        let gap = rng.int(0, 800_000) as u64;
+        let mix = PriorityMix { realtime: 1, standard: 1, batch: 1 };
+        let trace = synthetic_trace_with_mix(&models, n, gap, rng.next_u64(), &mix);
+        let sched = SchedulerOptions {
+            age_after_cycles: None,
+            ..random_scheduler(rng)
+        };
+        let outcome = run_trace(&cfg, &trace, &sched, &mut cache);
+        for hi in &outcome.completions {
+            for lo in &outcome.completions {
+                if hi.priority.rank() < lo.priority.rank() {
+                    // `hi` had arrived strictly before `lo` was dispatched
+                    // yet started strictly after it: a class inversion.
+                    assert!(
+                        !(hi.arrival_cycles < lo.start_cycles
+                            && hi.start_cycles > lo.start_cycles),
+                        "{:?} request {} (arrival {}, start {}) waited behind {:?} \
+                         request {} dispatched at {}",
+                        hi.priority,
+                        hi.id,
+                        hi.arrival_cycles,
+                        hi.start_cycles,
+                        lo.priority,
+                        lo.id,
+                        lo.start_cycles
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_batching_never_changes_which_requests_complete() {
+    let cfg = NeutronConfig::flagship_2tops();
+    let mut cache = CompileCache::for_serving(cfg.clone());
+    for_each_case(10, 0xBA7C, |rng| {
+        let models = random_models(rng);
+        let n = rng.usize(2, 40);
+        // Tight gaps so backlog builds and batching actually engages.
+        let gap = rng.int(0, 300_000) as u64;
+        let mix = random_mix(rng);
+        let trace = synthetic_trace_with_mix(&models, n, gap, rng.next_u64(), &mix);
+        let instances = rng.usize(1, 3);
+        let unbatched_opts = SchedulerOptions { instances, ..SchedulerOptions::default() };
+        let batched_opts = SchedulerOptions {
+            instances,
+            max_batch: rng.usize(2, 6),
+            ..SchedulerOptions::default()
+        };
+        let unbatched = run_trace(&cfg, &trace, &unbatched_opts, &mut cache);
+        let batched = run_trace(&cfg, &trace, &batched_opts, &mut cache);
+
+        let ids = |o: &TraceOutcome| {
+            let mut v: Vec<u64> = o.completions.iter().map(|c| c.id).collect();
+            v.sort_unstable();
+            v
+        };
+        // With an unbounded queue everything completes either way: batching
+        // may only change WHEN requests finish, never WHICH finish.
+        assert_eq!(unbatched.completions.len(), n);
+        assert_eq!(ids(&unbatched), ids(&batched));
+        assert!(unbatched.completions.iter().all(|c| c.batch_index == 0));
+        // Followers pay the marginal service time, so batching can only
+        // reduce the total cycles instances spend occupied.
+        assert!(occupancy_total(&batched.completions) <= occupancy_total(&unbatched.completions));
+    });
+}
+
+#[test]
+fn batching_saturated_single_instance_cuts_makespan() {
+    // Deterministic overload shape: 12 same-model, same-class requests all
+    // arriving at cycle 0 on one instance, batches of up to 4. The first
+    // request dispatches solo before the backlog exists ("service precedes
+    // admission at equal times"); the remaining 11 queue up and coalesce
+    // into batches of 4 + 4 + 3, so the batched makespan is exactly
+    // 4·full + 8·marginal vs 12·full unbatched.
+    let cfg = NeutronConfig::flagship_2tops();
+    let mut cache = CompileCache::for_serving(cfg.clone());
+    let model = ModelId::MobileNetV3Min;
+    let trace = synthetic_trace(&[model], 12, 0, 9);
+    assert!(trace.iter().all(|r| r.arrival_cycles == 0));
+
+    let solo_opts = SchedulerOptions { instances: 1, ..SchedulerOptions::default() };
+    let batch_opts = SchedulerOptions { instances: 1, max_batch: 4, ..SchedulerOptions::default() };
+    let solo = run_trace(&cfg, &trace, &solo_opts, &mut cache);
+    let batched = run_trace(&cfg, &trace, &batch_opts, &mut cache);
+
+    let entry = cache.get(model);
+    let full = Executor::with_config(cfg.clone())
+        .run_program(&entry.program, None)
+        .unwrap()
+        .sim_cycles;
+    let marginal = marginal_service_cycles(&entry.program).max(1);
+    assert!(marginal <= full);
+
+    assert_eq!(makespan(&solo.completions), 12 * full);
+    assert_eq!(makespan(&batched.completions), 4 * full + 8 * marginal);
+    assert_eq!(batched.completions.iter().filter(|c| c.batch_index > 0).count(), 8);
+    if marginal < full {
+        assert!(
+            makespan(&batched.completions) < makespan(&solo.completions),
+            "batching must cut the saturated makespan when followers are cheaper"
+        );
+    }
 }
 
 #[test]
@@ -142,29 +337,36 @@ fn prop_same_seed_produces_identical_reports() {
         let opts = ServeOptions {
             models: random_models(rng),
             requests: rng.usize(1, 30),
-            instances: rng.usize(1, 4),
             mean_gap_cycles: rng.int(0, 1_000_000) as u64,
             seed: rng.next_u64(),
+            priority_mix: random_mix(rng),
+            scheduler: random_scheduler(rng),
         };
         let a = serve_with_cache(&cfg, &opts, &mut cache);
         let b = serve_with_cache(&cfg, &opts, &mut cache);
-        assert_eq!(a, b, "same seed + same trace must give identical ServeReport");
+        assert_eq!(
+            a, b,
+            "same seed + same trace + same scheduler options must give identical ServeReport"
+        );
     });
 }
 
-/// The acceptance scenario from the issue: a 200-request mixed trace over
-/// 3 zoo models and 2 virtual NPU instances, ≥50% cache hit rate, sane
-/// percentiles, and cold-cache rerun reproducibility.
+/// The acceptance scenario: a 200-request mixed-class trace over 3 zoo
+/// models and 2 virtual NPU instances, ≥50% cache hit rate, sane
+/// percentiles, no shedding with the default unbounded queue, and
+/// cold-cache rerun reproducibility.
 #[test]
 fn acceptance_200_request_mixed_trace() {
     let cfg = NeutronConfig::flagship_2tops();
     let opts = ServeOptions::default();
     assert!(opts.models.len() >= 3);
-    assert!(opts.instances >= 2);
+    assert!(opts.scheduler.instances >= 2);
     assert_eq!(opts.requests, 200);
 
     let r1 = serve(&cfg, &opts);
-    assert_eq!(r1.requests, 200);
+    assert_eq!(r1.offered, 200);
+    assert_eq!(r1.completed, 200);
+    assert_eq!(r1.shed, 0, "the default unbounded queue never sheds");
     assert_eq!(r1.cache_misses, opts.models.len() as u64);
     assert!(
         r1.cache_hit_rate() >= 0.5,
@@ -173,9 +375,12 @@ fn acceptance_200_request_mixed_trace() {
     );
     assert!(r1.p50_ms > 0.0);
     assert!(r1.p50_ms <= r1.p95_ms && r1.p95_ms <= r1.p99_ms);
-    assert!(r1.throughput_inf_s > 0.0);
+    assert!(r1.goodput_inf_s > 0.0);
+    assert!(r1.offered_load_inf_s > 0.0);
     assert!(r1.utilization() > 0.0 && r1.utilization() <= 1.0);
     assert_eq!(r1.per_model.iter().map(|m| m.requests).sum::<u64>(), 200);
+    assert_eq!(r1.per_class.iter().map(|c| c.completed).sum::<u64>(), 200);
+    assert_eq!(r1.per_class.iter().map(|c| c.shed).sum::<u64>(), 0);
 
     // Second cold-cache run: the whole report must reproduce bit-for-bit.
     let r2 = serve(&cfg, &opts);
@@ -183,4 +388,5 @@ fn acceptance_200_request_mixed_trace() {
 
     let s = r1.summary();
     assert!(s.contains("p50") && s.contains("hit rate"));
+    assert!(s.contains("goodput") && s.contains("shed"));
 }
