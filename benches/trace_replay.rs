@@ -1,0 +1,71 @@
+//! Bench: trace capture/replay overhead and calibration reporting —
+//! recording cost vs plain serving, JSONL serialize/parse throughput,
+//! replay cost with cold and warm compile caches, and the per-op-class
+//! predicted-vs-observed calibration table for the recorded workload.
+
+use eiq_neutron::arch::NeutronConfig;
+use eiq_neutron::serve::{serve_with_cache, CompileCache, SchedulerOptions, ServeOptions};
+use eiq_neutron::trace::{serve_recorded, ReplayDriver, Trace, ValidationReport};
+use eiq_neutron::util::bench::Bencher;
+
+fn main() {
+    let cfg = NeutronConfig::flagship_2tops();
+    let opts = ServeOptions {
+        requests: 200,
+        scheduler: SchedulerOptions {
+            instances: 2,
+            max_batch: 4,
+            dynamic_batch: true,
+            ..SchedulerOptions::default()
+        },
+        ..ServeOptions::default()
+    };
+    let b = Bencher::quick();
+
+    // Recording overhead: same scenario with and without the recorder,
+    // both on warm caches so the delta is pure observation cost.
+    let mut warm = CompileCache::for_serving(cfg.clone());
+    for &model in &opts.models {
+        warm.get(model);
+    }
+    b.bench("serve 200 req (warm cache, no recording)", || {
+        serve_with_cache(&cfg, &opts, &mut warm).goodput_inf_s
+    });
+    b.bench("serve 200 req (warm cache, recording)", || {
+        serve_recorded(&cfg, &opts, &mut warm).0.goodput_inf_s
+    });
+
+    // One canonical recording for the format + replay benches (fresh
+    // cache: the bit-identical-replay configuration).
+    let mut fresh = CompileCache::for_serving(cfg.clone());
+    let (report, trace) = serve_recorded(&cfg, &opts, &mut fresh);
+    let jsonl = trace.to_jsonl();
+    println!(
+        "\ntrace: {} requests, {} completions, {} model profiles, {} lines, {} KiB",
+        trace.requests.len(),
+        trace.completions.len(),
+        trace.model_ops.len(),
+        jsonl.lines().count(),
+        jsonl.len() / 1024
+    );
+
+    b.bench("serialize trace to JSONL", || trace.to_jsonl().len());
+    b.bench("parse JSONL trace", || Trace::parse(&jsonl).unwrap().requests.len());
+
+    let driver = ReplayDriver::from_jsonl(&jsonl).expect("recorded trace parses");
+    b.bench("replay 200-req trace (cold cache)", || {
+        driver.replay(&cfg).unwrap().report.goodput_inf_s
+    });
+    b.bench("replay 200-req trace (warm cache)", || {
+        driver.replay_with_cache(&cfg, &mut warm).unwrap().report.goodput_inf_s
+    });
+
+    let replayed = driver.replay(&cfg).expect("replay");
+    assert!(replayed.matches_recording(), "bench trace must replay exactly");
+    assert_eq!(replayed.report, report, "replayed report must be bit-identical");
+    println!("\nreplayed report matches the recording bit-for-bit:\n{}", report.summary());
+
+    println!("timing-model calibration over the recorded workload:");
+    let validation = ValidationReport::from_trace(&trace).expect("trace has op profiles");
+    print!("{}", validation.table());
+}

@@ -6,6 +6,24 @@ cd "$(dirname "$0")"
 cargo build --release
 cargo build --release --benches
 cargo test -q
+
+# Trace record → replay smoke: a recorded `neutron serve` run must replay
+# to a byte-identical report (the virtual-clock contract, end to end
+# through the CLI and the JSONL file), and the trace must validate.
+smoke_dir=$(mktemp -d)
+trap 'rm -rf "$smoke_dir"' EXIT
+./target/release/neutron serve --requests 32 --instances 2 --queue-capacity 8 \
+    --max-batch 4 --dynamic-batch --seed 11 --mean-gap-cycles 200000 \
+    --record "$smoke_dir/trace.jsonl" > "$smoke_dir/recorded.txt"
+./target/release/neutron replay "$smoke_dir/trace.jsonl" > "$smoke_dir/replayed.txt"
+diff "$smoke_dir/recorded.txt" "$smoke_dir/replayed.txt"
+./target/release/neutron validate "$smoke_dir/trace.jsonl" > /dev/null
+# Degenerate knobs must be rejected loudly, not silently reinterpreted.
+if ./target/release/neutron serve --max-batch 0 >/dev/null 2>&1; then
+    echo "ERROR: 'neutron serve --max-batch 0' should have been rejected" >&2
+    exit 1
+fi
+echo "trace record/replay smoke OK"
 # Docs must not rot: fail on any rustdoc warning (missing docs in the
 # serve module, broken intra-doc links, …). Vendored stand-ins are not
 # documented (--no-deps + explicit package).

@@ -7,7 +7,7 @@
 //! copies line parallelism needs (Sec. IV-A).
 
 use crate::arch::{compute_cycles, ComputeCost, Format, JobGeometry, NeutronConfig, Transfer, TransferKind};
-use crate::ir::{Graph, Op, OpKind};
+use crate::ir::{Graph, Op, OpClass, OpKind};
 
 /// Static per-op facts the compiler passes share.
 #[derive(Debug, Clone)]
@@ -128,6 +128,85 @@ pub fn layer_latency_cycles(
     compute + halo
 }
 
+/// Per-op-class linear correction of the analytic cost model, fitted by
+/// the calibration pass (`trace/validate.rs`) from predicted-vs-observed
+/// per-op cycles. A class's corrected estimate is `scale · predicted`;
+/// [`CostCalibration::identity`] leaves every class untouched, so carrying
+/// a calibration is always optional.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostCalibration {
+    scales: Vec<(OpClass, f64)>,
+}
+
+impl Default for CostCalibration {
+    fn default() -> Self {
+        Self::identity()
+    }
+}
+
+impl CostCalibration {
+    /// The no-op calibration: every class scale is 1.0.
+    pub fn identity() -> Self {
+        Self { scales: Vec::new() }
+    }
+
+    /// Build from explicit `(class, scale)` pairs (later entries win).
+    /// Non-finite or non-positive scales are rejected: a degenerate fit
+    /// must never silently zero out a cost estimate.
+    pub fn from_scales(scales: &[(OpClass, f64)]) -> Self {
+        for &(class, s) in scales {
+            assert!(
+                s.is_finite() && s > 0.0,
+                "calibration scale for {class:?} must be finite and positive, got {s}"
+            );
+        }
+        Self { scales: scales.to_vec() }
+    }
+
+    /// Correction factor for one class (1.0 when unfitted).
+    pub fn scale_for(&self, class: OpClass) -> f64 {
+        self.scales
+            .iter()
+            .rev()
+            .find(|(c, _)| *c == class)
+            .map(|&(_, s)| s)
+            .unwrap_or(1.0)
+    }
+
+    /// Apply the class correction to a predicted cycle count (rounded to
+    /// the nearest cycle, floored at 1 for non-zero predictions so a
+    /// correction can never erase an op entirely).
+    pub fn apply(&self, class: OpClass, predicted_cycles: u64) -> u64 {
+        if predicted_cycles == 0 {
+            return 0;
+        }
+        let corrected = (predicted_cycles as f64 * self.scale_for(class)).round() as u64;
+        corrected.max(1)
+    }
+
+    /// True when no class carries a correction.
+    pub fn is_identity(&self) -> bool {
+        self.scales.is_empty()
+    }
+
+    /// The fitted `(class, scale)` pairs, in insertion order.
+    pub fn scales(&self) -> &[(OpClass, f64)] {
+        &self.scales
+    }
+}
+
+/// [`layer_latency_cycles`] with the per-op-class calibration applied —
+/// the opt-in corrected cost model.
+pub fn calibrated_layer_latency_cycles(
+    graph: &Graph,
+    op: &Op,
+    cfg: &NeutronConfig,
+    format: Format,
+    calibration: &CostCalibration,
+) -> u64 {
+    calibration.apply(op.class(), layer_latency_cycles(graph, op, cfg, format))
+}
+
 /// Cost of switching the stored format of a tensor between two ops (the
 /// "extra operators in the library" for format conversion, Sec. IV-A): a
 /// full TCM-to-TCM rewrite of the tensor.
@@ -184,6 +263,37 @@ mod tests {
         let line = layer_latency_cycles(&g, op, &cfg, Format::Line);
         let depth = layer_latency_cycles(&g, op, &cfg, Format::Depth);
         assert!(line < depth, "line={line} depth={depth}");
+    }
+
+    #[test]
+    fn calibration_identity_and_scaling() {
+        use crate::ir::OpClass;
+        let id = CostCalibration::identity();
+        assert!(id.is_identity());
+        assert_eq!(id.scale_for(OpClass::Conv), 1.0);
+        assert_eq!(id.apply(OpClass::Conv, 1_000), 1_000);
+        assert_eq!(id.apply(OpClass::Conv, 0), 0);
+
+        let cal = CostCalibration::from_scales(&[(OpClass::Conv, 1.5), (OpClass::Pool, 0.5)]);
+        assert!(!cal.is_identity());
+        assert_eq!(cal.apply(OpClass::Conv, 1_000), 1_500);
+        assert_eq!(cal.apply(OpClass::Pool, 1_000), 500);
+        // Unfitted classes pass through; tiny predictions never vanish.
+        assert_eq!(cal.apply(OpClass::Matmul, 777), 777);
+        assert_eq!(cal.apply(OpClass::Pool, 1), 1);
+
+        let g = graph_with_conv(32, 16, 64, 3);
+        let cfg = NeutronConfig::flagship_2tops();
+        let op = &g.ops[0];
+        let raw = layer_latency_cycles(&g, op, &cfg, Format::Depth);
+        let corrected = calibrated_layer_latency_cycles(&g, op, &cfg, Format::Depth, &cal);
+        assert_eq!(corrected, (raw as f64 * 1.5).round() as u64);
+    }
+
+    #[test]
+    #[should_panic(expected = "finite and positive")]
+    fn degenerate_calibration_scale_is_rejected() {
+        CostCalibration::from_scales(&[(crate::ir::OpClass::Conv, 0.0)]);
     }
 
     #[test]

@@ -11,7 +11,9 @@ pub mod scheduling;
 pub mod tiling;
 
 pub use allocation::{allocate, Allocation, Placement};
-pub use cost::{layer_latency_cycles, OpProfile};
+pub use cost::{
+    calibrated_layer_latency_cycles, layer_latency_cycles, CostCalibration, OpProfile,
+};
 pub use format::{select_formats, FormatPlan};
 pub use pipeline::{compile, Compiled, CompileOptions};
 pub use scheduling::{schedule, Schedule, SchedulingOptions, Tick};

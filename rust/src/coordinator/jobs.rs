@@ -78,6 +78,73 @@ impl JobProgram {
         total + tick_compute.max(tick_dm)
     }
 
+    /// Per-op observed service cycles under the tick timing model: each
+    /// barrier-delimited tick costs `max(compute, dm)`, attributed to the
+    /// tick's compute op. Compute-less ticks (prologue prefetches,
+    /// conversion copies) are attributed to the *next* compute op — the
+    /// transfer exists to feed it — and trailing compute-less ticks
+    /// (writebacks) to the last op. Sums to
+    /// `service_cycles_where(|_| true)` exactly, so the per-op breakdown
+    /// never disagrees with the total the serving layer charges.
+    ///
+    /// The trace recorder embeds this breakdown so `neutron validate` can
+    /// join compiler-predicted per-op cycles against what the executor
+    /// tick path actually observed.
+    pub fn per_op_tick_cycles(&self) -> Vec<(OpId, u64)> {
+        let mut per_op: Vec<(OpId, u64)> = Vec::new();
+        let mut charge = |op: OpId, cycles: u64, per_op: &mut Vec<(OpId, u64)>| {
+            match per_op.iter_mut().find(|(o, _)| *o == op) {
+                Some((_, c)) => *c += cycles,
+                None => per_op.push((op, cycles)),
+            }
+        };
+        let mut tick_compute = 0u64;
+        let mut tick_dm = 0u64;
+        let mut tick_op: Option<OpId> = None;
+        // Cycles of compute-less ticks waiting for the next compute op.
+        let mut orphan_cycles = 0u64;
+        for job in &self.jobs {
+            match job {
+                Job::Compute { op, cycles, .. } => {
+                    tick_compute += cycles;
+                    tick_op = Some(*op);
+                }
+                Job::Dma { cycles, .. } => tick_dm += cycles,
+                Job::V2p { .. } => {}
+                Job::Barrier => {
+                    let latency = tick_compute.max(tick_dm);
+                    match tick_op {
+                        Some(op) => charge(op, latency + orphan_cycles, &mut per_op),
+                        None => orphan_cycles += latency,
+                    }
+                    if tick_op.is_some() {
+                        orphan_cycles = 0;
+                    }
+                    tick_compute = 0;
+                    tick_dm = 0;
+                    tick_op = None;
+                }
+            }
+        }
+        // Unterminated trailing tick, then any leftover orphan cycles.
+        let latency = tick_compute.max(tick_dm);
+        match tick_op {
+            Some(op) => charge(op, latency + orphan_cycles, &mut per_op),
+            None => {
+                orphan_cycles += latency;
+                if orphan_cycles > 0 {
+                    match per_op.last_mut() {
+                        Some((_, c)) => *c += orphan_cycles,
+                        // Program with no compute at all: bucket under a
+                        // sentinel op so the total stays conserved.
+                        None => per_op.push((OpId(u32::MAX), orphan_cycles)),
+                    }
+                }
+            }
+        }
+        per_op
+    }
+
     /// Compute / DMA job counts.
     pub fn job_counts(&self) -> (usize, usize) {
         let c = self.jobs.iter().filter(|j| matches!(j, Job::Compute { .. })).count();
@@ -140,6 +207,63 @@ mod tests {
         let (comp, dma) = p.job_counts();
         assert_eq!(comp, c.program.steps.len());
         assert!(dma > 0);
+    }
+
+    #[test]
+    fn per_op_tick_cycles_conserve_the_service_total() {
+        let g = zoo::mobilenet::mobilenet_v2();
+        let cfg = NeutronConfig::flagship_2tops();
+        let c = compile(&g, &cfg, &CompileOptions::default_partitioned());
+        let p = emit(&c, "m");
+        let per_op = p.per_op_tick_cycles();
+        assert!(!per_op.is_empty());
+        assert_eq!(
+            per_op.iter().map(|&(_, c)| c).sum::<u64>(),
+            p.service_cycles_where(|_| true),
+            "per-op breakdown must sum to the program's service time"
+        );
+        // No sentinel bucket for a real model program.
+        assert!(per_op.iter().all(|&(op, _)| op != crate::ir::OpId(u32::MAX)));
+    }
+
+    #[test]
+    fn per_op_tick_cycles_attribute_prologue_to_next_op() {
+        use crate::arch::{Format, TransferKind};
+        use crate::compiler::TileId;
+        use crate::ir::OpId;
+        // Prologue DMA tick (600), compute tick for op 0 (1000 vs 300 DMA),
+        // compute tick for op 1 (200), trailing writeback tick (50).
+        let p = JobProgram {
+            jobs: vec![
+                Job::Dma { tile: TileId(9), kind: TransferKind::Fetch, bytes: 1, cycles: 600 },
+                Job::Barrier,
+                Job::Dma { tile: TileId(1), kind: TransferKind::Fetch, bytes: 1, cycles: 300 },
+                Job::Compute {
+                    op: OpId(0),
+                    out_tile: TileId(0),
+                    in_tiles: vec![],
+                    param_tile: None,
+                    format: Format::Depth,
+                    cycles: 1_000,
+                },
+                Job::Barrier,
+                Job::Compute {
+                    op: OpId(1),
+                    out_tile: TileId(2),
+                    in_tiles: vec![],
+                    param_tile: None,
+                    format: Format::Depth,
+                    cycles: 200,
+                },
+                Job::Barrier,
+                Job::Dma { tile: TileId(0), kind: TransferKind::Push, bytes: 1, cycles: 50 },
+                Job::Barrier,
+            ],
+            model: "toy".into(),
+        };
+        let per_op = p.per_op_tick_cycles();
+        assert_eq!(per_op, vec![(OpId(0), 1_600), (OpId(1), 250)]);
+        assert_eq!(p.service_cycles_where(|_| true), 1_850);
     }
 
     #[test]

@@ -12,6 +12,6 @@ pub mod quant;
 pub mod tensor;
 
 pub use graph::{Graph, GraphBuilder};
-pub use op::{Activation, ConvGeometry, Op, OpId, OpKind, Padding, PoolKind};
+pub use op::{Activation, ConvGeometry, Op, OpClass, OpId, OpKind, Padding, PoolKind};
 pub use quant::{clamp_i8, QuantParams, Requant};
 pub use tensor::{DType, Shape, TensorId, TensorInfo, TensorKind};

@@ -112,6 +112,53 @@ pub enum OpKind {
     SpaceToDepth { block: usize },
 }
 
+/// Coarse operator class used by the timing-model calibration pass
+/// (`trace/validate.rs`): per-class predicted-vs-observed statistics are
+/// only meaningful when ops with the same cost structure are grouped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum OpClass {
+    /// Standard convolutions (dense dot-product work).
+    Conv,
+    /// Depthwise convolutions (per-channel dot products).
+    DepthwiseConv,
+    /// FC / matmul layers (1×1-conv lowering, Sec. IV-A).
+    Matmul,
+    /// Element-wise and standalone-activation ops (paired depthwise).
+    Elementwise,
+    /// Pooling (windowed and global).
+    Pool,
+    /// Softmax (activation-engine / host op).
+    Softmax,
+    /// Pure data movement (reshape, concat, resize, space-to-depth).
+    DataMovement,
+}
+
+impl OpClass {
+    /// Every class, in the fixed reporting order.
+    pub fn all() -> [OpClass; 7] {
+        use OpClass::*;
+        [Conv, DepthwiseConv, Matmul, Elementwise, Pool, Softmax, DataMovement]
+    }
+
+    /// Stable machine-readable name (also the trace-format spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            OpClass::Conv => "conv",
+            OpClass::DepthwiseConv => "depthwise",
+            OpClass::Matmul => "matmul",
+            OpClass::Elementwise => "elementwise",
+            OpClass::Pool => "pool",
+            OpClass::Softmax => "softmax",
+            OpClass::DataMovement => "data-movement",
+        }
+    }
+
+    /// Parse the [`OpClass::name`] spelling back.
+    pub fn parse(s: &str) -> Option<OpClass> {
+        OpClass::all().into_iter().find(|c| c.name() == s)
+    }
+}
+
 /// Unique op id inside a graph.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct OpId(pub u32);
@@ -148,6 +195,25 @@ impl Op {
                 | OpKind::SpaceToDepth { .. }
                 | OpKind::ResizeTo { .. }
         )
+    }
+
+    /// Calibration class of this op (see [`OpClass`]).
+    pub fn class(&self) -> OpClass {
+        match self.kind {
+            OpKind::Conv2d { .. } => OpClass::Conv,
+            OpKind::DepthwiseConv2d { .. } => OpClass::DepthwiseConv,
+            OpKind::FullyConnected { .. } | OpKind::MatMul { .. } => OpClass::Matmul,
+            OpKind::Add | OpKind::Mul | OpKind::ScalarAddMul | OpKind::ActivationOnly(_) => {
+                OpClass::Elementwise
+            }
+            OpKind::Pool { .. } | OpKind::GlobalAvgPool => OpClass::Pool,
+            OpKind::Softmax => OpClass::Softmax,
+            OpKind::Reshape
+            | OpKind::Concat
+            | OpKind::ResizeNearest { .. }
+            | OpKind::ResizeTo { .. }
+            | OpKind::SpaceToDepth { .. } => OpClass::DataMovement,
+        }
     }
 
     /// True if lowered as a depthwise-style op (each engine only needs its

@@ -8,7 +8,8 @@
 //! access-execute simulator, baseline NPU models, a PJRT runtime that
 //! executes AOT-lowered JAX/Pallas kernels for numerics, and a
 //! multi-tenant serving layer (compile cache + overload-aware
-//! virtual-clock scheduler over N simulated NPU instances).
+//! virtual-clock scheduler over N simulated NPU instances) with a trace
+//! capture/replay + timing-model calibration subsystem on top.
 //!
 //! See `README.md` for the architecture map and `docs/serving.md` for
 //! the serving layer's contract.
@@ -21,6 +22,7 @@ pub mod report;
 pub mod runtime;
 pub mod serve;
 pub mod sim;
+pub mod trace;
 pub mod cp;
 pub mod ir;
 pub mod util;

@@ -6,12 +6,15 @@
 //!   infer     [--requests N]                    e2e PJRT inference (needs artifacts)
 //!   serve     [--requests N] [--instances K] [--models a,b,c] [--seed S]
 //!             [--mean-gap-cycles G] [--queue-capacity C] [--policy reject-newest|drop-oldest]
-//!             [--max-batch B] [--age-after-cycles A] [--priority-mix R,S,B]
-//!                                               multi-tenant serving simulation
+//!             [--max-batch B] [--dynamic-batch] [--age-after-cycles A] [--priority-mix R,S,B]
+//!             [--record FILE]                   multi-tenant serving simulation
+//!   record    FILE [serve options]              serve + write a replayable JSONL trace
+//!   replay    FILE                              replay a recorded trace (bit-identical report)
+//!   validate  [FILE | --models a,b,c]           predicted-vs-observed per-op-class calibration
 //!   report    table1|table2|table3|table4|fig4|fig6|genai
 //!   list                                        list zoo models
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use eiq_neutron::arch::NeutronConfig;
 use eiq_neutron::compiler::{compile, CompileOptions};
@@ -19,9 +22,11 @@ use eiq_neutron::coordinator::{emit, Executor};
 use eiq_neutron::report;
 use eiq_neutron::runtime::{literal_i8, literal_to_i32s, Manifest, Runtime};
 use eiq_neutron::serve::{
-    serve, AdmissionPolicy, PriorityMix, SchedulerOptions, ServeOptions,
+    serve, AdmissionPolicy, CompileCache, PriorityMix, SchedulerOptions, ServeOptions,
+    MAX_MEAN_GAP_CYCLES,
 };
 use eiq_neutron::sim::{simulate, SimOptions};
+use eiq_neutron::trace::{serve_recorded, ReplayDriver, ValidationReport};
 use eiq_neutron::util::cli::Args;
 use eiq_neutron::zoo::ModelId;
 
@@ -39,17 +44,21 @@ fn main() -> Result<()> {
         Some("simulate") => cmd_simulate(&args),
         Some("infer") => cmd_infer(&args),
         Some("serve") => cmd_serve(&args),
+        Some("record") => cmd_record(&args),
+        Some("replay") => cmd_replay(&args),
+        Some("validate") => cmd_validate(&args),
         Some("report") => cmd_report(&args),
         other => {
             if let Some(o) = other {
                 eprintln!("unknown subcommand {o:?}");
             }
             eprintln!(
-                "usage: neutron <list|compile|simulate|infer|serve|report> \
+                "usage: neutron <list|compile|simulate|infer|serve|record|replay|validate|report> \
                  [--model NAME] [--monolithic] [--requests N] [--instances K] \
                  [--models a,b,c] [--seed S] [--mean-gap-cycles G] \
                  [--queue-capacity C] [--policy reject-newest|drop-oldest] \
-                 [--max-batch B] [--age-after-cycles A] [--priority-mix R,S,B]"
+                 [--max-batch B] [--dynamic-batch] [--age-after-cycles A] \
+                 [--priority-mix R,S,B] [--record FILE]"
             );
             Ok(())
         }
@@ -158,19 +167,8 @@ fn cmd_infer(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Numeric flag that bails on unparseable input instead of silently
-/// falling back to the default (a typo in an overload knob must not
-/// silently run a different experiment).
-fn strict_parse<T: std::str::FromStr>(args: &Args, key: &str, default: T) -> Result<T> {
-    match args.options.get(key) {
-        None => Ok(default),
-        Some(v) => v
-            .parse()
-            .map_err(|_| anyhow::anyhow!("--{key} wants a number, got {v:?}")),
-    }
-}
-
-fn cmd_serve(args: &Args) -> Result<()> {
+/// Parse the model list shared by `serve`, `record` and `validate`.
+fn models_from(args: &Args) -> Result<Vec<ModelId>> {
     let models_raw = args.opt("models", "mobilenet-v2,mobilenet-v1,efficientnet-lite0");
     let mut models = Vec::new();
     for name in models_raw.split(',').map(str::trim).filter(|s| !s.is_empty()) {
@@ -182,13 +180,48 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if models.is_empty() {
         bail!("--models needs at least one model");
     }
+    Ok(models)
+}
+
+/// Every flag the `serve` / `record` experiment surface understands
+/// (`out` is `record`'s alternative to the positional trace path).
+const SERVE_KEYS: [&str; 13] = [
+    "models",
+    "requests",
+    "mean-gap-cycles",
+    "seed",
+    "instances",
+    "queue-capacity",
+    "policy",
+    "max-batch",
+    "dynamic-batch",
+    "age-after-cycles",
+    "priority-mix",
+    "record",
+    "out",
+];
+
+/// Build `ServeOptions` from the command line under strict parsing: an
+/// unknown flag, a typo'd value or a degenerate knob (`--max-batch 0`,
+/// `--instances 0`, contradictory `--dynamic-batch` without batching
+/// headroom) is a clear error, never a silently different experiment —
+/// especially since `--record` stamps the knobs into the trace header as
+/// ground truth.
+fn serve_options_from(args: &Args) -> Result<ServeOptions> {
+    for key in args.options.keys().chain(args.flags.iter()) {
+        if !SERVE_KEYS.contains(&key.as_str()) {
+            bail!("unknown flag --{key} (known: --{})", SERVE_KEYS.join(", --"));
+        }
+    }
+    let models = models_from(args)?;
+    let strict = |e: String| anyhow!("{e}");
     // 0 means "unbounded" / "disabled" for the optional knobs, so plain
     // integer flags cover both shapes.
-    let queue_capacity = match strict_parse(args, "queue-capacity", 0usize)? {
+    let queue_capacity = match args.opt_strict("queue-capacity", 0usize).map_err(strict)? {
         0 => None,
         cap => Some(cap),
     };
-    let age_after_cycles = match strict_parse(args, "age-after-cycles", 0u64)? {
+    let age_after_cycles = match args.opt_strict("age-after-cycles", 0u64).map_err(strict)? {
         0 => None,
         age => Some(age),
     };
@@ -201,30 +234,127 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .split(',')
         .map(|w| w.trim().parse::<u32>())
         .collect::<Result<_, _>>()
-        .map_err(|_| anyhow::anyhow!("--priority-mix wants three integers, got {mix_raw:?}"))?;
+        .map_err(|_| anyhow!("--priority-mix wants three integers, got {mix_raw:?}"))?;
     let [realtime, standard, batch] = weights[..] else {
         bail!("--priority-mix wants realtime,standard,batch weights, got {mix_raw:?}");
     };
     if realtime as u64 + standard as u64 + batch as u64 == 0 {
         bail!("--priority-mix needs at least one non-zero weight");
     }
-    let opts = ServeOptions {
+    let mean_gap_cycles = args.opt_strict("mean-gap-cycles", 600_000u64).map_err(strict)?;
+    if mean_gap_cycles > MAX_MEAN_GAP_CYCLES {
+        bail!("--mean-gap-cycles {mean_gap_cycles} exceeds the maximum {MAX_MEAN_GAP_CYCLES}");
+    }
+    let max_batch = args.opt_strict_min("max-batch", 1usize, 1).map_err(strict)?;
+    let dynamic_batch = args.has_flag("dynamic-batch");
+    if dynamic_batch && max_batch < 2 {
+        bail!(
+            "contradictory knobs: --dynamic-batch needs batching headroom \
+             (--max-batch >= 2, got {max_batch})"
+        );
+    }
+    Ok(ServeOptions {
         models,
-        requests: strict_parse(args, "requests", 200)?,
-        mean_gap_cycles: strict_parse(args, "mean-gap-cycles", 600_000)?,
-        seed: strict_parse(args, "seed", 7)?,
+        requests: args.opt_strict("requests", 200usize).map_err(strict)?,
+        mean_gap_cycles,
+        seed: args.opt_strict("seed", 7u64).map_err(strict)?,
         priority_mix: PriorityMix { realtime, standard, batch },
         scheduler: SchedulerOptions {
-            instances: strict_parse(args, "instances", 2)?,
+            instances: args.opt_strict_min("instances", 2usize, 1).map_err(strict)?,
             queue_capacity,
             policy,
-            max_batch: strict_parse(args, "max-batch", 1)?,
+            max_batch,
+            dynamic_batch,
             age_after_cycles,
         },
-    };
+    })
+}
+
+/// Run the serve scenario, record it into `path`, and print the report —
+/// stdout carries exactly the report summary so `neutron replay` output
+/// can be diffed against it.
+fn serve_and_record(opts: &ServeOptions, path: &str) -> Result<()> {
+    // Fail on an unwritable trace path BEFORE the (possibly long) run, so
+    // a typo'd --record never throws the whole simulation away. The probe
+    // must not truncate: an existing trace stays intact until the new one
+    // is ready to replace it.
+    std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .map_err(|e| anyhow!("cannot write trace file {path:?}: {e}"))?;
     let cfg = NeutronConfig::flagship_2tops();
-    let report = serve(&cfg, &opts);
+    let mut cache = CompileCache::for_serving(cfg.clone());
+    let (report, trace) = serve_recorded(&cfg, opts, &mut cache);
+    // Report first: even if the write fails now, the run is not lost.
     print!("{}", report.summary());
+    std::fs::write(path, trace.to_jsonl())?;
+    eprintln!(
+        "recorded {} request(s), {} completion(s), {} model profile(s) to {path}",
+        trace.requests.len(),
+        trace.completions.len(),
+        trace.model_ops.len()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let opts = serve_options_from(args)?;
+    match args.options.get("record") {
+        Some(path) => serve_and_record(&opts, path),
+        None if args.has_flag("record") => bail!("--record wants a trace file path"),
+        None => {
+            let cfg = NeutronConfig::flagship_2tops();
+            print!("{}", serve(&cfg, &opts).summary());
+            Ok(())
+        }
+    }
+}
+
+fn cmd_record(args: &Args) -> Result<()> {
+    let Some(path) = args.positionals.first().cloned().or_else(|| args.options.get("out").cloned())
+    else {
+        bail!("usage: neutron record <trace.jsonl> [serve options]");
+    };
+    serve_and_record(&serve_options_from(args)?, &path)
+}
+
+fn cmd_replay(args: &Args) -> Result<()> {
+    let Some(path) = args.positionals.first() else {
+        bail!("usage: neutron replay <trace.jsonl>");
+    };
+    let text = std::fs::read_to_string(path)?;
+    let driver = ReplayDriver::from_jsonl(&text)?;
+    let cfg = NeutronConfig::flagship_2tops();
+    let outcome = driver.replay(&cfg)?;
+    print!("{}", outcome.report.summary());
+    if let Some(divergence) = outcome.divergence {
+        bail!(
+            "replay DIVERGED from the recording (timing model changed since capture?): \
+             {divergence}"
+        );
+    }
+    eprintln!("replay matches the recorded completions and shed set");
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    let cfg = NeutronConfig::flagship_2tops();
+    let report = match args.positionals.first() {
+        Some(path) => {
+            if args.options.contains_key("models") {
+                bail!(
+                    "pass either a trace file or --models, not both — a trace already \
+                     names the models it profiled"
+                );
+            }
+            let text = std::fs::read_to_string(path)?;
+            let trace = eiq_neutron::trace::Trace::parse(&text)?;
+            ValidationReport::from_trace(&trace)?
+        }
+        None => ValidationReport::from_models(&models_from(args)?, &cfg),
+    };
+    print!("{}", report.table());
     Ok(())
 }
 

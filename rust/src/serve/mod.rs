@@ -67,6 +67,6 @@ pub use queue::{
     SchedulerOptions, MAX_MEAN_GAP_CYCLES,
 };
 pub use server::{
-    run_trace, serve, serve_with_cache, ClassStats, ModelStats, ServeOptions, ServeReport,
-    TraceOutcome,
+    report_from_outcome, run_trace, run_trace_recorded, serve, serve_with_cache,
+    serve_with_cache_recorded, ClassStats, ModelStats, ServeOptions, ServeReport, TraceOutcome,
 };

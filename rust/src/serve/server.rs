@@ -7,6 +7,7 @@
 //! it with trace generation and report building.
 
 use crate::arch::NeutronConfig;
+use crate::trace::TraceRecorder;
 use crate::zoo::ModelId;
 
 use super::cache::CompileCache;
@@ -78,6 +79,9 @@ pub struct ClassStats {
     pub mean_latency_ms: f64,
     /// 99th-percentile end-to-end latency, milliseconds.
     pub p99_ms: f64,
+    /// 99.9th-percentile end-to-end latency, milliseconds — the tail the
+    /// trace-replay tooling compares against recorded tails.
+    pub p999_ms: f64,
 }
 
 /// Everything a trace run produced: completions, shed requests and
@@ -128,6 +132,8 @@ pub struct ServeReport {
     pub p95_ms: f64,
     /// 99th-percentile end-to-end latency, milliseconds.
     pub p99_ms: f64,
+    /// 99.9th-percentile end-to-end latency, milliseconds.
+    pub p999_ms: f64,
     /// Mean admission-queue wait, milliseconds.
     pub mean_queue_ms: f64,
     /// Multi-request batches dispatched.
@@ -209,8 +215,14 @@ impl ServeReport {
         .unwrap();
         writeln!(
             s,
-            "latency:      p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms  (mean {:.3} ms, queue {:.3} ms)",
-            self.p50_ms, self.p95_ms, self.p99_ms, self.mean_latency_ms, self.mean_queue_ms
+            "latency:      p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms  p99.9 {:.3} ms  \
+             (mean {:.3} ms, queue {:.3} ms)",
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+            self.p999_ms,
+            self.mean_latency_ms,
+            self.mean_queue_ms
         )
         .unwrap();
         writeln!(
@@ -222,12 +234,14 @@ impl ServeReport {
         for c in &self.per_class {
             writeln!(
                 s,
-                "  class {:<9} {:>5} done {:>5} shed  mean {:>8.3} ms  p99 {:>8.3} ms",
+                "  class {:<9} {:>5} done {:>5} shed  mean {:>8.3} ms  p99 {:>8.3} ms  \
+                 p99.9 {:>8.3} ms",
                 c.priority.display_name(),
                 c.completed,
                 c.shed,
                 c.mean_latency_ms,
-                c.p99_ms
+                c.p99_ms,
+                c.p999_ms
             )
             .unwrap();
         }
@@ -307,6 +321,23 @@ pub fn run_trace(
     scheduler_opts: &SchedulerOptions,
     cache: &mut CompileCache,
 ) -> TraceOutcome {
+    run_trace_recorded(cfg, trace, scheduler_opts, cache, None)
+}
+
+/// [`run_trace`] with an optional [`TraceRecorder`] hooked into the event
+/// loop: every offered request is recorded at admission time, every
+/// dispatched model's per-op tick profile is captured the first time its
+/// cached program is resolved, and the outcome (completions + shed set)
+/// is folded in at the end. Recording observes the run — it never changes
+/// a scheduling decision, so a recorded run's `TraceOutcome` is identical
+/// to an unrecorded one.
+pub fn run_trace_recorded(
+    cfg: &NeutronConfig,
+    trace: &[Request],
+    scheduler_opts: &SchedulerOptions,
+    cache: &mut CompileCache,
+    mut recorder: Option<&mut TraceRecorder>,
+) -> TraceOutcome {
     assert!(
         trace.windows(2).all(|w| w[0].arrival_cycles <= w[1].arrival_cycles),
         "trace arrivals must be non-decreasing"
@@ -316,19 +347,32 @@ pub fn run_trace(
     for &request in trace {
         while let Some(model) = scheduler.next_model_before(request.arrival_cycles) {
             let entry = cache.get(model);
+            if let Some(rec) = recorder.as_deref_mut() {
+                rec.record_model_profile(cfg, &entry);
+            }
             completions.extend(scheduler.dispatch_next(model, &entry.program));
+        }
+        if let Some(rec) = recorder.as_deref_mut() {
+            rec.record_request(&request);
         }
         scheduler.admit(request);
     }
     while let Some(model) = scheduler.next_model() {
         let entry = cache.get(model);
+        if let Some(rec) = recorder.as_deref_mut() {
+            rec.record_model_profile(cfg, &entry);
+        }
         completions.extend(scheduler.dispatch_next(model, &entry.program));
     }
-    TraceOutcome {
+    let outcome = TraceOutcome {
         completions,
         shed: scheduler.shed().to_vec(),
         per_instance_busy_cycles: scheduler.instances().iter().map(|i| i.busy_cycles()).collect(),
+    };
+    if let Some(rec) = recorder {
+        rec.record_outcome(&outcome);
     }
+    outcome
 }
 
 /// Serve a synthetic multi-tenant trace with a caller-owned cache (reuse
@@ -337,6 +381,20 @@ pub fn serve_with_cache(
     cfg: &NeutronConfig,
     opts: &ServeOptions,
     cache: &mut CompileCache,
+) -> ServeReport {
+    serve_with_cache_recorded(cfg, opts, cache, None)
+}
+
+/// [`serve_with_cache`] with an optional [`TraceRecorder`] observing the
+/// run. Recorded and unrecorded serving share this single code path, so
+/// "recording never changes the run" holds by construction; the trace
+/// capture front-end (`trace::serve_recorded`) wraps this with a
+/// recorder and returns the finished trace alongside the report.
+pub fn serve_with_cache_recorded(
+    cfg: &NeutronConfig,
+    opts: &ServeOptions,
+    cache: &mut CompileCache,
+    recorder: Option<&mut TraceRecorder>,
 ) -> ServeReport {
     assert!(!opts.models.is_empty(), "serving needs at least one model");
     let (hits0, misses0) = (cache.hits, cache.misses);
@@ -347,10 +405,11 @@ pub fn serve_with_cache(
         opts.seed,
         &opts.priority_mix,
     );
-    let outcome = run_trace(cfg, &trace, &opts.scheduler, cache);
-    build_report(
+    let outcome = run_trace_recorded(cfg, &trace, &opts.scheduler, cache, recorder);
+    report_from_outcome(
         cfg,
-        opts,
+        &opts.models,
+        opts.scheduler.instances,
         &trace,
         &outcome,
         cache.hits - hits0,
@@ -364,9 +423,16 @@ pub fn serve(cfg: &NeutronConfig, opts: &ServeOptions) -> ServeReport {
     serve_with_cache(cfg, opts, &mut cache)
 }
 
-fn build_report(
+/// Fold a [`TraceOutcome`] into a [`ServeReport`]. `models` fixes the
+/// per-model row order (duplicates collapse onto their first occurrence);
+/// `instances` is the fleet size the outcome ran on. Public so the trace
+/// replay driver builds reports through exactly the same code path as
+/// [`serve`] — bit-identical replay depends on there being one report
+/// builder.
+pub fn report_from_outcome(
     cfg: &NeutronConfig,
-    opts: &ServeOptions,
+    models: &[ModelId],
+    instances: usize,
     trace: &[Request],
     outcome: &TraceOutcome,
     cache_hits: u64,
@@ -407,7 +473,7 @@ fn build_report(
     // so duplicate entries in `models` stay deterministic).
     let mut per_model = Vec::new();
     let mut seen: Vec<ModelId> = Vec::new();
-    for &model in &opts.models {
+    for &model in models {
         if seen.contains(&model) {
             continue;
         }
@@ -455,6 +521,7 @@ fn build_report(
                     cycles_to_ms(lat.iter().sum::<u64>() as f64 / completed as f64, freq)
                 },
                 p99_ms: cycles_to_ms(percentile(&lat, 0.99) as f64, freq),
+                p999_ms: cycles_to_ms(percentile(&lat, 0.999) as f64, freq),
             }
         })
         .collect();
@@ -463,7 +530,7 @@ fn build_report(
         offered: trace.len() as u64,
         completed: n,
         shed: outcome.shed.len() as u64,
-        instances: opts.scheduler.instances,
+        instances,
         freq_ghz: freq,
         makespan_cycles: makespan,
         offered_load_inf_s: offered_load,
@@ -472,6 +539,7 @@ fn build_report(
         p50_ms: cycles_to_ms(percentile(&latencies, 0.50) as f64, freq),
         p95_ms: cycles_to_ms(percentile(&latencies, 0.95) as f64, freq),
         p99_ms: cycles_to_ms(percentile(&latencies, 0.99) as f64, freq),
+        p999_ms: cycles_to_ms(percentile(&latencies, 0.999) as f64, freq),
         mean_queue_ms: cycles_to_ms(mean_queue_cycles, freq),
         batches,
         batched_requests,
@@ -519,7 +587,7 @@ mod tests {
         assert_eq!(a.cache_hits, 22);
         assert!(a.cache_hit_rate() > 0.9);
         assert!(a.p50_ms > 0.0);
-        assert!(a.p50_ms <= a.p95_ms && a.p95_ms <= a.p99_ms);
+        assert!(a.p50_ms <= a.p95_ms && a.p95_ms <= a.p99_ms && a.p99_ms <= a.p999_ms);
         assert!(a.utilization() > 0.0 && a.utilization() <= 1.0);
         assert!(a.offered_load_inf_s > 0.0);
         assert_eq!(a.per_model.iter().map(|m| m.requests).sum::<u64>(), 24);
@@ -597,6 +665,7 @@ mod tests {
         assert_eq!(r.goodput_inf_s, 0.0);
         assert_eq!(r.offered_load_inf_s, 0.0);
         assert_eq!(r.p99_ms, 0.0);
+        assert_eq!(r.p999_ms, 0.0);
         assert_eq!(r.mean_latency_ms, 0.0);
         assert_eq!(r.utilization(), 0.0);
         assert_eq!(r.cache_hit_rate(), 0.0);

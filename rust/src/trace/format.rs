@@ -1,0 +1,993 @@
+//! Versioned, self-describing JSONL trace format (hand-rolled, no deps).
+//!
+//! A trace file is a sequence of JSON objects, **one per line**. The first
+//! non-empty line must be the header; every other line carries an `event`
+//! discriminator:
+//!
+//! | `event`   | meaning                                                    |
+//! |-----------|------------------------------------------------------------|
+//! | `header`  | format name + version, config fingerprint, scheduler knobs |
+//! | `request` | one offered request (arrival order == line order)          |
+//! | `shed`    | id of a request admission control shed                     |
+//! | `complete`| one completion record (dispatch order)                     |
+//! | `ops`     | per-op predicted vs tick-observed cycles for one model     |
+//!
+//! ## Versioning rules
+//!
+//! The header carries `"format": "eiq-neutron-trace"` and an integer
+//! `"version"`. A reader accepts **exactly** the versions it knows
+//! (currently only [`TRACE_FORMAT_VERSION`]) and rejects everything else —
+//! adding, removing or re-interpreting any field requires bumping the
+//! version. Unknown event types and malformed lines are hard errors (a
+//! trace is evidence; silently skipping lines would corrupt it), and every
+//! parse error names the offending line.
+//!
+//! The JSON subset is hand-rolled (see [`Json`]) so the trace subsystem
+//! adds no dependencies: objects, arrays, strings, booleans, null,
+//! unsigned 64-bit integers (cycle counts round-trip exactly) and floats
+//! (written in Rust's shortest round-trip form).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::ir::OpClass;
+use crate::serve::{AdmissionPolicy, Completion, Priority, Request, SchedulerOptions};
+use crate::zoo::ModelId;
+
+/// The trace format version this build reads and writes.
+pub const TRACE_FORMAT_VERSION: u64 = 1;
+
+/// The format name stamped into (and required from) every header.
+pub const TRACE_FORMAT_NAME: &str = "eiq-neutron-trace";
+
+// ---------------------------------------------------------------------------
+// Minimal JSON value
+// ---------------------------------------------------------------------------
+
+/// Minimal JSON value for the trace format. Integers are kept as `u64`
+/// (never coerced through `f64`), so virtual-clock cycle counts round-trip
+/// bit-exactly; object key order is preserved, so serialization is
+/// deterministic.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    /// `null`.
+    Null,
+    /// `true` / `false`.
+    Bool(bool),
+    /// A non-negative integer literal (no `.`, `e` or sign).
+    UInt(u64),
+    /// Any other numeric literal.
+    Float(f64),
+    /// A string.
+    Str(String),
+    /// An array.
+    Array(Vec<Json>),
+    /// An object, in insertion order.
+    Object(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Serialize (compact, no whitespace).
+    pub fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::UInt(v) => out.push_str(&v.to_string()),
+            Json::Float(v) => {
+                // Rust's shortest round-trip form; JSON has no NaN/Inf.
+                assert!(v.is_finite(), "cannot serialize non-finite float {v}");
+                out.push_str(&v.to_string());
+            }
+            Json::Str(s) => write_json_string(s, out),
+            Json::Array(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Object(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_json_string(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// Serialize to a fresh string.
+    pub fn to_string_compact(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    /// Parse one complete JSON value; trailing non-whitespace is an error.
+    pub fn parse(text: &str) -> Result<Json> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0, depth: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            bail!("trailing garbage at byte {}", p.pos);
+        }
+        Ok(v)
+    }
+
+    /// Object field lookup (`None` for non-objects / missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Object(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Required object field, with a named error.
+    pub fn req(&self, key: &str) -> Result<&Json> {
+        self.get(key).ok_or_else(|| anyhow!("missing field {key:?}"))
+    }
+
+    /// As `u64` (strict: only integer literals qualify).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::UInt(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// As `f64` (integer literals widen losslessly where they fit).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::UInt(v) => Some(*v as f64),
+            Json::Float(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// As `&str`.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// As `bool`.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// As array slice.
+    pub fn as_array(&self) -> Option<&[Json]> {
+        match self {
+            Json::Array(items) => Some(items),
+            _ => None,
+        }
+    }
+}
+
+fn write_json_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Recursion bound for nested arrays/objects: the parser recurses once
+/// per nesting level, so a corrupt (or hostile) line of thousands of `[`s
+/// must produce a parse error, not a stack overflow. Real trace lines
+/// nest 3 levels deep.
+const MAX_NESTING_DEPTH: usize = 64;
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    depth: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn enter(&mut self) -> Result<()> {
+        self.depth += 1;
+        if self.depth > MAX_NESTING_DEPTH {
+            bail!(
+                "nesting deeper than {MAX_NESTING_DEPTH} levels at byte {}",
+                self.pos
+            );
+        }
+        Ok(())
+    }
+
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            bail!("expected {:?} at byte {}", b as char, self.pos);
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b'-') | Some(b'0'..=b'9') => self.number(),
+            Some(b) => bail!("unexpected byte {:?} at {}", b as char, self.pos),
+            None => bail!("unexpected end of input at byte {}", self.pos),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            bail!("invalid literal at byte {}", self.pos);
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.enter()?;
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            self.depth -= 1;
+            return Ok(Json::Object(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let val = self.value()?;
+            fields.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    self.depth -= 1;
+                    return Ok(Json::Object(fields));
+                }
+                _ => bail!("expected ',' or '}}' at byte {}", self.pos),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.enter()?;
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            self.depth -= 1;
+            return Ok(Json::Array(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    self.depth -= 1;
+                    return Ok(Json::Array(items));
+                }
+                _ => bail!("expected ',' or ']' at byte {}", self.pos),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => bail!("unterminated string at byte {}", self.pos),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'u') => {
+                            let hex = self
+                                .bytes
+                                .get(self.pos + 1..self.pos + 5)
+                                .ok_or_else(|| anyhow!("truncated \\u escape"))?;
+                            let code = u32::from_str_radix(std::str::from_utf8(hex)?, 16)?;
+                            out.push(
+                                char::from_u32(code)
+                                    .ok_or_else(|| anyhow!("invalid \\u escape {code:#x}"))?,
+                            );
+                            self.pos += 4;
+                        }
+                        _ => bail!("invalid escape at byte {}", self.pos),
+                    }
+                    self.pos += 1;
+                }
+                // ASCII fast path — everything a real trace contains.
+                Some(b) if b < 0x80 => {
+                    if b < 0x20 {
+                        bail!("unescaped control character at byte {}", self.pos);
+                    }
+                    out.push(b as char);
+                    self.pos += 1;
+                }
+                Some(first) => {
+                    // Multi-byte UTF-8: decode just this character (the
+                    // sequence length comes from the leading byte, so
+                    // parsing stays linear in the line length).
+                    let len = match first {
+                        0xC0..=0xDF => 2,
+                        0xE0..=0xEF => 3,
+                        0xF0..=0xF7 => 4,
+                        _ => 1, // invalid leading byte; from_utf8 rejects it
+                    };
+                    let chunk = self
+                        .bytes
+                        .get(self.pos..self.pos + len)
+                        .ok_or_else(|| anyhow!("truncated UTF-8 at byte {}", self.pos))?;
+                    let c = std::str::from_utf8(chunk)?.chars().next().unwrap();
+                    out.push(c);
+                    self.pos += len;
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        let mut is_float = false;
+        if self.peek() == Some(b'-') {
+            is_float = true; // we never write negatives; parse as float
+            self.pos += 1;
+        }
+        while let Some(b) = self.peek() {
+            match b {
+                b'0'..=b'9' => self.pos += 1,
+                b'.' | b'e' | b'E' | b'+' | b'-' => {
+                    is_float = true;
+                    self.pos += 1;
+                }
+                _ => break,
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])?;
+        if is_float {
+            let v: f64 = text.parse().map_err(|e| anyhow!("bad number {text:?}: {e}"))?;
+            // f64::from_str saturates overflow to ±inf; JSON has no
+            // non-finite numbers, and Json::write asserts finiteness —
+            // reject here so a corrupt line is a parse error, not a
+            // panic at re-serialization time.
+            if !v.is_finite() {
+                bail!("non-finite number {text:?}");
+            }
+            Ok(Json::Float(v))
+        } else {
+            Ok(Json::UInt(text.parse::<u64>().map_err(|e| anyhow!("bad integer {text:?}: {e}"))?))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trace model
+// ---------------------------------------------------------------------------
+
+/// Header metadata: everything needed to replay the trace without the
+/// original command line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceMeta {
+    /// Format version the file was parsed from (informational — the
+    /// writer always stamps [`TRACE_FORMAT_VERSION`], and the parser
+    /// accepts only that version, so this always equals the constant).
+    pub version: u64,
+    /// FNV-1a fingerprint of the `NeutronConfig` the run simulated
+    /// (replay refuses a mismatching config — the timing would differ).
+    pub config_fingerprint: u64,
+    /// Core clock of the recording run, GHz (informational; replay uses
+    /// the live config, which the fingerprint pins).
+    pub freq_ghz: f64,
+    /// Trace PRNG seed of the recording run (informational for replays —
+    /// the requests themselves are recorded).
+    pub seed: u64,
+    /// Tenant model list, in the report's per-model row order.
+    pub models: Vec<ModelId>,
+    /// Scheduler knobs the run used (replay re-applies them).
+    pub scheduler: SchedulerOptions,
+}
+
+/// Per-op predicted-vs-observed cycles for one compiled model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OpRecord {
+    /// Op id inside the model's IR graph.
+    pub op: u32,
+    /// Calibration class of the op.
+    pub class: OpClass,
+    /// Compiler-predicted cycles (analytic cost model, `compiler/cost.rs`).
+    pub predicted_cycles: u64,
+    /// Cycles the tick timing model attributed to this op
+    /// (`JobProgram::per_op_tick_cycles`).
+    pub observed_cycles: u64,
+}
+
+/// The per-op breakdown of one model's cached program.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelOps {
+    /// The model these rows profile.
+    pub model: ModelId,
+    /// One record per compute op, in first-execution order.
+    pub ops: Vec<OpRecord>,
+}
+
+/// A complete recorded serving run: offered requests (arrival order),
+/// shed ids, completions (dispatch order) and per-model op profiles.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    /// Header metadata.
+    pub meta: TraceMeta,
+    /// Every offered request, in arrival (admission) order — including
+    /// requests that were later shed, so a replay reproduces the shedding
+    /// decisions itself.
+    pub requests: Vec<Request>,
+    /// Ids of requests shed by admission control, in shedding order.
+    pub shed_ids: Vec<u64>,
+    /// Completion records, in dispatch order (batches contiguous).
+    pub completions: Vec<Completion>,
+    /// Per-model predicted-vs-observed op cycles (one entry per model
+    /// that was dispatched at least once).
+    pub model_ops: Vec<ModelOps>,
+}
+
+impl Trace {
+    /// Serialize to JSONL (header first, then requests, shed ids,
+    /// completions and model profiles — parse order is free, but this
+    /// order keeps files diffable).
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        let mut line = |j: &Json, out: &mut String| {
+            j.write(out);
+            out.push('\n');
+        };
+        line(&self.header_json(), &mut out);
+        for r in &self.requests {
+            line(&request_json(r), &mut out);
+        }
+        for &id in &self.shed_ids {
+            line(
+                &Json::Object(vec![
+                    ("event".into(), Json::Str("shed".into())),
+                    ("id".into(), Json::UInt(id)),
+                ]),
+                &mut out,
+            );
+        }
+        for c in &self.completions {
+            line(&completion_json(c), &mut out);
+        }
+        for m in &self.model_ops {
+            line(&model_ops_json(m), &mut out);
+        }
+        out
+    }
+
+    fn header_json(&self) -> Json {
+        let m = &self.meta;
+        Json::Object(vec![
+            ("event".into(), Json::Str("header".into())),
+            ("format".into(), Json::Str(TRACE_FORMAT_NAME.into())),
+            // Always the constant: a writer can only produce the format
+            // this build implements, whatever a caller put in `meta`.
+            ("version".into(), Json::UInt(TRACE_FORMAT_VERSION)),
+            ("config_fingerprint".into(), Json::UInt(m.config_fingerprint)),
+            ("freq_ghz".into(), Json::Float(m.freq_ghz)),
+            ("seed".into(), Json::UInt(m.seed)),
+            (
+                "models".into(),
+                Json::Array(m.models.iter().map(|id| Json::Str(id.slug().into())).collect()),
+            ),
+            ("instances".into(), Json::UInt(m.scheduler.instances as u64)),
+            // 0 encodes "unbounded" / "disabled", the CLI convention.
+            (
+                "queue_capacity".into(),
+                Json::UInt(m.scheduler.queue_capacity.unwrap_or(0) as u64),
+            ),
+            ("policy".into(), Json::Str(m.scheduler.policy.display_name().into())),
+            ("max_batch".into(), Json::UInt(m.scheduler.max_batch as u64)),
+            ("dynamic_batch".into(), Json::Bool(m.scheduler.dynamic_batch)),
+            (
+                "age_after_cycles".into(),
+                Json::UInt(m.scheduler.age_after_cycles.unwrap_or(0)),
+            ),
+        ])
+    }
+
+    /// Parse a JSONL trace. Strict: the first non-empty line must be a
+    /// header with the exact format name and a supported version; every
+    /// other line must be a known event with all required fields; any
+    /// malformed line fails the whole parse with its line number.
+    pub fn parse(text: &str) -> Result<Trace> {
+        let mut meta: Option<TraceMeta> = None;
+        let mut requests = Vec::new();
+        let mut shed_ids = Vec::new();
+        let mut completions = Vec::new();
+        let mut model_ops = Vec::new();
+
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            if raw.trim().is_empty() {
+                continue;
+            }
+            let j = Json::parse(raw).map_err(|e| anyhow!("trace line {lineno}: {e}"))?;
+            let event = j
+                .req("event")
+                .and_then(|e| {
+                    e.as_str().ok_or_else(|| anyhow!("field \"event\" must be a string"))
+                })
+                .map_err(|e| anyhow!("trace line {lineno}: {e}"))?
+                .to_string();
+            let parsed: Result<()> = (|| {
+                match event.as_str() {
+                    "header" => {
+                        if meta.is_some() {
+                            bail!("duplicate header");
+                        }
+                        meta = Some(parse_header(&j)?);
+                    }
+                    "request" => requests.push(parse_request(&j)?),
+                    "shed" => {
+                        reject_unknown_fields(&j, &["event", "id"])?;
+                        shed_ids.push(u64_field(&j, "id")?);
+                    }
+                    "complete" => completions.push(parse_completion(&j)?),
+                    "ops" => model_ops.push(parse_model_ops(&j)?),
+                    other => bail!("unknown event {other:?}"),
+                }
+                Ok(())
+            })();
+            parsed.map_err(|e| anyhow!("trace line {lineno}: {e}"))?;
+            if meta.is_none() {
+                bail!("trace line {lineno}: first line must be the header");
+            }
+        }
+        let meta = meta.ok_or_else(|| anyhow!("empty trace: no header line"))?;
+        Ok(Trace { meta, requests, shed_ids, completions, model_ops })
+    }
+}
+
+/// Strict field check: a version-1 object may carry exactly the version-1
+/// keys. Tolerating extras would make the versioning rule ("adding a
+/// field requires a bump") unenforceable and would break the byte-exact
+/// re-render property (`parse(x).to_jsonl() == x`).
+fn reject_unknown_fields(j: &Json, known: &[&str]) -> Result<()> {
+    if let Json::Object(fields) = j {
+        for (k, _) in fields {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown field {k:?} (adding fields requires a format version bump)");
+            }
+        }
+    }
+    Ok(())
+}
+
+fn u64_field(j: &Json, key: &str) -> Result<u64> {
+    j.req(key)?
+        .as_u64()
+        .ok_or_else(|| anyhow!("field {key:?} must be an unsigned integer"))
+}
+
+fn str_field<'a>(j: &'a Json, key: &str) -> Result<&'a str> {
+    j.req(key)?
+        .as_str()
+        .ok_or_else(|| anyhow!("field {key:?} must be a string"))
+}
+
+fn model_field(j: &Json, key: &str) -> Result<ModelId> {
+    let name = str_field(j, key)?;
+    ModelId::parse(name).ok_or_else(|| anyhow!("unknown model {name:?}"))
+}
+
+fn class_field(j: &Json, key: &str) -> Result<Priority> {
+    let name = str_field(j, key)?;
+    Priority::parse(name).ok_or_else(|| anyhow!("unknown priority class {name:?}"))
+}
+
+fn parse_header(j: &Json) -> Result<TraceMeta> {
+    reject_unknown_fields(
+        j,
+        &[
+            "event",
+            "format",
+            "version",
+            "config_fingerprint",
+            "freq_ghz",
+            "seed",
+            "models",
+            "instances",
+            "queue_capacity",
+            "policy",
+            "max_batch",
+            "dynamic_batch",
+            "age_after_cycles",
+        ],
+    )?;
+    let format = str_field(j, "format")?;
+    if format != TRACE_FORMAT_NAME {
+        bail!("not a {TRACE_FORMAT_NAME} file (format {format:?})");
+    }
+    let version = u64_field(j, "version")?;
+    if version != TRACE_FORMAT_VERSION {
+        bail!(
+            "unsupported trace format version {version} (this build reads only \
+             version {TRACE_FORMAT_VERSION})"
+        );
+    }
+    let models = j
+        .req("models")?
+        .as_array()
+        .ok_or_else(|| anyhow!("field \"models\" must be an array"))?
+        .iter()
+        .map(|m| {
+            let name = m.as_str().ok_or_else(|| anyhow!("model entries must be strings"))?;
+            ModelId::parse(name).ok_or_else(|| anyhow!("unknown model {name:?}"))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    if models.is_empty() {
+        bail!("header must name at least one model");
+    }
+    let policy_name = str_field(j, "policy")?;
+    let policy = AdmissionPolicy::parse(policy_name)
+        .ok_or_else(|| anyhow!("unknown admission policy {policy_name:?}"))?;
+    let instances = u64_field(j, "instances")? as usize;
+    let max_batch = u64_field(j, "max_batch")? as usize;
+    if instances == 0 || max_batch == 0 {
+        bail!("degenerate scheduler knobs: instances and max_batch must be >= 1");
+    }
+    let queue_capacity = match u64_field(j, "queue_capacity")? as usize {
+        0 => None,
+        cap => Some(cap),
+    };
+    let age_after_cycles = match u64_field(j, "age_after_cycles")? {
+        0 => None,
+        age => Some(age),
+    };
+    let dynamic_batch = j
+        .req("dynamic_batch")?
+        .as_bool()
+        .ok_or_else(|| anyhow!("field \"dynamic_batch\" must be a boolean"))?;
+    Ok(TraceMeta {
+        version,
+        config_fingerprint: u64_field(j, "config_fingerprint")?,
+        freq_ghz: j
+            .req("freq_ghz")?
+            .as_f64()
+            .ok_or_else(|| anyhow!("field \"freq_ghz\" must be a number"))?,
+        seed: u64_field(j, "seed")?,
+        models,
+        scheduler: SchedulerOptions {
+            instances,
+            queue_capacity,
+            policy,
+            max_batch,
+            dynamic_batch,
+            age_after_cycles,
+        },
+    })
+}
+
+fn request_json(r: &Request) -> Json {
+    Json::Object(vec![
+        ("event".into(), Json::Str("request".into())),
+        ("id".into(), Json::UInt(r.id)),
+        ("model".into(), Json::Str(r.model.slug().into())),
+        ("class".into(), Json::Str(r.priority.display_name().into())),
+        ("arrival_cycles".into(), Json::UInt(r.arrival_cycles)),
+    ])
+}
+
+fn parse_request(j: &Json) -> Result<Request> {
+    reject_unknown_fields(j, &["event", "id", "model", "class", "arrival_cycles"])?;
+    Ok(Request {
+        id: u64_field(j, "id")?,
+        model: model_field(j, "model")?,
+        priority: class_field(j, "class")?,
+        arrival_cycles: u64_field(j, "arrival_cycles")?,
+    })
+}
+
+fn completion_json(c: &Completion) -> Json {
+    Json::Object(vec![
+        ("event".into(), Json::Str("complete".into())),
+        ("id".into(), Json::UInt(c.id)),
+        ("model".into(), Json::Str(c.model.slug().into())),
+        ("class".into(), Json::Str(c.priority.display_name().into())),
+        ("instance".into(), Json::UInt(c.instance as u64)),
+        ("batch_index".into(), Json::UInt(c.batch_index as u64)),
+        ("arrival_cycles".into(), Json::UInt(c.arrival_cycles)),
+        ("start_cycles".into(), Json::UInt(c.start_cycles)),
+        ("finish_cycles".into(), Json::UInt(c.finish_cycles)),
+    ])
+}
+
+fn parse_completion(j: &Json) -> Result<Completion> {
+    reject_unknown_fields(
+        j,
+        &[
+            "event",
+            "id",
+            "model",
+            "class",
+            "instance",
+            "batch_index",
+            "arrival_cycles",
+            "start_cycles",
+            "finish_cycles",
+        ],
+    )?;
+    Ok(Completion {
+        id: u64_field(j, "id")?,
+        model: model_field(j, "model")?,
+        priority: class_field(j, "class")?,
+        instance: u64_field(j, "instance")? as usize,
+        batch_index: u32::try_from(u64_field(j, "batch_index")?)
+            .map_err(|_| anyhow!("batch_index out of range"))?,
+        arrival_cycles: u64_field(j, "arrival_cycles")?,
+        start_cycles: u64_field(j, "start_cycles")?,
+        finish_cycles: u64_field(j, "finish_cycles")?,
+    })
+}
+
+fn model_ops_json(m: &ModelOps) -> Json {
+    Json::Object(vec![
+        ("event".into(), Json::Str("ops".into())),
+        ("model".into(), Json::Str(m.model.slug().into())),
+        (
+            "ops".into(),
+            Json::Array(
+                m.ops
+                    .iter()
+                    .map(|o| {
+                        Json::Object(vec![
+                            ("op".into(), Json::UInt(o.op as u64)),
+                            ("class".into(), Json::Str(o.class.name().into())),
+                            ("predicted_cycles".into(), Json::UInt(o.predicted_cycles)),
+                            ("observed_cycles".into(), Json::UInt(o.observed_cycles)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn parse_model_ops(j: &Json) -> Result<ModelOps> {
+    reject_unknown_fields(j, &["event", "model", "ops"])?;
+    let ops = j
+        .req("ops")?
+        .as_array()
+        .ok_or_else(|| anyhow!("field \"ops\" must be an array"))?
+        .iter()
+        .map(|o| {
+            reject_unknown_fields(o, &["op", "class", "predicted_cycles", "observed_cycles"])?;
+            let class_name = str_field(o, "class")?;
+            Ok(OpRecord {
+                op: u32::try_from(u64_field(o, "op")?)
+                    .map_err(|_| anyhow!("op id out of range"))?,
+                class: OpClass::parse(class_name)
+                    .ok_or_else(|| anyhow!("unknown op class {class_name:?}"))?,
+                predicted_cycles: u64_field(o, "predicted_cycles")?,
+                observed_cycles: u64_field(o, "observed_cycles")?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(ModelOps { model: model_field(j, "model")?, ops })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_round_trips_values() {
+        let v = Json::Object(vec![
+            ("a".into(), Json::UInt(u64::MAX)),
+            ("b".into(), Json::Float(0.8)),
+            ("c".into(), Json::Str("q\"\\\n\u{1}ü".into())),
+            ("d".into(), Json::Array(vec![Json::Null, Json::Bool(true), Json::UInt(0)])),
+            ("e".into(), Json::Object(vec![])),
+        ]);
+        let s = v.to_string_compact();
+        assert_eq!(Json::parse(&s).unwrap(), v);
+        // u64::MAX survives exactly (would be lossy through f64).
+        assert_eq!(
+            Json::parse(&s).unwrap().get("a").unwrap().as_u64(),
+            Some(u64::MAX)
+        );
+    }
+
+    #[test]
+    fn json_rejects_garbage() {
+        for bad in
+            ["", "{", "{\"a\":}", "[1,]", "nul", "\"open", "{}extra", "{\"a\" 1}", "1e999"]
+        {
+            assert!(Json::parse(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn json_rejects_pathological_nesting_without_overflowing() {
+        let deep = "[".repeat(100_000);
+        let err = Json::parse(&deep).unwrap_err().to_string();
+        assert!(err.contains("nesting"), "{err}");
+        // Reasonable nesting still parses.
+        let ok = format!("{}1{}", "[".repeat(32), "]".repeat(32));
+        assert!(Json::parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn json_parses_interop_forms() {
+        // Whitespace, escapes and floats a foreign writer might produce.
+        let j = Json::parse(" { \"x\" : [ 1 , 2.5e1 , \"\\u0041\\t\" ] } ").unwrap();
+        let arr = j.get("x").unwrap().as_array().unwrap();
+        assert_eq!(arr[0].as_u64(), Some(1));
+        assert_eq!(arr[1].as_f64(), Some(25.0));
+        assert_eq!(arr[2].as_str(), Some("A\t"));
+    }
+
+    #[test]
+    fn header_must_be_first_and_unique() {
+        let t = tiny_trace();
+        let jsonl = t.to_jsonl();
+        // Drop the header line entirely.
+        let body: String = jsonl.lines().skip(1).map(|l| format!("{l}\n")).collect();
+        let err = Trace::parse(&body).unwrap_err().to_string();
+        assert!(err.contains("header"), "{err}");
+        // Duplicate header.
+        let first = jsonl.lines().next().unwrap();
+        let dup = format!("{first}\n{jsonl}");
+        assert!(Trace::parse(&dup).unwrap_err().to_string().contains("duplicate header"));
+    }
+
+    #[test]
+    fn unknown_fields_are_rejected() {
+        let t = tiny_trace();
+        let jsonl = t.to_jsonl();
+        // Smuggle an extra field into a request line: a version-1 reader
+        // must refuse it (field additions require a version bump).
+        let tampered = jsonl.replace(
+            "\"event\":\"request\"",
+            "\"event\":\"request\",\"extra\":1",
+        );
+        assert_ne!(tampered, jsonl);
+        let err = Trace::parse(&tampered).unwrap_err().to_string();
+        assert!(err.contains("unknown field") && err.contains("extra"), "{err}");
+    }
+
+    #[test]
+    fn writer_always_stamps_the_supported_version() {
+        let mut t = tiny_trace();
+        t.meta.version = 99; // a caller cannot forge an unparseable file
+        let parsed = Trace::parse(&t.to_jsonl()).unwrap();
+        assert_eq!(parsed.meta.version, TRACE_FORMAT_VERSION);
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected() {
+        let t = tiny_trace();
+        let jsonl = t.to_jsonl().replace("\"version\":1", "\"version\":99");
+        let err = Trace::parse(&jsonl).unwrap_err().to_string();
+        assert!(err.contains("version 99"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_line_names_its_number() {
+        let t = tiny_trace();
+        let mut jsonl = t.to_jsonl();
+        jsonl.push_str("this is not json\n");
+        let lines = jsonl.lines().count();
+        let err = Trace::parse(&jsonl).unwrap_err().to_string();
+        assert!(err.contains(&format!("line {lines}")), "{err}");
+        // Unknown event type is also a hard error.
+        let mut with_unknown = t.to_jsonl();
+        with_unknown.push_str("{\"event\":\"mystery\"}\n");
+        let err = Trace::parse(&with_unknown).unwrap_err().to_string();
+        assert!(err.contains("unknown event"), "{err}");
+    }
+
+    fn tiny_trace() -> Trace {
+        Trace {
+            meta: TraceMeta {
+                version: TRACE_FORMAT_VERSION,
+                config_fingerprint: 42,
+                freq_ghz: 1.0,
+                seed: 7,
+                models: vec![ModelId::MobileNetV1],
+                scheduler: SchedulerOptions::default(),
+            },
+            requests: vec![Request {
+                id: 0,
+                model: ModelId::MobileNetV1,
+                priority: Priority::Standard,
+                arrival_cycles: 5,
+            }],
+            shed_ids: vec![],
+            completions: vec![Completion {
+                id: 0,
+                model: ModelId::MobileNetV1,
+                priority: Priority::Standard,
+                instance: 0,
+                batch_index: 0,
+                arrival_cycles: 5,
+                start_cycles: 5,
+                finish_cycles: 105,
+            }],
+            model_ops: vec![ModelOps {
+                model: ModelId::MobileNetV1,
+                ops: vec![OpRecord {
+                    op: 0,
+                    class: OpClass::Conv,
+                    predicted_cycles: 90,
+                    observed_cycles: 100,
+                }],
+            }],
+        }
+    }
+
+    #[test]
+    fn trace_round_trips() {
+        let t = tiny_trace();
+        let parsed = Trace::parse(&t.to_jsonl()).unwrap();
+        assert_eq!(parsed, t);
+    }
+}

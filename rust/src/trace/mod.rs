@@ -1,0 +1,36 @@
+//! Trace capture, replay and timing-model calibration.
+//!
+//! The serving layer simulates heavy multi-tenant traffic, and the
+//! compiler's CP formulation optimizes against an analytic per-operator
+//! cost model — but nothing in the base stack ever checks either against
+//! the other. This subsystem closes the loop, following the
+//! measure-then-model methodology of edge-AI benchmarking:
+//!
+//! * [`format`] — a versioned, self-describing JSONL trace format
+//!   (hand-rolled serializer/parser, zero new dependencies) recording
+//!   offered requests, completions, the shed set and per-operator
+//!   observed cycles;
+//! * [`record`] — a [`TraceRecorder`] hooked into the serving event loop
+//!   (`serve::run_trace_recorded`), so any `neutron serve` run can emit a
+//!   replayable trace (`--record`, or the `neutron record` subcommand);
+//! * [`replay`] — a [`ReplayDriver`] that feeds a recorded trace back
+//!   through the scheduler in place of the synthetic generator. Same
+//!   trace file + same config → **bit-identical** `ServeReport`
+//!   (cross-checked against the recorded completions, so timing-model
+//!   drift is detected);
+//! * [`validate`] — a calibration pass joining compiler-predicted per-op
+//!   cycles against the executor tick path's observations, reporting
+//!   per-op-class MAPE/bias tables and fitting the linear corrections
+//!   `compiler::CostCalibration` can apply (`neutron validate`).
+
+#![warn(missing_docs)]
+
+pub mod format;
+pub mod record;
+pub mod replay;
+pub mod validate;
+
+pub use format::{Json, ModelOps, OpRecord, Trace, TraceMeta, TRACE_FORMAT_NAME, TRACE_FORMAT_VERSION};
+pub use record::{profile_model_ops, serve_recorded, TraceRecorder};
+pub use replay::{ReplayDriver, ReplayOutcome};
+pub use validate::{ClassCalibrationRow, ValidationReport};

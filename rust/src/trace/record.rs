@@ -1,0 +1,187 @@
+//! Trace capture: a [`TraceRecorder`] hooked into the serving event loop
+//! (`serve::run_trace_recorded`) so any serve run can emit a replayable
+//! JSONL trace.
+//!
+//! The recorder is an observer: it never changes a scheduling decision.
+//! It captures three things — every offered request at admission time
+//! (arrival order), the outcome (completions in dispatch order + the shed
+//! set), and, the first time each model's cached program is resolved, that
+//! model's per-op predicted-vs-observed cycle profile: predictions from
+//! the analytic cost model (`compiler::layer_latency_cycles`) joined
+//! against the executor tick path's attribution
+//! (`JobProgram::per_op_tick_cycles`).
+
+use crate::arch::NeutronConfig;
+use crate::compiler::layer_latency_cycles;
+use crate::serve::{
+    config_fingerprint, serve_with_cache_recorded, CachedModel, CompileCache, Request,
+    SchedulerOptions, ServeOptions, ServeReport, TraceOutcome,
+};
+use crate::zoo::ModelId;
+
+use super::format::{ModelOps, OpRecord, Trace, TraceMeta, TRACE_FORMAT_VERSION};
+
+/// Records a serving run into a [`Trace`]. Create one per run, pass it to
+/// `serve::run_trace_recorded` (or use [`serve_recorded`]), then call
+/// [`TraceRecorder::finish`].
+pub struct TraceRecorder {
+    trace: Trace,
+}
+
+impl TraceRecorder {
+    /// Start a recording for a run over `models` under `scheduler` on
+    /// `cfg`. `seed` is informational (the actual requests are recorded).
+    pub fn new(
+        cfg: &NeutronConfig,
+        models: &[ModelId],
+        seed: u64,
+        scheduler: &SchedulerOptions,
+    ) -> Self {
+        Self {
+            trace: Trace {
+                meta: TraceMeta {
+                    version: TRACE_FORMAT_VERSION,
+                    config_fingerprint: config_fingerprint(cfg),
+                    freq_ghz: cfg.freq_ghz,
+                    seed,
+                    models: models.to_vec(),
+                    scheduler: scheduler.clone(),
+                },
+                requests: Vec::new(),
+                shed_ids: Vec::new(),
+                completions: Vec::new(),
+                model_ops: Vec::new(),
+            },
+        }
+    }
+
+    /// Record one offered request (called in admission order).
+    pub fn record_request(&mut self, request: &Request) {
+        self.trace.requests.push(*request);
+    }
+
+    /// Record a model's per-op cycle profile the first time its cached
+    /// program is dispatched; later calls for the same model are no-ops.
+    pub fn record_model_profile(&mut self, cfg: &NeutronConfig, entry: &CachedModel) {
+        if self.trace.model_ops.iter().any(|m| m.model == entry.model) {
+            return;
+        }
+        self.trace.model_ops.push(ModelOps {
+            model: entry.model,
+            ops: profile_model_ops(cfg, entry),
+        });
+    }
+
+    /// Fold the run's outcome in: completions (dispatch order) and the
+    /// ids of every shed request.
+    pub fn record_outcome(&mut self, outcome: &TraceOutcome) {
+        self.trace.completions.extend(outcome.completions.iter().copied());
+        self.trace.shed_ids.extend(outcome.shed.iter().map(|r| r.id));
+    }
+
+    /// The finished trace.
+    pub fn finish(self) -> Trace {
+        self.trace
+    }
+}
+
+/// Per-op predicted-vs-observed records for one cached model: observed
+/// cycles from the tick timing model's per-op attribution, predictions
+/// from the analytic layer cost under the format the compiler actually
+/// selected. The sentinel bucket `per_op_tick_cycles` uses for
+/// compute-free programs is skipped (real model programs never produce
+/// it).
+pub fn profile_model_ops(cfg: &NeutronConfig, entry: &CachedModel) -> Vec<OpRecord> {
+    let graph = entry.model.build();
+    entry
+        .program
+        .per_op_tick_cycles()
+        .into_iter()
+        .filter(|(op, _)| op.0 != u32::MAX)
+        .map(|(op_id, observed)| {
+            let op = graph.op(op_id);
+            let format = entry.compiled.formats.format_of(op_id);
+            OpRecord {
+                op: op_id.0,
+                class: op.class(),
+                predicted_cycles: layer_latency_cycles(&graph, op, cfg, format),
+                observed_cycles: observed,
+            }
+        })
+        .collect()
+}
+
+/// [`serve::serve_with_cache`](crate::serve::serve_with_cache) with
+/// recording: runs the synthetic trace described by `opts` and returns
+/// both the report and the replayable [`Trace`].
+///
+/// For the replayed report to be bit-identical (`neutron replay`), the
+/// recording run must start from a **fresh** cache — the report's
+/// cache-hit/miss counters are part of the comparison, and replay always
+/// compiles cold.
+pub fn serve_recorded(
+    cfg: &NeutronConfig,
+    opts: &ServeOptions,
+    cache: &mut CompileCache,
+) -> (ServeReport, Trace) {
+    let mut recorder = TraceRecorder::new(cfg, &opts.models, opts.seed, &opts.scheduler);
+    let report = serve_with_cache_recorded(cfg, opts, cache, Some(&mut recorder));
+    (report, recorder.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::serve_with_cache;
+
+    #[test]
+    fn recording_is_an_observer_and_captures_the_run() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let opts = ServeOptions {
+            models: vec![ModelId::MobileNetV3Min, ModelId::MobileNetV1],
+            requests: 16,
+            mean_gap_cycles: 300_000,
+            seed: 21,
+            scheduler: SchedulerOptions { instances: 2, ..SchedulerOptions::default() },
+            ..ServeOptions::default()
+        };
+        let mut cache = CompileCache::for_serving(cfg.clone());
+        let (recorded_report, trace) = serve_recorded(&cfg, &opts, &mut cache);
+        // An unrecorded run of the same scenario is unchanged by the
+        // recorder (fresh cache so the hit/miss deltas match too).
+        let mut cache2 = CompileCache::for_serving(cfg.clone());
+        let plain = serve_with_cache(&cfg, &opts, &mut cache2);
+        assert_eq!(recorded_report, plain, "recording must not perturb the run");
+
+        assert_eq!(trace.requests.len(), 16);
+        assert_eq!(trace.completions.len() + trace.shed_ids.len(), 16);
+        assert_eq!(trace.meta.models, opts.models);
+        assert_eq!(trace.meta.scheduler, opts.scheduler);
+        assert_eq!(trace.meta.config_fingerprint, config_fingerprint(&cfg));
+        // Every dispatched model carries an op profile whose observed
+        // cycles sum to the program's tick service time.
+        assert!(!trace.model_ops.is_empty() && trace.model_ops.len() <= 2);
+        for m in &trace.model_ops {
+            let entry = cache.get(m.model);
+            let total: u64 = m.ops.iter().map(|o| o.observed_cycles).sum();
+            assert_eq!(total, entry.program.service_cycles_where(|_| true));
+            assert!(m.ops.iter().all(|o| o.predicted_cycles > 0));
+        }
+    }
+
+    #[test]
+    fn model_profile_recorded_once_per_model() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let mut cache = CompileCache::for_serving(cfg.clone());
+        let entry = cache.get(ModelId::MobileNetV3Min);
+        let mut rec = TraceRecorder::new(
+            &cfg,
+            &[ModelId::MobileNetV3Min],
+            0,
+            &SchedulerOptions::default(),
+        );
+        rec.record_model_profile(&cfg, &entry);
+        rec.record_model_profile(&cfg, &entry);
+        assert_eq!(rec.finish().model_ops.len(), 1);
+    }
+}

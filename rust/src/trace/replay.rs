@@ -1,0 +1,203 @@
+//! Trace replay: feed a recorded trace back through the scheduler in
+//! place of the synthetic generator, preserving the virtual-clock
+//! determinism contract.
+//!
+//! Because every scheduling decision is a pure function of the request
+//! stream, the scheduler knobs and the config (see `serve/mod.rs`),
+//! replaying a trace on the config it was recorded against produces a
+//! **bit-identical** [`ServeReport`] — including every `f64` percentile —
+//! provided the replay compiles cold (the recorded report's cache
+//! counters assume a fresh cache, which `neutron serve` and `neutron
+//! record` use). The driver also cross-checks the replayed completions
+//! and shed set against the recording, so a drifted timing model (code
+//! changed since the trace was captured) is detected instead of silently
+//! reported.
+
+use anyhow::{bail, Result};
+
+use crate::arch::NeutronConfig;
+use crate::serve::{
+    config_fingerprint, report_from_outcome, run_trace, CompileCache, ServeReport,
+};
+
+use super::format::Trace;
+
+/// Result of a replay: the rebuilt report plus the recording cross-check.
+#[derive(Debug, Clone)]
+pub struct ReplayOutcome {
+    /// Report built from the replayed run through the same builder
+    /// `serve` uses.
+    pub report: ServeReport,
+    /// Description of the first divergence from the recorded completions
+    /// or shed set; `None` when the replay matches the recording (or the
+    /// trace carries no completions to compare against).
+    pub divergence: Option<String>,
+}
+
+impl ReplayOutcome {
+    /// Did the replay reproduce the recording exactly?
+    pub fn matches_recording(&self) -> bool {
+        self.divergence.is_none()
+    }
+}
+
+/// Replays a parsed [`Trace`] through the scheduler.
+pub struct ReplayDriver {
+    trace: Trace,
+}
+
+impl ReplayDriver {
+    /// Wrap an already-parsed trace.
+    pub fn new(trace: Trace) -> Self {
+        Self { trace }
+    }
+
+    /// Parse a JSONL trace and wrap it.
+    pub fn from_jsonl(text: &str) -> Result<Self> {
+        Ok(Self::new(Trace::parse(text)?))
+    }
+
+    /// The trace being replayed.
+    pub fn trace(&self) -> &Trace {
+        &self.trace
+    }
+
+    /// Replay on a fresh compile cache — the configuration under which
+    /// the report is bit-identical to the recording run's.
+    pub fn replay(&self, cfg: &NeutronConfig) -> Result<ReplayOutcome> {
+        let mut cache = CompileCache::for_serving(cfg.clone());
+        self.replay_with_cache(cfg, &mut cache)
+    }
+
+    /// Replay resolving programs through a caller-owned cache. Timing is
+    /// identical to [`ReplayDriver::replay`]; only the report's
+    /// cache-hit/miss counters differ when the cache is warm.
+    pub fn replay_with_cache(
+        &self,
+        cfg: &NeutronConfig,
+        cache: &mut CompileCache,
+    ) -> Result<ReplayOutcome> {
+        let meta = &self.trace.meta;
+        let live = config_fingerprint(cfg);
+        if live != meta.config_fingerprint {
+            bail!(
+                "config mismatch: trace was recorded on config fingerprint {:#x}, \
+                 replaying on {:#x} — the timing would not be comparable",
+                meta.config_fingerprint,
+                live
+            );
+        }
+        if !self
+            .trace
+            .requests
+            .windows(2)
+            .all(|w| w[0].arrival_cycles <= w[1].arrival_cycles)
+        {
+            bail!("trace request arrivals are not non-decreasing — corrupt or re-ordered file");
+        }
+        let (hits0, misses0) = (cache.hits, cache.misses);
+        let outcome = run_trace(cfg, &self.trace.requests, &meta.scheduler, cache);
+        let report = report_from_outcome(
+            cfg,
+            &meta.models,
+            meta.scheduler.instances,
+            &self.trace.requests,
+            &outcome,
+            cache.hits - hits0,
+            cache.misses - misses0,
+        );
+        let divergence = self.first_divergence(&outcome.completions, &outcome.shed);
+        Ok(ReplayOutcome { report, divergence })
+    }
+
+    /// First difference between the replayed run and the recorded one
+    /// (`None` when they agree, or when the trace has nothing recorded to
+    /// compare — e.g. a hand-written arrivals-only file).
+    fn first_divergence(
+        &self,
+        completions: &[crate::serve::Completion],
+        shed: &[crate::serve::Request],
+    ) -> Option<String> {
+        let rec = &self.trace;
+        if rec.completions.is_empty() && rec.shed_ids.is_empty() {
+            return None;
+        }
+        let replayed_shed: Vec<u64> = shed.iter().map(|r| r.id).collect();
+        if replayed_shed != rec.shed_ids {
+            return Some(format!(
+                "shed set diverged: recorded {:?}, replayed {:?}",
+                rec.shed_ids, replayed_shed
+            ));
+        }
+        if completions.len() != rec.completions.len() {
+            return Some(format!(
+                "completion count diverged: recorded {}, replayed {}",
+                rec.completions.len(),
+                completions.len()
+            ));
+        }
+        for (a, b) in rec.completions.iter().zip(completions) {
+            if a != b {
+                return Some(format!(
+                    "request {} diverged: recorded finish {} on instance {}, \
+                     replayed finish {} on instance {}",
+                    a.id, a.finish_cycles, a.instance, b.finish_cycles, b.instance
+                ));
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{SchedulerOptions, ServeOptions};
+    use crate::trace::serve_recorded;
+    use crate::zoo::ModelId;
+
+    fn small_opts() -> ServeOptions {
+        ServeOptions {
+            models: vec![ModelId::MobileNetV3Min, ModelId::MobileNetV1],
+            requests: 12,
+            mean_gap_cycles: 250_000,
+            seed: 5,
+            scheduler: SchedulerOptions { instances: 2, ..SchedulerOptions::default() },
+            ..ServeOptions::default()
+        }
+    }
+
+    #[test]
+    fn replay_reproduces_the_recorded_report_bit_for_bit() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let mut cache = CompileCache::for_serving(cfg.clone());
+        let (recorded, trace) = serve_recorded(&cfg, &small_opts(), &mut cache);
+        // Through the serialized form, as the CLI does.
+        let driver = ReplayDriver::from_jsonl(&trace.to_jsonl()).unwrap();
+        let replayed = driver.replay(&cfg).unwrap();
+        assert!(replayed.matches_recording(), "{:?}", replayed.divergence);
+        assert_eq!(replayed.report, recorded);
+    }
+
+    #[test]
+    fn replay_rejects_a_mismatching_config() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let mut cache = CompileCache::for_serving(cfg.clone());
+        let (_, trace) = serve_recorded(&cfg, &small_opts(), &mut cache);
+        let other = NeutronConfig::mcu_half_tops();
+        let err = ReplayDriver::new(trace).replay(&other).unwrap_err().to_string();
+        assert!(err.contains("config mismatch"), "{err}");
+    }
+
+    #[test]
+    fn tampered_trace_reports_divergence() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let mut cache = CompileCache::for_serving(cfg.clone());
+        let (_, mut trace) = serve_recorded(&cfg, &small_opts(), &mut cache);
+        // Pretend the recording saw a different finish time.
+        trace.completions[0].finish_cycles += 1;
+        let out = ReplayDriver::new(trace).replay(&cfg).unwrap();
+        assert!(!out.matches_recording());
+        assert!(out.divergence.unwrap().contains("diverged"));
+    }
+}

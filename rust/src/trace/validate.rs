@@ -1,0 +1,291 @@
+//! Timing-model calibration: join compiler-predicted per-op cycles
+//! against the sim-observed per-op tick cycles of a recorded trace (or of
+//! freshly compiled models), report per-op-class error statistics, and
+//! fit the per-class linear corrections `compiler::CostCalibration`
+//! applies.
+//!
+//! Statistics per [`OpClass`], in `OpClass::all()` order (classes with no
+//! ops are omitted):
+//!
+//! * **MAPE** — mean over ops of `|predicted − observed| / observed`, as
+//!   a percentage (ops whose observed cycles are 0 are excluded from the
+//!   mean; they cannot be scored multiplicatively);
+//! * **bias** — `(Σ observed / Σ predicted − 1)` as a percentage:
+//!   positive means the cost model under-predicts the class;
+//! * **scale** — least-squares fit through the origin of
+//!   `observed ≈ scale · predicted` (`Σ pred·obs / Σ pred²`), the
+//!   correction [`ValidationReport::calibration`] hands to the compiler.
+//!   Degenerate fits (no predicted cycles, non-finite or non-positive
+//!   slope) fall back to 1.0 so a calibration is always safe to apply.
+
+use anyhow::{bail, Result};
+
+use crate::arch::NeutronConfig;
+use crate::compiler::CostCalibration;
+use crate::ir::OpClass;
+use crate::serve::CompileCache;
+use crate::util::table::Table;
+use crate::zoo::ModelId;
+
+use super::format::Trace;
+use super::record::profile_model_ops;
+
+/// Per-class predicted-vs-observed statistics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassCalibrationRow {
+    /// The op class this row describes.
+    pub class: OpClass,
+    /// Ops of this class that were joined.
+    pub ops: usize,
+    /// Total compiler-predicted cycles across those ops.
+    pub predicted_cycles: u64,
+    /// Total sim-observed (tick-attributed) cycles across those ops.
+    pub observed_cycles: u64,
+    /// Mean absolute percentage error of the raw cost model.
+    pub mape_pct: f64,
+    /// Aggregate bias: positive = the model under-predicts this class.
+    pub bias_pct: f64,
+    /// Fitted linear correction (`observed ≈ scale · predicted`).
+    pub scale: f64,
+}
+
+/// The calibration pass's result: per-class rows plus the overall error
+/// before and after applying the fitted corrections.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ValidationReport {
+    /// One row per op class with at least one joined op.
+    pub rows: Vec<ClassCalibrationRow>,
+    /// MAPE over every scored op, raw cost model.
+    pub overall_mape_pct: f64,
+    /// MAPE over every scored op after applying the fitted per-class
+    /// scales — the number that shows the fit helped.
+    pub post_fit_mape_pct: f64,
+}
+
+impl ValidationReport {
+    /// Build from raw `(class, predicted, observed)` tuples.
+    pub fn from_pairs(pairs: &[(OpClass, u64, u64)]) -> Self {
+        let mut rows = Vec::new();
+        for class in OpClass::all() {
+            let of_class: Vec<&(OpClass, u64, u64)> =
+                pairs.iter().filter(|(c, _, _)| *c == class).collect();
+            if of_class.is_empty() {
+                continue;
+            }
+            let predicted: u64 = of_class.iter().map(|(_, p, _)| p).sum();
+            let observed: u64 = of_class.iter().map(|(_, _, o)| o).sum();
+            let scale = fit_scale(of_class.iter().map(|&&(_, p, o)| (p, o)));
+            rows.push(ClassCalibrationRow {
+                class,
+                ops: of_class.len(),
+                predicted_cycles: predicted,
+                observed_cycles: observed,
+                mape_pct: mape(of_class.iter().map(|&&(_, p, o)| (p as f64, o))),
+                bias_pct: if predicted == 0 {
+                    0.0
+                } else {
+                    (observed as f64 / predicted as f64 - 1.0) * 100.0
+                },
+                scale,
+            });
+        }
+        let scale_of = |class: OpClass| {
+            rows.iter().find(|r| r.class == class).map(|r| r.scale).unwrap_or(1.0)
+        };
+        ValidationReport {
+            overall_mape_pct: mape(pairs.iter().map(|&(_, p, o)| (p as f64, o))),
+            post_fit_mape_pct: mape(
+                pairs.iter().map(|&(c, p, o)| (p as f64 * scale_of(c), o)),
+            ),
+            rows,
+        }
+    }
+
+    /// Build from a recorded trace's per-model op profiles. Fails when
+    /// the trace carries no `ops` events (nothing was dispatched, or the
+    /// file was stripped).
+    pub fn from_trace(trace: &Trace) -> Result<Self> {
+        let pairs: Vec<(OpClass, u64, u64)> = trace
+            .model_ops
+            .iter()
+            .flat_map(|m| {
+                m.ops
+                    .iter()
+                    .map(|o| (o.class, o.predicted_cycles, o.observed_cycles))
+            })
+            .collect();
+        if pairs.is_empty() {
+            bail!("trace carries no per-op profiles (no model was ever dispatched)");
+        }
+        Ok(Self::from_pairs(&pairs))
+    }
+
+    /// Compile `models` under the deterministic serving options and
+    /// validate their cost predictions directly (no trace needed).
+    /// Duplicate entries collapse onto their first occurrence (matching
+    /// the serve report builder), so repeating a model never double-counts
+    /// its ops.
+    pub fn from_models(models: &[ModelId], cfg: &NeutronConfig) -> Self {
+        let mut cache = CompileCache::for_serving(cfg.clone());
+        let mut seen: Vec<ModelId> = Vec::new();
+        let mut pairs: Vec<(OpClass, u64, u64)> = Vec::new();
+        for &model in models {
+            if seen.contains(&model) {
+                continue;
+            }
+            seen.push(model);
+            let entry = cache.get(model);
+            pairs.extend(
+                profile_model_ops(cfg, &entry)
+                    .into_iter()
+                    .map(|o| (o.class, o.predicted_cycles, o.observed_cycles)),
+            );
+        }
+        Self::from_pairs(&pairs)
+    }
+
+    /// The fitted per-class corrections, ready for
+    /// `compiler::calibrated_layer_latency_cycles`.
+    pub fn calibration(&self) -> CostCalibration {
+        CostCalibration::from_scales(
+            &self.rows.iter().map(|r| (r.class, r.scale)).collect::<Vec<_>>(),
+        )
+    }
+
+    /// Render the paper-style predicted-vs-observed table plus the
+    /// overall MAPE before/after calibration.
+    pub fn table(&self) -> String {
+        let mut t = Table::new(&[
+            "op class",
+            "ops",
+            "predicted cyc",
+            "observed cyc",
+            "MAPE %",
+            "bias %",
+            "fit scale",
+        ]);
+        for r in &self.rows {
+            t.row(vec![
+                r.class.name().to_string(),
+                r.ops.to_string(),
+                r.predicted_cycles.to_string(),
+                r.observed_cycles.to_string(),
+                format!("{:.1}", r.mape_pct),
+                format!("{:+.1}", r.bias_pct),
+                format!("{:.3}", r.scale),
+            ]);
+        }
+        format!(
+            "{}overall MAPE: {:.1}%  →  {:.1}% after per-class calibration\n",
+            t.render(),
+            self.overall_mape_pct,
+            self.post_fit_mape_pct
+        )
+    }
+}
+
+/// MAPE (%) over `(predicted, observed)` pairs; pairs with zero observed
+/// cycles are skipped (0 when nothing is scorable).
+fn mape(pairs: impl Iterator<Item = (f64, u64)>) -> f64 {
+    let mut sum = 0.0;
+    let mut n = 0usize;
+    for (pred, obs) in pairs {
+        if obs == 0 {
+            continue;
+        }
+        sum += (pred - obs as f64).abs() / obs as f64;
+        n += 1;
+    }
+    if n == 0 {
+        0.0
+    } else {
+        sum / n as f64 * 100.0
+    }
+}
+
+/// Least-squares slope through the origin of `observed ≈ scale·predicted`;
+/// 1.0 for degenerate fits so the resulting calibration is always valid.
+fn fit_scale(pairs: impl Iterator<Item = (u64, u64)>) -> f64 {
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (pred, obs) in pairs {
+        num += pred as f64 * obs as f64;
+        den += (pred as f64) * (pred as f64);
+    }
+    let scale = num / den;
+    if scale.is_finite() && scale > 0.0 {
+        scale
+    } else {
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_predictions_fit_identity() {
+        let pairs = [
+            (OpClass::Conv, 1_000, 1_000),
+            (OpClass::Conv, 2_000, 2_000),
+            (OpClass::Pool, 500, 500),
+        ];
+        let v = ValidationReport::from_pairs(&pairs);
+        assert_eq!(v.overall_mape_pct, 0.0);
+        assert_eq!(v.post_fit_mape_pct, 0.0);
+        assert_eq!(v.rows.len(), 2, "only classes with ops get rows");
+        for r in &v.rows {
+            assert_eq!(r.mape_pct, 0.0);
+            assert_eq!(r.bias_pct, 0.0);
+            assert!((r.scale - 1.0).abs() < 1e-12);
+        }
+        assert!(v.calibration().is_identity() || v.calibration().scales().len() == 2);
+    }
+
+    #[test]
+    fn consistent_underprediction_is_fully_corrected() {
+        // Observed is exactly 2× predicted everywhere: the fit must find
+        // scale 2 and drive the post-fit MAPE to ~0.
+        let pairs = [
+            (OpClass::Conv, 1_000, 2_000),
+            (OpClass::Conv, 3_000, 6_000),
+            (OpClass::DepthwiseConv, 400, 800),
+        ];
+        let v = ValidationReport::from_pairs(&pairs);
+        assert!(v.overall_mape_pct > 99.0);
+        assert!(v.post_fit_mape_pct < 1e-9, "{}", v.post_fit_mape_pct);
+        for r in &v.rows {
+            assert!((r.scale - 2.0).abs() < 1e-9);
+            assert!((r.bias_pct - 100.0).abs() < 1e-9);
+        }
+        let cal = v.calibration();
+        assert_eq!(cal.apply(OpClass::Conv, 1_000), 2_000);
+    }
+
+    #[test]
+    fn degenerate_fits_fall_back_to_identity_scale() {
+        // Zero predictions: slope undefined → scale 1.0, calibration valid.
+        let v = ValidationReport::from_pairs(&[(OpClass::Softmax, 0, 700)]);
+        assert_eq!(v.rows.len(), 1);
+        assert_eq!(v.rows[0].scale, 1.0);
+        assert_eq!(v.rows[0].bias_pct, 0.0);
+        let _ = v.calibration(); // must not panic
+        // Zero observed: excluded from MAPE, not from the fit sums.
+        let v = ValidationReport::from_pairs(&[(OpClass::Pool, 500, 0)]);
+        assert_eq!(v.overall_mape_pct, 0.0);
+        assert_eq!(v.rows[0].scale, 1.0, "all-zero observed fits no positive slope");
+    }
+
+    #[test]
+    fn table_renders_classes_and_overall_lines() {
+        let v = ValidationReport::from_pairs(&[
+            (OpClass::Conv, 1_000, 1_100),
+            (OpClass::Matmul, 200, 180),
+        ]);
+        let s = v.table();
+        assert!(s.contains("conv") && s.contains("matmul"));
+        assert!(s.contains("overall MAPE"));
+        assert!(s.contains("after per-class calibration"));
+    }
+}

@@ -64,6 +64,40 @@ impl Args {
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name) || self.options.contains_key(name)
     }
+
+    /// Strict typed option: missing → `default`; present but unparseable →
+    /// `Err` naming the flag. Unlike [`Args::opt_parse`], a typo can never
+    /// silently fall back to the default and run a different experiment.
+    pub fn opt_strict<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key} wants a number, got {v:?}")),
+        }
+    }
+
+    /// [`Args::opt_strict`] with an inclusive lower bound on **explicit**
+    /// values: degenerate input (e.g. `--max-batch 0`, `--instances 0`)
+    /// is rejected with a clear error instead of panicking deep inside
+    /// the scheduler. A missing flag returns `default` untouched — the
+    /// bound constrains what the user typed, not the program's own
+    /// default (which may use an out-of-band sentinel like 0).
+    pub fn opt_strict_min<T>(&self, key: &str, default: T, min: T) -> Result<T, String>
+    where
+        T: std::str::FromStr + PartialOrd + std::fmt::Display,
+    {
+        let Some(raw) = self.options.get(key) else {
+            return Ok(default);
+        };
+        let v: T = raw
+            .parse()
+            .map_err(|_| format!("--{key} wants a number, got {raw:?}"))?;
+        if v < min {
+            return Err(format!("--{key} must be >= {min}, got {v}"));
+        }
+        Ok(v)
+    }
 }
 
 #[cfg(test)]
@@ -90,5 +124,32 @@ mod tests {
         assert_eq!(a.opt("model", "mobilenet-v2"), "mobilenet-v2");
         assert_eq!(a.opt_parse("n", 7i64), 7);
         assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn strict_parse_rejects_garbage_instead_of_defaulting() {
+        let a = args("serve --requests abc");
+        // The lenient accessor silently runs the default experiment…
+        assert_eq!(a.opt_parse("requests", 200usize), 200);
+        // …the strict one refuses, naming the flag.
+        let err = a.opt_strict("requests", 200usize).unwrap_err();
+        assert!(err.contains("--requests") && err.contains("abc"), "{err}");
+        // Missing flags still take the default.
+        assert_eq!(a.opt_strict("seed", 7u64).unwrap(), 7);
+        assert_eq!(a.opt_strict("requests", 0usize).is_ok(), false);
+    }
+
+    #[test]
+    fn strict_min_rejects_degenerate_values() {
+        let a = args("serve --max-batch 0 --instances 3");
+        let err = a.opt_strict_min("max-batch", 1usize, 1).unwrap_err();
+        assert!(err.contains("--max-batch") && err.contains(">= 1"), "{err}");
+        assert_eq!(a.opt_strict_min("instances", 2usize, 1).unwrap(), 3);
+        // A missing flag returns the default untouched, even when the
+        // default sits below the bound (sentinel defaults like 0 stay
+        // usable); garbage on a bounded flag is still a parse error.
+        assert_eq!(a.opt_strict_min("queue-capacity", 0usize, 1).unwrap(), 0);
+        let b = args("serve --instances nope");
+        assert!(b.opt_strict_min("instances", 2usize, 1).is_err());
     }
 }

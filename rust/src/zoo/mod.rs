@@ -79,6 +79,27 @@ impl ModelId {
         }
     }
 
+    /// Stable machine-readable name (kebab-case): the CLI and trace-format
+    /// spelling. [`ModelId::parse`] accepts every slug, so
+    /// `parse(slug()) == Some(self)` round-trips (tested below).
+    pub fn slug(self) -> &'static str {
+        use ModelId::*;
+        match self {
+            MobileNetV1 => "mobilenet-v1",
+            MobileNetV2 => "mobilenet-v2",
+            MobileNetV3Min => "mobilenet-v3",
+            ResNet50V1 => "resnet50",
+            EfficientNetLite0 => "efficientnet-lite0",
+            EfficientDetLite0 => "efficientdet-lite0",
+            YoloV8nDet => "yolov8n",
+            YoloV8s => "yolov8s",
+            YoloV8nSeg => "yolov8n-seg",
+            MobileNetV1Ssd => "mobilenet-v1-ssd",
+            MobileNetV2Ssd => "mobilenet-v2-ssd",
+            DamoYoloNl => "damo-yolo",
+        }
+    }
+
     /// Parse from a CLI string (kebab-case).
     pub fn parse(s: &str) -> Option<ModelId> {
         use ModelId::*;
@@ -156,5 +177,12 @@ mod tests {
     fn parse_round_trip() {
         assert_eq!(ModelId::parse("yolov8n-det"), Some(ModelId::YoloV8nDet));
         assert_eq!(ModelId::parse("nope"), None);
+    }
+
+    #[test]
+    fn slug_round_trips_through_parse() {
+        for id in ModelId::all() {
+            assert_eq!(ModelId::parse(id.slug()), Some(id), "{id:?}");
+        }
     }
 }

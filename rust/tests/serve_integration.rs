@@ -61,6 +61,7 @@ fn random_scheduler(rng: &mut Rng) -> SchedulerOptions {
             AdmissionPolicy::DropOldest
         },
         max_batch: rng.usize(1, 4),
+        dynamic_batch: rng.bool(),
         age_after_cycles: if rng.bool() { Some(rng.int(1, 500_000) as u64) } else { None },
     }
 }
@@ -258,6 +259,58 @@ fn prop_batching_never_changes_which_requests_complete() {
         // Followers pay the marginal service time, so batching can only
         // reduce the total cycles instances spend occupied.
         assert!(occupancy_total(&batched.completions) <= occupancy_total(&unbatched.completions));
+    });
+}
+
+#[test]
+fn prop_dynamic_batching_is_neutral_and_bounded_by_the_static_ceiling() {
+    // Dynamic batch sizing (ceiling scales with queue depth) keeps both
+    // batching invariants: it never changes WHICH requests complete (only
+    // when), never exceeds the static max_batch ceiling, and — like the
+    // serve suite's other knobs — is deterministic under a fixed seed.
+    let cfg = NeutronConfig::flagship_2tops();
+    let mut cache = CompileCache::for_serving(cfg.clone());
+    for_each_case(10, 0xD1BA, |rng| {
+        let models = random_models(rng);
+        let n = rng.usize(2, 40);
+        let gap = rng.int(0, 300_000) as u64;
+        let mix = random_mix(rng);
+        let trace = synthetic_trace_with_mix(&models, n, gap, rng.next_u64(), &mix);
+        let instances = rng.usize(1, 3);
+        let max_batch = rng.usize(2, 6);
+        let static_opts = SchedulerOptions {
+            instances,
+            max_batch,
+            dynamic_batch: false,
+            ..SchedulerOptions::default()
+        };
+        let dynamic_opts = SchedulerOptions { dynamic_batch: true, ..static_opts.clone() };
+        let fixed = run_trace(&cfg, &trace, &static_opts, &mut cache);
+        let dynamic = run_trace(&cfg, &trace, &dynamic_opts, &mut cache);
+
+        let ids = |o: &TraceOutcome| {
+            let mut v: Vec<u64> = o.completions.iter().map(|c| c.id).collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(ids(&fixed), ids(&dynamic), "dynamic sizing only re-times requests");
+        assert!(
+            dynamic.completions.iter().all(|c| (c.batch_index as usize) < max_batch),
+            "the static knob stays the ceiling"
+        );
+        // Batching (dynamic or static) only ever removes parameter-fetch
+        // work, so neither run can occupy instances longer than a
+        // batching-free one.
+        let plain_opts = SchedulerOptions {
+            instances,
+            ..SchedulerOptions::default()
+        };
+        let plain = run_trace(&cfg, &trace, &plain_opts, &mut cache);
+        assert!(occupancy_total(&dynamic.completions) <= occupancy_total(&plain.completions));
+        assert!(occupancy_total(&fixed.completions) <= occupancy_total(&plain.completions));
+        // Determinism: the same trace + knobs reproduce the run exactly.
+        let again = run_trace(&cfg, &trace, &dynamic_opts, &mut cache);
+        assert_eq!(dynamic, again);
     });
 }
 

@@ -1,0 +1,310 @@
+//! Integration + property tests for the trace subsystem: format
+//! round-trips (serialize → parse → identical trace), corrupt-line and
+//! version-mismatch rejection, record → replay bit-identical
+//! `ServeReport`s across random scheduler options, and timing-model
+//! validation whose per-op-class MAPE is computed from real sim ticks
+//! (the observed cycles in a trace must sum to exactly what the executor
+//! charges for the program).
+
+use eiq_neutron::arch::NeutronConfig;
+use eiq_neutron::coordinator::Executor;
+use eiq_neutron::ir::OpClass;
+use eiq_neutron::serve::{
+    AdmissionPolicy, Completion, CompileCache, Priority, PriorityMix, Request, SchedulerOptions,
+    ServeOptions,
+};
+use eiq_neutron::trace::{
+    serve_recorded, ModelOps, OpRecord, ReplayDriver, Trace, TraceMeta, ValidationReport,
+    TRACE_FORMAT_VERSION,
+};
+use eiq_neutron::util::prop::{for_each_case, Rng};
+use eiq_neutron::zoo::ModelId;
+
+/// Cheap zoo subset (mirrors the serve suite's pool).
+const POOL: [ModelId; 4] = [
+    ModelId::MobileNetV1,
+    ModelId::MobileNetV2,
+    ModelId::MobileNetV3Min,
+    ModelId::EfficientNetLite0,
+];
+
+fn random_models(rng: &mut Rng) -> Vec<ModelId> {
+    let k = rng.usize(1, POOL.len());
+    let start = rng.usize(0, POOL.len() - 1);
+    (0..k).map(|i| POOL[(start + i) % POOL.len()]).collect()
+}
+
+fn random_scheduler(rng: &mut Rng) -> SchedulerOptions {
+    SchedulerOptions {
+        instances: rng.usize(1, 4),
+        queue_capacity: if rng.bool() { Some(rng.usize(1, 8)) } else { None },
+        policy: if rng.bool() {
+            AdmissionPolicy::RejectNewest
+        } else {
+            AdmissionPolicy::DropOldest
+        },
+        max_batch: rng.usize(1, 6),
+        dynamic_batch: rng.bool(),
+        age_after_cycles: if rng.bool() { Some(rng.int(1, 500_000) as u64) } else { None },
+    }
+}
+
+fn random_priority(rng: &mut Rng) -> Priority {
+    *rng.choose(&Priority::all())
+}
+
+/// A structurally arbitrary (not necessarily schedulable) trace, for
+/// format round-trip testing: extreme u64 cycle values, every priority
+/// class and op class, optional shed/completion/ops sections.
+fn random_trace(rng: &mut Rng) -> Trace {
+    let models = random_models(rng);
+    let n = rng.usize(0, 20);
+    let mut clock = 0u64;
+    let requests: Vec<Request> = (0..n as u64)
+        .map(|id| {
+            clock = clock.saturating_add(rng.next_u64() >> rng.usize(8, 63));
+            Request {
+                id,
+                model: *rng.choose(&models),
+                priority: random_priority(rng),
+                arrival_cycles: clock,
+            }
+        })
+        .collect();
+    let mut completions: Vec<Completion> = Vec::new();
+    for (i, r) in requests.iter().enumerate() {
+        if !rng.bool() {
+            continue;
+        }
+        completions.push(Completion {
+            id: r.id,
+            model: r.model,
+            priority: r.priority,
+            instance: rng.usize(0, 3),
+            batch_index: rng.usize(0, 5) as u32,
+            arrival_cycles: r.arrival_cycles,
+            start_cycles: r.arrival_cycles.saturating_add(rng.next_u64() >> 40),
+            finish_cycles: r.arrival_cycles.saturating_add((rng.next_u64() >> 40) + i as u64 + 1),
+        });
+    }
+    let shed_ids: Vec<u64> = requests.iter().filter(|_| rng.bool()).map(|r| r.id).collect();
+    let model_ops: Vec<ModelOps> = models
+        .iter()
+        .map(|&model| ModelOps {
+            model,
+            ops: (0..rng.usize(0, 12) as u32)
+                .map(|op| OpRecord {
+                    op,
+                    class: *rng.choose(&OpClass::all()),
+                    predicted_cycles: rng.next_u64() >> rng.usize(0, 40),
+                    observed_cycles: rng.next_u64() >> rng.usize(0, 40),
+                })
+                .collect(),
+        })
+        .collect();
+    Trace {
+        meta: TraceMeta {
+            version: TRACE_FORMAT_VERSION,
+            config_fingerprint: rng.next_u64(),
+            freq_ghz: rng.f64() * 3.0 + 0.1,
+            seed: rng.next_u64(),
+            models,
+            scheduler: random_scheduler(rng),
+        },
+        requests,
+        shed_ids,
+        completions,
+        model_ops,
+    }
+}
+
+#[test]
+fn prop_trace_format_round_trips() {
+    // serialize → parse → identical trace, across arbitrary metadata,
+    // extreme u64 cycle counts, every priority and op class.
+    for_each_case(64, 0x7C4CE, |rng| {
+        let trace = random_trace(rng);
+        let jsonl = trace.to_jsonl();
+        let parsed = Trace::parse(&jsonl).unwrap_or_else(|e| panic!("parse failed: {e}"));
+        assert_eq!(parsed, trace, "round-trip must be lossless");
+        // Serialization is deterministic (byte-identical re-render).
+        assert_eq!(parsed.to_jsonl(), jsonl);
+    });
+}
+
+#[test]
+fn prop_corrupt_lines_are_rejected_with_their_line_number() {
+    for_each_case(24, 0xBAD1, |rng| {
+        let trace = random_trace(rng);
+        let jsonl = trace.to_jsonl();
+        let n_lines = jsonl.lines().count();
+        // Corrupt one random line (truncate it mid-JSON).
+        let victim = rng.usize(1, n_lines);
+        let corrupted: String = jsonl
+            .lines()
+            .enumerate()
+            .map(|(i, l)| {
+                if i + 1 == victim {
+                    format!("{}\n", &l[..l.len() / 2])
+                } else {
+                    format!("{l}\n")
+                }
+            })
+            .collect();
+        let err = Trace::parse(&corrupted).unwrap_err().to_string();
+        assert!(
+            err.contains(&format!("line {victim}")),
+            "error should name line {victim}: {err}"
+        );
+    });
+}
+
+#[test]
+fn version_mismatch_and_foreign_files_are_rejected() {
+    let mut rng = Rng::new(3);
+    let trace = random_trace(&mut rng);
+    let jsonl = trace.to_jsonl();
+    // Future version.
+    let future = jsonl.replace("\"version\":1", "\"version\":2");
+    let err = Trace::parse(&future).unwrap_err().to_string();
+    assert!(err.contains("version 2"), "{err}");
+    // Wrong format name.
+    let foreign = jsonl.replace("eiq-neutron-trace", "some-other-format");
+    assert!(Trace::parse(&foreign).is_err());
+    // Empty file.
+    assert!(Trace::parse("").unwrap_err().to_string().contains("header"));
+}
+
+fn random_serve_options(rng: &mut Rng) -> ServeOptions {
+    let mut scheduler = random_scheduler(rng);
+    // Keep property runtime bounded.
+    scheduler.instances = rng.usize(1, 2);
+    ServeOptions {
+        models: random_models(rng),
+        requests: rng.usize(1, 25),
+        mean_gap_cycles: rng.int(0, 1_000_000) as u64,
+        seed: rng.next_u64(),
+        priority_mix: PriorityMix { realtime: 1, standard: 2, batch: 1 },
+        scheduler,
+    }
+}
+
+#[test]
+fn prop_recorded_serve_replays_to_a_bit_identical_report() {
+    // The acceptance property: record a serve run (fresh cache), push the
+    // trace through its serialized JSONL form, replay it — the
+    // ServeReport must reproduce bit-for-bit (every f64 included) and the
+    // replayed completions must match the recording, across random
+    // scheduler knobs, shedding policies and batching modes.
+    let cfg = NeutronConfig::flagship_2tops();
+    for_each_case(8, 0x5EED, |rng| {
+        let opts = random_serve_options(rng);
+        let mut cache = CompileCache::for_serving(cfg.clone());
+        let (recorded, trace) = serve_recorded(&cfg, &opts, &mut cache);
+        let driver = ReplayDriver::from_jsonl(&trace.to_jsonl())
+            .unwrap_or_else(|e| panic!("reparse failed: {e}"));
+        let replayed = driver.replay(&cfg).unwrap_or_else(|e| panic!("replay failed: {e}"));
+        assert!(
+            replayed.matches_recording(),
+            "replay diverged: {:?}",
+            replayed.divergence
+        );
+        assert_eq!(
+            replayed.report, recorded,
+            "replayed ServeReport must be bit-identical to the recorded one"
+        );
+    });
+}
+
+#[test]
+fn prop_validation_mape_is_computed_from_real_sim_ticks() {
+    // The calibration join is grounded in the executor's tick timing: for
+    // every profiled model, the observed per-op cycles in the trace must
+    // sum to exactly the cycles the executor charges for that program —
+    // the same number the serving layer bills a solo dispatch.
+    let cfg = NeutronConfig::flagship_2tops();
+    let mut cache = CompileCache::for_serving(cfg.clone());
+    for_each_case(6, 0xCA1B, |rng| {
+        let mut opts = random_serve_options(rng);
+        opts.scheduler.queue_capacity = None; // everything dispatches
+        opts.requests = rng.usize(4, 16);
+        let mut fresh = CompileCache::for_serving(cfg.clone());
+        let (_, trace) = serve_recorded(&cfg, &opts, &mut fresh);
+        assert!(!trace.model_ops.is_empty(), "a dispatching run must profile its models");
+
+        let mut ex = Executor::with_config(cfg.clone());
+        for m in &trace.model_ops {
+            let entry = cache.get(m.model);
+            let observed_total: u64 = m.ops.iter().map(|o| o.observed_cycles).sum();
+            let sim = ex.run_program(&entry.program, None).unwrap().sim_cycles;
+            assert_eq!(
+                observed_total, sim,
+                "{:?}: per-op observed cycles must sum to the executor's sim cycles",
+                m.model
+            );
+        }
+
+        let v = ValidationReport::from_trace(&trace).unwrap();
+        assert!(!v.rows.is_empty());
+        assert!(v.overall_mape_pct.is_finite() && v.overall_mape_pct >= 0.0);
+        assert!(v.post_fit_mape_pct.is_finite() && v.post_fit_mape_pct >= 0.0);
+        let table = v.table();
+        for r in &v.rows {
+            assert!(r.ops > 0);
+            assert!(r.scale.is_finite() && r.scale > 0.0);
+            assert!(table.contains(r.class.name()), "table must list {:?}", r.class);
+        }
+        // The fitted corrections form a valid calibration the compiler
+        // can apply (CostCalibration::from_scales panics on degenerate
+        // scales — constructing it IS the check).
+        let cal = v.calibration();
+        for r in &v.rows {
+            assert!(cal.apply(r.class, 1_000) >= 1);
+        }
+        // Validating the same models directly (no trace) agrees with the
+        // trace-derived join — both sides read the same tick attribution.
+        let direct = ValidationReport::from_models(
+            &trace.model_ops.iter().map(|m| m.model).collect::<Vec<_>>(),
+            &cfg,
+        );
+        assert_eq!(direct, v);
+    });
+}
+
+#[test]
+fn acceptance_record_replay_validate_pipeline() {
+    // The CI smoke pipeline in library form: one mixed workload, recorded
+    // with shedding + dynamic batching active, replayed bit-identically,
+    // then validated with a non-trivial per-class table.
+    let cfg = NeutronConfig::flagship_2tops();
+    let opts = ServeOptions {
+        models: vec![ModelId::MobileNetV2, ModelId::MobileNetV1, ModelId::EfficientNetLite0],
+        requests: 60,
+        mean_gap_cycles: 120_000,
+        seed: 11,
+        priority_mix: PriorityMix::default(),
+        scheduler: SchedulerOptions {
+            instances: 2,
+            queue_capacity: Some(8),
+            policy: AdmissionPolicy::RejectNewest,
+            max_batch: 4,
+            dynamic_batch: true,
+            age_after_cycles: Some(2_000_000),
+        },
+    };
+    let mut cache = CompileCache::for_serving(cfg.clone());
+    let (recorded, trace) = serve_recorded(&cfg, &opts, &mut cache);
+    assert_eq!(recorded.offered, 60);
+    assert!(recorded.p99_ms <= recorded.p999_ms);
+
+    let jsonl = trace.to_jsonl();
+    assert!(jsonl.starts_with("{\"event\":\"header\""));
+    let replayed = ReplayDriver::from_jsonl(&jsonl).unwrap().replay(&cfg).unwrap();
+    assert!(replayed.matches_recording(), "{:?}", replayed.divergence);
+    assert_eq!(replayed.report, recorded);
+
+    let v = ValidationReport::from_trace(&trace).unwrap();
+    assert!(v.rows.len() >= 3, "a CNN mix spans several op classes: {:?}", v.rows);
+    assert!(v.rows.iter().any(|r| r.class == OpClass::Conv));
+    assert!(v.table().contains("overall MAPE"));
+}
