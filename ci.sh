@@ -24,6 +24,33 @@ if ./target/release/neutron serve --max-batch 0 >/dev/null 2>&1; then
     exit 1
 fi
 echo "trace record/replay smoke OK"
+
+# Calibration loop smoke: record → validate (save the fit) → tune → replay.
+# The tune line reports overall per-op MAPE before (uncalibrated recompile)
+# and after (calibrated recompile, replayed); the calibrated model must not
+# regress (0.5 percentage points of recompile jitter tolerated — a real
+# regression is tens of points).
+./target/release/neutron record "$smoke_dir/tune.jsonl" --requests 24 --instances 2 \
+    --seed 5 --mean-gap-cycles 300000 > /dev/null
+./target/release/neutron validate "$smoke_dir/tune.jsonl" \
+    --save-calibration "$smoke_dir/cal.json" > /dev/null
+./target/release/neutron tune --trace "$smoke_dir/tune.jsonl" > "$smoke_dir/tune.txt"
+tune_line=$(grep '^tune: ' "$smoke_dir/tune.txt")
+echo "$tune_line"
+mape_before=$(printf '%s\n' "$tune_line" | sed -n 's/.*mape_before_pct=\([0-9.]*\).*/\1/p')
+mape_after=$(printf '%s\n' "$tune_line" | sed -n 's/.*mape_after_pct=\([0-9.]*\).*/\1/p')
+if [ -z "$mape_before" ] || [ -z "$mape_after" ]; then
+    echo "ERROR: could not parse tune summary line" >&2
+    exit 1
+fi
+if ! awk -v after="$mape_after" -v before="$mape_before" 'BEGIN { exit !(after <= before + 0.5) }'; then
+    echo "ERROR: calibrated recompile regressed per-op MAPE ($mape_before% -> $mape_after%)" >&2
+    exit 1
+fi
+# The saved fit loads back into a calibrated, speed-scaled replay.
+./target/release/neutron replay "$smoke_dir/tune.jsonl" --speed 2.0 \
+    --calibration "$smoke_dir/cal.json" > /dev/null
+echo "calibration tune smoke OK ($mape_before% -> $mape_after% MAPE)"
 # Docs must not rot: fail on any rustdoc warning (missing docs in the
 # serve module, broken intra-doc links, …). Vendored stand-ins are not
 # documented (--no-deps + explicit package).

@@ -16,6 +16,12 @@
 //! tensors); a first-fit fallback guarantees progress if the solver's
 //! budget expires — the scheduling constraints (Eq. 7) proved capacity is
 //! sufficient, so first-fit over whole banks always succeeds.
+//!
+//! Allocation never queries cycle costs directly: its inputs are tile
+//! lifetimes derived from the schedule, which the calibrated cost facade
+//! (`compiler::CostModel`) already priced. With an identity calibration
+//! the schedule — and therefore this pass's placements — is bit-identical
+//! to the uncalibrated compiler's.
 
 use std::collections::HashMap;
 

@@ -145,6 +145,21 @@ impl Default for CostCalibration {
 }
 
 impl CostCalibration {
+    /// Smallest scale a fit is allowed to carry: a class correction below
+    /// this would claim the analytic model over-predicts by more than 4×,
+    /// which no healthy trace produces — it is a degenerate fit.
+    pub const MIN_SCALE: f64 = 0.25;
+
+    /// Largest scale a fit is allowed to carry (see [`Self::MIN_SCALE`]).
+    pub const MAX_SCALE: f64 = 4.0;
+
+    /// Clamp a fitted scale into `[MIN_SCALE, MAX_SCALE]` so a degenerate
+    /// trace (a handful of joined ops, pathological DMA exposure) can
+    /// never poison compilation with a wild correction.
+    pub fn clamp_scale(scale: f64) -> f64 {
+        scale.clamp(Self::MIN_SCALE, Self::MAX_SCALE)
+    }
+
     /// The no-op calibration: every class scale is 1.0.
     pub fn identity() -> Self {
         Self { scales: Vec::new() }
@@ -175,18 +190,29 @@ impl CostCalibration {
 
     /// Apply the class correction to a predicted cycle count (rounded to
     /// the nearest cycle, floored at 1 for non-zero predictions so a
-    /// correction can never erase an op entirely).
+    /// correction can never erase an op entirely). A scale of exactly 1.0
+    /// passes the prediction through untouched — never via `f64` — so an
+    /// identity calibration is bit-transparent even for cycle counts
+    /// beyond `f64`'s integer range.
     pub fn apply(&self, class: OpClass, predicted_cycles: u64) -> u64 {
         if predicted_cycles == 0 {
             return 0;
         }
-        let corrected = (predicted_cycles as f64 * self.scale_for(class)).round() as u64;
+        let scale = self.scale_for(class);
+        if scale == 1.0 {
+            return predicted_cycles;
+        }
+        let corrected = (predicted_cycles as f64 * scale).round() as u64;
         corrected.max(1)
     }
 
-    /// True when no class carries a correction.
+    /// True when no class carries an *effective* correction: no entries,
+    /// or every entry's scale is exactly 1.0 (an explicit 1.0 prices
+    /// identically to an absent one — see [`CostCalibration::apply`] —
+    /// so it must not count as a correction anywhere identity matters,
+    /// e.g. the replay faithfulness check).
     pub fn is_identity(&self) -> bool {
-        self.scales.is_empty()
+        self.scales.iter().all(|&(_, s)| s == 1.0)
     }
 
     /// The fitted `(class, scale)` pairs, in insertion order.
@@ -212,6 +238,87 @@ pub fn calibrated_layer_latency_cycles(
 /// full TCM-to-TCM rewrite of the tensor.
 pub fn format_switch_cycles(bytes: u64, cfg: &NeutronConfig) -> u64 {
     Transfer::new(TransferKind::LCopy, bytes).cycles(cfg)
+}
+
+/// The calibrated cost facade every mid-end pass queries.
+///
+/// One `CostModel` = one architecture config + one [`CostCalibration`].
+/// Format selection, the tiling pass's per-step cycle estimates, the
+/// scheduling CP's transfer costs and (through the emitted job cycles)
+/// `Compiled::inference_ms`, the simulator's tick timing and the serving
+/// layer's `marginal_service_cycles` all derive from queries answered
+/// here, so every consumer of a compiled artifact agrees on a single
+/// calibrated model. With [`CostModel::uncalibrated`] every query is
+/// bit-identical to the raw analytic model.
+///
+/// What the per-class correction touches: compute-op latencies
+/// ([`CostModel::layer_cycles`], [`CostModel::step_cycles`]) and
+/// data-movement-op costs ([`CostModel::data_step_cycles`],
+/// [`CostModel::format_switch_cycles`] — both are TCM rewrites, scaled
+/// under [`OpClass::DataMovement`]). Raw DMA transfer pricing
+/// ([`CostModel::transfer_cycles`]) is *not* class-corrected: the
+/// calibration classes describe operators, not the DMA engine, and the
+/// fit's observations already include exposed transfer time.
+#[derive(Debug, Clone)]
+pub struct CostModel<'a> {
+    cfg: &'a NeutronConfig,
+    calibration: CostCalibration,
+}
+
+impl<'a> CostModel<'a> {
+    /// Facade over `cfg` applying `calibration` to every op-cost query.
+    pub fn new(cfg: &'a NeutronConfig, calibration: CostCalibration) -> Self {
+        Self { cfg, calibration }
+    }
+
+    /// The raw analytic model (identity calibration) — the pre-refactor
+    /// behavior, bit for bit.
+    pub fn uncalibrated(cfg: &'a NeutronConfig) -> Self {
+        Self::new(cfg, CostCalibration::identity())
+    }
+
+    /// The architecture config the facade prices against.
+    pub fn cfg(&self) -> &NeutronConfig {
+        self.cfg
+    }
+
+    /// The calibration this facade applies.
+    pub fn calibration(&self) -> &CostCalibration {
+        &self.calibration
+    }
+
+    /// Calibrated whole-layer latency (the format-selection measure).
+    pub fn layer_cycles(&self, graph: &Graph, op: &Op, format: Format) -> u64 {
+        calibrated_layer_latency_cycles(graph, op, self.cfg, format, &self.calibration)
+    }
+
+    /// Calibrated compute cost of one H-tile of `op` (`rows` output rows)
+    /// — the tick compute latency the scheduler optimizes against.
+    pub fn step_cycles(&self, op: &Op, profile: &OpProfile, rows: usize, format: Format) -> u64 {
+        self.calibration
+            .apply(op.class(), profile.tile_compute_cost(op, rows, self.cfg, format).total())
+    }
+
+    /// Calibrated cost of a pure-data-movement step (`op` is not a
+    /// compute op; the step rewrites `bytes` TCM-to-TCM).
+    pub fn data_step_cycles(&self, op: &Op, bytes: u64) -> u64 {
+        self.calibration
+            .apply(op.class(), Transfer::new(TransferKind::LCopy, bytes).cycles(self.cfg))
+    }
+
+    /// Calibrated format-conversion cost (scaled as data movement — the
+    /// conversion is a full TCM rewrite, the same work the
+    /// [`OpClass::DataMovement`] fit observes).
+    pub fn format_switch_cycles(&self, bytes: u64) -> u64 {
+        self.calibration
+            .apply(OpClass::DataMovement, format_switch_cycles(bytes, self.cfg))
+    }
+
+    /// Raw DMA transfer pricing (never class-corrected — see the type
+    /// docs).
+    pub fn transfer_cycles(&self, kind: TransferKind, bytes: u64) -> u64 {
+        Transfer::new(kind, bytes).cycles(self.cfg)
+    }
 }
 
 #[cfg(test)]
@@ -294,6 +401,71 @@ mod tests {
     #[should_panic(expected = "finite and positive")]
     fn degenerate_calibration_scale_is_rejected() {
         CostCalibration::from_scales(&[(crate::ir::OpClass::Conv, 0.0)]);
+    }
+
+    #[test]
+    fn scale_clamp_bounds_wild_fits() {
+        assert_eq!(CostCalibration::clamp_scale(100.0), CostCalibration::MAX_SCALE);
+        assert_eq!(CostCalibration::clamp_scale(0.01), CostCalibration::MIN_SCALE);
+        assert_eq!(CostCalibration::clamp_scale(1.3), 1.3);
+        // A clamped scale is always accepted by the constructor.
+        let _ = CostCalibration::from_scales(&[(
+            crate::ir::OpClass::Conv,
+            CostCalibration::clamp_scale(f64::MAX),
+        )]);
+    }
+
+    #[test]
+    fn identity_apply_is_bit_transparent_beyond_f64_range() {
+        // (1<<60)+1 is not representable in f64; a round-trip through the
+        // float path would change it. The identity short-circuit must not.
+        let huge = (1u64 << 60) + 1;
+        assert_eq!(CostCalibration::identity().apply(OpClass::Conv, huge), huge);
+        let explicit = CostCalibration::from_scales(&[(OpClass::Conv, 1.0)]);
+        assert_eq!(explicit.apply(OpClass::Conv, huge), huge);
+        // An explicit all-1.0 spelling IS the identity (effectively).
+        assert!(explicit.is_identity());
+        assert!(!CostCalibration::from_scales(&[(OpClass::Conv, 1.5)]).is_identity());
+    }
+
+    #[test]
+    fn cost_model_facade_matches_free_functions() {
+        let g = graph_with_conv(32, 16, 64, 3);
+        let cfg = NeutronConfig::flagship_2tops();
+        let op = &g.ops[0];
+        let id = CostModel::uncalibrated(&cfg);
+        assert_eq!(
+            id.layer_cycles(&g, op, Format::Depth),
+            layer_latency_cycles(&g, op, &cfg, Format::Depth)
+        );
+        assert_eq!(id.format_switch_cycles(4_096), format_switch_cycles(4_096, &cfg));
+        assert_eq!(
+            id.transfer_cycles(TransferKind::Fetch, 4_096),
+            Transfer::new(TransferKind::Fetch, 4_096).cycles(&cfg)
+        );
+        let p = OpProfile::of(&g, op, &cfg);
+        assert_eq!(
+            id.step_cycles(op, &p, p.out_h, Format::Depth),
+            p.tile_compute_cost(op, p.out_h, &cfg, Format::Depth).total()
+        );
+
+        let cal = CostCalibration::from_scales(&[
+            (OpClass::Conv, 2.0),
+            (OpClass::DataMovement, 2.0),
+        ]);
+        let cm = CostModel::new(&cfg, cal.clone());
+        assert_eq!(
+            cm.layer_cycles(&g, op, Format::Depth),
+            2 * layer_latency_cycles(&g, op, &cfg, Format::Depth)
+        );
+        assert_eq!(cm.format_switch_cycles(4_096), 2 * format_switch_cycles(4_096, &cfg));
+        // DMA transfer pricing stays uncorrected.
+        assert_eq!(
+            cm.transfer_cycles(TransferKind::Fetch, 4_096),
+            id.transfer_cycles(TransferKind::Fetch, 4_096)
+        );
+        assert_eq!(cm.calibration(), &cal);
+        assert_eq!(cm.cfg().tcm_banks, cfg.tcm_banks);
     }
 
     #[test]

@@ -12,7 +12,7 @@
 
 use std::collections::HashMap;
 
-use super::cost::{format_switch_cycles, layer_latency_cycles, OpProfile};
+use super::cost::CostModel;
 use crate::arch::{Format, NeutronConfig};
 use crate::ir::{Graph, OpId, TensorId, TensorKind};
 
@@ -33,13 +33,21 @@ impl FormatPlan {
     }
 }
 
-/// Run format selection over the graph.
+/// Run format selection over the graph under the raw analytic cost model
+/// (identity calibration). See [`select_formats_with`].
+pub fn select_formats(graph: &Graph, cfg: &NeutronConfig) -> FormatPlan {
+    select_formats_with(graph, &CostModel::uncalibrated(cfg))
+}
+
+/// Run format selection over the graph, pricing every layer latency and
+/// conversion through the calibrated cost facade.
 ///
 /// Dynamic program over topological order. For ops with multiple activation
 /// inputs the dominant (first) input's format drives the conversion cost —
 /// element-wise ops are format-agnostic as long as both inputs agree, which
 /// the plan enforces by converting mismatched secondary inputs too.
-pub fn select_formats(graph: &Graph, cfg: &NeutronConfig) -> FormatPlan {
+pub fn select_formats_with(graph: &Graph, cost: &CostModel) -> FormatPlan {
+    let cfg = cost.cfg();
     let order = graph.topo_order();
     // best[op][format] = (cumulative cycles, predecessor format choice)
     let mut best: HashMap<(OpId, Format), (u64, Option<Format>)> = HashMap::new();
@@ -52,7 +60,7 @@ pub fn select_formats(graph: &Graph, cfg: &NeutronConfig) -> FormatPlan {
     for &oid in &order {
         let op = graph.op(oid);
         for fmt in [Format::Depth, Format::Line] {
-            let own = layer_latency_cycles(graph, op, cfg, fmt);
+            let own = cost.layer_cycles(graph, op, fmt);
             // Conversion cost: for each activation input whose producer's
             // best stored format differs from `fmt`.
             let mut total_in_cost = 0u64;
@@ -71,7 +79,7 @@ pub fn select_formats(graph: &Graph, cfg: &NeutronConfig) -> FormatPlan {
                         for pfmt in [Format::Depth, Format::Line] {
                             if let Some(&(c, _)) = best.get(&(pid, pfmt)) {
                                 let conv = if pfmt != fmt && graph.op(pid).is_compute() {
-                                    format_switch_cycles(bytes, cfg)
+                                    cost.format_switch_cycles(bytes)
                                 } else {
                                     0
                                 };
@@ -90,7 +98,7 @@ pub fn select_formats(graph: &Graph, cfg: &NeutronConfig) -> FormatPlan {
                         // line costs one rewrite.
                         if fmt == Format::Line {
                             let bytes = t.padded_size_bytes(cfg.bus_bytes) as u64;
-                            total_in_cost += format_switch_cycles(bytes, cfg);
+                            total_in_cost += cost.format_switch_cycles(bytes);
                         }
                     }
                 }
@@ -113,7 +121,7 @@ pub fn select_formats(graph: &Graph, cfg: &NeutronConfig) -> FormatPlan {
         let l = best[&(oid, Format::Line)].0;
         let fmt = if l < d { Format::Line } else { Format::Depth };
         per_op.insert(oid, fmt);
-        est_cycles.insert(oid, layer_latency_cycles(graph, op, cfg, fmt));
+        est_cycles.insert(oid, cost.layer_cycles(graph, op, fmt));
     }
     // Second sweep: record conversions where committed producer/consumer
     // formats disagree.
@@ -128,7 +136,7 @@ pub fn select_formats(graph: &Graph, cfg: &NeutronConfig) -> FormatPlan {
             if let Some(&pid) = producer_of.get(&inp) {
                 if graph.op(pid).is_compute() && per_op[&pid] != fmt {
                     let bytes = t.padded_size_bytes(cfg.bus_bytes) as u64;
-                    conversions.push((oid, inp, format_switch_cycles(bytes, cfg)));
+                    conversions.push((oid, inp, cost.format_switch_cycles(bytes)));
                 }
             }
         }
@@ -171,6 +179,17 @@ mod tests {
             assert!(plan.per_op.contains_key(&op.id), "{} missing", op.name);
             assert!(plan.est_cycles[&op.id] > 0, "{} zero cycles", op.name);
         }
+    }
+
+    #[test]
+    fn identity_facade_reproduces_the_raw_plan() {
+        let g = zoo::mobilenet::mobilenet_v2();
+        let cfg = NeutronConfig::flagship_2tops();
+        let raw = select_formats(&g, &cfg);
+        let via_facade = select_formats_with(&g, &CostModel::uncalibrated(&cfg));
+        assert_eq!(raw.per_op, via_facade.per_op);
+        assert_eq!(raw.est_cycles, via_facade.est_cycles);
+        assert_eq!(raw.conversions, via_facade.conversions);
     }
 
     #[test]

@@ -5,20 +5,26 @@
 use std::time::Instant;
 
 use super::allocation::{allocate, Allocation};
-use super::format::{select_formats, FormatPlan};
-use super::scheduling::{schedule, Schedule, SchedulingOptions};
-use super::tiling::{tile_graph, TiledProgram, TilingOptions};
+use super::cost::{CostCalibration, CostModel};
+use super::format::{select_formats_with, FormatPlan};
+use super::scheduling::{schedule_with, Schedule, SchedulingOptions};
+use super::tiling::{tile_graph_with, TiledProgram, TilingOptions};
 use crate::arch::NeutronConfig;
 use crate::cp::SearchConfig;
 use crate::ir::Graph;
 
 /// Compilation options — the Table II matrix is spanned by the two
-/// partitioning switches.
+/// partitioning switches; `calibration` selects the cost model every pass
+/// prices against (identity by default, i.e. the raw analytic model).
 #[derive(Debug, Clone, Default)]
 pub struct CompileOptions {
     pub tiling: TilingOptions,
     pub scheduling: SchedulingOptions,
     pub allocation_solver: SearchConfig,
+    /// Per-op-class cost corrections applied by every mid-end cost query
+    /// (see [`CostModel`]). [`CostCalibration::identity`] — the default —
+    /// reproduces the uncalibrated compiler bit for bit.
+    pub calibration: CostCalibration,
 }
 
 impl CompileOptions {
@@ -82,6 +88,10 @@ pub struct Compiled {
     pub compile_ms: u64,
     /// Estimated end-to-end inference latency (ms) on the target config.
     pub inference_ms: f64,
+    /// The calibration this artifact was priced under — consumers joining
+    /// predictions against observations (the trace recorder) must predict
+    /// with the same corrections the compiler used.
+    pub calibration: CostCalibration,
 }
 
 impl Compiled {
@@ -97,12 +107,16 @@ impl Compiled {
     }
 }
 
-/// Compile `graph` for `cfg`.
+/// Compile `graph` for `cfg`. Every pass prices through one calibrated
+/// cost facade built from `opts.calibration`, so the CP objectives, the
+/// emitted job cycles and `Compiled::inference_ms` agree on a single cost
+/// model.
 pub fn compile(graph: &Graph, cfg: &NeutronConfig, opts: &CompileOptions) -> Compiled {
     let t0 = Instant::now();
-    let formats = select_formats(graph, cfg);
-    let program = tile_graph(graph, &formats, cfg, &opts.tiling);
-    let sched = schedule(&program, cfg, &opts.scheduling);
+    let cost = CostModel::new(cfg, opts.calibration.clone());
+    let formats = select_formats_with(graph, &cost);
+    let program = tile_graph_with(graph, &formats, &cost, &opts.tiling);
+    let sched = schedule_with(&program, &cost, &opts.scheduling);
     let allocation = allocate(&program, &sched, cfg, &opts.allocation_solver);
     let compile_ms = t0.elapsed().as_millis() as u64;
     let inference_ms = cfg.cycles_to_ms(sched.total_cycles());
@@ -113,6 +127,7 @@ pub fn compile(graph: &Graph, cfg: &NeutronConfig, opts: &CompileOptions) -> Com
         allocation,
         compile_ms,
         inference_ms,
+        calibration: opts.calibration.clone(),
     }
 }
 

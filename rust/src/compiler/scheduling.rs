@@ -24,6 +24,7 @@
 
 use std::collections::HashMap;
 
+use super::cost::CostModel;
 use super::tiling::{TiledProgram, TileId};
 use crate::arch::{DdrTraffic, NeutronConfig, Transfer, TransferKind};
 use crate::cp::{CpModel, LinExpr, SearchConfig, Status, Var};
@@ -123,8 +124,19 @@ struct Candidate {
     adds_residency: bool,
 }
 
-/// Spill pre-pass + transfer enumeration + per-window CP solve.
+/// Spill pre-pass + transfer enumeration + per-window CP solve under the
+/// raw analytic cost model (identity calibration). See [`schedule_with`].
 pub fn schedule(prog: &TiledProgram, cfg: &NeutronConfig, opts: &SchedulingOptions) -> Schedule {
+    schedule_with(prog, &CostModel::uncalibrated(cfg), opts)
+}
+
+/// Spill pre-pass + transfer enumeration + per-window CP solve, pricing
+/// every transfer through the calibrated cost facade (transfer pricing is
+/// never class-corrected — see [`CostModel`] — but routing it through the
+/// facade keeps one source of truth; the tick *compute* latencies arrive
+/// already calibrated in `prog.steps[..].cycles`).
+pub fn schedule_with(prog: &TiledProgram, cost: &CostModel, opts: &SchedulingOptions) -> Schedule {
+    let cfg = cost.cfg();
     let n = prog.steps.len();
     if n == 0 {
         return Schedule::default();
@@ -171,11 +183,10 @@ pub fn schedule(prog: &TiledProgram, cfg: &NeutronConfig, opts: &SchedulingOptio
         let per = tl.bytes / chunks;
         for c in 0..chunks {
             let bytes = if c == chunks - 1 { tl.bytes - per * (chunks - 1) } else { per };
-            let t = Transfer::new(kind, bytes);
             cands.push(Candidate {
                 tile,
                 kind,
-                cycles: t.cycles(cfg),
+                cycles: cost.transfer_cycles(kind, bytes),
                 bytes,
                 banks: if c == 0 { tl.banks } else { 0 },
                 range: (lo, hi),
@@ -209,12 +220,11 @@ pub fn schedule(prog: &TiledProgram, cfg: &NeutronConfig, opts: &SchedulingOptio
                     // Halo bytes ≈ tile bytes scaled by (cores-1)·(fh-1)/rows;
                     // conservative: 1/8 of the tile.
                     let bytes = (tl.bytes / 8).max(cfg.bus_bytes as u64);
-                    let tr = Transfer::new(TransferKind::LCopy, bytes);
                     let hi = tick_of(si).saturating_sub(1);
                     candidates.push(Candidate {
                         tile: t,
                         kind: TransferKind::LCopy,
-                        cycles: tr.cycles(cfg),
+                        cycles: cost.transfer_cycles(TransferKind::LCopy, bytes),
                         bytes,
                         banks: 0, // expansion reuses the tensor's own banks
                         range: (hi.saturating_sub(1), hi),
@@ -228,13 +238,12 @@ pub fn schedule(prog: &TiledProgram, cfg: &NeutronConfig, opts: &SchedulingOptio
     for (si, s) in prog.steps.iter().enumerate() {
         let tl = prog.tile(s.out_tile);
         if tl.is_graph_output {
-            let tr = Transfer::new(TransferKind::Push, tl.bytes);
             let lo = (tick_of(si) + 1).min(n_ticks - 1);
             let hi = (tick_of(si) + look).min(n_ticks - 1);
             candidates.push(Candidate {
                 tile: s.out_tile,
                 kind: TransferKind::Push,
-                cycles: tr.cycles(cfg),
+                cycles: cost.transfer_cycles(TransferKind::Push, tl.bytes),
                 bytes: tl.bytes,
                 banks: tl.banks,
                 range: (lo, hi),
@@ -285,12 +294,11 @@ pub fn schedule(prog: &TiledProgram, cfg: &NeutronConfig, opts: &SchedulingOptio
                 if nu < usize::MAX {
                     // Activation spill: push now-ish, fetch before next use.
                     if !tl.starts_in_dram {
-                        let tr = Transfer::new(TransferKind::Push, tl.bytes);
                         let pt = tick_of(si).min(n_ticks - 1);
                         candidates.push(Candidate {
                             tile: v,
                             kind: TransferKind::Push,
-                            cycles: tr.cycles(cfg),
+                            cycles: cost.transfer_cycles(TransferKind::Push, tl.bytes),
                             bytes: tl.bytes,
                             banks: tl.banks,
                             range: (pt, pt),

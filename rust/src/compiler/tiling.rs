@@ -16,7 +16,7 @@
 
 use std::collections::HashMap;
 
-use super::cost::OpProfile;
+use super::cost::{CostModel, OpProfile};
 use super::format::FormatPlan;
 use crate::arch::{Format, NeutronConfig};
 use crate::cp::{CpModel, LinExpr, SearchConfig, Status};
@@ -111,13 +111,28 @@ struct SizeOption {
     splits: usize,
 }
 
-/// Run temporal tiling + fusion over the graph.
+/// Run temporal tiling + fusion under the raw analytic cost model
+/// (identity calibration). See [`tile_graph_with`].
 pub fn tile_graph(
     graph: &Graph,
     plan: &FormatPlan,
     cfg: &NeutronConfig,
     opts: &TilingOptions,
 ) -> TiledProgram {
+    tile_graph_with(graph, plan, &CostModel::uncalibrated(cfg), opts)
+}
+
+/// Run temporal tiling + fusion over the graph, pricing every step's
+/// cycle estimate through the calibrated cost facade (the estimates feed
+/// the scheduling objective and, through the emitted job program, the
+/// simulator's tick timing).
+pub fn tile_graph_with(
+    graph: &Graph,
+    plan: &FormatPlan,
+    cost: &CostModel,
+    opts: &TilingOptions,
+) -> TiledProgram {
+    let cfg = cost.cfg();
     let order = graph.topo_order();
     let profiles: HashMap<OpId, OpProfile> = order
         .iter()
@@ -289,10 +304,9 @@ pub fn tile_graph(
                 }
             }
             let cycles = if p.is_compute {
-                p.tile_compute_cost(op, rows.max(1), cfg, fmt).total()
+                cost.step_cycles(op, p, rows.max(1), fmt)
             } else {
-                crate::arch::Transfer::new(crate::arch::TransferKind::LCopy, bytes)
-                    .cycles(cfg)
+                cost.data_step_cycles(op, bytes)
             };
             pending.push(PendingStep {
                 op: oid,
@@ -550,6 +564,36 @@ mod tests {
                 && prog.tile(w[0].out_tile).part.0 == prog.tile(w[1].out_tile).part.0
         });
         assert!(interleaved, "fused regions should interleave layer tiles");
+    }
+
+    #[test]
+    fn uniform_calibration_scales_step_cycles_exactly() {
+        use crate::compiler::cost::{CostCalibration, CostModel};
+        use crate::ir::OpClass;
+        let g = zoo::mobilenet::mobilenet_v2();
+        let cfg = NeutronConfig::flagship_2tops();
+        let plan = select_formats(&g, &cfg);
+        // Node-limited solving so both runs make identical CP decisions.
+        let solver = SearchConfig {
+            node_limit: Some(200_000),
+            time_limit_ms: None,
+            ..Default::default()
+        };
+        let opts = TilingOptions { partition: true, solver };
+        let raw = tile_graph(&g, &plan, &cfg, &opts);
+        // Scale every class by the same factor: the format plan and the
+        // tiling structure (splits depend only on bytes) are unchanged,
+        // so each step's cycle estimate doubles exactly.
+        let cal = CostCalibration::from_scales(
+            &OpClass::all().map(|c| (c, 2.0)),
+        );
+        let scaled = tile_graph_with(&g, &plan, &CostModel::new(&cfg, cal), &opts);
+        assert_eq!(raw.steps.len(), scaled.steps.len());
+        for (a, b) in raw.steps.iter().zip(&scaled.steps) {
+            assert_eq!((a.op, a.out_tile), (b.op, b.out_tile));
+            assert_eq!(b.cycles, 2 * a.cycles, "op {:?}", a.op);
+        }
+        assert_eq!(scaled.total_compute_cycles(), 2 * raw.total_compute_cycles());
     }
 
     #[test]

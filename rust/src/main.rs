@@ -1,32 +1,43 @@
 //! `neutron` — the eIQ-Neutron reproduction CLI.
 //!
 //! Subcommands:
-//!   compile   --model <name> [--monolithic]     compile + report stats
+//!   compile   --model <name> [--monolithic] [--calibration FILE]
+//!                                               compile + report stats
 //!   simulate  --model <name> [--serialize-dae]  compile + cycle simulation
 //!   infer     [--requests N]                    e2e PJRT inference (needs artifacts)
 //!   serve     [--requests N] [--instances K] [--models a,b,c] [--seed S]
 //!             [--mean-gap-cycles G] [--queue-capacity C] [--policy reject-newest|drop-oldest]
 //!             [--max-batch B] [--dynamic-batch] [--age-after-cycles A] [--priority-mix R,S,B]
-//!             [--record FILE]                   multi-tenant serving simulation
+//!             [--record FILE] [--calibration FILE]
+//!                                               multi-tenant serving simulation
 //!   record    FILE [serve options]              serve + write a replayable JSONL trace
-//!   replay    FILE                              replay a recorded trace (bit-identical report)
-//!   validate  [FILE | --models a,b,c]           predicted-vs-observed per-op-class calibration
+//!   replay    FILE [--speed F] [--calibration FILE]
+//!                                               replay a recorded trace (bit-identical
+//!                                               report; --speed time-warps offered load,
+//!                                               --calibration recompiles under a fit)
+//!   validate  [FILE | --models a,b,c] [--save-calibration FILE]
+//!                                               predicted-vs-observed per-op-class calibration
+//!   tune      [--trace FILE | serve options] [--save-calibration FILE]
+//!                                               record → fit → recompile → replay loop
 //!   report    table1|table2|table3|table4|fig4|fig6|genai
 //!   list                                        list zoo models
 
 use anyhow::{anyhow, bail, Result};
 
 use eiq_neutron::arch::NeutronConfig;
-use eiq_neutron::compiler::{compile, CompileOptions};
+use eiq_neutron::compiler::{compile, CompileOptions, CostCalibration};
 use eiq_neutron::coordinator::{emit, Executor};
 use eiq_neutron::report;
 use eiq_neutron::runtime::{literal_i8, literal_to_i32s, Manifest, Runtime};
 use eiq_neutron::serve::{
-    serve, AdmissionPolicy, CompileCache, PriorityMix, SchedulerOptions, ServeOptions,
-    MAX_MEAN_GAP_CYCLES,
+    serve_with_cache, AdmissionPolicy, CompileCache, PriorityMix, SchedulerOptions,
+    ServeOptions, MAX_MEAN_GAP_CYCLES,
 };
 use eiq_neutron::sim::{simulate, SimOptions};
-use eiq_neutron::trace::{serve_recorded, ReplayDriver, ValidationReport};
+use eiq_neutron::trace::{
+    serve_recorded, tune_from_trace, CalibrationFile, ReplayDriver, ReplayOptions, Trace,
+    ValidationReport,
+};
 use eiq_neutron::util::cli::Args;
 use eiq_neutron::zoo::ModelId;
 
@@ -47,22 +58,73 @@ fn main() -> Result<()> {
         Some("record") => cmd_record(&args),
         Some("replay") => cmd_replay(&args),
         Some("validate") => cmd_validate(&args),
+        Some("tune") => cmd_tune(&args),
         Some("report") => cmd_report(&args),
         other => {
             if let Some(o) = other {
                 eprintln!("unknown subcommand {o:?}");
             }
             eprintln!(
-                "usage: neutron <list|compile|simulate|infer|serve|record|replay|validate|report> \
+                "usage: neutron <list|compile|simulate|infer|serve|record|replay|validate|tune|report> \
                  [--model NAME] [--monolithic] [--requests N] [--instances K] \
                  [--models a,b,c] [--seed S] [--mean-gap-cycles G] \
                  [--queue-capacity C] [--policy reject-newest|drop-oldest] \
                  [--max-batch B] [--dynamic-batch] [--age-after-cycles A] \
-                 [--priority-mix R,S,B] [--record FILE]"
+                 [--priority-mix R,S,B] [--record FILE] [--calibration FILE] \
+                 [--speed F] [--save-calibration FILE] [--trace FILE]"
             );
             Ok(())
         }
     }
+}
+
+/// Strict flag surface for the non-serve subcommands: an unknown flag
+/// must error, never silently run a different experiment (the serve
+/// surface enforces the same rule through `serve_options_from`).
+fn reject_unknown_keys(args: &Args, known: &[&str]) -> Result<()> {
+    for key in args.options.keys().chain(args.flags.iter()) {
+        if !known.contains(&key.as_str()) {
+            bail!("unknown flag --{key} (known: --{})", known.join(", --"));
+        }
+    }
+    Ok(())
+}
+
+/// Reject the bare-flag spelling of options that need a value — a
+/// value-less `--calibration` or `--save-calibration` would otherwise
+/// silently behave as if the flag were absent.
+fn require_value(args: &Args, keys: &[&str]) -> Result<()> {
+    for &key in keys {
+        if args.flags.iter().any(|f| f == key) {
+            bail!("--{key} wants a value");
+        }
+    }
+    Ok(())
+}
+
+/// Load the `--calibration FILE` fit (identity when the flag is absent),
+/// refusing a file measured on a different config.
+fn calibration_from(args: &Args, cfg: &NeutronConfig) -> Result<CostCalibration> {
+    require_value(args, &["calibration"])?;
+    match args.options.get("calibration") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow!("cannot read calibration file {path:?}: {e}"))?;
+            CalibrationFile::parse(&text)
+                .map_err(|e| anyhow!("calibration file {path:?}: {e}"))?
+                .calibration_for(cfg)
+        }
+        None => Ok(CostCalibration::identity()),
+    }
+}
+
+/// Write a fitted calibration to `path` as a calibration file.
+fn save_calibration(path: &str, cfg: &NeutronConfig, calibration: CostCalibration) -> Result<()> {
+    let guarded_note = if calibration.is_identity() { " (identity)" } else { "" };
+    std::fs::write(path, CalibrationFile::new(cfg, calibration).to_json())
+        .map_err(|e| anyhow!("cannot write calibration file {path:?}: {e}"))?;
+    eprintln!("saved calibration{guarded_note} to {path}");
+    Ok(())
 }
 
 fn model_from(args: &Args) -> Result<ModelId> {
@@ -82,11 +144,18 @@ fn opts_from(args: &Args) -> CompileOptions {
 }
 
 fn cmd_compile(args: &Args) -> Result<()> {
+    reject_unknown_keys(args, &["model", "monolithic", "calibration"])?;
+    require_value(args, &["model"])?;
     let id = model_from(args)?;
     let g = id.build();
     let cfg = NeutronConfig::flagship_2tops();
-    let c = compile(&g, &cfg, &opts_from(args));
+    let calibration = calibration_from(args, &cfg)?;
+    let opts = CompileOptions { calibration, ..opts_from(args) };
+    let c = compile(&g, &cfg, &opts);
     println!("model:        {}", id.display_name());
+    if !c.calibration.is_identity() {
+        println!("calibration:  {} fitted class scale(s)", c.calibration.scales().len());
+    }
     println!("ops / tiles:  {} / {}", g.ops.len(), c.program.tiles.len());
     println!("ticks:        {}", c.schedule.ticks.len());
     println!(
@@ -206,10 +275,11 @@ const SERVE_KEYS: [&str; 13] = [
 /// `--instances 0`, contradictory `--dynamic-batch` without batching
 /// headroom) is a clear error, never a silently different experiment —
 /// especially since `--record` stamps the knobs into the trace header as
-/// ground truth.
-fn serve_options_from(args: &Args) -> Result<ServeOptions> {
+/// ground truth. `extra_keys` names subcommand-specific flags that are
+/// allowed alongside the serve surface (e.g. `--calibration` on `serve`).
+fn serve_options_from(args: &Args, extra_keys: &[&str]) -> Result<ServeOptions> {
     for key in args.options.keys().chain(args.flags.iter()) {
-        if !SERVE_KEYS.contains(&key.as_str()) {
+        if !SERVE_KEYS.contains(&key.as_str()) && !extra_keys.contains(&key.as_str()) {
             bail!("unknown flag --{key} (known: --{})", SERVE_KEYS.join(", --"));
         }
     }
@@ -299,46 +369,83 @@ fn serve_and_record(opts: &ServeOptions, path: &str) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let opts = serve_options_from(args)?;
+    require_value(args, &["calibration"])?;
+    let opts = serve_options_from(args, &["calibration"])?;
     match args.options.get("record") {
-        Some(path) => serve_and_record(&opts, path),
+        Some(path) => {
+            if args.options.contains_key("calibration") {
+                bail!(
+                    "--record and --calibration cannot be combined: the trace header \
+                     does not carry a calibration, so the recording could never replay \
+                     bit-identically — record uncalibrated, then `neutron tune` or \
+                     `neutron replay --calibration` against the trace"
+                );
+            }
+            serve_and_record(&opts, path)
+        }
         None if args.has_flag("record") => bail!("--record wants a trace file path"),
         None => {
             let cfg = NeutronConfig::flagship_2tops();
-            print!("{}", serve(&cfg, &opts).summary());
+            let calibration = calibration_from(args, &cfg)?;
+            let mut cache = CompileCache::for_serving_with(cfg.clone(), calibration);
+            print!("{}", serve_with_cache(&cfg, &opts, &mut cache).summary());
             Ok(())
         }
     }
 }
 
 fn cmd_record(args: &Args) -> Result<()> {
+    if args.has_flag("calibration") {
+        bail!(
+            "recording is always uncalibrated (the trace header carries no calibration); \
+             use `neutron replay --calibration` or `neutron tune` on the recorded trace"
+        );
+    }
     let Some(path) = args.positionals.first().cloned().or_else(|| args.options.get("out").cloned())
     else {
         bail!("usage: neutron record <trace.jsonl> [serve options]");
     };
-    serve_and_record(&serve_options_from(args)?, &path)
+    serve_and_record(&serve_options_from(args, &[])?, &path)
 }
 
 fn cmd_replay(args: &Args) -> Result<()> {
+    reject_unknown_keys(args, &["speed", "calibration"])?;
+    require_value(args, &["speed"])?;
     let Some(path) = args.positionals.first() else {
-        bail!("usage: neutron replay <trace.jsonl>");
+        bail!("usage: neutron replay <trace.jsonl> [--speed F] [--calibration FILE]");
     };
     let text = std::fs::read_to_string(path)?;
     let driver = ReplayDriver::from_jsonl(&text)?;
     let cfg = NeutronConfig::flagship_2tops();
-    let outcome = driver.replay(&cfg)?;
+    let opts = ReplayOptions {
+        speed: args.opt_strict("speed", 1.0f64).map_err(|e| anyhow!("{e}"))?,
+        calibration: calibration_from(args, &cfg)?,
+    };
+    let faithful = opts.is_faithful();
+    let outcome = driver.replay_with_options(&cfg, &opts)?;
     print!("{}", outcome.report.summary());
-    if let Some(divergence) = outcome.divergence {
-        bail!(
-            "replay DIVERGED from the recording (timing model changed since capture?): \
-             {divergence}"
+    if faithful {
+        if let Some(divergence) = outcome.divergence {
+            bail!(
+                "replay DIVERGED from the recording (timing model changed since capture?): \
+                 {divergence}"
+            );
+        }
+        eprintln!("replay matches the recorded completions and shed set");
+    } else {
+        eprintln!(
+            "replay deviates from the recording by design (speed {}, {}) — \
+             recorded completions not compared",
+            opts.speed,
+            if opts.calibration.is_identity() { "no calibration" } else { "calibrated" }
         );
     }
-    eprintln!("replay matches the recorded completions and shed set");
     Ok(())
 }
 
 fn cmd_validate(args: &Args) -> Result<()> {
+    reject_unknown_keys(args, &["models", "save-calibration"])?;
+    require_value(args, &["models", "save-calibration"])?;
     let cfg = NeutronConfig::flagship_2tops();
     let report = match args.positionals.first() {
         Some(path) => {
@@ -349,12 +456,62 @@ fn cmd_validate(args: &Args) -> Result<()> {
                 );
             }
             let text = std::fs::read_to_string(path)?;
-            let trace = eiq_neutron::trace::Trace::parse(&text)?;
+            let trace = Trace::parse(&text)?;
             ValidationReport::from_trace(&trace)?
         }
         None => ValidationReport::from_models(&models_from(args)?, &cfg),
     };
     print!("{}", report.table());
+    if let Some(path) = args.options.get("save-calibration") {
+        save_calibration(path, &cfg, report.calibration_guarded())?;
+    }
+    Ok(())
+}
+
+/// `neutron tune`: close the record → fit → recompile → replay loop. With
+/// `--trace FILE` (or a positional path) an existing recording is tuned;
+/// otherwise a synthetic serve run is recorded internally first using the
+/// usual serve flags.
+fn cmd_tune(args: &Args) -> Result<()> {
+    let cfg = NeutronConfig::flagship_2tops();
+    require_value(args, &["trace", "save-calibration"])?;
+    if args.has_flag("record") || args.options.contains_key("out") {
+        bail!("neutron tune records internally — pass --trace FILE to reuse a recording");
+    }
+    let trace_path = args
+        .options
+        .get("trace")
+        .cloned()
+        .or_else(|| args.positionals.first().cloned());
+    let trace = match &trace_path {
+        Some(path) => {
+            // Serve-shape flags describe the recording run; with an
+            // existing trace they would be silently ignored — refuse.
+            for key in args.options.keys().chain(args.flags.iter()) {
+                if !["trace", "save-calibration"].contains(&key.as_str()) {
+                    bail!("--{key} has no effect when tuning an existing trace {path:?}");
+                }
+            }
+            let text = std::fs::read_to_string(path)?;
+            Trace::parse(&text).map_err(|e| anyhow!("trace file {path:?}: {e}"))?
+        }
+        None => {
+            let opts = serve_options_from(args, &["save-calibration"])?;
+            let mut cache = CompileCache::for_serving(cfg.clone());
+            let (_, trace) = serve_recorded(&cfg, &opts, &mut cache);
+            eprintln!(
+                "recorded {} request(s) over {} model(s) for tuning",
+                trace.requests.len(),
+                trace.meta.models.len()
+            );
+            trace
+        }
+    };
+    let outcome = tune_from_trace(&cfg, &trace)?;
+    print!("{}", outcome.table());
+    if let Some(path) = args.options.get("save-calibration") {
+        save_calibration(path, &cfg, outcome.calibration.clone())?;
+    }
     Ok(())
 }
 

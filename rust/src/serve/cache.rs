@@ -1,45 +1,68 @@
-//! Compile cache: memoizes the CP mid-end per (model, config fingerprint).
+//! Compile cache: memoizes the CP mid-end per
+//! `(model, config fingerprint, calibration fingerprint)`.
 //!
 //! Compilation dominates request cost by orders of magnitude (Table II:
 //! seconds of CP solving vs milliseconds of inference), so a multi-tenant
 //! server must never re-run the solver for a model it has already planned.
 //! Entries are `Arc`-shared: every virtual NPU instance replays the same
-//! immutable [`JobProgram`] without copying it.
+//! immutable [`JobProgram`] without copying it. Because a
+//! [`CostCalibration`] changes every cost the mid-end prices, calibrated
+//! and uncalibrated artifacts for the same model coexist as distinct
+//! entries — the calibration is part of the key, never an invalidation.
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::arch::NeutronConfig;
-use crate::compiler::{compile, CompileOptions, Compiled};
+use crate::compiler::{compile, CompileOptions, Compiled, CostCalibration};
 use crate::coordinator::{emit, JobProgram};
 use crate::cp::SearchConfig;
+use crate::ir::OpClass;
 use crate::zoo::ModelId;
+
+/// FNV-1a over a sequence of 64-bit words — the one hash both
+/// fingerprints below share.
+fn fnv1a_words(words: impl IntoIterator<Item = u64>) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for w in words {
+        for b in w.to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(PRIME);
+        }
+    }
+    h
+}
 
 /// FNV-1a over every architecture parameter. Two configs with equal
 /// fingerprints compile identically, so the fingerprint is the cache-key
 /// component that isolates tenants on different NPU configurations.
 pub fn config_fingerprint(cfg: &NeutronConfig) -> u64 {
-    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
-    const PRIME: u64 = 0x0000_0100_0000_01b3;
-    let mut h = OFFSET;
-    let mut mix = |v: u64| {
-        for b in v.to_le_bytes() {
-            h = (h ^ b as u64).wrapping_mul(PRIME);
-        }
-    };
-    mix(cfg.n as u64);
-    mix(cfg.m as u64);
-    mix(cfg.a as u64);
-    mix(cfg.wc_bytes as u64);
-    mix(cfg.cores as u64);
-    mix(cfg.freq_ghz.to_bits());
-    mix(cfg.tcm_bytes as u64);
-    mix(cfg.tcm_banks as u64);
-    mix(cfg.ddr_gbps.to_bits());
-    mix(cfg.bus_bytes as u64);
-    mix(cfg.buses_per_core as u64);
-    mix(cfg.job_overhead_cycles);
-    h
+    fnv1a_words([
+        cfg.n as u64,
+        cfg.m as u64,
+        cfg.a as u64,
+        cfg.wc_bytes as u64,
+        cfg.cores as u64,
+        cfg.freq_ghz.to_bits(),
+        cfg.tcm_bytes as u64,
+        cfg.tcm_banks as u64,
+        cfg.ddr_gbps.to_bits(),
+        cfg.bus_bytes as u64,
+        cfg.buses_per_core as u64,
+        cfg.job_overhead_cycles,
+    ])
+}
+
+/// FNV-1a over the *effective* per-class scales of a calibration: for
+/// every [`OpClass`] in `OpClass::all()` order, the scale
+/// [`CostCalibration::scale_for`] resolves (1.0 when unfitted). Two
+/// calibrations that price every class identically — whatever the
+/// insertion order or redundant entries behind them — fingerprint
+/// identically, and the identity calibration always hashes to the same
+/// stable value, so pre-refactor cache keys are simply "identity" keys.
+pub fn calibration_fingerprint(calibration: &CostCalibration) -> u64 {
+    fnv1a_words(OpClass::all().map(|class| calibration.scale_for(class).to_bits()))
 }
 
 /// Compile options for serving: identical inputs must yield bit-identical
@@ -47,7 +70,7 @@ pub fn config_fingerprint(cfg: &NeutronConfig) -> u64 {
 /// (deterministic) rather than a wall-clock limit. The branch-and-bound
 /// search itself is deterministic (smallest-domain/lowest-index selection),
 /// so with node budgets the whole mid-end is a pure function of
-/// `(graph, config)`.
+/// `(graph, config, calibration)`.
 pub fn deterministic_compile_options() -> CompileOptions {
     let solver = |nodes: u64| SearchConfig {
         node_limit: Some(nodes),
@@ -72,13 +95,14 @@ pub struct CachedModel {
     pub program: JobProgram,
 }
 
-/// Memoizes `compile` + `emit` per `(ModelId, config fingerprint)` so
-/// repeat requests skip the CP solver.
+/// Memoizes `compile` + `emit` per
+/// `(ModelId, config fingerprint, calibration fingerprint)` so repeat
+/// requests skip the CP solver.
 #[derive(Debug)]
 pub struct CompileCache {
     cfg: NeutronConfig,
     opts: CompileOptions,
-    entries: HashMap<(ModelId, u64), Arc<CachedModel>>,
+    entries: HashMap<(ModelId, u64, u64), Arc<CachedModel>>,
     /// Lookups served from the cache.
     pub hits: u64,
     /// Lookups that ran a cold compile.
@@ -87,19 +111,31 @@ pub struct CompileCache {
 
 impl CompileCache {
     /// Build an empty cache that compiles under `opts` for `cfg` by
-    /// default (see [`CompileCache::get`]).
+    /// default (see [`CompileCache::get`]). `opts.calibration` is the
+    /// cache's default calibration.
     pub fn new(cfg: NeutronConfig, opts: CompileOptions) -> Self {
         Self { cfg, opts, entries: HashMap::new(), hits: 0, misses: 0 }
     }
 
-    /// Serving default: deterministic solver budgets.
+    /// Serving default: deterministic solver budgets, identity
+    /// calibration.
     pub fn for_serving(cfg: NeutronConfig) -> Self {
         Self::new(cfg, deterministic_compile_options())
     }
 
+    /// Serving default with a fitted calibration: deterministic solver
+    /// budgets, every compile priced under `calibration`. The calibrated
+    /// mid-end is still a pure function of
+    /// `(graph, config, calibration)`, so the determinism contract holds
+    /// unchanged.
+    pub fn for_serving_with(cfg: NeutronConfig, calibration: CostCalibration) -> Self {
+        let opts = CompileOptions { calibration, ..deterministic_compile_options() };
+        Self::new(cfg, opts)
+    }
+
     /// Resolve a model's compiled program under the cache's default
-    /// config, compiling on the first request (miss) and returning the
-    /// shared entry afterwards (hit).
+    /// config and calibration, compiling on the first request (miss) and
+    /// returning the shared entry afterwards (hit).
     pub fn get(&mut self, model: ModelId) -> Arc<CachedModel> {
         let cfg = self.cfg.clone();
         self.get_for(model, &cfg)
@@ -108,26 +144,52 @@ impl CompileCache {
     /// Resolve under an explicit config (mixed per-tenant configurations):
     /// entries for different fingerprints coexist in one cache.
     pub fn get_for(&mut self, model: ModelId, cfg: &NeutronConfig) -> Arc<CachedModel> {
-        let key = (model, config_fingerprint(cfg));
+        let calibration = self.opts.calibration.clone();
+        self.get_with_calibration(model, cfg, &calibration)
+    }
+
+    /// Resolve under an explicit config *and* calibration: artifacts for
+    /// the same model compiled with and without a fitted calibration
+    /// coexist as separate entries, keyed by the calibration's effective
+    /// per-class scales.
+    pub fn get_with_calibration(
+        &mut self,
+        model: ModelId,
+        cfg: &NeutronConfig,
+        calibration: &CostCalibration,
+    ) -> Arc<CachedModel> {
+        let key = (model, config_fingerprint(cfg), calibration_fingerprint(calibration));
         if let Some(entry) = self.entries.get(&key) {
             self.hits += 1;
             return Arc::clone(entry);
         }
         self.misses += 1;
         let graph = model.build();
-        let compiled = compile(&graph, cfg, &self.opts);
+        let opts = CompileOptions { calibration: calibration.clone(), ..self.opts.clone() };
+        let compiled = compile(&graph, cfg, &opts);
         let program = emit(&compiled, &graph.name);
         let entry = Arc::new(CachedModel { model, compiled, program });
         self.entries.insert(key, Arc::clone(&entry));
         entry
     }
 
-    /// Look up without compiling (and without counting a hit/miss).
-    pub fn peek(&self, model: ModelId) -> Option<&Arc<CachedModel>> {
-        self.entries.get(&(model, config_fingerprint(&self.cfg)))
+    /// The calibration this cache compiles under by default — the one
+    /// [`CompileCache::get`] and [`CompileCache::get_for`] resolve with.
+    pub fn default_calibration(&self) -> &CostCalibration {
+        &self.opts.calibration
     }
 
-    /// Number of cached `(model, config)` entries.
+    /// Look up under the cache's default config and calibration without
+    /// compiling (and without counting a hit/miss).
+    pub fn peek(&self, model: ModelId) -> Option<&Arc<CachedModel>> {
+        self.entries.get(&(
+            model,
+            config_fingerprint(&self.cfg),
+            calibration_fingerprint(&self.opts.calibration),
+        ))
+    }
+
+    /// Number of cached `(model, config, calibration)` entries.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
@@ -177,6 +239,44 @@ mod tests {
         assert!((cache.hit_rate() - 0.5).abs() < 1e-12);
         assert_eq!(a.model, ModelId::MobileNetV3Min);
         assert!(!a.program.jobs.is_empty());
+    }
+
+    #[test]
+    fn calibration_fingerprint_is_canonical() {
+        use crate::ir::OpClass;
+        let id = CostCalibration::identity();
+        // Redundant explicit 1.0 entries price identically → same key.
+        let explicit_identity = CostCalibration::from_scales(&[(OpClass::Conv, 1.0)]);
+        assert_eq!(calibration_fingerprint(&id), calibration_fingerprint(&explicit_identity));
+        // Insertion order does not matter; the effective scales do.
+        let a = CostCalibration::from_scales(&[(OpClass::Conv, 1.5), (OpClass::Pool, 0.5)]);
+        let b = CostCalibration::from_scales(&[(OpClass::Pool, 0.5), (OpClass::Conv, 1.5)]);
+        assert_eq!(calibration_fingerprint(&a), calibration_fingerprint(&b));
+        assert_ne!(calibration_fingerprint(&a), calibration_fingerprint(&id));
+    }
+
+    #[test]
+    fn per_calibration_entries_coexist_and_hit() {
+        use crate::ir::OpClass;
+        let cfg = NeutronConfig::flagship_2tops();
+        let cal = CostCalibration::from_scales(&[(OpClass::Conv, 1.5)]);
+        let mut cache = CompileCache::for_serving(cfg.clone());
+        let plain = cache.get(ModelId::MobileNetV3Min);
+        let tuned = cache.get_with_calibration(ModelId::MobileNetV3Min, &cfg, &cal);
+        assert!(!Arc::ptr_eq(&plain, &tuned), "distinct calibrations must compile separately");
+        assert_eq!(cache.len(), 2);
+        assert_eq!((cache.hits, cache.misses), (0, 2));
+        assert_eq!(tuned.compiled.calibration, cal);
+        assert!(plain.compiled.calibration.is_identity());
+        // Identical calibration → hit; a cache built *around* the same
+        // calibration resolves the same key through plain get().
+        let again = cache.get_with_calibration(ModelId::MobileNetV3Min, &cfg, &cal);
+        assert!(Arc::ptr_eq(&tuned, &again));
+        assert_eq!(cache.hits, 1);
+        let mut calibrated_cache = CompileCache::for_serving_with(cfg.clone(), cal.clone());
+        let via_default = calibrated_cache.get(ModelId::MobileNetV3Min);
+        assert_eq!(via_default.compiled.calibration, cal);
+        assert!(calibrated_cache.peek(ModelId::MobileNetV3Min).is_some());
     }
 
     #[test]

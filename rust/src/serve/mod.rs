@@ -11,8 +11,9 @@
 //! Three pieces:
 //!
 //! * [`CompileCache`] — memoizes `compile` + `emit` per
-//!   `(ModelId, NeutronConfig fingerprint)`, so repeat requests skip the CP
-//!   solver entirely;
+//!   `(ModelId, NeutronConfig fingerprint, calibration fingerprint)`, so
+//!   repeat requests skip the CP solver entirely and calibrated artifacts
+//!   coexist with uncalibrated ones;
 //! * [`Scheduler`] — a bounded admission queue (overflow shed per
 //!   [`AdmissionPolicy`]) feeding a deterministic priority dispatcher
 //!   (class first, then admission order, with an optional aging rule
@@ -60,7 +61,10 @@ pub mod cache;
 pub mod queue;
 pub mod server;
 
-pub use cache::{config_fingerprint, deterministic_compile_options, CachedModel, CompileCache};
+pub use cache::{
+    calibration_fingerprint, config_fingerprint, deterministic_compile_options, CachedModel,
+    CompileCache,
+};
 pub use queue::{
     marginal_service_cycles, synthetic_trace, synthetic_trace_with_mix, Admission,
     AdmissionPolicy, Completion, NpuInstance, Priority, PriorityMix, Request, Scheduler,

@@ -1,0 +1,249 @@
+//! Calibration file format: a single-line JSON document carrying the
+//! fitted per-op-class cost corrections, so a fit recorded on one run can
+//! be fed back into later compiles (`neutron compile|serve|replay
+//! --calibration`, `neutron validate|tune --save-calibration`).
+//!
+//! ```json
+//! {"format":"eiq-neutron-calibration","version":1,
+//!  "config_fingerprint":1234,
+//!  "scales":[{"class":"conv","scale":1.31},{"class":"pool","scale":2.05}]}
+//! ```
+//!
+//! Versioning and strictness follow the trace format's rules (see
+//! `trace/format.rs`): the reader accepts exactly the versions it knows,
+//! unknown fields and unknown classes are hard errors, and every scale
+//! must be finite, positive and inside
+//! `[CostCalibration::MIN_SCALE, MAX_SCALE]` — the writer only emits
+//! clamped fits, so anything outside that range is a corrupt or
+//! hand-mangled file, not a fit. Scales are written in Rust's shortest
+//! round-trip `f64` form, so save → load reproduces the calibration (and
+//! its cache fingerprint) bit-exactly.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::arch::NeutronConfig;
+use crate::compiler::CostCalibration;
+use crate::ir::OpClass;
+use crate::serve::config_fingerprint;
+
+use super::format::Json;
+
+/// The calibration file format version this build reads and writes.
+pub const CALIBRATION_FORMAT_VERSION: u64 = 1;
+
+/// The format name stamped into (and required from) every file.
+pub const CALIBRATION_FORMAT_NAME: &str = "eiq-neutron-calibration";
+
+/// A saved calibration: the fitted scales plus the fingerprint of the
+/// config they were measured on (a fit transplanted onto a different
+/// architecture would correct the wrong model, so loading checks it).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CalibrationFile {
+    /// FNV-1a fingerprint of the `NeutronConfig` the fit was measured on.
+    pub config_fingerprint: u64,
+    /// The fitted per-class corrections.
+    pub calibration: CostCalibration,
+}
+
+impl CalibrationFile {
+    /// Wrap a fitted calibration for saving against `cfg`.
+    pub fn new(cfg: &NeutronConfig, calibration: CostCalibration) -> Self {
+        Self { config_fingerprint: config_fingerprint(cfg), calibration }
+    }
+
+    /// Serialize to the single-line JSON document (plus a trailing
+    /// newline, so the file is a well-formed text file).
+    pub fn to_json(&self) -> String {
+        let scales = self
+            .calibration
+            .scales()
+            .iter()
+            .map(|&(class, scale)| {
+                Json::Object(vec![
+                    ("class".into(), Json::Str(class.name().into())),
+                    ("scale".into(), Json::Float(scale)),
+                ])
+            })
+            .collect();
+        let doc = Json::Object(vec![
+            ("format".into(), Json::Str(CALIBRATION_FORMAT_NAME.into())),
+            ("version".into(), Json::UInt(CALIBRATION_FORMAT_VERSION)),
+            ("config_fingerprint".into(), Json::UInt(self.config_fingerprint)),
+            ("scales".into(), Json::Array(scales)),
+        ]);
+        let mut out = doc.to_string_compact();
+        out.push('\n');
+        out
+    }
+
+    /// Parse a calibration file. Strict: exact format name and version,
+    /// no unknown fields, known classes only, and every scale finite,
+    /// positive and within the clamp range.
+    pub fn parse(text: &str) -> Result<CalibrationFile> {
+        let j = Json::parse(text.trim())?;
+        if let Json::Object(fields) = &j {
+            for (k, _) in fields {
+                if !["format", "version", "config_fingerprint", "scales"]
+                    .contains(&k.as_str())
+                {
+                    bail!("unknown field {k:?} (adding fields requires a version bump)");
+                }
+            }
+        } else {
+            bail!("calibration file must be a JSON object");
+        }
+        let format = j
+            .req("format")?
+            .as_str()
+            .ok_or_else(|| anyhow!("field \"format\" must be a string"))?;
+        if format != CALIBRATION_FORMAT_NAME {
+            bail!("not a {CALIBRATION_FORMAT_NAME} file (format {format:?})");
+        }
+        let version = j
+            .req("version")?
+            .as_u64()
+            .ok_or_else(|| anyhow!("field \"version\" must be an unsigned integer"))?;
+        if version != CALIBRATION_FORMAT_VERSION {
+            bail!(
+                "unsupported calibration format version {version} (this build reads only \
+                 version {CALIBRATION_FORMAT_VERSION})"
+            );
+        }
+        let config_fingerprint = j
+            .req("config_fingerprint")?
+            .as_u64()
+            .ok_or_else(|| anyhow!("field \"config_fingerprint\" must be an unsigned integer"))?;
+        let mut scales: Vec<(OpClass, f64)> = Vec::new();
+        for entry in j
+            .req("scales")?
+            .as_array()
+            .ok_or_else(|| anyhow!("field \"scales\" must be an array"))?
+        {
+            if let Json::Object(fields) = entry {
+                for (k, _) in fields {
+                    if !["class", "scale"].contains(&k.as_str()) {
+                        bail!("unknown scale field {k:?}");
+                    }
+                }
+            }
+            let class_name = entry
+                .req("class")?
+                .as_str()
+                .ok_or_else(|| anyhow!("scale field \"class\" must be a string"))?;
+            let class = OpClass::parse(class_name)
+                .ok_or_else(|| anyhow!("unknown op class {class_name:?}"))?;
+            let scale = entry
+                .req("scale")?
+                .as_f64()
+                .ok_or_else(|| anyhow!("scale field \"scale\" must be a number"))?;
+            if !scale.is_finite()
+                || scale < CostCalibration::MIN_SCALE
+                || scale > CostCalibration::MAX_SCALE
+            {
+                bail!(
+                    "scale {scale} for class {class_name:?} outside the sane range \
+                     [{}, {}] — corrupt file?",
+                    CostCalibration::MIN_SCALE,
+                    CostCalibration::MAX_SCALE
+                );
+            }
+            if scales.iter().any(|&(c, _)| c == class) {
+                bail!("duplicate scale entry for class {class_name:?}");
+            }
+            scales.push((class, scale));
+        }
+        Ok(CalibrationFile {
+            config_fingerprint,
+            calibration: CostCalibration::from_scales(&scales),
+        })
+    }
+
+    /// The wrapped calibration, after checking the file was measured on
+    /// `cfg` (a mismatching fingerprint is an error — the corrections
+    /// would target the wrong architecture).
+    pub fn calibration_for(&self, cfg: &NeutronConfig) -> Result<CostCalibration> {
+        let live = config_fingerprint(cfg);
+        if live != self.config_fingerprint {
+            bail!(
+                "config mismatch: calibration was fitted on config fingerprint {:#x}, \
+                 compiling on {:#x} — refit on the live config",
+                self.config_fingerprint,
+                live
+            );
+        }
+        Ok(self.calibration.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CalibrationFile {
+        CalibrationFile::new(
+            &NeutronConfig::flagship_2tops(),
+            CostCalibration::from_scales(&[
+                (OpClass::Conv, 1.3125),
+                (OpClass::DepthwiseConv, 0.875),
+                (OpClass::Pool, 2.0 / 3.0), // not exactly representable in decimal
+            ]),
+        )
+    }
+
+    #[test]
+    fn calibration_file_round_trips_bit_exactly() {
+        let f = sample();
+        let text = f.to_json();
+        let parsed = CalibrationFile::parse(&text).unwrap();
+        assert_eq!(parsed, f);
+        // The effective scales — and hence the compile-cache key — are
+        // preserved exactly through the shortest-round-trip float form.
+        for class in OpClass::all() {
+            assert_eq!(
+                parsed.calibration.scale_for(class).to_bits(),
+                f.calibration.scale_for(class).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn identity_calibration_saves_and_loads() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let f = CalibrationFile::new(&cfg, CostCalibration::identity());
+        let parsed = CalibrationFile::parse(&f.to_json()).unwrap();
+        assert!(parsed.calibration.is_identity());
+        assert!(parsed.calibration_for(&cfg).unwrap().is_identity());
+    }
+
+    #[test]
+    fn strict_parse_rejects_bad_files() {
+        let good = sample().to_json();
+        for (bad, why) in [
+            (good.replace("eiq-neutron-calibration", "something-else"), "format name"),
+            (good.replace("\"version\":1", "\"version\":9"), "version"),
+            (good.replace("\"conv\"", "\"warp-drive\""), "unknown class"),
+            (good.replace("1.3125", "400.0"), "out-of-range scale"),
+            (good.replace("1.3125", "0.0"), "non-positive scale"),
+            (good.replace("{\"format\"", "{\"extra\":1,\"format\""), "unknown field"),
+            ("not json at all".to_string(), "garbage"),
+        ] {
+            assert!(CalibrationFile::parse(&bad).is_err(), "{why} should be rejected");
+        }
+        // Duplicate class entries are ambiguous → rejected.
+        let dup = good.replace(
+            "{\"class\":\"conv\",\"scale\":1.3125}",
+            "{\"class\":\"conv\",\"scale\":1.3125},{\"class\":\"conv\",\"scale\":1.5}",
+        );
+        assert!(CalibrationFile::parse(&dup).is_err());
+    }
+
+    #[test]
+    fn config_mismatch_is_refused() {
+        let f = sample();
+        let err = f
+            .calibration_for(&NeutronConfig::mcu_half_tops())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("config mismatch"), "{err}");
+    }
+}

@@ -21,16 +21,27 @@
 //! * [`validate`] — a calibration pass joining compiler-predicted per-op
 //!   cycles against the executor tick path's observations, reporting
 //!   per-op-class MAPE/bias tables and fitting the linear corrections
-//!   `compiler::CostCalibration` can apply (`neutron validate`).
+//!   `compiler::CostCalibration` applies (`neutron validate`);
+//! * [`calibration`] — a versioned single-line JSON file format for
+//!   fitted calibrations, so a fit travels from `neutron validate
+//!   --save-calibration` to `neutron compile|serve|replay --calibration`;
+//! * [`tune`] — the closed record → fit → recompile → replay loop
+//!   (`neutron tune`): fit a guarded calibration from a recorded trace,
+//!   recompile every model under it, replay the same requests and report
+//!   per-op-class MAPE and makespan before vs after.
 
 #![warn(missing_docs)]
 
+pub mod calibration;
 pub mod format;
 pub mod record;
 pub mod replay;
+pub mod tune;
 pub mod validate;
 
+pub use calibration::{CalibrationFile, CALIBRATION_FORMAT_NAME, CALIBRATION_FORMAT_VERSION};
 pub use format::{Json, ModelOps, OpRecord, Trace, TraceMeta, TRACE_FORMAT_NAME, TRACE_FORMAT_VERSION};
 pub use record::{profile_model_ops, serve_recorded, TraceRecorder};
-pub use replay::{ReplayDriver, ReplayOutcome};
+pub use replay::{ReplayDriver, ReplayOptions, ReplayOutcome};
+pub use tune::{tune_from_trace, TuneOutcome};
 pub use validate::{ClassCalibrationRow, ValidationReport};

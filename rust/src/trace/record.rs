@@ -7,12 +7,13 @@
 //! (arrival order), the outcome (completions in dispatch order + the shed
 //! set), and, the first time each model's cached program is resolved, that
 //! model's per-op predicted-vs-observed cycle profile: predictions from
-//! the analytic cost model (`compiler::layer_latency_cycles`) joined
-//! against the executor tick path's attribution
-//! (`JobProgram::per_op_tick_cycles`).
+//! the cost model the artifact was compiled under
+//! (`compiler::calibrated_layer_latency_cycles` with the artifact's own
+//! `Compiled::calibration`) joined against the executor tick path's
+//! attribution (`JobProgram::per_op_tick_cycles`).
 
 use crate::arch::NeutronConfig;
-use crate::compiler::layer_latency_cycles;
+use crate::compiler::calibrated_layer_latency_cycles;
 use crate::serve::{
     config_fingerprint, serve_with_cache_recorded, CachedModel, CompileCache, Request,
     SchedulerOptions, ServeOptions, ServeReport, TraceOutcome,
@@ -87,10 +88,13 @@ impl TraceRecorder {
 
 /// Per-op predicted-vs-observed records for one cached model: observed
 /// cycles from the tick timing model's per-op attribution, predictions
-/// from the analytic layer cost under the format the compiler actually
-/// selected. The sentinel bucket `per_op_tick_cycles` uses for
-/// compute-free programs is skipped (real model programs never produce
-/// it).
+/// from the layer cost under the format the compiler actually selected
+/// **and the calibration the artifact was compiled with**
+/// (`Compiled::calibration`) — the join always compares what the compiler
+/// believed against what the tick path charged, whether or not a fitted
+/// calibration was in force. The sentinel bucket `per_op_tick_cycles`
+/// uses for compute-free programs is skipped (real model programs never
+/// produce it).
 pub fn profile_model_ops(cfg: &NeutronConfig, entry: &CachedModel) -> Vec<OpRecord> {
     let graph = entry.model.build();
     entry
@@ -104,7 +108,13 @@ pub fn profile_model_ops(cfg: &NeutronConfig, entry: &CachedModel) -> Vec<OpReco
             OpRecord {
                 op: op_id.0,
                 class: op.class(),
-                predicted_cycles: layer_latency_cycles(&graph, op, cfg, format),
+                predicted_cycles: calibrated_layer_latency_cycles(
+                    &graph,
+                    op,
+                    cfg,
+                    format,
+                    &entry.compiled.calibration,
+                ),
                 observed_cycles: observed,
             }
         })

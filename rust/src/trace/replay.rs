@@ -12,15 +12,54 @@
 //! and shed set against the recording, so a drifted timing model (code
 //! changed since the trace was captured) is detected instead of silently
 //! reported.
+//!
+//! [`ReplayOptions`] bends the faithful replay in two controlled ways:
+//! **speed scaling** time-warps the recorded arrival times by a factor
+//! (`speed > 1` compresses gaps → higher offered load from the same
+//! trace, `speed < 1` stretches them), and a **calibration** recompiles
+//! every replayed model under fitted per-op-class cost corrections.
+//! Either one changes the timing on purpose, so the recorded-completion
+//! cross-check only runs for a faithful replay (`speed == 1`, identity
+//! calibration); warped or calibrated replays are still fully
+//! deterministic — same trace + same options → bit-identical report.
 
 use anyhow::{bail, Result};
 
 use crate::arch::NeutronConfig;
+use crate::compiler::CostCalibration;
 use crate::serve::{
-    config_fingerprint, report_from_outcome, run_trace, CompileCache, ServeReport,
+    calibration_fingerprint, config_fingerprint, report_from_outcome, run_trace, CompileCache,
+    Request, ServeReport,
 };
 
 use super::format::Trace;
+
+/// Controlled deviations from a faithful replay (see the module docs).
+#[derive(Debug, Clone)]
+pub struct ReplayOptions {
+    /// Arrival-time warp factor: each recorded arrival cycle is divided
+    /// by `speed` (rounded to the nearest cycle), so `speed = 2` offers
+    /// the same requests at twice the recorded rate. Must be finite and
+    /// positive; `1.0` preserves the recording exactly.
+    pub speed: f64,
+    /// Cost calibration the replayed models are recompiled under.
+    /// Identity reproduces the recorded artifacts bit for bit.
+    pub calibration: CostCalibration,
+}
+
+impl Default for ReplayOptions {
+    fn default() -> Self {
+        Self { speed: 1.0, calibration: CostCalibration::identity() }
+    }
+}
+
+impl ReplayOptions {
+    /// A faithful replay reproduces the recorded timing, so the
+    /// recorded-completion cross-check applies.
+    pub fn is_faithful(&self) -> bool {
+        self.speed == 1.0 && self.calibration.is_identity()
+    }
+}
 
 /// Result of a replay: the rebuilt report plus the recording cross-check.
 #[derive(Debug, Clone)]
@@ -77,6 +116,44 @@ impl ReplayDriver {
         cfg: &NeutronConfig,
         cache: &mut CompileCache,
     ) -> Result<ReplayOutcome> {
+        self.replay_with_options_cached(cfg, &ReplayOptions::default(), cache)
+    }
+
+    /// Replay under [`ReplayOptions`] on a fresh compile cache built
+    /// around `opts.calibration` (calibrated and identity artifacts never
+    /// share cache entries — the calibration is part of the cache key).
+    pub fn replay_with_options(
+        &self,
+        cfg: &NeutronConfig,
+        opts: &ReplayOptions,
+    ) -> Result<ReplayOutcome> {
+        let mut cache = CompileCache::for_serving_with(cfg.clone(), opts.calibration.clone());
+        self.replay_with_options_cached(cfg, opts, &mut cache)
+    }
+
+    /// [`ReplayDriver::replay_with_options`] resolving programs through a
+    /// caller-owned cache. The cache must compile under
+    /// `opts.calibration` (build it with
+    /// [`CompileCache::for_serving_with`]); a cache defaulting to a
+    /// different calibration would price the replay against a different
+    /// model than the options claim, so the mismatch is an error.
+    pub fn replay_with_options_cached(
+        &self,
+        cfg: &NeutronConfig,
+        opts: &ReplayOptions,
+        cache: &mut CompileCache,
+    ) -> Result<ReplayOutcome> {
+        if !(opts.speed.is_finite() && opts.speed > 0.0) {
+            bail!("replay speed must be finite and positive, got {}", opts.speed);
+        }
+        if calibration_fingerprint(cache.default_calibration())
+            != calibration_fingerprint(&opts.calibration)
+        {
+            bail!(
+                "replay cache compiles under a different calibration than the replay \
+                 options — build it with CompileCache::for_serving_with(cfg, calibration)"
+            );
+        }
         let meta = &self.trace.meta;
         let live = config_fingerprint(cfg);
         if live != meta.config_fingerprint {
@@ -95,18 +172,39 @@ impl ReplayDriver {
         {
             bail!("trace request arrivals are not non-decreasing — corrupt or re-ordered file");
         }
+        // Time-warp: dividing every arrival by the same positive factor
+        // preserves non-decreasing order (rounding a monotone sequence
+        // keeps it monotone), so the warped trace is still a valid one.
+        let requests: Vec<Request> = if opts.speed == 1.0 {
+            self.trace.requests.clone()
+        } else {
+            self.trace
+                .requests
+                .iter()
+                .map(|r| Request {
+                    arrival_cycles: (r.arrival_cycles as f64 / opts.speed).round() as u64,
+                    ..*r
+                })
+                .collect()
+        };
         let (hits0, misses0) = (cache.hits, cache.misses);
-        let outcome = run_trace(cfg, &self.trace.requests, &meta.scheduler, cache);
+        let outcome = run_trace(cfg, &requests, &meta.scheduler, cache);
         let report = report_from_outcome(
             cfg,
             &meta.models,
             meta.scheduler.instances,
-            &self.trace.requests,
+            &requests,
             &outcome,
             cache.hits - hits0,
             cache.misses - misses0,
         );
-        let divergence = self.first_divergence(&outcome.completions, &outcome.shed);
+        // A warped or calibrated replay deviates from the recorded timing
+        // by design — only a faithful replay is held to the recording.
+        let divergence = if opts.is_faithful() {
+            self.first_divergence(&outcome.completions, &outcome.shed)
+        } else {
+            None
+        };
         Ok(ReplayOutcome { report, divergence })
     }
 
@@ -187,6 +285,105 @@ mod tests {
         let other = NeutronConfig::mcu_half_tops();
         let err = ReplayDriver::new(trace).replay(&other).unwrap_err().to_string();
         assert!(err.contains("config mismatch"), "{err}");
+    }
+
+    #[test]
+    fn speed_scaling_is_deterministic_and_raises_offered_load() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let mut cache = CompileCache::for_serving(cfg.clone());
+        let (_, trace) = serve_recorded(&cfg, &small_opts(), &mut cache);
+        let driver = ReplayDriver::new(trace);
+        let base = driver.replay(&cfg).unwrap();
+        assert!(base.report.offered_load_inf_s > 0.0);
+
+        let fast = ReplayOptions { speed: 2.0, ..ReplayOptions::default() };
+        let a = driver.replay_with_options(&cfg, &fast).unwrap();
+        let b = driver.replay_with_options(&cfg, &fast).unwrap();
+        assert_eq!(a.report, b.report, "warped replay must be deterministic");
+        // Halving every arrival gap strictly raises the offered load.
+        assert!(
+            a.report.offered_load_inf_s > base.report.offered_load_inf_s,
+            "{} !> {}",
+            a.report.offered_load_inf_s,
+            base.report.offered_load_inf_s
+        );
+        assert_eq!(a.report.offered, base.report.offered, "same requests, warped arrivals");
+        // A warped replay is not held to the recorded completions.
+        assert!(a.matches_recording());
+
+        // speed 1.0 through the options path is the faithful replay.
+        let one = driver
+            .replay_with_options(&cfg, &ReplayOptions::default())
+            .unwrap();
+        assert_eq!(one.report, base.report);
+        assert!(one.matches_recording());
+    }
+
+    #[test]
+    fn degenerate_speed_is_rejected() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let mut cache = CompileCache::for_serving(cfg.clone());
+        let (_, trace) = serve_recorded(&cfg, &small_opts(), &mut cache);
+        let driver = ReplayDriver::new(trace);
+        for speed in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let opts = ReplayOptions { speed, ..ReplayOptions::default() };
+            assert!(driver.replay_with_options(&cfg, &opts).is_err(), "speed {speed}");
+        }
+    }
+
+    #[test]
+    fn calibrated_replay_is_deterministic_and_skips_the_cross_check() {
+        use crate::compiler::CostCalibration;
+        use crate::ir::OpClass;
+        let cfg = NeutronConfig::flagship_2tops();
+        let mut cache = CompileCache::for_serving(cfg.clone());
+        let (_, trace) = serve_recorded(&cfg, &small_opts(), &mut cache);
+        let driver = ReplayDriver::new(trace);
+        let opts = ReplayOptions {
+            calibration: CostCalibration::from_scales(&[
+                (OpClass::Conv, 1.5),
+                (OpClass::DepthwiseConv, 1.5),
+            ]),
+            ..ReplayOptions::default()
+        };
+        let a = driver.replay_with_options(&cfg, &opts).unwrap();
+        let b = driver.replay_with_options(&cfg, &opts).unwrap();
+        assert_eq!(a.report, b.report);
+        // Calibrated timing deviates from the recording on purpose — the
+        // driver must not flag that as divergence.
+        assert!(a.matches_recording());
+        assert_eq!(a.report.offered, a.report.completed + a.report.shed);
+    }
+
+    #[test]
+    fn mismatched_cache_calibration_is_rejected() {
+        use crate::compiler::CostCalibration;
+        use crate::ir::OpClass;
+        let cfg = NeutronConfig::flagship_2tops();
+        let mut cache = CompileCache::for_serving(cfg.clone());
+        let (_, trace) = serve_recorded(&cfg, &small_opts(), &mut cache);
+        let driver = ReplayDriver::new(trace);
+        // An identity cache cannot honor calibrated replay options.
+        let opts = ReplayOptions {
+            calibration: CostCalibration::from_scales(&[(OpClass::Conv, 1.5)]),
+            ..ReplayOptions::default()
+        };
+        let err = driver
+            .replay_with_options_cached(&cfg, &opts, &mut cache)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("different calibration"), "{err}");
+        // An explicit all-1.0 calibration IS the identity: it prices
+        // identically, fingerprints identically, and replays faithfully.
+        let spelled = ReplayOptions {
+            calibration: CostCalibration::from_scales(&[(OpClass::Conv, 1.0)]),
+            ..ReplayOptions::default()
+        };
+        assert!(spelled.is_faithful());
+        let out = driver
+            .replay_with_options_cached(&cfg, &spelled, &mut cache)
+            .unwrap();
+        assert!(out.matches_recording(), "{:?}", out.divergence);
     }
 
     #[test]

@@ -1,0 +1,239 @@
+//! The record → fit → recompile → replay tuning loop (`neutron tune`).
+//!
+//! The paper's thesis is that the CP compiler wins by optimizing against
+//! workload reality, not peak TOPS. This module closes that loop in one
+//! step: take a recorded trace, fit the per-op-class cost corrections
+//! from its predicted-vs-observed profiles (`trace/validate.rs`),
+//! recompile every model under the fitted [`CostCalibration`] (the
+//! corrections now steer format selection, the scheduling objective and
+//! the emitted job cycles — see `compiler::CostModel`), replay the same
+//! recorded requests against the recompiled artifacts, and score the
+//! calibrated cost model the same way the uncalibrated one was scored.
+//!
+//! The fit is **guarded and clamped** (see
+//! `ValidationReport::calibration_guarded`): on the data it was fitted
+//! from, applying it can only improve every class's MAPE, and no scale
+//! leaves `[CostCalibration::MIN_SCALE, MAX_SCALE]`. The post-tune MAPE
+//! reported here is measured on the *recompiled, replayed* run — the
+//! honest number — so it can differ from the first-order
+//! `post_fit_mape_pct` the validation table prints.
+
+use anyhow::{bail, Result};
+
+use crate::arch::NeutronConfig;
+use crate::compiler::CostCalibration;
+use crate::serve::{CompileCache, ServeReport};
+use crate::zoo::ModelId;
+
+use super::format::Trace;
+use super::record::profile_model_ops;
+use super::replay::{ReplayDriver, ReplayOptions};
+use super::validate::ValidationReport;
+
+/// Result of one tuning iteration over a recorded trace.
+#[derive(Debug, Clone)]
+pub struct TuneOutcome {
+    /// The guarded, clamped calibration the loop fed back into
+    /// compilation.
+    pub calibration: CostCalibration,
+    /// Predicted-vs-observed scoring of the recorded (uncalibrated) run.
+    pub before: ValidationReport,
+    /// Scoring of the calibrated recompile on the replayed trace:
+    /// predictions from the calibrated cost model, observations from the
+    /// recompiled programs' tick timing.
+    pub after: ValidationReport,
+    /// Faithful replay of the recorded run (the before-makespan
+    /// reference — bit-identical to the recording).
+    pub report_before: ServeReport,
+    /// The same requests served by the calibrated artifacts.
+    pub report_after: ServeReport,
+}
+
+impl TuneOutcome {
+    /// Overall per-op MAPE of the uncalibrated cost model on the
+    /// recorded run, percent.
+    pub fn mape_before_pct(&self) -> f64 {
+        self.before.overall_mape_pct
+    }
+
+    /// Overall per-op MAPE of the calibrated cost model on the replayed
+    /// (recompiled) run, percent.
+    pub fn mape_after_pct(&self) -> f64 {
+        self.after.overall_mape_pct
+    }
+
+    /// One machine-greppable line (`ci.sh` asserts on it): the overall
+    /// MAPE and makespan before vs after the tune iteration.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "tune: mape_before_pct={:.3} mape_after_pct={:.3} \
+             makespan_before_cycles={} makespan_after_cycles={}",
+            self.mape_before_pct(),
+            self.mape_after_pct(),
+            self.report_before.makespan_cycles,
+            self.report_after.makespan_cycles,
+        )
+    }
+
+    /// Human-readable report: both scoring tables, the fitted scales and
+    /// the makespan comparison, ending with [`TuneOutcome::summary_line`].
+    pub fn table(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        writeln!(s, "== recorded run (uncalibrated cost model) ==").unwrap();
+        s.push_str(&self.before.table());
+        writeln!(s, "\n== fitted calibration (guarded, clamped) ==").unwrap();
+        if self.calibration.is_identity() {
+            writeln!(s, "identity — no class fit improved its recorded MAPE").unwrap();
+        } else {
+            for &(class, scale) in self.calibration.scales() {
+                writeln!(s, "  {:<14} × {:.3}", class.name(), scale).unwrap();
+            }
+        }
+        writeln!(s, "\n== calibrated recompile, replayed ==").unwrap();
+        s.push_str(&self.after.table());
+        let (mb, ma) = (
+            self.report_before.makespan_cycles,
+            self.report_after.makespan_cycles,
+        );
+        let delta_pct = if mb == 0 {
+            0.0
+        } else {
+            (ma as f64 / mb as f64 - 1.0) * 100.0
+        };
+        writeln!(
+            s,
+            "\nmakespan: {mb} -> {ma} cycles ({delta_pct:+.1}% — the calibrated model \
+             re-prices the virtual clock, so this moves with the corrections)"
+        )
+        .unwrap();
+        writeln!(s, "{}", self.summary_line()).unwrap();
+        s
+    }
+}
+
+/// Run one tuning iteration over a recorded trace: fit (guarded +
+/// clamped), recompile under the fit, replay the recorded requests, and
+/// score the calibrated model. Fails when the trace carries no per-op
+/// profiles (nothing was ever dispatched) or was recorded on a different
+/// config.
+pub fn tune_from_trace(cfg: &NeutronConfig, trace: &Trace) -> Result<TuneOutcome> {
+    let before = ValidationReport::from_trace(trace)?;
+    let calibration = before.calibration_guarded();
+    let driver = ReplayDriver::new(trace.clone());
+    // Faithful replay: the before-makespan reference, and the guard that
+    // the recorded observations still describe this build — a trace
+    // captured before a timing-model change would make the before/after
+    // comparison meaningless.
+    let base = driver.replay(cfg)?;
+    if let Some(divergence) = &base.divergence {
+        bail!(
+            "recorded trace does not replay faithfully on this build (timing model \
+             changed since capture?) — re-record before tuning: {divergence}"
+        );
+    }
+    // Calibrated recompile + replay of the same requests. The cache is
+    // built around the fitted calibration, so its entries are the
+    // calibrated artifacts (distinct cache keys from the identity ones).
+    let opts = ReplayOptions { calibration: calibration.clone(), ..ReplayOptions::default() };
+    let mut cache = CompileCache::for_serving_with(cfg.clone(), calibration.clone());
+    let tuned = driver.replay_with_options_cached(cfg, &opts, &mut cache)?;
+    // Score the calibrated model: calibrated predictions (the entries
+    // carry their own calibration) vs the recompiled programs' tick
+    // observations.
+    let mut pairs = Vec::new();
+    let mut seen: Vec<ModelId> = Vec::new();
+    for &model in &trace.meta.models {
+        if seen.contains(&model) {
+            continue;
+        }
+        seen.push(model);
+        if let Some(entry) = cache.peek(model) {
+            pairs.extend(
+                profile_model_ops(cfg, entry)
+                    .into_iter()
+                    .map(|o| (o.class, o.predicted_cycles, o.observed_cycles)),
+            );
+        }
+    }
+    if pairs.is_empty() {
+        bail!("calibrated replay never dispatched a model — nothing to score");
+    }
+    let after = ValidationReport::from_pairs(&pairs);
+    Ok(TuneOutcome {
+        calibration,
+        before,
+        after,
+        report_before: base.report,
+        report_after: tuned.report,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{SchedulerOptions, ServeOptions};
+    use crate::trace::serve_recorded;
+    use crate::zoo::ModelId;
+
+    fn recorded_trace(cfg: &NeutronConfig) -> Trace {
+        let opts = ServeOptions {
+            models: vec![ModelId::MobileNetV3Min, ModelId::MobileNetV1],
+            requests: 10,
+            mean_gap_cycles: 300_000,
+            seed: 13,
+            scheduler: SchedulerOptions { instances: 2, ..SchedulerOptions::default() },
+            ..ServeOptions::default()
+        };
+        let mut cache = CompileCache::for_serving(cfg.clone());
+        serve_recorded(cfg, &opts, &mut cache).1
+    }
+
+    #[test]
+    fn tune_loop_runs_and_scores_both_sides() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let trace = recorded_trace(&cfg);
+        let outcome = tune_from_trace(&cfg, &trace).unwrap();
+        assert!(outcome.mape_before_pct().is_finite());
+        assert!(outcome.mape_after_pct().is_finite());
+        assert!(outcome.report_before.makespan_cycles > 0);
+        assert!(outcome.report_after.makespan_cycles > 0);
+        assert!(!outcome.after.rows.is_empty());
+        // The guard holds first-order: on the recorded data, the kept
+        // scales can only improve each class.
+        for row in &outcome.before.rows {
+            let s = outcome.calibration.scale_for(row.class);
+            if s != 1.0 {
+                assert!(
+                    row.post_fit_mape_pct <= row.mape_pct,
+                    "guard kept a worsening fit for {:?}",
+                    row.class
+                );
+            }
+        }
+        let line = outcome.summary_line();
+        assert!(line.starts_with("tune: mape_before_pct="), "{line}");
+        let table = outcome.table();
+        assert!(table.contains("calibrated recompile"), "{table}");
+        assert!(table.contains(&outcome.summary_line()), "{table}");
+    }
+
+    #[test]
+    fn tune_is_deterministic() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let trace = recorded_trace(&cfg);
+        let a = tune_from_trace(&cfg, &trace).unwrap();
+        let b = tune_from_trace(&cfg, &trace).unwrap();
+        assert_eq!(a.calibration, b.calibration);
+        assert_eq!(a.report_after, b.report_after);
+        assert_eq!(a.summary_line(), b.summary_line());
+    }
+
+    #[test]
+    fn tune_refuses_a_profile_free_trace() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let mut trace = recorded_trace(&cfg);
+        trace.model_ops.clear();
+        assert!(tune_from_trace(&cfg, &trace).is_err());
+    }
+}

@@ -16,7 +16,15 @@
 //!   `observed ≈ scale · predicted` (`Σ pred·obs / Σ pred²`), the
 //!   correction [`ValidationReport::calibration`] hands to the compiler.
 //!   Degenerate fits (no predicted cycles, non-finite or non-positive
-//!   slope) fall back to 1.0 so a calibration is always safe to apply.
+//!   slope) fall back to 1.0, and every fit is clamped into
+//!   `[CostCalibration::MIN_SCALE, CostCalibration::MAX_SCALE]`, so a
+//!   degenerate trace can never hand compilation a wild correction.
+//!
+//! [`ValidationReport::calibration_guarded`] additionally drops any class
+//! whose fitted scale does not improve that class's MAPE on the joined
+//! data (a single least-squares slope minimizes squared error, not MAPE,
+//! so a heterogeneous class can fit a slope that makes its MAPE worse) —
+//! the form the tune loop feeds back into compilation.
 
 use anyhow::{bail, Result};
 
@@ -43,9 +51,15 @@ pub struct ClassCalibrationRow {
     pub observed_cycles: u64,
     /// Mean absolute percentage error of the raw cost model.
     pub mape_pct: f64,
+    /// MAPE of this class after applying its own fitted scale — compare
+    /// against [`ClassCalibrationRow::mape_pct`] to see whether the fit
+    /// helps this class (the guarded calibration keeps only scales that
+    /// do).
+    pub post_fit_mape_pct: f64,
     /// Aggregate bias: positive = the model under-predicts this class.
     pub bias_pct: f64,
-    /// Fitted linear correction (`observed ≈ scale · predicted`).
+    /// Fitted linear correction (`observed ≈ scale · predicted`),
+    /// clamped into `[CostCalibration::MIN_SCALE, MAX_SCALE]`.
     pub scale: f64,
 }
 
@@ -81,6 +95,9 @@ impl ValidationReport {
                 predicted_cycles: predicted,
                 observed_cycles: observed,
                 mape_pct: mape(of_class.iter().map(|&&(_, p, o)| (p as f64, o))),
+                post_fit_mape_pct: mape(
+                    of_class.iter().map(|&&(_, p, o)| (p as f64 * scale, o)),
+                ),
                 bias_pct: if predicted == 0 {
                     0.0
                 } else {
@@ -152,6 +169,25 @@ impl ValidationReport {
         )
     }
 
+    /// The fitted corrections with the improve-only guard applied: a
+    /// class keeps its scale only when the fit does not worsen that
+    /// class's MAPE on the joined data (see the module docs). This is the
+    /// calibration the tune loop compiles under and the calibration-file
+    /// writer saves — on the data it was fitted from, applying it can
+    /// only lower (or keep) every class's MAPE. No-op scales (exactly
+    /// 1.0) are dropped, so an ineffective fit is exactly the identity
+    /// calibration.
+    pub fn calibration_guarded(&self) -> CostCalibration {
+        CostCalibration::from_scales(
+            &self
+                .rows
+                .iter()
+                .filter(|r| r.scale != 1.0 && r.post_fit_mape_pct <= r.mape_pct)
+                .map(|r| (r.class, r.scale))
+                .collect::<Vec<_>>(),
+        )
+    }
+
     /// Render the paper-style predicted-vs-observed table plus the
     /// overall MAPE before/after calibration.
     pub fn table(&self) -> String {
@@ -161,6 +197,7 @@ impl ValidationReport {
             "predicted cyc",
             "observed cyc",
             "MAPE %",
+            "fit MAPE %",
             "bias %",
             "fit scale",
         ]);
@@ -171,6 +208,7 @@ impl ValidationReport {
                 r.predicted_cycles.to_string(),
                 r.observed_cycles.to_string(),
                 format!("{:.1}", r.mape_pct),
+                format!("{:.1}", r.post_fit_mape_pct),
                 format!("{:+.1}", r.bias_pct),
                 format!("{:.3}", r.scale),
             ]);
@@ -204,7 +242,11 @@ fn mape(pairs: impl Iterator<Item = (f64, u64)>) -> f64 {
 }
 
 /// Least-squares slope through the origin of `observed ≈ scale·predicted`;
-/// 1.0 for degenerate fits so the resulting calibration is always valid.
+/// 1.0 for degenerate fits (non-finite or non-positive slope) and clamped
+/// into `[CostCalibration::MIN_SCALE, MAX_SCALE]`, so the resulting
+/// calibration is always valid and can never move a cost estimate by more
+/// than the clamp range even when the trace joins a handful of
+/// pathological ops.
 fn fit_scale(pairs: impl Iterator<Item = (u64, u64)>) -> f64 {
     let mut num = 0.0;
     let mut den = 0.0;
@@ -214,7 +256,7 @@ fn fit_scale(pairs: impl Iterator<Item = (u64, u64)>) -> f64 {
     }
     let scale = num / den;
     if scale.is_finite() && scale > 0.0 {
-        scale
+        CostCalibration::clamp_scale(scale)
     } else {
         1.0
     }
@@ -275,6 +317,41 @@ mod tests {
         let v = ValidationReport::from_pairs(&[(OpClass::Pool, 500, 0)]);
         assert_eq!(v.overall_mape_pct, 0.0);
         assert_eq!(v.rows[0].scale, 1.0, "all-zero observed fits no positive slope");
+    }
+
+    #[test]
+    fn wild_fits_are_clamped_into_the_sane_range() {
+        // Observed is 100× predicted: the raw least-squares slope is 100,
+        // but the calibration must never carry more than MAX_SCALE.
+        let v = ValidationReport::from_pairs(&[
+            (OpClass::Conv, 100, 10_000),
+            (OpClass::Conv, 200, 20_000),
+        ]);
+        assert_eq!(v.rows[0].scale, CostCalibration::MAX_SCALE);
+        // And symmetrically for massive over-prediction.
+        let v = ValidationReport::from_pairs(&[(OpClass::Pool, 10_000, 100)]);
+        assert_eq!(v.rows[0].scale, CostCalibration::MIN_SCALE);
+        // Both ends still build a valid calibration.
+        let _ = v.calibration();
+    }
+
+    #[test]
+    fn guarded_calibration_drops_mape_worsening_fits() {
+        // A heterogeneous class where the least-squares slope (pulled to
+        // ~2 by the large op) makes the class MAPE worse: raw 25%
+        // (0% + 50%), post-fit 50% (100% + 0%).
+        let v = ValidationReport::from_pairs(&[
+            (OpClass::Conv, 1, 1),
+            (OpClass::Conv, 100, 200),
+            (OpClass::Pool, 500, 1_000),
+        ]);
+        let conv = v.rows.iter().find(|r| r.class == OpClass::Conv).unwrap();
+        assert!(conv.post_fit_mape_pct > conv.mape_pct, "{conv:?}");
+        let guarded = v.calibration_guarded();
+        assert_eq!(guarded.scale_for(OpClass::Conv), 1.0, "worsening fit must be dropped");
+        assert!((guarded.scale_for(OpClass::Pool) - 2.0).abs() < 1e-9, "improving fit kept");
+        // The unguarded calibration still carries the raw fit.
+        assert!(v.calibration().scale_for(OpClass::Conv) > 1.0);
     }
 
     #[test]

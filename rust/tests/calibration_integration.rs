@@ -1,0 +1,197 @@
+//! Integration properties of calibration-aware compilation: identity
+//! transparency (the refactored mid-end reproduces the pre-calibration
+//! compiler bit for bit), calibration-keyed compile caching, replay
+//! speed-scaling determinism and the closed tune loop.
+
+use std::sync::Arc;
+
+use eiq_neutron::arch::NeutronConfig;
+use eiq_neutron::compiler::{compile, CompileOptions, CostCalibration};
+use eiq_neutron::coordinator::emit;
+use eiq_neutron::ir::OpClass;
+use eiq_neutron::serve::{
+    calibration_fingerprint, deterministic_compile_options, marginal_service_cycles,
+    CompileCache, SchedulerOptions, ServeOptions,
+};
+use eiq_neutron::trace::{serve_recorded, tune_from_trace, ReplayDriver, ReplayOptions, Trace};
+use eiq_neutron::zoo::ModelId;
+
+fn small_serve(seed: u64) -> ServeOptions {
+    ServeOptions {
+        models: vec![ModelId::MobileNetV3Min, ModelId::MobileNetV1],
+        requests: 12,
+        mean_gap_cycles: 250_000,
+        seed,
+        scheduler: SchedulerOptions { instances: 2, ..SchedulerOptions::default() },
+        ..ServeOptions::default()
+    }
+}
+
+fn record(cfg: &NeutronConfig, seed: u64) -> Trace {
+    let mut cache = CompileCache::for_serving(cfg.clone());
+    serve_recorded(cfg, &small_serve(seed), &mut cache).1
+}
+
+/// With an identity calibration — implicit, explicit, or explicit with
+/// redundant 1.0 entries — `compile` must produce a bit-identical
+/// artifact to the pre-refactor path: same schedule cycles, same
+/// allocation, same emitted job program, same `inference_ms` bits.
+/// (Deterministic node-limited solver budgets, as serving uses: the
+/// property quantifies over models and identity spellings.)
+#[test]
+fn identity_calibration_compiles_bit_identically() {
+    let cfg = NeutronConfig::flagship_2tops();
+    for model in [ModelId::MobileNetV3Min, ModelId::MobileNetV2, ModelId::EfficientNetLite0] {
+        let g = model.build();
+        let baseline = compile(&g, &cfg, &deterministic_compile_options());
+        let identities = [
+            CostCalibration::identity(),
+            CostCalibration::from_scales(&[(OpClass::Conv, 1.0)]),
+            CostCalibration::from_scales(&OpClass::all().map(|c| (c, 1.0))),
+        ];
+        for cal in identities {
+            let opts = CompileOptions { calibration: cal, ..deterministic_compile_options() };
+            let c = compile(&g, &cfg, &opts);
+            assert_eq!(
+                c.schedule.total_cycles(),
+                baseline.schedule.total_cycles(),
+                "{model:?}: schedule cycles drifted under identity calibration"
+            );
+            assert_eq!(
+                c.inference_ms.to_bits(),
+                baseline.inference_ms.to_bits(),
+                "{model:?}: inference_ms drifted under identity calibration"
+            );
+            assert_eq!(
+                c.allocation.placements, baseline.allocation.placements,
+                "{model:?}: allocation drifted under identity calibration"
+            );
+            assert_eq!(
+                emit(&c, "m"),
+                emit(&baseline, "m"),
+                "{model:?}: emitted job program drifted under identity calibration"
+            );
+        }
+    }
+}
+
+/// Distinct calibrations get distinct cache entries; identical effective
+/// calibrations — whatever their spelling — hit the same entry.
+#[test]
+fn cache_keys_isolate_calibrations_and_dedupe_spellings() {
+    let cfg = NeutronConfig::flagship_2tops();
+    let mut cache = CompileCache::for_serving(cfg.clone());
+    let model = ModelId::MobileNetV3Min;
+
+    let plain = cache.get(model);
+    let cal_a = CostCalibration::from_scales(&[(OpClass::Conv, 1.5)]);
+    let cal_b = CostCalibration::from_scales(&[(OpClass::Conv, 2.0)]);
+    let a = cache.get_with_calibration(model, &cfg, &cal_a);
+    let b = cache.get_with_calibration(model, &cfg, &cal_b);
+    assert_eq!(cache.len(), 3, "identity + two fitted calibrations coexist");
+    assert!(!Arc::ptr_eq(&plain, &a) && !Arc::ptr_eq(&a, &b));
+    assert_eq!(cache.misses, 3);
+    assert_eq!(cache.hits, 0);
+
+    // A different spelling of cal_a (same effective scales, extra 1.0
+    // entries) is the same key.
+    let respelled = CostCalibration::from_scales(&[(OpClass::Pool, 1.0), (OpClass::Conv, 1.5)]);
+    assert_eq!(calibration_fingerprint(&cal_a), calibration_fingerprint(&respelled));
+    let again = cache.get_with_calibration(model, &cfg, &respelled);
+    assert!(Arc::ptr_eq(&a, &again), "respelled calibration must hit");
+    assert_eq!(cache.hits, 1);
+
+    // The calibrated artifacts really were priced differently: scaling
+    // Conv changes some compute job's cycles, so the emitted programs
+    // cannot coincide.
+    assert_ne!(a.program, plain.program, "Conv×1.5 left the job program unchanged");
+    assert_ne!(b.program, a.program, "Conv×2.0 equals Conv×1.5's job program");
+    assert_eq!(a.compiled.calibration, cal_a);
+    // And every cost consumer reads the same artifact: the batch-marginal
+    // price derives from the same calibrated job program, so it can never
+    // exceed the full calibrated service time.
+    assert!(
+        marginal_service_cycles(&a.program) <= a.program.service_cycles_where(|_| true)
+    );
+}
+
+/// Replay speed-scaling: deterministic, monotone in offered load, and a
+/// no-op at speed 1 — across several recorded traces.
+#[test]
+fn replay_speed_scaling_is_deterministic_and_monotone() {
+    let cfg = NeutronConfig::flagship_2tops();
+    for seed in [3u64, 29] {
+        let trace = record(&cfg, seed);
+        let span = trace.requests.last().unwrap().arrival_cycles;
+        assert!(span > 1_000, "seed {seed}: degenerate arrival span {span}");
+        let driver = ReplayDriver::new(trace);
+        let base = driver.replay(&cfg).unwrap();
+        assert!(base.matches_recording());
+
+        // Warm cache shared across the sweep: a replay's scheduling
+        // decisions are cache-independent, so only the hit/miss counters
+        // differ — and the determinism check replays twice on equally
+        // warm caches.
+        let mut warm = CompileCache::for_serving(cfg.clone());
+        let mut last_load = 0.0f64;
+        for speed in [0.5, 1.0, 2.0, 4.0] {
+            let opts = ReplayOptions { speed, ..ReplayOptions::default() };
+            let a = driver.replay_with_options_cached(&cfg, &opts, &mut warm).unwrap();
+            let b = driver.replay_with_options_cached(&cfg, &opts, &mut warm).unwrap();
+            assert_eq!(
+                a.report.makespan_cycles, b.report.makespan_cycles,
+                "seed {seed} speed {speed}: non-deterministic makespan"
+            );
+            assert_eq!(a.report.p99_ms.to_bits(), b.report.p99_ms.to_bits());
+            assert_eq!(a.report.offered, base.report.offered);
+            assert!(
+                a.report.offered_load_inf_s >= last_load,
+                "seed {seed} speed {speed}: offered load not monotone"
+            );
+            last_load = a.report.offered_load_inf_s;
+            if speed == 1.0 {
+                assert_eq!(
+                    a.report.makespan_cycles, base.report.makespan_cycles,
+                    "speed 1.0 must reproduce the faithful replay's timing"
+                );
+            }
+        }
+        // Doubling the rate strictly raises offered load on a real span.
+        let fast = driver
+            .replay_with_options_cached(
+                &cfg,
+                &ReplayOptions { speed: 2.0, ..ReplayOptions::default() },
+                &mut warm,
+            )
+            .unwrap();
+        assert!(fast.report.offered_load_inf_s > base.report.offered_load_inf_s);
+    }
+}
+
+/// The closed loop end-to-end: record → fit → recompile → replay. The
+/// guard makes the fit improve (or leave) every kept class on the
+/// recorded data; the tune outcome reports both sides and stays
+/// deterministic.
+#[test]
+fn tune_loop_closes_over_a_recorded_trace() {
+    let cfg = NeutronConfig::flagship_2tops();
+    let trace = record(&cfg, 11);
+    let outcome = tune_from_trace(&cfg, &trace).unwrap();
+    assert!(outcome.mape_before_pct().is_finite() && outcome.mape_before_pct() >= 0.0);
+    assert!(outcome.mape_after_pct().is_finite() && outcome.mape_after_pct() >= 0.0);
+    assert!(outcome.report_after.makespan_cycles > 0);
+    assert_eq!(
+        outcome.report_before.offered, outcome.report_after.offered,
+        "tune replays the same offered requests"
+    );
+    // Every scale the guard kept is clamped and improving-on-recorded.
+    for &(class, scale) in outcome.calibration.scales() {
+        assert!((CostCalibration::MIN_SCALE..=CostCalibration::MAX_SCALE).contains(&scale));
+        let row = outcome.before.rows.iter().find(|r| r.class == class).unwrap();
+        assert!(row.post_fit_mape_pct <= row.mape_pct, "{class:?} kept a worsening fit");
+    }
+    // Determinism of the whole loop.
+    let again = tune_from_trace(&cfg, &trace).unwrap();
+    assert_eq!(outcome.summary_line(), again.summary_line());
+    assert_eq!(outcome.report_after, again.report_after);
+}
