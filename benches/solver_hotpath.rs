@@ -1,13 +1,24 @@
 //! Bench: CP-solver hot paths (the compiler's dominant cost — §Perf).
 //!
 //! Microbenches the substrate on problem shapes the mid-end produces:
-//! knapsack-style selection (tiling), window placement (scheduling), plus
-//! one real full-mid-end compile.
+//! knapsack-style selection (tiling), window placement (scheduling), one
+//! real full-mid-end compile, and a **warm-vs-cold sweep**: the same
+//! mid-end recompiled with the anytime search seeded by a prior artifact
+//! at 100% / 50% / 25% of the deterministic node budgets. The sweep
+//! asserts the tentpole acceptance bound — a warm-started compile reaches
+//! the cold objective (estimated inference latency) with ≤50% of the
+//! node budget.
+//!
+//! `--json PATH` additionally writes the measurements as a JSON array
+//! (used by ci.sh to emit `BENCH_solver_hotpath.json`).
+
+use std::sync::Arc;
 
 use eiq_neutron::arch::NeutronConfig;
 use eiq_neutron::compiler::{compile, CompileOptions};
 use eiq_neutron::cp::{solve, CpModel, LinExpr, SearchConfig};
-use eiq_neutron::util::bench::Bencher;
+use eiq_neutron::serve::deterministic_compile_options;
+use eiq_neutron::util::bench::{Bencher, Measurement};
 use eiq_neutron::zoo::ModelId;
 
 fn knapsack(n: usize) -> CpModel {
@@ -52,26 +63,140 @@ fn window_placement(transfers: usize, ticks: usize) -> CpModel {
     m
 }
 
+/// The deterministic serving budgets with every node limit scaled by
+/// `percent` — the anytime-budget knob the warm sweep turns.
+fn budgets_at(percent: u64) -> CompileOptions {
+    let mut opts = deterministic_compile_options();
+    let scale = |cfg: &mut SearchConfig| {
+        cfg.node_limit = cfg.node_limit.map(|n| (n * percent / 100).max(1));
+    };
+    scale(&mut opts.tiling.solver);
+    scale(&mut opts.scheduling.solver);
+    scale(&mut opts.allocation_solver);
+    opts
+}
+
 fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+
     let b = Bencher::default();
+    let mut results: Vec<Measurement> = Vec::new();
+    let mut extra_json: Vec<String> = Vec::new();
+
     for n in [16usize, 32, 64] {
         let m = knapsack(n);
-        b.bench(&format!("cp knapsack n={n}"), || {
+        results.push(b.bench(&format!("cp knapsack n={n}"), || {
             solve(&m, SearchConfig::default()).objective
-        });
+        }));
     }
     for (t, k) in [(12usize, 12usize), (24, 12), (48, 16)] {
         let m = window_placement(t, k);
-        b.bench(&format!("cp window t={t} ticks={k}"), || {
+        results.push(b.bench(&format!("cp window t={t} ticks={k}"), || {
             solve(&m, SearchConfig { time_limit_ms: Some(2000), ..Default::default() }).objective
-        });
+        }));
+    }
+
+    // CP-level warm restart: seeding the window CP with its own optimum
+    // turns the search into a pure optimality proof — fewer nodes, same
+    // objective.
+    {
+        let m = window_placement(24, 12);
+        let cold = solve(&m, SearchConfig { time_limit_ms: Some(2000), ..Default::default() });
+        let seed = cold.assignment.clone().expect("window CP is feasible");
+        let warm = solve(
+            &m,
+            SearchConfig {
+                time_limit_ms: Some(2000),
+                hint: Some(seed),
+                ..Default::default()
+            },
+        );
+        let (cold_obj, warm_obj) =
+            (cold.objective.expect("cold solution"), warm.objective.expect("warm solution"));
+        assert!(
+            warm_obj <= cold_obj,
+            "warm CP ended worse than its own seed: {warm_obj} vs {cold_obj}"
+        );
+        println!(
+            "cp window warm restart: {} → {} nodes to re-prove the optimum",
+            cold.nodes, warm.nodes
+        );
+        extra_json.push(format!(
+            "{{\"name\":\"cp_window_warm_restart\",\"cold_nodes\":{},\"warm_nodes\":{}}}",
+            cold.nodes, warm.nodes
+        ));
     }
 
     let cfg = NeutronConfig::flagship_2tops();
     let g = ModelId::MobileNetV2.build();
-    b.bench("compile mobilenet-v2 (full mid-end)", || {
+    results.push(b.bench("compile mobilenet-v2 (full mid-end)", || {
         compile(&g, &cfg, &CompileOptions::default_partitioned())
             .schedule
             .solve_ms
-    });
+    }));
+
+    // Warm-vs-cold sweep: recompile seeded with the cold artifact at
+    // shrinking node budgets. Acceptance bound: at ≤50% budget the warm
+    // compile still reaches the cold objective.
+    let sweep_model = ModelId::MobileNetV3Min;
+    let sweep_graph = sweep_model.build();
+    let cold = Arc::new(compile(&sweep_graph, &cfg, &budgets_at(100)));
+    println!(
+        "warm sweep {}: cold inference {:.4} ms ({} ms compile)",
+        sweep_model.slug(),
+        cold.inference_ms,
+        cold.compile_ms
+    );
+    for percent in [100u64, 50, 25] {
+        let opts = CompileOptions {
+            warm_start: Some(Arc::clone(&cold)),
+            ..budgets_at(percent)
+        };
+        let name = format!("compile {} warm @{percent}% budget", sweep_model.slug());
+        results.push(b.bench(&name, || compile(&sweep_graph, &cfg, &opts).inference_ms));
+        let warm = compile(&sweep_graph, &cfg, &opts);
+        println!(
+            "warm sweep {}: @{percent}% budget → {:.4} ms inference",
+            sweep_model.slug(),
+            warm.inference_ms
+        );
+        if percent >= 50 {
+            assert!(
+                warm.inference_ms <= cold.inference_ms * (1.0 + 1e-9),
+                "warm @{percent}% budget worse than cold: {} vs {}",
+                warm.inference_ms,
+                cold.inference_ms
+            );
+        }
+        extra_json.push(format!(
+            "{{\"name\":\"warm_sweep_{}_{percent}pct\",\"inference_ms\":{},\"cold_inference_ms\":{}}}",
+            sweep_model.slug(),
+            warm.inference_ms,
+            cold.inference_ms
+        ));
+    }
+
+    if let Some(path) = json_path {
+        let mut rows: Vec<String> = results
+            .iter()
+            .map(|m| {
+                format!(
+                    "{{\"name\":{:?},\"median_us\":{:.1},\"mean_us\":{:.1},\"stddev_us\":{:.1}}}",
+                    m.name,
+                    m.median().as_secs_f64() * 1e6,
+                    m.mean().as_secs_f64() * 1e6,
+                    m.stddev_us()
+                )
+            })
+            .collect();
+        rows.extend(extra_json);
+        let json = format!("[\n  {}\n]\n", rows.join(",\n  "));
+        std::fs::write(&path, json).expect("write bench JSON");
+        eprintln!("wrote {path}");
+    }
 }

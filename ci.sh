@@ -51,6 +51,31 @@ fi
 ./target/release/neutron replay "$smoke_dir/tune.jsonl" --speed 2.0 \
     --calibration "$smoke_dir/cal.json" > /dev/null
 echo "calibration tune smoke OK ($mape_before% -> $mape_after% MAPE)"
+
+# Artifact store smoke: save → restart → load. A `neutron serve
+# --artifact-dir` run compiles cold once and persists `.npu` artifacts; a
+# restarted run must warm purely from disk — zero CP solves ("/ 0 misses"
+# with every model loaded, none compiled) and a byte-identical report.
+art_dir="$smoke_dir/npu"
+./target/release/neutron compile --model mobilenet-v3 --save "$art_dir" > /dev/null 2>&1
+./target/release/neutron compile --model mobilenet-v3 --load "$art_dir" \
+    | grep -q "0 CP solves"
+./target/release/neutron serve --requests 24 --instances 2 --seed 9 \
+    --mean-gap-cycles 300000 --artifact-dir "$art_dir" > "$smoke_dir/serve_cold.txt" 2> /dev/null
+./target/release/neutron serve --requests 24 --instances 2 --seed 9 \
+    --mean-gap-cycles 300000 --artifact-dir "$art_dir" \
+    > "$smoke_dir/serve_warm.txt" 2> "$smoke_dir/serve_warm.err"
+diff "$smoke_dir/serve_cold.txt" "$smoke_dir/serve_warm.txt"
+grep -q "/ 0 misses" "$smoke_dir/serve_warm.txt"
+grep -q "3 loaded, 0 compiled" "$smoke_dir/serve_warm.err"
+echo "artifact store smoke OK (restart served with zero cold compiles)"
+
+# Solver hot-path bench (includes the warm-vs-cold budget sweep and its
+# acceptance assertion); the measurements land in BENCH_solver_hotpath.json.
+cargo bench --bench solver_hotpath -- --json "$PWD/BENCH_solver_hotpath.json" \
+    > /dev/null
+echo "solver hotpath bench OK (BENCH_solver_hotpath.json)"
+
 # Docs must not rot: fail on any rustdoc warning (missing docs in the
 # serve module, broken intra-doc links, …). Vendored stand-ins are not
 # documented (--no-deps + explicit package).

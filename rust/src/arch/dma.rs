@@ -79,7 +79,7 @@ impl Transfer {
 /// Aggregate DDR-traffic accountant (the δ·N_DM term of Eq. (8) penalizes
 /// hidden-but-bandwidth-consuming transfers; the simulator also uses this
 /// to report DDR bytes per inference).
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
 pub struct DdrTraffic {
     pub fetch_bytes: u64,
     pub push_bytes: u64,

@@ -51,7 +51,7 @@ impl Placement {
 
 /// Allocation result: placements + the V2P update trace the coordinator
 /// replays at runtime.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct Allocation {
     pub placements: HashMap<TileId, Placement>,
     /// (tick, virtual bank, physical bank) updates in issue order.
@@ -87,12 +87,27 @@ fn tile_lifetimes(prog: &TiledProgram, sched: &Schedule) -> HashMap<TileId, (usi
     lt
 }
 
-/// Allocate TCM banks for every tile in the schedule.
+/// Allocate TCM banks for every tile in the schedule (cold solve).
 pub fn allocate(
     prog: &TiledProgram,
     sched: &Schedule,
     cfg: &NeutronConfig,
     solver_cfg: &SearchConfig,
+) -> Allocation {
+    allocate_with(prog, sched, cfg, solver_cfg, None)
+}
+
+/// Allocate TCM banks for every tile in the schedule, optionally seeding
+/// each cluster CP from a prior [`Allocation`] of the same program (warm
+/// start). A stale prior — missing tiles, shifted lifetimes, overlapping
+/// placements — fails the solver's hint validation and the cluster falls
+/// back to a cold solve; warm-starting never changes feasibility.
+pub fn allocate_with(
+    prog: &TiledProgram,
+    sched: &Schedule,
+    cfg: &NeutronConfig,
+    solver_cfg: &SearchConfig,
+    warm: Option<&Allocation>,
 ) -> Allocation {
     let lifetimes = tile_lifetimes(prog, sched);
     let mut tiles: Vec<TileId> = lifetimes.keys().copied().collect();
@@ -175,7 +190,7 @@ pub fn allocate(
 
     for cl in &clusters {
         alloc.subproblems += 1;
-        let solved = solve_cluster(prog, &group_list, cl, cfg, solver_cfg, &mut alloc);
+        let solved = solve_cluster(prog, &group_list, cl, cfg, solver_cfg, warm, &mut alloc);
         if !solved {
             first_fit_cluster(prog, &group_list, cl, cfg, &mut alloc);
         }
@@ -203,12 +218,14 @@ pub fn allocate(
 
 /// CP model for one cluster: start-bank integers + pairwise no-overlap for
 /// lifetime-overlapping groups; objective prefers low banks (reuse, (c)).
+#[allow(clippy::too_many_arguments)]
 fn solve_cluster(
     prog: &TiledProgram,
     groups: &[(TensorId, Vec<TileId>, (usize, usize), usize)],
     cluster: &[usize],
     cfg: &NeutronConfig,
     solver_cfg: &SearchConfig,
+    warm: Option<&Allocation>,
     alloc: &mut Allocation,
 ) -> bool {
     let c = cfg.tcm_banks as i64;
@@ -224,6 +241,7 @@ fn solve_cluster(
     }
     // Pairwise no-overlap where lifetimes intersect (constraint (d)):
     // s_a + banks_a ≤ s_b  OR  s_b + banks_b ≤ s_a, via an order boolean.
+    let mut order_bools: Vec<(usize, usize, crate::cp::Var)> = Vec::new();
     for (i, &ga) in cluster.iter().enumerate() {
         for &gb in cluster.iter().skip(i + 1) {
             let (_, _, (alo, ahi), abanks) = &groups[ga];
@@ -232,6 +250,7 @@ fn solve_cluster(
                 continue; // disjoint lifetimes may share banks
             }
             let before = m.bool_var(format!("ord_{ga}_{gb}"));
+            order_bools.push((ga, gb, before));
             // before=1 ⇒ s_a + banks_a ≤ s_b :  s_a - s_b + M·before ≤ M - banks_a
             let big = c;
             m.add(
@@ -259,14 +278,41 @@ fn solve_cluster(
         obj.push(1, starts[&gi]);
     }
     m.minimize(obj);
-    let sol = crate::cp::solve(&m, solver_cfg.clone());
+
+    // Warm start: seed each group's start bank from the prior allocation
+    // (the group's first tile) and derive the order booleans consistently.
+    // Any inconsistency (overlapping priors, out-of-range starts) makes
+    // the hint violate the model and the solver drops it.
+    let hint: Option<Vec<i64>> = warm.and_then(|prev| {
+        let mut h = vec![0i64; m.num_vars()];
+        for &gi in cluster {
+            let (_, ts, _, _) = &groups[gi];
+            let p = prev.placements.get(ts.first()?)?;
+            h[starts[&gi].index()] = p.first_bank as i64;
+        }
+        for &(ga, gb, before) in &order_bools {
+            let sa = h[starts[&ga].index()];
+            let sb = h[starts[&gb].index()];
+            let abanks = groups[ga].3 as i64;
+            h[before.index()] = i64::from(sa + abanks <= sb);
+        }
+        Some(h)
+    });
+    let cfg_with_hint = SearchConfig {
+        hint: hint.or_else(|| solver_cfg.hint.clone()),
+        ..solver_cfg.clone()
+    };
+    let sol = crate::cp::solve(&m, cfg_with_hint);
     if !matches!(sol.status, Status::Optimal | Status::Feasible) {
         return false;
     }
     alloc.solve_ms += sol.solve_ms;
     for &gi in cluster {
         let (_, ts, _, _) = &groups[gi];
-        let mut bank = sol.value(starts[&gi]) as usize;
+        let mut bank = match sol.value(starts[&gi]) {
+            Ok(b) => b as usize,
+            Err(_) => return false,
+        };
         for &t in ts {
             let banks = prog.tile(t).banks;
             alloc.placements.insert(t, Placement { first_bank: bank, banks });

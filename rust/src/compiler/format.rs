@@ -18,7 +18,7 @@ use crate::ir::{Graph, OpId, TensorId, TensorKind};
 
 /// Chosen format per op, plus the estimated per-op cycles that drove the
 /// choice (reused by scheduling as tick compute latencies).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct FormatPlan {
     pub per_op: HashMap<OpId, Format>,
     pub est_cycles: HashMap<OpId, u64>,

@@ -10,14 +10,16 @@ pub mod pipeline;
 pub mod scheduling;
 pub mod tiling;
 
-pub use allocation::{allocate, Allocation, Placement};
+pub use allocation::{allocate, allocate_with, Allocation, Placement};
 pub use cost::{
     calibrated_layer_latency_cycles, layer_latency_cycles, CostCalibration, CostModel,
     OpProfile,
 };
 pub use format::{select_formats, select_formats_with, FormatPlan};
 pub use pipeline::{compile, Compiled, CompileOptions};
-pub use scheduling::{schedule, schedule_with, Schedule, SchedulingOptions, Tick};
+pub use scheduling::{
+    schedule, schedule_with, Schedule, ScheduledTransfer, SchedulingOptions, Tick,
+};
 pub use tiling::{
     tile_graph, tile_graph_with, ComputeStep, Tile, TileId, TiledProgram, TilingOptions,
 };

@@ -2,9 +2,10 @@
 //! allocation → job program, with the compile/inference-time metrics
 //! Table II reports.
 
+use std::sync::Arc;
 use std::time::Instant;
 
-use super::allocation::{allocate, Allocation};
+use super::allocation::{allocate_with, Allocation};
 use super::cost::{CostCalibration, CostModel};
 use super::format::{select_formats_with, FormatPlan};
 use super::scheduling::{schedule_with, Schedule, SchedulingOptions};
@@ -25,6 +26,15 @@ pub struct CompileOptions {
     /// (see [`CostModel`]). [`CostCalibration::identity`] — the default —
     /// reproduces the uncalibrated compiler bit for bit.
     pub calibration: CostCalibration,
+    /// Warm start: a prior [`Compiled`] of the same graph (typically the
+    /// nearest cached `(config, calibration)` neighbor). Each CP pass
+    /// seeds its anytime search with the prior solution as the initial
+    /// incumbent — tiling from the prior split counts, scheduling from
+    /// the prior transfer placements, allocation from the prior bank
+    /// starts — so a budget-limited recompile can only match or improve
+    /// on the neighbor. Structurally stale seeds fail the solver's hint
+    /// validation and each pass degrades to a cold solve.
+    pub warm_start: Option<Arc<Compiled>>,
 }
 
 impl CompileOptions {
@@ -44,7 +54,11 @@ impl CompileOptions {
     /// "No partitioning" row: monolithic optimization + scheduling CPs.
     pub fn monolithic() -> Self {
         Self {
-            tiling: TilingOptions { partition: false, solver: Self::monolithic_solver() },
+            tiling: TilingOptions {
+                partition: false,
+                solver: Self::monolithic_solver(),
+                ..Default::default()
+            },
             scheduling: SchedulingOptions {
                 partition: false,
                 solver: Self::monolithic_solver(),
@@ -70,7 +84,11 @@ impl CompileOptions {
     /// "Only scheduling" row.
     pub fn partition_scheduling_only() -> Self {
         Self {
-            tiling: TilingOptions { partition: false, solver: Self::monolithic_solver() },
+            tiling: TilingOptions {
+                partition: false,
+                solver: Self::monolithic_solver(),
+                ..Default::default()
+            },
             scheduling: SchedulingOptions { partition: true, ..Default::default() },
             ..Default::default()
         }
@@ -78,7 +96,7 @@ impl CompileOptions {
 }
 
 /// Compiled artifact: everything the coordinator/simulator needs.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Compiled {
     pub formats: FormatPlan,
     pub program: TiledProgram,
@@ -115,9 +133,34 @@ pub fn compile(graph: &Graph, cfg: &NeutronConfig, opts: &CompileOptions) -> Com
     let t0 = Instant::now();
     let cost = CostModel::new(cfg, opts.calibration.clone());
     let formats = select_formats_with(graph, &cost);
-    let program = tile_graph_with(graph, &formats, &cost, &opts.tiling);
-    let sched = schedule_with(&program, &cost, &opts.scheduling);
-    let allocation = allocate(&program, &sched, cfg, &opts.allocation_solver);
+
+    // Warm start: derive per-pass seeds from the prior artifact. Each seed
+    // is validated against the fresh CP before adoption, so a neighbor
+    // whose structure no longer matches costs nothing.
+    let mut tiling = opts.tiling.clone();
+    let mut scheduling = opts.scheduling.clone();
+    if let Some(prev) = &opts.warm_start {
+        if tiling.warm_splits.is_none() {
+            let mut splits = std::collections::HashMap::new();
+            for s in &prev.program.steps {
+                splits.insert(s.op, prev.program.tile(s.out_tile).part.1);
+            }
+            tiling.warm_splits = Some(splits);
+        }
+        if scheduling.warm.is_none() {
+            scheduling.warm = Some(Arc::new(prev.schedule.clone()));
+        }
+    }
+
+    let program = tile_graph_with(graph, &formats, &cost, &tiling);
+    let sched = schedule_with(&program, &cost, &scheduling);
+    let allocation = allocate_with(
+        &program,
+        &sched,
+        cfg,
+        &opts.allocation_solver,
+        opts.warm_start.as_ref().map(|p| &p.allocation),
+    );
     let compile_ms = t0.elapsed().as_millis() as u64;
     let inference_ms = cfg.cycles_to_ms(sched.total_cycles());
     Compiled {

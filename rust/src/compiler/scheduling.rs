@@ -30,7 +30,7 @@ use crate::arch::{DdrTraffic, NeutronConfig, Transfer, TransferKind};
 use crate::cp::{CpModel, LinExpr, SearchConfig, Status, Var};
 
 /// A scheduled data transfer inside a tick.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ScheduledTransfer {
     pub tile: TileId,
     pub kind: TransferKind,
@@ -39,7 +39,7 @@ pub struct ScheduledTransfer {
 }
 
 /// One tick: ≤1 compute job + concurrent datamover jobs.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct Tick {
     /// Index into `TiledProgram::steps`.
     pub compute: Option<usize>,
@@ -56,7 +56,7 @@ impl Tick {
 }
 
 /// The schedule: ticks + aggregate statistics.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct Schedule {
     pub ticks: Vec<Tick>,
     pub ddr: DdrTraffic,
@@ -95,6 +95,12 @@ pub struct SchedulingOptions {
     /// monolithic problem gets double — the "complete view" of the paper).
     pub lookahead: usize,
     pub solver: SearchConfig,
+    /// Warm start: a prior [`Schedule`] of the same tiled program (from a
+    /// compile-cache neighbor). Each window CP seeds transfer placements
+    /// from where the prior schedule put them, overriding the greedy hint
+    /// where applicable; the solver validates the combined hint, so a
+    /// structurally stale schedule degrades to the greedy cold start.
+    pub warm: Option<std::sync::Arc<Schedule>>,
 }
 
 impl Default for SchedulingOptions {
@@ -105,6 +111,7 @@ impl Default for SchedulingOptions {
             delta: 8,
             lookahead: 5,
             solver: SearchConfig { time_limit_ms: Some(2_000), ..Default::default() },
+            warm: None,
         }
     }
 }
@@ -311,6 +318,23 @@ pub fn schedule_with(prog: &TiledProgram, cost: &CostModel, opts: &SchedulingOpt
         }
     }
 
+    // --- Warm start: remember where a prior schedule of this program
+    // placed each transfer. Keyed by (tile, kind, bytes) with FIFO order
+    // over duplicates (chunked fetches of one tile share a key); each
+    // window's hint consumes matching entries as it reuses them. ---
+    let mut prior: HashMap<(TileId, TransferKind, u64), std::collections::VecDeque<usize>> =
+        HashMap::new();
+    if let Some(warm) = &opts.warm {
+        for (ti, tick) in warm.ticks.iter().enumerate() {
+            for tr in &tick.transfers {
+                prior
+                    .entry((tr.tile, tr.kind, tr.bytes))
+                    .or_default()
+                    .push_back(ti);
+            }
+        }
+    }
+
     // --- Per-window CP placement ---
     let window = if opts.partition { opts.window } else { n_ticks };
     let mut ticks: Vec<Tick> = (0..n_ticks)
@@ -347,6 +371,7 @@ pub fn schedule_with(prog: &TiledProgram, cost: &CostModel, opts: &SchedulingOpt
             &candidates,
             &in_window,
             w_start,
+            &mut prior,
         );
         subproblems += 1;
         solve_ms += stats.0;
@@ -380,7 +405,10 @@ fn next_use_after(prog: &TiledProgram, tile: &TileId, after: usize) -> usize {
 }
 
 /// CP placement of the window's transfer candidates. Returns
-/// `(placements, (solve_ms, vars))`.
+/// `(placements, (solve_ms, vars))`. `prior` carries remembered tick
+/// placements from a warm-start schedule (empty when compiling cold);
+/// entries this window reuses are consumed so later windows don't.
+#[allow(clippy::too_many_arguments)]
 fn place_window(
     prog: &TiledProgram,
     cfg: &NeutronConfig,
@@ -389,6 +417,7 @@ fn place_window(
     candidates: &[Candidate],
     in_window: &[(usize, (usize, usize))],
     w_start: usize,
+    prior: &mut HashMap<(TileId, TransferKind, u64), std::collections::VecDeque<usize>>,
 ) -> (Vec<(usize, usize)>, (u64, usize)) {
     if in_window.is_empty() {
         return (Vec::new(), (0, 0));
@@ -510,15 +539,28 @@ fn place_window(
             if ticks.is_empty() {
                 continue;
             }
-            let best = ticks
-                .iter()
-                .copied()
-                .min_by_key(|&lt| {
-                    let after = dm_load[lt] + candidates[ci].cycles;
-                    // Prefer ticks where the transfer hides under compute.
-                    after.saturating_sub(window_ticks[lt].compute_cycles)
-                })
-                .unwrap();
+            let c = &candidates[ci];
+            // Warm start: reuse the prior schedule's tick when it is still
+            // a feasible candidate tick in this window.
+            let from_prior = prior.get_mut(&(c.tile, c.kind, c.bytes)).and_then(|q| {
+                let pos = q.iter().position(|&pt| {
+                    pt.checked_sub(w_start)
+                        .is_some_and(|lt| lt < w && x.contains_key(&(ci, lt)))
+                })?;
+                q.remove(pos)
+            });
+            let best = match from_prior {
+                Some(pt) => pt - w_start,
+                None => ticks
+                    .iter()
+                    .copied()
+                    .min_by_key(|&lt| {
+                        let after = dm_load[lt] + candidates[ci].cycles;
+                        // Prefer ticks where the transfer hides under compute.
+                        after.saturating_sub(window_ticks[lt].compute_cycles)
+                    })
+                    .unwrap(),
+            };
             dm_load[best] += candidates[ci].cycles;
             assignment[x[&(ci, best)].index()] = 1;
         }
@@ -536,7 +578,7 @@ fn place_window(
     match sol.status {
         Status::Optimal | Status::Feasible => {
             for (&(ci, lt), &v) in &x {
-                if sol.value(v) == 1 {
+                if sol.value(v) == Ok(1) {
                     placed.push((ci, w_start + lt));
                 }
             }

@@ -33,7 +33,7 @@ impl TileId {
 }
 
 /// One tile: a horizontal slice (or the whole) of a tensor.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Tile {
     pub id: TileId,
     pub tensor: TensorId,
@@ -52,7 +52,7 @@ pub struct Tile {
 }
 
 /// One compute step: produces one output tile of one op.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ComputeStep {
     pub op: OpId,
     pub out_tile: TileId,
@@ -69,7 +69,7 @@ pub struct ComputeStep {
 }
 
 /// The tiled program: tiles + compute steps in execution order.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct TiledProgram {
     pub tiles: Vec<Tile>,
     pub steps: Vec<ComputeStep>,
@@ -97,11 +97,21 @@ pub struct TilingOptions {
     pub partition: bool,
     /// CP solver budget per subproblem.
     pub solver: SearchConfig,
+    /// Warm start: split counts per op from a prior compile of the same
+    /// graph (extracted from a cached [`TiledProgram`]). Seeds each region
+    /// CP with the prior choice as its initial incumbent, so the anytime
+    /// search can only match or improve on the previous compile. A stale
+    /// map (missing ops, out-of-range splits) degrades to a cold solve.
+    pub warm_splits: Option<HashMap<OpId, usize>>,
 }
 
 impl Default for TilingOptions {
     fn default() -> Self {
-        Self { partition: true, solver: SearchConfig::default() }
+        Self {
+            partition: true,
+            solver: SearchConfig::default(),
+            warm_splits: None,
+        }
     }
 }
 
@@ -176,7 +186,14 @@ pub fn tile_graph_with(
         vec![regions.iter().flatten().copied().collect()]
     };
     for region in &region_groups {
-        let chosen = solve_region_sizes(graph, &profiles, region, cfg, &opts.solver);
+        let chosen = solve_region_sizes(
+            graph,
+            &profiles,
+            region,
+            cfg,
+            &opts.solver,
+            opts.warm_splits.as_ref(),
+        );
         for (oid, s) in chosen {
             splits.insert(oid, s);
         }
@@ -390,12 +407,30 @@ fn solve_region_sizes(
     region: &[OpId],
     cfg: &NeutronConfig,
     solver_cfg: &SearchConfig,
+    warm_splits: Option<&HashMap<OpId, usize>>,
 ) -> Vec<(OpId, usize)> {
     if region.is_empty() {
         return Vec::new();
     }
     let options: [SizeOption; 2] = [SizeOption { splits: 2 }, SizeOption { splits: 4 }];
     let c_banks = cfg.tcm_banks as i64;
+
+    // Warm start: map each op's prior split count onto the nearest current
+    // LS option (exact match preferred; larger priors round up). The hint
+    // is completed into a full assignment below and validated by the
+    // solver, so any mismatch simply falls back to a cold search.
+    let warm_choice: Option<Vec<usize>> = warm_splits.map(|w| {
+        region
+            .iter()
+            .map(|oid| {
+                let prior = w.get(oid).copied().unwrap_or(options[0].splits);
+                options
+                    .iter()
+                    .position(|o| o.splits == prior)
+                    .unwrap_or(if prior > options[0].splits { options.len() - 1 } else { 0 })
+            })
+            .collect()
+    });
 
     let mut m = CpModel::new();
     // LS_{k,i}: one bool per option per op (Eq. 10: exactly one selected).
@@ -409,6 +444,17 @@ fn solve_region_sizes(
         m.add_exactly_one(vars.clone());
         ls.insert(oid, vars);
     }
+    // Hint prefix: the LS booleans under the warm choice, matching var
+    // creation order (all LS vars first, then one MemTh per timestep).
+    let mut hint: Option<Vec<i64>> = warm_choice.as_ref().map(|choice| {
+        let mut h = Vec::with_capacity(region.len() * (options.len() + 1));
+        for &k in choice {
+            for i in 0..options.len() {
+                h.push(i64::from(i == k));
+            }
+        }
+        h
+    });
     // Timesteps = ops in region order (single-level memory model drops the
     // 3× factor, Sec. IV-C "Scalability"). MemTh_t ≥ Σ live tile banks.
     // Under option k, op i's live output occupies banks(i)/splits_k while
@@ -423,6 +469,7 @@ fn solve_region_sizes(
         let memth = m.int_var(0, 4 * c_banks, format!("MemTh_{t}"));
         // demand(t) = Σ_k LS_k,op · (banks of working set under option k)
         let mut demand = LinExpr::new();
+        let mut chosen_demand = 0i64;
         for (k, opt) in options.iter().enumerate() {
             let out_banks = cfg.banks_for(
                 (p.output_bytes as usize / opt.splits).max(cfg.bus_bytes),
@@ -431,6 +478,15 @@ fn solve_region_sizes(
                 cfg.banks_for((p.input_bytes as usize / opt.splits).max(cfg.bus_bytes)) as i64;
             let par_banks = cfg.banks_for(p.param_bytes.max(1) as usize) as i64;
             demand.push(out_banks + in_banks + par_banks, ls[&oid][k]);
+            if warm_choice.as_ref().is_some_and(|c| c[t] == k) {
+                chosen_demand = out_banks + in_banks + par_banks;
+            }
+        }
+        if let Some(h) = hint.as_mut() {
+            // MemTh_t tight at the chosen demand; an over-capacity region
+            // makes the hint (and the model) infeasible and the hint is
+            // dropped by validation.
+            h.push(chosen_demand.min(4 * c_banks));
         }
         // Neighbour overlap: the previous op's output stays live while this
         // op consumes it — included above via input_bytes.
@@ -445,13 +501,17 @@ fn solve_region_sizes(
         let _ = graph;
     }
     m.minimize(obj);
-    let sol = crate::cp::solve(&m, solver_cfg.clone());
+    let cfg_with_hint = SearchConfig {
+        hint: hint.or_else(|| solver_cfg.hint.clone()),
+        ..solver_cfg.clone()
+    };
+    let sol = crate::cp::solve(&m, cfg_with_hint);
     let mut out = Vec::new();
     if matches!(sol.status, Status::Optimal | Status::Feasible) {
         for &oid in region {
             let vars = &ls[&oid];
             let k = (0..options.len())
-                .find(|&k| sol.value(vars[k]) == 1)
+                .find(|&k| sol.value(vars[k]) == Ok(1))
                 .unwrap_or(0);
             out.push((oid, options[k].splits));
         }
@@ -579,7 +639,7 @@ mod tests {
             time_limit_ms: None,
             ..Default::default()
         };
-        let opts = TilingOptions { partition: true, solver };
+        let opts = TilingOptions { partition: true, solver, ..Default::default() };
         let raw = tile_graph(&g, &plan, &cfg, &opts);
         // Scale every class by the same factor: the format plan and the
         // tiling structure (splits depend only on bytes) are unchanged,

@@ -12,7 +12,7 @@ pub mod propagate;
 pub mod search;
 
 pub use model::{Cmp, CpModel, LinExpr, Var};
-pub use search::{solve, SearchConfig, Solution, Status};
+pub use search::{solve, SearchConfig, Solution, Status, ValueError};
 
 #[cfg(test)]
 mod integration_tests {
@@ -75,8 +75,8 @@ mod integration_tests {
         let s = solve(&m, SearchConfig::default());
         assert_eq!(s.status, Status::Optimal);
         // Optimal: compute tile0 at t=0, tile1 at t=1 (after tile0 resident).
-        assert_eq!(s.value(cmp0[0]), 1);
-        assert_eq!(s.value(cmp1[1]), 1);
+        assert_eq!(s.value(cmp0[0]), Ok(1));
+        assert_eq!(s.value(cmp1[1]), Ok(1));
         assert_eq!(s.objective, Some(1 + 2));
         // Solution must satisfy the full model.
         assert!(m.violated(s.assignment.as_ref().unwrap()).is_none());
@@ -96,7 +96,7 @@ mod integration_tests {
         m.minimize(LinExpr::new().add(1, hi).add(-1, lo));
         let s = solve(&m, SearchConfig::default());
         assert_eq!(s.status, Status::Optimal);
-        assert_eq!(s.value(hi), 6);
-        assert_eq!(s.value(lo), 2);
+        assert_eq!(s.value(hi), Ok(6));
+        assert_eq!(s.value(lo), Ok(2));
     }
 }

@@ -42,6 +42,23 @@ impl Default for SearchConfig {
     }
 }
 
+impl SearchConfig {
+    /// Warm-start from a prior [`Solution`]: folds its assignment into
+    /// [`SearchConfig::hint`], so a compatible, still-feasible prior result
+    /// becomes the incumbent at node one and the search is *anytime* — a
+    /// node-budget expiry returns the seed (or something strictly better)
+    /// instead of failing. A seed without an assignment, with the wrong
+    /// arity, or violating the model is silently dropped by the hint
+    /// validation in [`solve`] — warm-starting degrades to a cold search,
+    /// never to a wrong answer.
+    pub fn with_seed(mut self, seed: &Solution) -> Self {
+        if let Some(a) = &seed.assignment {
+            self.hint = Some(a.clone());
+        }
+        self
+    }
+}
+
 /// Why the search returned.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Status {
@@ -70,10 +87,45 @@ pub struct Solution {
     pub solve_ms: u64,
 }
 
+/// Why [`Solution::value`] could not produce a value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ValueError {
+    /// The search ended without any assignment (`Infeasible`/`Unknown`).
+    NoSolution,
+    /// The variable does not belong to the solved model: its index lies
+    /// outside the assignment (e.g. a `Var` from a different `CpModel`).
+    NoSuchVar {
+        /// Index of the offending variable.
+        index: usize,
+        /// Number of variables in the solved model.
+        num_vars: usize,
+    },
+}
+
+impl std::fmt::Display for ValueError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ValueError::NoSolution => write!(f, "no solution: search found no assignment"),
+            ValueError::NoSuchVar { index, num_vars } => write!(
+                f,
+                "variable index {index} is not in the solved model ({num_vars} vars)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ValueError {}
+
 impl Solution {
-    /// Value of a variable in the best assignment (panics if none).
-    pub fn value(&self, v: Var) -> i64 {
-        self.assignment.as_ref().expect("no solution")[v.index()]
+    /// Value of a variable in the best assignment. Returns a structured
+    /// error instead of panicking when there is no assignment or when `v`
+    /// comes from a different model than the one solved.
+    pub fn value(&self, v: Var) -> Result<i64, ValueError> {
+        let a = self.assignment.as_ref().ok_or(ValueError::NoSolution)?;
+        a.get(v.index()).copied().ok_or(ValueError::NoSuchVar {
+            index: v.index(),
+            num_vars: a.len(),
+        })
     }
 
     /// True if a usable assignment exists.
@@ -383,9 +435,9 @@ mod tests {
         let s = solve(&m, SearchConfig::default());
         assert_eq!(s.status, Status::Optimal);
         assert_eq!(s.objective, Some(-11)); // a + b
-        assert_eq!(s.value(a), 1);
-        assert_eq!(s.value(b), 1);
-        assert_eq!(s.value(c), 0);
+        assert_eq!(s.value(a), Ok(1));
+        assert_eq!(s.value(b), Ok(1));
+        assert_eq!(s.value(c), Ok(0));
     }
 
     #[test]
@@ -397,7 +449,7 @@ mod tests {
         m.minimize(LinExpr::weighted_sum([(7, v[0]), (3, v[1]), (9, v[2])]));
         let s = solve(&m, SearchConfig::default());
         assert_eq!(s.objective, Some(3));
-        assert_eq!(s.value(v[1]), 1);
+        assert_eq!(s.value(v[1]), Ok(1));
     }
 
     #[test]
@@ -409,8 +461,8 @@ mod tests {
         m.add_eq(LinExpr::new().add(1, x).add(-1, y), 3);
         let s = solve(&m, SearchConfig::default());
         assert!(s.has_solution());
-        assert_eq!(s.value(x), 6);
-        assert_eq!(s.value(y), 3);
+        assert_eq!(s.value(x), Ok(6));
+        assert_eq!(s.value(y), Ok(3));
     }
 
     #[test]
@@ -429,6 +481,89 @@ mod tests {
             SearchConfig { node_limit: Some(50), ..Default::default() },
         );
         assert!(matches!(s.status, Status::Feasible | Status::Unknown | Status::Optimal));
+    }
+
+    #[test]
+    fn value_returns_structured_errors_instead_of_panicking() {
+        // Infeasible model: no assignment at all.
+        let mut m = CpModel::new();
+        let x = m.bool_var("x");
+        m.add_ge(LinExpr::var(x), 1);
+        m.add_le(LinExpr::var(x), 0);
+        let s = solve(&m, SearchConfig::default());
+        assert_eq!(s.value(x), Err(ValueError::NoSolution));
+
+        // Feasible model, but a Var from a *bigger* model: out of range.
+        let mut small = CpModel::new();
+        let a = small.bool_var("a");
+        small.minimize(LinExpr::var(a));
+        let s = solve(&small, SearchConfig::default());
+        assert_eq!(s.value(a), Ok(0));
+        let mut big = CpModel::new();
+        let _ = big.bool_var("p");
+        let q = big.bool_var("q");
+        assert_eq!(
+            s.value(q),
+            Err(ValueError::NoSuchVar { index: 1, num_vars: 1 })
+        );
+        let msg = s.value(q).unwrap_err().to_string();
+        assert!(msg.contains("index 1"), "{msg}");
+    }
+
+    #[test]
+    fn seeded_search_adopts_incumbent_and_stays_anytime() {
+        // min 3a+2b+c  s.t. a+b+c >= 2 — optimum is b=c=1 → 3.
+        let mut m = CpModel::new();
+        let a = m.bool_var("a");
+        let b = m.bool_var("b");
+        let c = m.bool_var("c");
+        m.add_ge(LinExpr::sum([a, b, c]), 2);
+        m.minimize(LinExpr::weighted_sum([(3, a), (2, b), (1, c)]));
+
+        // A feasible but suboptimal prior solution (a=b=1 → 5).
+        let prior = Solution {
+            status: Status::Feasible,
+            assignment: Some(vec![1, 1, 0]),
+            objective: Some(5),
+            nodes: 0,
+            solve_ms: 0,
+        };
+
+        // Zero-node budget: the anytime search returns the seed itself.
+        let cfg = SearchConfig {
+            node_limit: Some(0),
+            ..Default::default()
+        }
+        .with_seed(&prior);
+        let s = solve(&m, cfg);
+        assert_eq!(s.status, Status::Feasible);
+        assert_eq!(s.objective, Some(5));
+
+        // Unlimited budget: the seed never blocks reaching the optimum.
+        let s = solve(&m, SearchConfig::default().with_seed(&prior));
+        assert_eq!(s.status, Status::Optimal);
+        assert_eq!(s.objective, Some(3));
+    }
+
+    #[test]
+    fn invalid_seed_degrades_to_cold_search() {
+        let mut m = CpModel::new();
+        let x = m.int_var(0, 5, "x");
+        m.add_ge(LinExpr::var(x), 2);
+        m.minimize(LinExpr::var(x));
+        // Wrong arity and constraint-violating seeds are both dropped.
+        for bad in [vec![0i64, 0], vec![0]] {
+            let seed = Solution {
+                status: Status::Feasible,
+                assignment: Some(bad),
+                objective: None,
+                nodes: 0,
+                solve_ms: 0,
+            };
+            let s = solve(&m, SearchConfig::default().with_seed(&seed));
+            assert_eq!(s.status, Status::Optimal);
+            assert_eq!(s.objective, Some(2));
+        }
     }
 
     #[test]

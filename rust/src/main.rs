@@ -2,14 +2,19 @@
 //!
 //! Subcommands:
 //!   compile   --model <name> [--monolithic] [--calibration FILE]
-//!                                               compile + report stats
+//!             [--save DIR] [--load DIR]         compile + report stats; --save/--load
+//!                                               persist/reuse a .npu artifact (pins the
+//!                                               deterministic serving budgets)
 //!   simulate  --model <name> [--serialize-dae]  compile + cycle simulation
 //!   infer     [--requests N]                    e2e PJRT inference (needs artifacts)
 //!   serve     [--requests N] [--instances K] [--models a,b,c] [--seed S]
 //!             [--mean-gap-cycles G] [--queue-capacity C] [--policy reject-newest|drop-oldest]
 //!             [--max-batch B] [--dynamic-batch] [--age-after-cycles A] [--priority-mix R,S,B]
-//!             [--record FILE] [--calibration FILE]
-//!                                               multi-tenant serving simulation
+//!             [--record FILE] [--calibration FILE] [--artifact-dir DIR]
+//!                                               multi-tenant serving simulation;
+//!                                               --artifact-dir warms the compile cache
+//!                                               from persistent .npu artifacts (and
+//!                                               saves what it had to compile cold)
 //!   record    FILE [serve options]              serve + write a replayable JSONL trace
 //!   replay    FILE [--speed F] [--calibration FILE]
 //!                                               replay a recorded trace (bit-identical
@@ -28,10 +33,13 @@ use eiq_neutron::arch::NeutronConfig;
 use eiq_neutron::compiler::{compile, CompileOptions, CostCalibration};
 use eiq_neutron::coordinator::{emit, Executor};
 use eiq_neutron::report;
-use eiq_neutron::runtime::{literal_i8, literal_to_i32s, Manifest, Runtime};
+use eiq_neutron::runtime::{
+    literal_i8, literal_to_i32s, options_fingerprint, ArtifactStore, Manifest, Runtime,
+    StoreError,
+};
 use eiq_neutron::serve::{
-    serve_with_cache, AdmissionPolicy, CompileCache, PriorityMix, SchedulerOptions,
-    ServeOptions, MAX_MEAN_GAP_CYCLES,
+    deterministic_compile_options, serve_with_cache, AdmissionPolicy, CompileCache,
+    PriorityMix, SchedulerOptions, ServeOptions, MAX_MEAN_GAP_CYCLES,
 };
 use eiq_neutron::sim::{simulate, SimOptions};
 use eiq_neutron::trace::{
@@ -144,15 +152,55 @@ fn opts_from(args: &Args) -> CompileOptions {
 }
 
 fn cmd_compile(args: &Args) -> Result<()> {
-    reject_unknown_keys(args, &["model", "monolithic", "calibration"])?;
-    require_value(args, &["model"])?;
+    reject_unknown_keys(args, &["model", "monolithic", "calibration", "save", "load"])?;
+    require_value(args, &["model", "save", "load"])?;
     let id = model_from(args)?;
     let g = id.build();
     let cfg = NeutronConfig::flagship_2tops();
     let calibration = calibration_from(args, &cfg)?;
-    let opts = CompileOptions { calibration, ..opts_from(args) };
-    let c = compile(&g, &cfg, &opts);
+    let save_dir = args.options.get("save");
+    let load_dir = args.options.get("load");
+    if (save_dir.is_some() || load_dir.is_some()) && args.has_flag("monolithic") {
+        bail!(
+            "--save/--load pin the deterministic serving budgets so on-disk artifacts \
+             match what `neutron serve --artifact-dir` expects; they cannot combine \
+             with --monolithic"
+        );
+    }
+    let opts = if save_dir.is_some() || load_dir.is_some() {
+        CompileOptions { calibration, ..deterministic_compile_options() }
+    } else {
+        CompileOptions { calibration, ..opts_from(args) }
+    };
+    let fp = options_fingerprint(&opts);
+    let mut loaded_from = None;
+    let c = match load_dir {
+        Some(dir) => {
+            let store =
+                ArtifactStore::open(dir.as_str()).map_err(|e| anyhow!("--load {dir:?}: {e}"))?;
+            match store.load(id, &cfg, &opts.calibration, fp) {
+                Ok(c) => {
+                    loaded_from = Some(store.path_for(id, &cfg, &opts.calibration));
+                    c
+                }
+                Err(e) => {
+                    eprintln!("artifact load failed ({e}); compiling cold");
+                    compile(&g, &cfg, &opts)
+                }
+            }
+        }
+        None => compile(&g, &cfg, &opts),
+    };
+    if let Some(dir) = save_dir {
+        let store =
+            ArtifactStore::open(dir.as_str()).map_err(|e| anyhow!("--save {dir:?}: {e}"))?;
+        let path = store.save(id, &cfg, &c, fp).map_err(|e| anyhow!("--save {dir:?}: {e}"))?;
+        eprintln!("saved artifact to {}", path.display());
+    }
     println!("model:        {}", id.display_name());
+    if let Some(p) = &loaded_from {
+        println!("artifact:     loaded from {} (0 CP solves)", p.display());
+    }
     if !c.calibration.is_identity() {
         println!("calibration:  {} fitted class scale(s)", c.calibration.scales().len());
     }
@@ -369,8 +417,8 @@ fn serve_and_record(opts: &ServeOptions, path: &str) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    require_value(args, &["calibration"])?;
-    let opts = serve_options_from(args, &["calibration"])?;
+    require_value(args, &["calibration", "artifact-dir"])?;
+    let opts = serve_options_from(args, &["calibration", "artifact-dir"])?;
     match args.options.get("record") {
         Some(path) => {
             if args.options.contains_key("calibration") {
@@ -381,17 +429,69 @@ fn cmd_serve(args: &Args) -> Result<()> {
                      `neutron replay --calibration` against the trace"
                 );
             }
+            if args.options.contains_key("artifact-dir") {
+                bail!(
+                    "--record and --artifact-dir cannot be combined: the recorded \
+                     compile timings are ground truth for the trace, and a disk-warmed \
+                     cache would skip the compiles being measured"
+                );
+            }
             serve_and_record(&opts, path)
         }
         None if args.has_flag("record") => bail!("--record wants a trace file path"),
         None => {
             let cfg = NeutronConfig::flagship_2tops();
             let calibration = calibration_from(args, &cfg)?;
-            let mut cache = CompileCache::for_serving_with(cfg.clone(), calibration);
+            let mut cache = CompileCache::for_serving_with(cfg.clone(), calibration.clone());
+            if let Some(dir) = args.options.get("artifact-dir") {
+                prewarm_from_store(dir, &opts.models, &cfg, &calibration, &mut cache)?;
+            }
             print!("{}", serve_with_cache(&cfg, &opts, &mut cache).summary());
             Ok(())
         }
     }
+}
+
+/// Warm the compile cache from a persistent `.npu` store before serving:
+/// load every valid artifact, compile-and-save the rest. Runs before
+/// `serve_with_cache` snapshots the cache counters, so a fully warmed
+/// restart reports zero cold compiles ("/ 0 misses") — a corrupt or
+/// mismatched artifact costs one recompile, never a wrong plan.
+fn prewarm_from_store(
+    dir: &str,
+    models: &[ModelId],
+    cfg: &NeutronConfig,
+    calibration: &CostCalibration,
+    cache: &mut CompileCache,
+) -> Result<()> {
+    let store =
+        ArtifactStore::open(dir).map_err(|e| anyhow!("--artifact-dir {dir:?}: {e}"))?;
+    let fp = options_fingerprint(&deterministic_compile_options());
+    let (mut loaded, mut compiled_cold) = (0usize, 0usize);
+    for &model in models {
+        match store.load(model, cfg, calibration, fp) {
+            Ok(c) => {
+                cache.insert_artifact(model, cfg, c);
+                loaded += 1;
+            }
+            Err(e) => {
+                let absent = matches!(
+                    &e,
+                    StoreError::Io(io) if io.kind() == std::io::ErrorKind::NotFound
+                );
+                if !absent {
+                    eprintln!("artifact for {} rejected ({e}); recompiling", model.slug());
+                }
+                let entry = cache.get_with_calibration(model, cfg, calibration);
+                store
+                    .save(model, cfg, &entry.compiled, fp)
+                    .map_err(|e| anyhow!("--artifact-dir {dir:?}: {e}"))?;
+                compiled_cold += 1;
+            }
+        }
+    }
+    eprintln!("artifact store {dir}: {loaded} loaded, {compiled_cold} compiled + saved");
+    Ok(())
 }
 
 fn cmd_record(args: &Args) -> Result<()> {

@@ -1,11 +1,21 @@
 //! PJRT runtime layer: loads AOT-compiled HLO-text artifacts (produced once
 //! by `make artifacts`) and executes them on the request path. Python is
 //! never invoked at runtime.
+//!
+//! Also home of the persistent [`ArtifactStore`] (`store`): versioned
+//! `.npu` serialization of compiled mid-end artifacts, so a restarted
+//! server warms its compile cache from disk instead of re-running the CP
+//! solver.
 
 pub mod artifact;
 pub mod client;
+pub mod store;
 
 pub use artifact::Manifest;
 pub use client::{
     deterministic_i8, literal_i32_1d, literal_i8, literal_to_i32s, Executable, Runtime,
+};
+pub use store::{
+    decode_npu, encode_npu, options_fingerprint, ArtifactStore, NpuArtifact, StoreError,
+    NPU_MAGIC, NPU_VERSION,
 };

@@ -1,0 +1,1002 @@
+//! Persistent `.npu` artifact store: versioned binary serialization of
+//! [`Compiled`] mid-end artifacts so a restarted server warms from disk
+//! instead of re-running the CP solver over the model zoo.
+//!
+//! ## File layout
+//!
+//! ```text
+//! magic      8 B   b"eIQ.npu\0"
+//! version    u32   format version (readers accept exactly the versions
+//!                  they know; everything else is VersionSkew)
+//! config     u64   `serve::config_fingerprint` of the target NPU config
+//! calib      u64   `serve::calibration_fingerprint` of the cost calibration
+//! options    u64   `serve::options_fingerprint` of the compile budgets
+//! model      str   `ModelId::slug()` the artifact was compiled from
+//! sections   u32   section count, then per section:
+//!                    name str · payload-length u64 · payload bytes
+//! ```
+//!
+//! Sections: `formats`, `program`, `schedule`, `allocation`, `meta`
+//! (compile_ms + inference_ms), `calibration`. All integers little-endian;
+//! `f64`s stored via `to_bits` so every float round-trips bit-identically;
+//! hash maps serialized in sorted key order so identical artifacts produce
+//! identical bytes.
+//!
+//! ## Validation contract
+//!
+//! A `.npu` file is *evidence* of a prior compile, so nothing is silently
+//! skipped or repaired at load time: bad magic, version skew, truncation,
+//! a fingerprint mismatch, a wrong model, trailing garbage inside a
+//! section, or a non-finite calibration scale each reject the file with a
+//! [`StoreError`] naming the offending section. The serving layer treats
+//! any load error as a cache miss and recompiles — a corrupt artifact can
+//! cost time, never correctness.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::arch::{Format, NeutronConfig, TransferKind};
+use crate::compiler::{
+    Allocation, Compiled, CompileOptions, CostCalibration, FormatPlan, Placement, Schedule,
+    ScheduledTransfer, Tick,
+};
+use crate::compiler::{ComputeStep, Tile, TileId, TiledProgram};
+use crate::ir::{OpClass, OpId, TensorId};
+use crate::serve::{calibration_fingerprint, config_fingerprint};
+use crate::zoo::ModelId;
+
+/// File magic: identifies a `.npu` artifact regardless of version.
+pub const NPU_MAGIC: [u8; 8] = *b"eIQ.npu\0";
+/// Current format version. Readers accept exactly the versions they know.
+pub const NPU_VERSION: u32 = 1;
+
+/// Why a `.npu` artifact was rejected (or could not be written).
+#[derive(Debug)]
+pub enum StoreError {
+    /// Filesystem error reading or writing the artifact.
+    Io(std::io::Error),
+    /// The file does not start with [`NPU_MAGIC`] — not a `.npu` artifact.
+    BadMagic,
+    /// The file's format version is not one this reader understands.
+    VersionSkew {
+        /// Version stamped in the file.
+        found: u32,
+        /// Version this reader implements.
+        expected: u32,
+    },
+    /// The named section (or the header) ended before its payload did.
+    Truncated {
+        /// Section being decoded when the data ran out.
+        section: &'static str,
+    },
+    /// The named section decoded to something structurally invalid.
+    Corrupt {
+        /// Section the invalid data lives in.
+        section: &'static str,
+        /// Human-readable description of the defect.
+        detail: String,
+    },
+    /// A header fingerprint does not match what the loader compiled for.
+    FingerprintMismatch {
+        /// Which fingerprint mismatched: `"config"`, `"calibration"` or
+        /// `"options"`.
+        which: &'static str,
+        /// Fingerprint the loader expected.
+        expected: u64,
+        /// Fingerprint stamped in the file.
+        found: u64,
+    },
+    /// The artifact was compiled from a different model than requested.
+    ModelMismatch {
+        /// Slug the loader asked for.
+        expected: String,
+        /// Slug stamped in the file.
+        found: String,
+    },
+    /// A required section is absent from the section table.
+    MissingSection {
+        /// Name of the absent section.
+        name: &'static str,
+    },
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::Io(e) => write!(f, "artifact io error: {e}"),
+            StoreError::BadMagic => write!(f, "bad magic: not a .npu artifact"),
+            StoreError::VersionSkew { found, expected } => {
+                write!(f, "version skew: file is v{found}, reader supports v{expected}")
+            }
+            StoreError::Truncated { section } => {
+                write!(f, "truncated artifact in section {section:?}")
+            }
+            StoreError::Corrupt { section, detail } => {
+                write!(f, "corrupt artifact in section {section:?}: {detail}")
+            }
+            StoreError::FingerprintMismatch { which, expected, found } => write!(
+                f,
+                "{which} fingerprint mismatch: expected {expected:#018x}, file has {found:#018x}"
+            ),
+            StoreError::ModelMismatch { expected, found } => {
+                write!(f, "model mismatch: expected {expected:?}, file has {found:?}")
+            }
+            StoreError::MissingSection { name } => {
+                write!(f, "missing required section {name:?}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for StoreError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            StoreError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for StoreError {
+    fn from(e: std::io::Error) -> Self {
+        StoreError::Io(e)
+    }
+}
+
+// --- Little-endian byte writer ---
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn new() -> Self {
+        Self { buf: Vec::new() }
+    }
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+    fn bool(&mut self, v: bool) {
+        self.u8(u8::from(v));
+    }
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+}
+
+// --- Checked little-endian reader scoped to one section ---
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    section: &'static str,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8], section: &'static str) -> Self {
+        Self { buf, pos: 0, section }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], StoreError> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or(StoreError::Truncated { section: self.section })?;
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8, StoreError> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32, StoreError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, StoreError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64, StoreError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    fn usize(&mut self) -> Result<usize, StoreError> {
+        Ok(self.u64()? as usize)
+    }
+    fn bool(&mut self) -> Result<bool, StoreError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => Err(self.corrupt(format!("invalid bool byte {v}"))),
+        }
+    }
+    fn str(&mut self) -> Result<String, StoreError> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| self.corrupt("non-UTF-8 string".to_string()))
+    }
+
+    fn corrupt(&self, detail: impl Into<String>) -> StoreError {
+        StoreError::Corrupt { section: self.section, detail: detail.into() }
+    }
+
+    /// Every section must be consumed exactly: trailing bytes are as
+    /// suspicious as missing ones.
+    fn finish(self) -> Result<(), StoreError> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(StoreError::Corrupt {
+                section: self.section,
+                detail: format!("{} trailing bytes", self.buf.len() - self.pos),
+            })
+        }
+    }
+}
+
+// --- Enum codecs ---
+
+fn format_code(f: Format) -> u8 {
+    match f {
+        Format::Depth => 0,
+        Format::Line => 1,
+    }
+}
+
+fn format_from(code: u8, r: &Reader<'_>) -> Result<Format, StoreError> {
+    match code {
+        0 => Ok(Format::Depth),
+        1 => Ok(Format::Line),
+        v => Err(r.corrupt(format!("invalid format code {v}"))),
+    }
+}
+
+fn kind_code(k: TransferKind) -> u8 {
+    match k {
+        TransferKind::Fetch => 0,
+        TransferKind::Push => 1,
+        TransferKind::LCopy => 2,
+        TransferKind::LFetch => 3,
+    }
+}
+
+fn kind_from(code: u8, r: &Reader<'_>) -> Result<TransferKind, StoreError> {
+    match code {
+        0 => Ok(TransferKind::Fetch),
+        1 => Ok(TransferKind::Push),
+        2 => Ok(TransferKind::LCopy),
+        3 => Ok(TransferKind::LFetch),
+        v => Err(r.corrupt(format!("invalid transfer kind {v}"))),
+    }
+}
+
+// --- Section encoders/decoders ---
+
+fn encode_formats(p: &FormatPlan) -> Vec<u8> {
+    let mut w = Writer::new();
+    let mut per_op: Vec<_> = p.per_op.iter().collect();
+    per_op.sort_by_key(|&(op, _)| *op);
+    w.u32(per_op.len() as u32);
+    for (op, fmt) in per_op {
+        w.u32(op.0);
+        w.u8(format_code(*fmt));
+    }
+    let mut est: Vec<_> = p.est_cycles.iter().collect();
+    est.sort_by_key(|&(op, _)| *op);
+    w.u32(est.len() as u32);
+    for (op, cycles) in est {
+        w.u32(op.0);
+        w.u64(*cycles);
+    }
+    w.u32(p.conversions.len() as u32);
+    for (op, tensor, cycles) in &p.conversions {
+        w.u32(op.0);
+        w.u32(tensor.0);
+        w.u64(*cycles);
+    }
+    w.buf
+}
+
+fn decode_formats(buf: &[u8]) -> Result<FormatPlan, StoreError> {
+    let mut r = Reader::new(buf, "formats");
+    let n = r.u32()?;
+    let mut per_op = HashMap::new();
+    for _ in 0..n {
+        let op = OpId(r.u32()?);
+        let code = r.u8()?;
+        per_op.insert(op, format_from(code, &r)?);
+    }
+    let n = r.u32()?;
+    let mut est_cycles = HashMap::new();
+    for _ in 0..n {
+        let op = OpId(r.u32()?);
+        est_cycles.insert(op, r.u64()?);
+    }
+    let n = r.u32()?;
+    let mut conversions = Vec::with_capacity(n as usize);
+    for _ in 0..n {
+        conversions.push((OpId(r.u32()?), TensorId(r.u32()?), r.u64()?));
+    }
+    r.finish()?;
+    Ok(FormatPlan { per_op, est_cycles, conversions })
+}
+
+fn encode_program(p: &TiledProgram) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.u32(p.tiles.len() as u32);
+    for t in &p.tiles {
+        w.u32(t.id.0);
+        w.u32(t.tensor.0);
+        w.usize(t.part.0);
+        w.usize(t.part.1);
+        w.usize(t.rows);
+        w.u64(t.bytes);
+        w.usize(t.banks);
+        w.bool(t.starts_in_dram);
+        w.bool(t.is_graph_output);
+    }
+    w.u32(p.steps.len() as u32);
+    for s in &p.steps {
+        w.u32(s.op.0);
+        w.u32(s.out_tile.0);
+        w.u32(s.in_tiles.len() as u32);
+        for t in &s.in_tiles {
+            w.u32(t.0);
+        }
+        match s.param_tile {
+            Some(t) => {
+                w.u8(1);
+                w.u32(t.0);
+            }
+            None => w.u8(0),
+        }
+        w.u8(format_code(s.format));
+        w.u64(s.cycles);
+        w.bool(s.needs_line_expand);
+    }
+    w.u32(p.residency_banks.len() as u32);
+    for &b in &p.residency_banks {
+        w.usize(b);
+    }
+    w.buf
+}
+
+fn decode_program(buf: &[u8]) -> Result<TiledProgram, StoreError> {
+    let mut r = Reader::new(buf, "program");
+    let n = r.u32()?;
+    let mut tiles = Vec::with_capacity(n as usize);
+    for i in 0..n {
+        let id = TileId(r.u32()?);
+        if id.0 != i {
+            return Err(r.corrupt(format!("tile {i} has id {}", id.0)));
+        }
+        tiles.push(Tile {
+            id,
+            tensor: TensorId(r.u32()?),
+            part: (r.usize()?, r.usize()?),
+            rows: r.usize()?,
+            bytes: r.u64()?,
+            banks: r.usize()?,
+            starts_in_dram: r.bool()?,
+            is_graph_output: r.bool()?,
+        });
+    }
+    let n = r.u32()?;
+    let mut steps = Vec::with_capacity(n as usize);
+    for _ in 0..n {
+        let op = OpId(r.u32()?);
+        let out_tile = TileId(r.u32()?);
+        let k = r.u32()?;
+        let mut in_tiles = Vec::with_capacity(k as usize);
+        for _ in 0..k {
+            in_tiles.push(TileId(r.u32()?));
+        }
+        let param_tile = match r.u8()? {
+            0 => None,
+            1 => Some(TileId(r.u32()?)),
+            v => return Err(r.corrupt(format!("invalid option tag {v}"))),
+        };
+        let code = r.u8()?;
+        steps.push(ComputeStep {
+            op,
+            out_tile,
+            in_tiles,
+            param_tile,
+            format: format_from(code, &r)?,
+            cycles: r.u64()?,
+            needs_line_expand: r.bool()?,
+        });
+    }
+    let n = r.u32()?;
+    let mut residency_banks = Vec::with_capacity(n as usize);
+    for _ in 0..n {
+        residency_banks.push(r.usize()?);
+    }
+    let prog = TiledProgram { tiles, steps, residency_banks };
+    for s in &prog.steps {
+        let valid = |t: &TileId| t.index() < prog.tiles.len();
+        if !valid(&s.out_tile)
+            || !s.in_tiles.iter().all(|t| valid(t))
+            || s.param_tile.as_ref().is_some_and(|t| !valid(t))
+        {
+            return Err(StoreError::Corrupt {
+                section: "program",
+                detail: format!("step for op {:?} references an out-of-range tile", s.op),
+            });
+        }
+    }
+    r.finish()?;
+    Ok(prog)
+}
+
+fn encode_schedule(s: &Schedule) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.u32(s.ticks.len() as u32);
+    for t in &s.ticks {
+        match t.compute {
+            Some(si) => {
+                w.u8(1);
+                w.usize(si);
+            }
+            None => w.u8(0),
+        }
+        w.u32(t.transfers.len() as u32);
+        for tr in &t.transfers {
+            w.u32(tr.tile.0);
+            w.u8(kind_code(tr.kind));
+            w.u64(tr.cycles);
+            w.u64(tr.bytes);
+        }
+        w.u64(t.compute_cycles);
+        w.u64(t.dm_cycles);
+    }
+    w.u64(s.ddr.fetch_bytes);
+    w.u64(s.ddr.push_bytes);
+    w.u64(s.ddr.transfers);
+    w.u64(s.solve_ms);
+    w.usize(s.subproblems);
+    w.usize(s.variables);
+    w.buf
+}
+
+fn decode_schedule(buf: &[u8]) -> Result<Schedule, StoreError> {
+    let mut r = Reader::new(buf, "schedule");
+    let n = r.u32()?;
+    let mut ticks = Vec::with_capacity(n as usize);
+    for _ in 0..n {
+        let compute = match r.u8()? {
+            0 => None,
+            1 => Some(r.usize()?),
+            v => return Err(r.corrupt(format!("invalid option tag {v}"))),
+        };
+        let k = r.u32()?;
+        let mut transfers = Vec::with_capacity(k as usize);
+        for _ in 0..k {
+            let tile = TileId(r.u32()?);
+            let code = r.u8()?;
+            transfers.push(ScheduledTransfer {
+                tile,
+                kind: kind_from(code, &r)?,
+                cycles: r.u64()?,
+                bytes: r.u64()?,
+            });
+        }
+        ticks.push(Tick {
+            compute,
+            transfers,
+            compute_cycles: r.u64()?,
+            dm_cycles: r.u64()?,
+        });
+    }
+    let ddr = crate::arch::DdrTraffic {
+        fetch_bytes: r.u64()?,
+        push_bytes: r.u64()?,
+        transfers: r.u64()?,
+    };
+    let sched = Schedule {
+        ticks,
+        ddr,
+        solve_ms: r.u64()?,
+        subproblems: r.usize()?,
+        variables: r.usize()?,
+    };
+    r.finish()?;
+    Ok(sched)
+}
+
+fn encode_allocation(a: &Allocation) -> Vec<u8> {
+    let mut w = Writer::new();
+    let mut placements: Vec<_> = a.placements.iter().collect();
+    placements.sort_by_key(|&(t, _)| *t);
+    w.u32(placements.len() as u32);
+    for (t, p) in placements {
+        w.u32(t.0);
+        w.usize(p.first_bank);
+        w.usize(p.banks);
+    }
+    w.u32(a.v2p_updates.len() as u32);
+    for &(tick, vb, pb) in &a.v2p_updates {
+        w.usize(tick);
+        w.usize(vb);
+        w.usize(pb);
+    }
+    w.u64(a.solve_ms);
+    w.usize(a.subproblems);
+    w.buf
+}
+
+fn decode_allocation(buf: &[u8]) -> Result<Allocation, StoreError> {
+    let mut r = Reader::new(buf, "allocation");
+    let n = r.u32()?;
+    let mut placements = HashMap::new();
+    for _ in 0..n {
+        let t = TileId(r.u32()?);
+        placements.insert(t, Placement { first_bank: r.usize()?, banks: r.usize()? });
+    }
+    let n = r.u32()?;
+    let mut v2p_updates = Vec::with_capacity(n as usize);
+    for _ in 0..n {
+        v2p_updates.push((r.usize()?, r.usize()?, r.usize()?));
+    }
+    let alloc = Allocation {
+        placements,
+        v2p_updates,
+        solve_ms: r.u64()?,
+        subproblems: r.usize()?,
+    };
+    r.finish()?;
+    Ok(alloc)
+}
+
+fn encode_meta(c: &Compiled) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.u64(c.compile_ms);
+    w.f64(c.inference_ms);
+    w.buf
+}
+
+fn decode_meta(buf: &[u8]) -> Result<(u64, f64), StoreError> {
+    let mut r = Reader::new(buf, "meta");
+    let compile_ms = r.u64()?;
+    let inference_ms = r.f64()?;
+    r.finish()?;
+    Ok((compile_ms, inference_ms))
+}
+
+fn class_code(c: OpClass) -> u8 {
+    OpClass::all().iter().position(|&x| x == c).unwrap() as u8
+}
+
+fn encode_calibration(cal: &CostCalibration) -> Vec<u8> {
+    let mut w = Writer::new();
+    let scales = cal.scales();
+    w.u32(scales.len() as u32);
+    for &(class, scale) in scales {
+        w.u8(class_code(class));
+        w.f64(scale);
+    }
+    w.buf
+}
+
+fn decode_calibration(buf: &[u8]) -> Result<CostCalibration, StoreError> {
+    let mut r = Reader::new(buf, "calibration");
+    let n = r.u32()?;
+    let classes = OpClass::all();
+    let mut scales = Vec::with_capacity(n as usize);
+    for _ in 0..n {
+        let code = r.u8()? as usize;
+        let class = *classes
+            .get(code)
+            .ok_or_else(|| r.corrupt(format!("invalid op-class code {code}")))?;
+        let scale = r.f64()?;
+        if !scale.is_finite() || scale <= 0.0 {
+            return Err(r.corrupt(format!("non-positive scale {scale} for {class:?}")));
+        }
+        scales.push((class, scale));
+    }
+    r.finish()?;
+    Ok(CostCalibration::from_scales(&scales))
+}
+
+// --- Whole-artifact encode/decode ---
+
+/// FNV-1a over 64-bit words — same construction as the serve-layer
+/// fingerprints, kept local so the store has no private-item dependency.
+fn fnv1a_words(words: impl IntoIterator<Item = u64>) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for w in words {
+        for b in w.to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(PRIME);
+        }
+    }
+    h
+}
+
+/// Fingerprint of the compile *budgets and partitioning knobs* — the
+/// deterministic-compile inputs beyond config and calibration. An artifact
+/// compiled under different solver node limits or window shapes would be a
+/// different (still valid, but not bit-identical) plan, so the fingerprint
+/// is part of the `.npu` header and checked at load.
+pub fn options_fingerprint(opts: &CompileOptions) -> u64 {
+    fn solver_words(s: &crate::cp::SearchConfig, out: &mut Vec<u64>) {
+        out.push(u64::from(s.node_limit.is_some()));
+        out.push(s.node_limit.unwrap_or(0));
+        out.push(u64::from(s.time_limit_ms.is_some()));
+        out.push(s.time_limit_ms.unwrap_or(0));
+        out.push(u64::from(s.first_solution_only));
+    }
+    let mut words: Vec<u64> = Vec::new();
+    words.push(u64::from(opts.tiling.partition));
+    solver_words(&opts.tiling.solver, &mut words);
+    words.push(u64::from(opts.scheduling.partition));
+    words.push(opts.scheduling.window as u64);
+    words.push(opts.scheduling.delta);
+    words.push(opts.scheduling.lookahead as u64);
+    solver_words(&opts.scheduling.solver, &mut words);
+    solver_words(&opts.allocation_solver, &mut words);
+    fnv1a_words(words)
+}
+
+/// Serialize a [`Compiled`] artifact to `.npu` bytes.
+pub fn encode_npu(
+    model: ModelId,
+    cfg: &NeutronConfig,
+    compiled: &Compiled,
+    options_fp: u64,
+) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.buf.extend_from_slice(&NPU_MAGIC);
+    w.u32(NPU_VERSION);
+    w.u64(config_fingerprint(cfg));
+    w.u64(calibration_fingerprint(&compiled.calibration));
+    w.u64(options_fp);
+    w.str(model.slug());
+    let sections: [(&str, Vec<u8>); 6] = [
+        ("formats", encode_formats(&compiled.formats)),
+        ("program", encode_program(&compiled.program)),
+        ("schedule", encode_schedule(&compiled.schedule)),
+        ("allocation", encode_allocation(&compiled.allocation)),
+        ("meta", encode_meta(compiled)),
+        ("calibration", encode_calibration(&compiled.calibration)),
+    ];
+    w.u32(sections.len() as u32);
+    for (name, payload) in sections {
+        w.str(name);
+        w.u64(payload.len() as u64);
+        w.buf.extend_from_slice(&payload);
+    }
+    w.buf
+}
+
+/// Header fields + payload of a parsed `.npu` file, before fingerprint
+/// validation against a load request.
+#[derive(Debug)]
+pub struct NpuArtifact {
+    /// Model slug stamped in the header.
+    pub model_slug: String,
+    /// Config fingerprint stamped in the header.
+    pub config_fp: u64,
+    /// Calibration fingerprint stamped in the header.
+    pub calibration_fp: u64,
+    /// Compile-options fingerprint stamped in the header.
+    pub options_fp: u64,
+    /// The decoded artifact.
+    pub compiled: Compiled,
+}
+
+/// Decode `.npu` bytes into the artifact, validating structure but not
+/// yet the fingerprints (see [`ArtifactStore::load`] for the full check).
+pub fn decode_npu(bytes: &[u8]) -> Result<NpuArtifact, StoreError> {
+    let mut r = Reader::new(bytes, "header");
+    let magic = r.take(NPU_MAGIC.len()).map_err(|_| StoreError::BadMagic)?;
+    if magic != NPU_MAGIC {
+        return Err(StoreError::BadMagic);
+    }
+    let version = r.u32()?;
+    if version != NPU_VERSION {
+        return Err(StoreError::VersionSkew { found: version, expected: NPU_VERSION });
+    }
+    let config_fp = r.u64()?;
+    let calibration_fp = r.u64()?;
+    let options_fp = r.u64()?;
+    let model_slug = r.str()?;
+    let n_sections = r.u32()?;
+
+    let mut sections: HashMap<String, &[u8]> = HashMap::new();
+    for _ in 0..n_sections {
+        let name = r.str()?;
+        let len = r.u64()? as usize;
+        // Re-scope truncation errors to the section being framed.
+        let payload = {
+            let sec: &'static str = match name.as_str() {
+                "formats" => "formats",
+                "program" => "program",
+                "schedule" => "schedule",
+                "allocation" => "allocation",
+                "meta" => "meta",
+                "calibration" => "calibration",
+                other => {
+                    return Err(StoreError::Corrupt {
+                        section: "header",
+                        detail: format!("unknown section {other:?}"),
+                    })
+                }
+            };
+            r.section = sec;
+            r.take(len)?
+        };
+        if sections.insert(name.clone(), payload).is_some() {
+            return Err(StoreError::Corrupt {
+                section: "header",
+                detail: format!("duplicate section {name:?}"),
+            });
+        }
+        r.section = "header";
+    }
+    r.finish()?;
+
+    let get = |name: &'static str| -> Result<&[u8], StoreError> {
+        sections
+            .get(name)
+            .copied()
+            .ok_or(StoreError::MissingSection { name })
+    };
+    let formats = decode_formats(get("formats")?)?;
+    let program = decode_program(get("program")?)?;
+    let schedule = decode_schedule(get("schedule")?)?;
+    let allocation = decode_allocation(get("allocation")?)?;
+    let (compile_ms, inference_ms) = decode_meta(get("meta")?)?;
+    let calibration = decode_calibration(get("calibration")?)?;
+    if calibration_fingerprint(&calibration) != calibration_fp {
+        return Err(StoreError::Corrupt {
+            section: "calibration",
+            detail: "section disagrees with the header calibration fingerprint".to_string(),
+        });
+    }
+    Ok(NpuArtifact {
+        model_slug,
+        config_fp,
+        calibration_fp,
+        options_fp,
+        compiled: Compiled {
+            formats,
+            program,
+            schedule,
+            allocation,
+            compile_ms,
+            inference_ms,
+            calibration,
+        },
+    })
+}
+
+/// A directory of `.npu` artifacts, one file per
+/// `(model, config fingerprint, calibration fingerprint)`. This is the
+/// persistent tier behind the in-memory [`crate::serve::CompileCache`]:
+/// `neutron compile --save` populates it, `neutron serve --artifact-dir`
+/// pre-warms from it at startup so a restarted server performs zero CP
+/// solves for models it already planned.
+#[derive(Debug, Clone)]
+pub struct ArtifactStore {
+    dir: PathBuf,
+}
+
+impl ArtifactStore {
+    /// Open (creating if needed) the store directory.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Self, StoreError> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)?;
+        Ok(Self { dir })
+    }
+
+    /// The store's directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Canonical artifact path for a key. The config and calibration
+    /// fingerprints are part of the file name, so artifacts for different
+    /// configs/calibrations of one model coexist.
+    pub fn path_for(&self, model: ModelId, cfg: &NeutronConfig, calibration: &CostCalibration) -> PathBuf {
+        self.dir.join(format!(
+            "{}-{:016x}-{:016x}.npu",
+            model.slug(),
+            config_fingerprint(cfg),
+            calibration_fingerprint(calibration),
+        ))
+    }
+
+    /// Persist a compiled artifact. Writes to a temp file then renames, so
+    /// a crashed writer never leaves a half-written `.npu` behind.
+    pub fn save(
+        &self,
+        model: ModelId,
+        cfg: &NeutronConfig,
+        compiled: &Compiled,
+        options_fp: u64,
+    ) -> Result<PathBuf, StoreError> {
+        let bytes = encode_npu(model, cfg, compiled, options_fp);
+        let path = self.path_for(model, cfg, &compiled.calibration);
+        let tmp = path.with_extension(format!("npu.tmp.{}", std::process::id()));
+        std::fs::write(&tmp, &bytes)?;
+        std::fs::rename(&tmp, &path)?;
+        Ok(path)
+    }
+
+    /// Load and fully validate the artifact for a key. Every rejection
+    /// names its cause: wrong magic/version, truncated or corrupt
+    /// sections, or header fingerprints that do not match the requested
+    /// `(config, calibration, options)`.
+    pub fn load(
+        &self,
+        model: ModelId,
+        cfg: &NeutronConfig,
+        calibration: &CostCalibration,
+        options_fp: u64,
+    ) -> Result<Compiled, StoreError> {
+        let path = self.path_for(model, cfg, calibration);
+        let bytes = std::fs::read(&path)?;
+        let art = decode_npu(&bytes)?;
+        if art.model_slug != model.slug() {
+            return Err(StoreError::ModelMismatch {
+                expected: model.slug().to_string(),
+                found: art.model_slug,
+            });
+        }
+        let want_cfg = config_fingerprint(cfg);
+        if art.config_fp != want_cfg {
+            return Err(StoreError::FingerprintMismatch {
+                which: "config",
+                expected: want_cfg,
+                found: art.config_fp,
+            });
+        }
+        let want_cal = calibration_fingerprint(calibration);
+        if art.calibration_fp != want_cal {
+            return Err(StoreError::FingerprintMismatch {
+                which: "calibration",
+                expected: want_cal,
+                found: art.calibration_fp,
+            });
+        }
+        if art.options_fp != options_fp {
+            return Err(StoreError::FingerprintMismatch {
+                which: "options",
+                expected: options_fp,
+                found: art.options_fp,
+            });
+        }
+        Ok(art.compiled)
+    }
+
+    /// Does a (possibly invalid) artifact file exist for this key?
+    pub fn contains(
+        &self,
+        model: ModelId,
+        cfg: &NeutronConfig,
+        calibration: &CostCalibration,
+    ) -> bool {
+        self.path_for(model, cfg, calibration).exists()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::deterministic_compile_options;
+
+    fn compile_small() -> (ModelId, NeutronConfig, CompileOptions, Compiled) {
+        let model = ModelId::MobileNetV3Min;
+        let cfg = NeutronConfig::flagship_2tops();
+        let opts = deterministic_compile_options();
+        let compiled = crate::compiler::compile(&model.build(), &cfg, &opts);
+        (model, cfg, opts, compiled)
+    }
+
+    fn tmp_store(tag: &str) -> ArtifactStore {
+        let dir = std::env::temp_dir().join(format!(
+            "eiq_store_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        ArtifactStore::open(dir).unwrap()
+    }
+
+    #[test]
+    fn round_trip_is_bit_identical() {
+        let (model, cfg, opts, compiled) = compile_small();
+        let store = tmp_store("roundtrip");
+        let fp = options_fingerprint(&opts);
+        store.save(model, &cfg, &compiled, fp).unwrap();
+        let loaded = store.load(model, &cfg, &compiled.calibration, fp).unwrap();
+        assert_eq!(loaded, compiled);
+        assert_eq!(loaded.inference_ms.to_bits(), compiled.inference_ms.to_bits());
+    }
+
+    #[test]
+    fn bad_magic_and_version_rejected() {
+        let (model, cfg, opts, compiled) = compile_small();
+        let fp = options_fingerprint(&opts);
+        let mut bytes = encode_npu(model, &cfg, &compiled, fp);
+        let mut wrong = bytes.clone();
+        wrong[0] ^= 0xff;
+        assert!(matches!(decode_npu(&wrong), Err(StoreError::BadMagic)));
+        // Bump version.
+        bytes[8] = 99;
+        match decode_npu(&bytes) {
+            Err(StoreError::VersionSkew { found: 99, expected: NPU_VERSION }) => {}
+            other => panic!("expected version skew, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncation_names_the_section() {
+        let (model, cfg, opts, compiled) = compile_small();
+        let fp = options_fingerprint(&opts);
+        let bytes = encode_npu(model, &cfg, &compiled, fp);
+        // Chop inside the last section's payload.
+        let cut = &bytes[..bytes.len() - 4];
+        match decode_npu(cut) {
+            Err(StoreError::Truncated { section }) => {
+                assert_eq!(section, "calibration");
+            }
+            other => panic!("expected truncation, got {other:?}"),
+        }
+        // Chop in the middle: an earlier section is named.
+        let cut = &bytes[..bytes.len() / 2];
+        match decode_npu(cut) {
+            Err(StoreError::Truncated { section }) => {
+                assert!(
+                    ["formats", "program", "schedule", "allocation", "meta", "calibration"]
+                        .contains(&section),
+                    "unexpected section {section}"
+                );
+            }
+            other => panic!("expected truncation, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fingerprint_mismatches_are_named() {
+        let (model, cfg, opts, compiled) = compile_small();
+        let store = tmp_store("fp");
+        let fp = options_fingerprint(&opts);
+        store.save(model, &cfg, &compiled, fp).unwrap();
+        // Wrong options fingerprint.
+        match store.load(model, &cfg, &compiled.calibration, fp ^ 1) {
+            Err(StoreError::FingerprintMismatch { which: "options", .. }) => {}
+            other => panic!("expected options mismatch, got {other:?}"),
+        }
+        // A different config resolves to a different path → io (absent).
+        let other_cfg = NeutronConfig::mcu_half_tops();
+        assert!(matches!(
+            store.load(model, &other_cfg, &compiled.calibration, fp),
+            Err(StoreError::Io(_))
+        ));
+        // Forge the header config fingerprint: content check still rejects.
+        let path = store.path_for(model, &cfg, &compiled.calibration);
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[12] ^= 0xff; // first byte of config_fp
+        std::fs::write(&path, &bytes).unwrap();
+        match store.load(model, &cfg, &compiled.calibration, fp) {
+            Err(StoreError::FingerprintMismatch { which: "config", .. }) => {}
+            other => panic!("expected config mismatch, got {other:?}"),
+        }
+    }
+}

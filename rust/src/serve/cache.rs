@@ -65,6 +65,17 @@ pub fn calibration_fingerprint(calibration: &CostCalibration) -> u64 {
     fnv1a_words(OpClass::all().map(|class| calibration.scale_for(class).to_bits()))
 }
 
+/// L1 distance between the effective per-class scales of two calibrations
+/// — the "nearest neighbor" metric for warm-start seeding: the closer two
+/// calibrations price every op class, the more of the neighbor's CP
+/// solution survives as the new search's incumbent.
+pub fn calibration_l1_distance(a: &CostCalibration, b: &CostCalibration) -> f64 {
+    OpClass::all()
+        .iter()
+        .map(|&c| (a.scale_for(c) - b.scale_for(c)).abs())
+        .sum()
+}
+
 /// Compile options for serving: identical inputs must yield bit-identical
 /// job programs across runs, so every CP budget is a **node limit**
 /// (deterministic) rather than a wall-clock limit. The branch-and-bound
@@ -165,9 +176,65 @@ impl CompileCache {
         }
         self.misses += 1;
         let graph = model.build();
-        let opts = CompileOptions { calibration: calibration.clone(), ..self.opts.clone() };
+        let warm_start = self
+            .nearest_neighbor(model, key.1, calibration)
+            .map(|n| Arc::new(n.compiled.clone()));
+        let opts = CompileOptions {
+            calibration: calibration.clone(),
+            warm_start,
+            ..self.opts.clone()
+        };
         let compiled = compile(&graph, cfg, &opts);
         let program = emit(&compiled, &graph.name);
+        let entry = Arc::new(CachedModel { model, compiled, program });
+        self.entries.insert(key, Arc::clone(&entry));
+        entry
+    }
+
+    /// Nearest cached warm-start neighbor for a miss: same model and
+    /// config fingerprint, smallest L1 distance between the effective
+    /// per-class calibration scales. The calibration changes *costs* but
+    /// not the candidate structure of the CPs (tiling and capacity depend
+    /// only on bytes/banks, transfer pricing is never class-corrected), so
+    /// the neighbor's solution maps onto the new problem 1:1 and seeds the
+    /// anytime search. Ties break toward the smallest calibration
+    /// fingerprint for determinism.
+    fn nearest_neighbor(
+        &self,
+        model: ModelId,
+        config_fp: u64,
+        calibration: &CostCalibration,
+    ) -> Option<&Arc<CachedModel>> {
+        self.entries
+            .iter()
+            .filter(|(&(m, cfp, _), _)| m == model && cfp == config_fp)
+            .min_by(|(&(_, _, fa), a), (&(_, _, fb), b)| {
+                let da = calibration_l1_distance(&a.compiled.calibration, calibration);
+                let db = calibration_l1_distance(&b.compiled.calibration, calibration);
+                da.partial_cmp(&db).unwrap_or(std::cmp::Ordering::Equal).then(fa.cmp(&fb))
+            })
+            .map(|(_, e)| e)
+    }
+
+    /// Insert an externally produced artifact (e.g. loaded from a
+    /// persistent [`crate::runtime::ArtifactStore`]) without counting a
+    /// hit or a miss. The job program is re-emitted from the artifact —
+    /// emission is a cheap pure function of the compile result, so a
+    /// disk-warmed entry is bit-identical to the one a cold compile would
+    /// have produced. Returns the shared entry.
+    pub fn insert_artifact(
+        &mut self,
+        model: ModelId,
+        cfg: &NeutronConfig,
+        compiled: Compiled,
+    ) -> Arc<CachedModel> {
+        let key = (
+            model,
+            config_fingerprint(cfg),
+            calibration_fingerprint(&compiled.calibration),
+        );
+        let graph_name = model.build().name;
+        let program = emit(&compiled, &graph_name);
         let entry = Arc::new(CachedModel { model, compiled, program });
         self.entries.insert(key, Arc::clone(&entry));
         entry

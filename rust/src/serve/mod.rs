@@ -62,8 +62,8 @@ pub mod queue;
 pub mod server;
 
 pub use cache::{
-    calibration_fingerprint, config_fingerprint, deterministic_compile_options, CachedModel,
-    CompileCache,
+    calibration_fingerprint, calibration_l1_distance, config_fingerprint,
+    deterministic_compile_options, CachedModel, CompileCache,
 };
 pub use queue::{
     marginal_service_cycles, synthetic_trace, synthetic_trace_with_mix, Admission,

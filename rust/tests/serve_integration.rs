@@ -443,3 +443,61 @@ fn acceptance_200_request_mixed_trace() {
     assert!(s.contains("p50") && s.contains("hit rate"));
     assert!(s.contains("goodput") && s.contains("shed"));
 }
+
+/// Flaky-guard for the persistent artifact store: same-seed determinism
+/// extends across a server restart through `--artifact-dir`. Run 1 serves
+/// on a cache pre-warmed by compiling + saving every model (the cold
+/// start); run 2 pre-warms a fresh cache purely from the `.npu` files on
+/// disk (the restart). Both runs must produce a bit-identical
+/// `ServeReport` — including the cache counters, because pre-warming
+/// happens before the serve loop snapshots them — and the restarted run
+/// must perform zero CP solves.
+#[test]
+fn artifact_dir_restart_reproduces_the_report_with_zero_cold_compiles() {
+    use eiq_neutron::runtime::{options_fingerprint, ArtifactStore};
+
+    let cfg = NeutronConfig::flagship_2tops();
+    let dir = std::env::temp_dir().join(format!("eiq_serve_store_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = ArtifactStore::open(&dir).unwrap();
+    let fp = options_fingerprint(&deterministic_compile_options());
+    let opts = ServeOptions {
+        models: vec![ModelId::MobileNetV3Min, ModelId::MobileNetV1],
+        requests: 40,
+        mean_gap_cycles: 400_000,
+        seed: 11,
+        scheduler: SchedulerOptions { instances: 2, ..SchedulerOptions::default() },
+        ..ServeOptions::default()
+    };
+
+    // Run 1 (cold start): compile every model, save the artifacts.
+    let mut cold_cache = CompileCache::for_serving(cfg.clone());
+    for &model in &opts.models {
+        let calibration = cold_cache.default_calibration().clone();
+        let entry = cold_cache.get_with_calibration(model, &cfg, &calibration);
+        store.save(model, &cfg, &entry.compiled, fp).unwrap();
+    }
+    let compiles_before_serving = cold_cache.misses;
+    let cold_report = serve_with_cache(&cfg, &opts, &mut cold_cache);
+    assert_eq!(compiles_before_serving, opts.models.len() as u64);
+
+    // Run 2 (restart): a fresh cache warmed purely from disk.
+    let mut warm_cache = CompileCache::for_serving(cfg.clone());
+    for &model in &opts.models {
+        let calibration = warm_cache.default_calibration().clone();
+        let compiled = store.load(model, &cfg, &calibration, fp).unwrap();
+        warm_cache.insert_artifact(model, &cfg, compiled);
+    }
+    assert_eq!(warm_cache.misses, 0, "restart must not run the CP solver");
+    let warm_report = serve_with_cache(&cfg, &opts, &mut warm_cache);
+    assert_eq!(warm_cache.misses, 0, "serving on a warmed cache must stay solver-free");
+
+    assert_eq!(
+        cold_report, warm_report,
+        "disk-warmed restart must reproduce the cold run's report bit for bit"
+    );
+    assert_eq!(warm_report.cache_misses, 0);
+    assert_eq!(warm_report.cache_hits, cold_report.cache_hits);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,346 @@
+//! Property/golden tests for the persistent `.npu` artifact store and the
+//! warm-started anytime CP search:
+//!
+//! * save→load round-trips are **bit-identical** (same schedule,
+//!   allocation, program, and the exact `f64` bits of every latency)
+//!   across zoo models × random calibrations, and encoding is canonical
+//!   (same artifact → same bytes);
+//! * corrupted, truncated, version-skewed and fingerprint-mismatched
+//!   artifacts are rejected with errors naming the offending section —
+//!   never a panic, never a silently wrong plan;
+//! * a warm-started search seeded with a feasible solution is **never
+//!   worse** than the cold search under the same node budget, degrades to
+//!   the seed itself at budget zero (anytime floor), and with an
+//!   unlimited budget converges to the identical optimal assignment;
+//! * warm-started compilation is deterministic: the same seed artifact
+//!   yields the same deterministic artifact parts, twice.
+
+use std::sync::Arc;
+
+use eiq_neutron::arch::NeutronConfig;
+use eiq_neutron::compiler::{compile, CompileOptions, Compiled, CostCalibration};
+use eiq_neutron::cp::{solve, CpModel, LinExpr, SearchConfig, Solution, Status};
+use eiq_neutron::ir::OpClass;
+use eiq_neutron::runtime::{
+    decode_npu, encode_npu, options_fingerprint, ArtifactStore, StoreError, NPU_VERSION,
+};
+use eiq_neutron::serve::deterministic_compile_options;
+use eiq_neutron::util::prop::{for_each_case, Rng};
+use eiq_neutron::zoo::ModelId;
+
+/// Small zoo subset: every case compiles, so keep the pool cheap.
+const POOL: [ModelId; 2] = [ModelId::MobileNetV3Min, ModelId::EfficientNetLite0];
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("eiq_npu_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A random calibration: a random subset of op classes scaled in
+/// [0.5, 2.0] (always valid: finite and positive).
+fn random_calibration(rng: &mut Rng) -> CostCalibration {
+    let classes = OpClass::all();
+    let mut scales = Vec::new();
+    for &class in classes.iter() {
+        if rng.bool() {
+            scales.push((class, 0.5 + 1.5 * rng.f64()));
+        }
+    }
+    if scales.is_empty() {
+        CostCalibration::identity()
+    } else {
+        CostCalibration::from_scales(&scales)
+    }
+}
+
+// --- Satellite 1: round-trip bit-identity across zoo × calibrations ---
+
+#[test]
+fn npu_round_trip_is_bit_identical_across_zoo_and_calibrations() {
+    let cfg = NeutronConfig::flagship_2tops();
+    let store = ArtifactStore::open(tmp_dir("roundtrip")).unwrap();
+    for_each_case(4, 0x5703_11, |rng| {
+        let model = *rng.choose(&POOL);
+        let calibration = random_calibration(rng);
+        let opts = CompileOptions { calibration, ..deterministic_compile_options() };
+        let fp = options_fingerprint(&opts);
+        let compiled = compile(&model.build(), &cfg, &opts);
+
+        // Canonical encoding: same artifact, same bytes.
+        let bytes = encode_npu(model, &cfg, &compiled, fp);
+        assert_eq!(bytes, encode_npu(model, &cfg, &compiled, fp), "encoding must be canonical");
+
+        // Disk round-trip through the store: bit-identical artifact.
+        store.save(model, &cfg, &compiled, fp).unwrap();
+        let loaded = store.load(model, &cfg, &compiled.calibration, fp).unwrap();
+        assert_eq!(loaded, compiled, "{model:?}: save→load round-trip drifted");
+        assert_eq!(
+            loaded.inference_ms.to_bits(),
+            compiled.inference_ms.to_bits(),
+            "{model:?}: inference_ms f64 bits drifted"
+        );
+        assert_eq!(loaded.schedule.ticks, compiled.schedule.ticks);
+        assert_eq!(loaded.allocation.placements, compiled.allocation.placements);
+        assert_eq!(loaded.program, compiled.program);
+        assert_eq!(loaded.formats, compiled.formats);
+
+        // In-memory round-trip agrees with the disk one.
+        let art = decode_npu(&bytes).unwrap();
+        assert_eq!(art.compiled, compiled);
+        assert_eq!(art.model_slug, model.slug());
+        assert_eq!(art.options_fp, fp);
+    });
+}
+
+// --- Satellite 2 (validation half): rejection with named errors ---
+
+#[test]
+fn corrupted_artifacts_are_rejected_with_named_errors() {
+    let cfg = NeutronConfig::flagship_2tops();
+    let model = ModelId::MobileNetV3Min;
+    let opts = deterministic_compile_options();
+    let fp = options_fingerprint(&opts);
+    let compiled = compile(&model.build(), &cfg, &opts);
+    let bytes = encode_npu(model, &cfg, &compiled, fp);
+
+    // Bad magic.
+    let mut wrong = bytes.clone();
+    wrong[3] ^= 0x01;
+    assert!(matches!(decode_npu(&wrong), Err(StoreError::BadMagic)));
+    assert!(matches!(decode_npu(b"not an artifact"), Err(StoreError::BadMagic)));
+    assert!(matches!(decode_npu(&[]), Err(StoreError::BadMagic)));
+
+    // Version skew names both versions.
+    let mut skewed = bytes.clone();
+    skewed[8] = NPU_VERSION as u8 + 1;
+    match decode_npu(&skewed) {
+        Err(StoreError::VersionSkew { found, expected }) => {
+            assert_eq!(found, NPU_VERSION + 1);
+            assert_eq!(expected, NPU_VERSION);
+        }
+        other => panic!("expected VersionSkew, got {other:?}"),
+    }
+
+    // Every strict prefix is rejected (length-prefixed framing means a
+    // truncated file can never decode), and the error names a section.
+    for_each_case(64, 0x5703_22, |rng| {
+        let cut = rng.usize(0, bytes.len() - 1);
+        match decode_npu(&bytes[..cut]) {
+            Err(StoreError::BadMagic) => assert!(cut < 8, "BadMagic only for header cuts"),
+            Err(StoreError::Truncated { section }) => {
+                assert!(
+                    ["header", "formats", "program", "schedule", "allocation", "meta",
+                     "calibration"]
+                        .contains(&section),
+                    "unnamed section in truncation error: {section:?}"
+                );
+            }
+            Err(other) => panic!("truncation at {cut} gave unexpected error {other:?}"),
+            Ok(_) => panic!("truncated artifact ({cut}/{} bytes) decoded", bytes.len()),
+        }
+    });
+
+    // Header fingerprint bytes (config 12..20, calibration 20..28,
+    // options 28..36): tampering is caught by name at load time.
+    let store = ArtifactStore::open(tmp_dir("reject")).unwrap();
+    let path = store.save(model, &cfg, &compiled, fp).unwrap();
+    for (offset, which) in [(12usize, "config"), (28usize, "options")] {
+        let mut tampered = bytes.clone();
+        tampered[offset] ^= 0xff;
+        std::fs::write(&path, &tampered).unwrap();
+        match store.load(model, &cfg, &compiled.calibration, fp) {
+            Err(StoreError::FingerprintMismatch { which: w, expected, found }) => {
+                assert_eq!(w, which);
+                assert_ne!(expected, found);
+            }
+            other => panic!("expected {which} FingerprintMismatch, got {other:?}"),
+        }
+    }
+    // A tampered calibration fingerprint is caught even earlier: the
+    // calibration *section* no longer matches the header.
+    let mut tampered = bytes.clone();
+    tampered[20] ^= 0xff;
+    match decode_npu(&tampered) {
+        Err(StoreError::Corrupt { section: "calibration", .. }) => {}
+        other => panic!("expected calibration Corrupt, got {other:?}"),
+    }
+
+    // Asking the store for a different calibration resolves a different
+    // path — a missing artifact, not a wrong one.
+    std::fs::write(&path, &bytes).unwrap();
+    let other_cal = CostCalibration::from_scales(&[(OpClass::Conv, 1.25)]);
+    assert!(matches!(
+        store.load(model, &cfg, &other_cal, fp),
+        Err(StoreError::Io(_))
+    ));
+    // Copying the artifact onto that other key's path forges the name but
+    // not the content: rejected as a calibration mismatch by fingerprint.
+    std::fs::copy(&path, store.path_for(model, &cfg, &other_cal)).unwrap();
+    match store.load(model, &cfg, &other_cal, fp) {
+        Err(StoreError::FingerprintMismatch { which: "calibration", .. }) => {}
+        other => panic!("expected calibration FingerprintMismatch, got {other:?}"),
+    }
+    // And the untampered original still loads — rejection is per-file.
+    assert_eq!(store.load(model, &cfg, &compiled.calibration, fp).unwrap(), compiled);
+}
+
+// --- Satellite 2 (search half): warm-started anytime search properties ---
+
+/// A random feasible minimization CP: bounded non-negative vars, `≥`
+/// covering constraints with non-negative coefficients (so the all-upper
+/// assignment is always feasible), positive objective coefficients.
+fn random_model(rng: &mut Rng) -> (CpModel, Vec<i64>) {
+    let n = rng.usize(2, 5);
+    let mut m = CpModel::new();
+    let mut ubs = Vec::new();
+    let vars: Vec<_> = (0..n)
+        .map(|i| {
+            let ub = rng.int(1, 4);
+            ubs.push(ub);
+            m.int_var(0, ub, format!("x{i}"))
+        })
+        .collect();
+    for c in 0..rng.usize(1, 3) {
+        let mut e = LinExpr::new();
+        let mut max_lhs = 0i64;
+        for (i, &v) in vars.iter().enumerate() {
+            let coef = rng.int(0, 3);
+            if coef > 0 {
+                e = e.add(coef, v);
+                max_lhs += coef * ubs[i];
+            }
+        }
+        // rhs ≤ max_lhs keeps the all-upper assignment feasible.
+        m.add_ge(e, rng.int(0, max_lhs.max(0)));
+        let _ = c;
+    }
+    let mut obj = LinExpr::new();
+    for &v in &vars {
+        obj = obj.add(rng.int(1, 5), v);
+    }
+    m.minimize(obj);
+    (m, ubs)
+}
+
+fn solve_with(m: &CpModel, node_limit: Option<u64>, hint: Option<Vec<i64>>) -> Solution {
+    solve(
+        m,
+        SearchConfig { node_limit, time_limit_ms: None, hint, ..SearchConfig::default() },
+    )
+}
+
+#[test]
+fn warm_started_search_is_anytime_and_never_worse_than_cold() {
+    for_each_case(64, 0x5703_33, |rng| {
+        let (m, ubs) = random_model(rng);
+        // The all-upper assignment is feasible by construction: the
+        // "neighbor solution" every warm start seeds from.
+        let seed = ubs.clone();
+
+        // Unlimited cold search: the reference optimum.
+        let cold_opt = solve_with(&m, None, None);
+        assert_eq!(cold_opt.status, Status::Optimal, "random model must be feasible");
+        let best_obj = cold_opt.objective.unwrap();
+        let best_assignment = cold_opt.assignment.clone().unwrap();
+
+        // Anytime floor: at node budget zero, the warm search returns the
+        // seed itself instead of failing.
+        let floor = solve_with(&m, Some(0), Some(seed.clone()));
+        assert_eq!(floor.status, Status::Feasible);
+        assert_eq!(floor.assignment.as_deref(), Some(seed.as_slice()));
+
+        // Never worse: under the same node budget, the warm search's
+        // objective is ≤ the cold search's (when cold found one at all),
+        // and always ≤ the seed's objective.
+        let budget = rng.int(0, 40) as u64;
+        let cold = solve_with(&m, Some(budget), None);
+        let warm = solve_with(&m, Some(budget), Some(seed.clone()));
+        let warm_obj = warm.objective.expect("warm search always has its seed");
+        if let Some(cold_obj) = cold.objective {
+            assert!(
+                warm_obj <= cold_obj,
+                "warm {warm_obj} worse than cold {cold_obj} at budget {budget}"
+            );
+        }
+        assert!(warm_obj >= best_obj, "objective below the proven optimum");
+
+        // Convergence: with an unlimited budget, the warm search lands on
+        // the identical optimal assignment the cold search found —
+        // including when seeded with the optimum itself (strict
+        // improvement never replaces an equal incumbent).
+        let warm_opt = solve_with(&m, None, Some(seed));
+        assert_eq!(warm_opt.status, Status::Optimal);
+        assert_eq!(warm_opt.objective, Some(best_obj));
+        let warm_self = solve_with(&m, None, Some(best_assignment.clone()));
+        assert_eq!(warm_self.status, Status::Optimal);
+        assert_eq!(warm_self.assignment, Some(best_assignment));
+    });
+}
+
+#[test]
+fn invalid_warm_seeds_degrade_to_cold_search() {
+    for_each_case(32, 0x5703_44, |rng| {
+        let (m, ubs) = random_model(rng);
+        let cold = solve_with(&m, None, None);
+        // Wrong arity and out-of-bounds seeds are dropped, not trusted.
+        let bad_arity = vec![0i64; ubs.len() + 3];
+        let out_of_bounds: Vec<i64> = ubs.iter().map(|&u| u + 10).collect();
+        for bad in [bad_arity, out_of_bounds] {
+            let s = solve_with(&m, None, Some(bad));
+            assert_eq!(s.status, Status::Optimal);
+            assert_eq!(s.objective, cold.objective);
+        }
+    });
+}
+
+// --- Warm-started compilation: deterministic, structurally valid ---
+
+/// Compare every deterministic part of two artifacts (everything except
+/// the wall-clock `compile_ms` / `solve_ms` fields).
+fn assert_same_plan(a: &Compiled, b: &Compiled, what: &str) {
+    assert_eq!(a.formats, b.formats, "{what}: formats differ");
+    assert_eq!(a.program, b.program, "{what}: tiled programs differ");
+    assert_eq!(a.schedule.ticks, b.schedule.ticks, "{what}: schedules differ");
+    assert_eq!(a.schedule.ddr, b.schedule.ddr, "{what}: DDR traffic differs");
+    assert_eq!(a.allocation.placements, b.allocation.placements, "{what}: placements differ");
+    assert_eq!(a.allocation.v2p_updates, b.allocation.v2p_updates, "{what}: v2p differs");
+    assert_eq!(
+        a.inference_ms.to_bits(),
+        b.inference_ms.to_bits(),
+        "{what}: inference_ms bits differ"
+    );
+}
+
+#[test]
+fn warm_started_compile_is_deterministic_and_well_formed() {
+    let cfg = NeutronConfig::flagship_2tops();
+    let model = ModelId::MobileNetV3Min;
+    let graph = model.build();
+    let cold = Arc::new(compile(&graph, &cfg, &deterministic_compile_options()));
+
+    // Seed a recompile under a different calibration with the identity
+    // artifact — the serving cache's nearest-neighbor path.
+    let cal = CostCalibration::from_scales(&[(OpClass::Conv, 1.4), (OpClass::Pool, 0.8)]);
+    let warm_opts = CompileOptions {
+        calibration: cal.clone(),
+        warm_start: Some(Arc::clone(&cold)),
+        ..deterministic_compile_options()
+    };
+    let a = compile(&graph, &cfg, &warm_opts);
+    let b = compile(&graph, &cfg, &warm_opts);
+    assert_same_plan(&a, &b, "warm-started compile repeated");
+    assert_eq!(a.calibration, cal);
+    assert!(!a.program.steps.is_empty() && !a.schedule.ticks.is_empty());
+    assert!(a.inference_ms.is_finite() && a.inference_ms > 0.0);
+
+    // Seeding a compile with its own artifact under the same calibration
+    // reproduces it: the seed is already each CP's incumbent, and strict
+    // improvement never replaces an equal solution.
+    let self_opts = CompileOptions {
+        warm_start: Some(Arc::clone(&cold)),
+        ..deterministic_compile_options()
+    };
+    let replayed = compile(&graph, &cfg, &self_opts);
+    assert_same_plan(&replayed, &cold, "self-seeded warm compile vs its seed");
+}
