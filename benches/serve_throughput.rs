@@ -1,25 +1,43 @@
 //! Bench: serving throughput under load — compile-cache cold vs warm,
-//! instance scaling, and the overload sweep (offered load vs goodput and
-//! tail latency with shedding and batching). The sweep is the acceptance
-//! evidence for the overload-aware scheduler: goodput saturates (instead
-//! of collapsing) past the knee with shedding on, and batching buys extra
-//! goodput at the same offered load.
+//! instance scaling, the overload sweep (offered load vs goodput and
+//! tail latency with shedding and batching), and the pipelining ×
+//! residency sweep (PR 7). The overload sweep is the acceptance evidence
+//! for the overload-aware scheduler: goodput saturates (instead of
+//! collapsing) past the knee with shedding on, and batching buys extra
+//! goodput at the same offered load. The pipelining × residency sweep is
+//! the acceptance evidence for intra-instance pipelining + TCM weight
+//! residency: with either knob on, the makespan of a standard-only
+//! unbatched trace never exceeds the baseline's (asserted), and the
+//! hidden overlap cycles / residency hit-rate are reported.
+//!
+//! `--json PATH` additionally writes the measurements and the sweep rows
+//! as a JSON array (used by ci.sh to emit `BENCH_serve_throughput.json`).
 
 use eiq_neutron::arch::NeutronConfig;
 use eiq_neutron::serve::{
-    serve, serve_with_cache, AdmissionPolicy, CompileCache, SchedulerOptions, ServeOptions,
+    serve, serve_with_cache, AdmissionPolicy, CompileCache, PriorityMix, SchedulerOptions,
+    ServeOptions,
 };
-use eiq_neutron::util::bench::Bencher;
+use eiq_neutron::util::bench::{Bencher, Measurement};
 
 fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+
     let cfg = NeutronConfig::flagship_2tops();
     let opts = ServeOptions::default();
     let b = Bencher::quick();
+    let mut results: Vec<Measurement> = Vec::new();
+    let mut extra_json: Vec<String> = Vec::new();
 
     // Cold cache: every sample pays the full CP compile for each model.
-    b.bench("serve 200 req / 3 models, cold cache", || {
+    results.push(b.bench("serve 200 req / 3 models, cold cache", || {
         serve(&cfg, &opts).goodput_inf_s
-    });
+    }));
 
     // Warm cache: compiles amortized away; scaling is pure scheduling.
     let mut cache = CompileCache::for_serving(cfg.clone());
@@ -31,9 +49,9 @@ fn main() {
             scheduler: SchedulerOptions { instances, ..opts.scheduler.clone() },
             ..opts.clone()
         };
-        b.bench(&format!("serve 200 req warm cache, {instances} instance(s)"), || {
+        results.push(b.bench(&format!("serve 200 req warm cache, {instances} instance(s)"), || {
             serve_with_cache(&cfg, &o, &mut cache).goodput_inf_s
-        });
+        }));
     }
 
     // Overload sweep: a fixed 2-instance fleet while the offered load ramps
@@ -96,6 +114,103 @@ fn main() {
         }
     }
 
+    // Pipelining × residency sweep (PR 7): one hot model, standard-only
+    // traffic, unbounded queue, no batching — the shape for which the
+    // makespan-monotonicity property holds (see the differential suite),
+    // so the baseline comparison is an assertion, not just a report.
+    println!("\npipelining × residency sweep: 300 requests, 2 instances, 1 model, seed 13");
+    println!(
+        "{:>14}  {:>14} {:>10} {:>10} {:>11} {:>9} {:>6}",
+        "scheduler", "makespan cyc", "goodput/s", "p99 ms", "overlap cyc", "res hit%", "warm"
+    );
+    let combos: [(&str, bool, bool, bool); 5] = [
+        ("baseline", false, false, false),
+        ("pipeline", true, false, false),
+        ("residency", false, true, false),
+        ("pipe+res", true, true, false),
+        ("pipe+res+route", true, true, true),
+    ];
+    let mut baseline_makespan = 0u64;
+    for (name, pipeline, weight_residency, warm_routing) in combos {
+        let o = ServeOptions {
+            models: vec![eiq_neutron::zoo::ModelId::MobileNetV2],
+            requests: 300,
+            mean_gap_cycles: 400_000,
+            seed: 13,
+            priority_mix: PriorityMix::standard_only(),
+            scheduler: SchedulerOptions {
+                instances: 2,
+                pipeline,
+                weight_residency,
+                warm_routing,
+                ..SchedulerOptions::default()
+            },
+        };
+        let r = serve_with_cache(&cfg, &o, &mut cache);
+        if name == "baseline" {
+            baseline_makespan = r.makespan_cycles;
+        } else if !warm_routing {
+            // Warm routing trades placement for predicted finish and has
+            // no monotonicity guarantee; the other combos do.
+            assert!(
+                r.makespan_cycles <= baseline_makespan,
+                "{name} makespan {} exceeds baseline {}",
+                r.makespan_cycles,
+                baseline_makespan
+            );
+        }
+        assert!(
+            r.utilization() <= 1.0 + 1e-12,
+            "{name} utilization {} above 1",
+            r.utilization()
+        );
+        println!(
+            "{:>14}  {:>14} {:>10.1} {:>10.3} {:>11} {:>8.1}% {:>6}",
+            name,
+            r.makespan_cycles,
+            r.goodput_inf_s,
+            r.p99_ms,
+            r.overlap_cycles,
+            r.residency_hit_rate() * 100.0,
+            r.warm_dispatches
+        );
+        extra_json.push(format!(
+            "{{\"name\":\"pipeline_residency_{}\",\"pipeline\":{},\"residency\":{},\
+             \"warm_routing\":{},\"makespan_cycles\":{},\"goodput_inf_s\":{},\
+             \"overlap_cycles\":{},\"residency_hits\":{},\"residency_misses\":{},\
+             \"warm_dispatches\":{}}}",
+            name,
+            pipeline,
+            weight_residency,
+            warm_routing,
+            r.makespan_cycles,
+            r.goodput_inf_s,
+            r.overlap_cycles,
+            r.residency_hits,
+            r.residency_misses,
+            r.warm_dispatches
+        ));
+    }
+
     let report = serve_with_cache(&cfg, &ServeOptions::default(), &mut cache);
     println!("\n{}", report.summary());
+
+    if let Some(path) = json_path {
+        let mut rows: Vec<String> = results
+            .iter()
+            .map(|m| {
+                format!(
+                    "{{\"name\":{:?},\"median_us\":{:.1},\"mean_us\":{:.1},\"stddev_us\":{:.1}}}",
+                    m.name,
+                    m.median().as_secs_f64() * 1e6,
+                    m.mean().as_secs_f64() * 1e6,
+                    m.stddev_us()
+                )
+            })
+            .collect();
+        rows.extend(extra_json);
+        let json = format!("[\n  {}\n]\n", rows.join(",\n  "));
+        std::fs::write(&path, json).expect("write bench JSON");
+        eprintln!("wrote {path}");
+    }
 }

@@ -70,11 +70,32 @@ grep -q "/ 0 misses" "$smoke_dir/serve_warm.txt"
 grep -q "3 loaded, 0 compiled" "$smoke_dir/serve_warm.err"
 echo "artifact store smoke OK (restart served with zero cold compiles)"
 
+# Pipelining + residency smoke: a recorded pipelined/resident run must
+# replay byte-identically through the v2 trace format, and contradictory
+# knobs must be rejected loudly.
+./target/release/neutron serve --requests 32 --instances 2 --seed 17 \
+    --mean-gap-cycles 200000 --pipeline --residency --warm-routing \
+    --record "$smoke_dir/pipe.jsonl" > "$smoke_dir/pipe_recorded.txt"
+./target/release/neutron replay "$smoke_dir/pipe.jsonl" > "$smoke_dir/pipe_replayed.txt"
+diff "$smoke_dir/pipe_recorded.txt" "$smoke_dir/pipe_replayed.txt"
+if ./target/release/neutron serve --warm-routing >/dev/null 2>&1; then
+    echo "ERROR: 'neutron serve --warm-routing' without --residency should have been rejected" >&2
+    exit 1
+fi
+echo "pipelining + residency smoke OK"
+
 # Solver hot-path bench (includes the warm-vs-cold budget sweep and its
 # acceptance assertion); the measurements land in BENCH_solver_hotpath.json.
 cargo bench --bench solver_hotpath -- --json "$PWD/BENCH_solver_hotpath.json" \
     > /dev/null
 echo "solver hotpath bench OK (BENCH_solver_hotpath.json)"
+
+# Serve throughput bench (includes the pipelining × residency sweep and
+# its makespan-monotonicity assertion); the measurements land in
+# BENCH_serve_throughput.json.
+cargo bench --bench serve_throughput -- --json "$PWD/BENCH_serve_throughput.json" \
+    > /dev/null
+echo "serve throughput bench OK (BENCH_serve_throughput.json)"
 
 # Docs must not rot: fail on any rustdoc warning (missing docs in the
 # serve module, broken intra-doc links, …). Vendored stand-ins are not

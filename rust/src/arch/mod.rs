@@ -10,4 +10,4 @@ pub mod tcm;
 pub use config::NeutronConfig;
 pub use core::{compute_cycles, ComputeCost, Format, JobGeometry};
 pub use dma::{DdrTraffic, Transfer, TransferKind};
-pub use tcm::{Bank, BankOccupancy, V2pTable};
+pub use tcm::{Bank, BankOccupancy, ResidencyEntry, TcmResidency, V2pTable};

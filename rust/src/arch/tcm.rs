@@ -116,6 +116,192 @@ impl BankOccupancy {
     }
 }
 
+/// One parameter tile held resident in TCM across requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ResidencyEntry {
+    /// Stable id of the model owning the tile (the serving layer uses the
+    /// model-zoo index).
+    pub owner: u64,
+    /// The owner's tile id.
+    pub tile: u32,
+    /// Capacity charged for the tile (bank-rounded by the caller, so the
+    /// accounting matches what the allocator would actually reserve).
+    pub bytes: u64,
+    /// DDR-fetch cost a hit on this tile saves.
+    pub fetch_cycles: u64,
+    /// Logical timestamp of the last touch (install or hit).
+    pub last_use_seq: u64,
+}
+
+impl ResidencyEntry {
+    /// Eviction value: cycles saved per resident byte, compared without
+    /// division (`a.fetch/a.bytes < b.fetch/b.bytes` ⇔
+    /// `a.fetch·b.bytes < b.fetch·a.bytes`), so the order is exact and
+    /// platform-independent. Ties fall to the older entry, then to the
+    /// smaller `(owner, tile)` — fully deterministic victim choice.
+    fn keeps_less_value_than(&self, other: &ResidencyEntry) -> bool {
+        let a = self.fetch_cycles as u128 * other.bytes as u128;
+        let b = other.fetch_cycles as u128 * self.bytes as u128;
+        (a, self.last_use_seq, self.owner, self.tile)
+            < (b, other.last_use_seq, other.owner, other.tile)
+    }
+}
+
+/// TCM weight-residency model: which parameter tiles stay resident in
+/// TCM across requests, and at what capacity cost.
+///
+/// Generalizes the batching-only "followers skip parameter DMA" trick:
+/// any request whose parameter tiles are already resident skips their
+/// DDR fetches. Eviction is cost-model-driven — the victim is the entry
+/// with the lowest *fetch cycles saved per resident byte* (oldest touch,
+/// then smallest `(owner, tile)`, break ties), so the policy keeps the
+/// tiles whose re-fetch would cost the most relative to the TCM they
+/// pin. Capacity is accounted against the configured TCM size and the
+/// invariant `resident_bytes ≤ capacity_bytes` is asserted after every
+/// install (the simulator's strict mode, like the V2P bijection check).
+#[derive(Debug, Clone)]
+pub struct TcmResidency {
+    capacity_bytes: u64,
+    entries: Vec<ResidencyEntry>,
+    resident_bytes: u64,
+    seq: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl TcmResidency {
+    /// An empty residency set with `capacity_bytes` of TCM to fill.
+    pub fn new(capacity_bytes: u64) -> Self {
+        Self {
+            capacity_bytes,
+            entries: Vec::new(),
+            resident_bytes: 0,
+            seq: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Configured capacity the resident set is accounted against.
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity_bytes
+    }
+
+    /// Bytes currently pinned by resident tiles (never exceeds capacity).
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident_bytes
+    }
+
+    /// Number of resident tiles.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing is resident.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Lookups that found their tile resident.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Lookups that missed.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Entries evicted to make room.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// True if `(owner, tile)` is resident (no counters touched).
+    pub fn is_resident(&self, owner: u64, tile: u32) -> bool {
+        self.entries.iter().any(|e| e.owner == owner && e.tile == tile)
+    }
+
+    /// Look up `(owner, tile)` before its fetch would issue. A hit bumps
+    /// the entry's recency and returns true (the caller skips the fetch);
+    /// a miss only counts and returns false (the caller fetches, then
+    /// [`TcmResidency::install`]s).
+    pub fn touch(&mut self, owner: u64, tile: u32) -> bool {
+        self.seq += 1;
+        match self.entries.iter_mut().find(|e| e.owner == owner && e.tile == tile) {
+            Some(e) => {
+                e.last_use_seq = self.seq;
+                self.hits += 1;
+                true
+            }
+            None => {
+                self.misses += 1;
+                false
+            }
+        }
+    }
+
+    /// Install a freshly-fetched tile, evicting lowest-value entries
+    /// until it fits. Charges `bytes` against capacity (callers pass the
+    /// bank-rounded size). Returns false — and keeps the set unchanged —
+    /// when the tile alone exceeds capacity. Installing an
+    /// already-resident tile just refreshes its recency.
+    pub fn install(&mut self, owner: u64, tile: u32, bytes: u64, fetch_cycles: u64) -> bool {
+        if bytes > self.capacity_bytes {
+            return false;
+        }
+        self.seq += 1;
+        if let Some(e) =
+            self.entries.iter_mut().find(|e| e.owner == owner && e.tile == tile)
+        {
+            e.last_use_seq = self.seq;
+            return true;
+        }
+        while self.resident_bytes + bytes > self.capacity_bytes {
+            let victim = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by(|(_, a), (_, b)| {
+                    if a.keeps_less_value_than(b) {
+                        std::cmp::Ordering::Less
+                    } else {
+                        std::cmp::Ordering::Greater
+                    }
+                })
+                .map(|(i, _)| i)
+                .expect("over capacity implies a resident victim exists");
+            let evicted = self.entries.swap_remove(victim);
+            self.resident_bytes -= evicted.bytes;
+            self.evictions += 1;
+        }
+        self.entries.push(ResidencyEntry {
+            owner,
+            tile,
+            bytes,
+            fetch_cycles,
+            last_use_seq: self.seq,
+        });
+        self.resident_bytes += bytes;
+        // Strict-mode capacity invariant: a resident set larger than the
+        // TCM is a simulator bug, not a tunable.
+        assert!(
+            self.resident_bytes <= self.capacity_bytes,
+            "TCM residency overflow: {} resident bytes > {} capacity",
+            self.resident_bytes,
+            self.capacity_bytes
+        );
+        true
+    }
+
+    /// The resident entries (test/introspection aid; unspecified order).
+    pub fn entries(&self) -> &[ResidencyEntry] {
+        &self.entries
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -165,5 +351,86 @@ mod tests {
         assert_eq!(occ.find_contiguous(5), Some(5));
         occ.claim(2, 0..2);
         assert_eq!(occ.find_contiguous(1), Some(5));
+    }
+
+    #[test]
+    fn residency_hits_after_install_and_counts() {
+        let mut r = TcmResidency::new(1_000);
+        assert!(!r.touch(0, 1), "cold lookup misses");
+        assert!(r.install(0, 1, 400, 5_000));
+        assert!(r.is_resident(0, 1));
+        assert!(r.touch(0, 1), "now warm");
+        assert_eq!((r.hits(), r.misses(), r.evictions()), (1, 1, 0));
+        assert_eq!(r.resident_bytes(), 400);
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn residency_evicts_lowest_cycles_per_byte_first() {
+        let mut r = TcmResidency::new(1_000);
+        // value (fetch cycles per byte): a=10, b=2, c=5.
+        assert!(r.install(0, 1, 400, 4_000)); // a
+        assert!(r.install(0, 2, 300, 600)); // b — cheapest to re-fetch
+        assert!(r.install(0, 3, 300, 1_500)); // c
+        // 400 more bytes need room: b (300) then c (300) go, a stays.
+        assert!(r.install(1, 7, 400, 4_000));
+        assert!(r.is_resident(0, 1));
+        assert!(!r.is_resident(0, 2));
+        assert!(!r.is_resident(0, 3));
+        assert!(r.is_resident(1, 7));
+        assert_eq!(r.evictions(), 2);
+        assert!(r.resident_bytes() <= r.capacity_bytes());
+    }
+
+    #[test]
+    fn residency_value_ties_evict_older_entry() {
+        let mut r = TcmResidency::new(800);
+        // Identical value: ties break on recency (older goes first).
+        assert!(r.install(0, 1, 400, 1_000));
+        assert!(r.install(0, 2, 400, 1_000));
+        r.touch(0, 1); // tile 1 is now the most recently used
+        assert!(r.install(0, 3, 400, 1_000));
+        assert!(r.is_resident(0, 1));
+        assert!(!r.is_resident(0, 2), "older equal-value entry is the victim");
+    }
+
+    #[test]
+    fn residency_rejects_tiles_larger_than_capacity() {
+        let mut r = TcmResidency::new(1_000);
+        assert!(r.install(0, 1, 600, 1_000));
+        assert!(!r.install(0, 2, 1_001, 9_999), "oversized tile never installs");
+        assert!(r.is_resident(0, 1), "a rejected install evicts nothing");
+        assert_eq!(r.evictions(), 0);
+        assert_eq!(r.resident_bytes(), 600);
+    }
+
+    #[test]
+    fn residency_reinstall_refreshes_without_double_charging() {
+        let mut r = TcmResidency::new(1_000);
+        assert!(r.install(0, 1, 400, 1_000));
+        assert!(r.install(0, 1, 400, 1_000));
+        assert_eq!(r.resident_bytes(), 400);
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn residency_eviction_is_deterministic() {
+        // Same operation sequence → same resident set, regardless of how
+        // many times we run it (the serving layer's replay bit-identity
+        // leans on this).
+        let run = || {
+            let mut r = TcmResidency::new(2_000);
+            for (tile, bytes, cycles) in
+                [(1u32, 500u64, 900u64), (2, 700, 4_000), (3, 600, 600), (4, 800, 3_000), (5, 400, 2_000)]
+            {
+                if !r.touch(7, tile) {
+                    r.install(7, tile, bytes, cycles);
+                }
+            }
+            let mut tiles: Vec<u32> = r.entries().iter().map(|e| e.tile).collect();
+            tiles.sort_unstable();
+            (tiles, r.resident_bytes(), r.evictions())
+        };
+        assert_eq!(run(), run());
     }
 }

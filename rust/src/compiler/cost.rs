@@ -319,6 +319,77 @@ impl<'a> CostModel<'a> {
     pub fn transfer_cycles(&self, kind: TransferKind, bytes: u64) -> u64 {
         Transfer::new(kind, bytes).cycles(self.cfg)
     }
+
+    /// Warm-vs-cold dispatch price of a compiled artifact — see
+    /// [`dispatch_cost`]. Exposed on the facade so schedulers price warm
+    /// placement with the same calibrated model that priced the compile
+    /// (the artifact's tick cycles already carry its calibration).
+    pub fn dispatch_cost(&self, compiled: &crate::compiler::Compiled) -> DispatchCost {
+        dispatch_cost(compiled)
+    }
+}
+
+/// Warm-vs-cold dispatch price of one compiled artifact under the DAE
+/// tick model.
+///
+/// `cold_cycles` is the ordinary service time (every transfer issues);
+/// `warm_cycles` is the service time when every *parameter* fetch is
+/// elided because the tiles are already resident in TCM — the same
+/// filtered pricing `JobProgram::service_cycles_where` applies at
+/// execution time, so the scheduler's "warm on instance 2 vs cold on
+/// instance 0" comparison and the executor's clock can never disagree.
+/// `param_fetch_cycles`/`param_bytes` total the elidable fetch transfers
+/// themselves (what a residency install must move, and what a hit saves
+/// on the DDR stream).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DispatchCost {
+    /// Service cycles with every DMA transfer issued (cold dispatch).
+    pub cold_cycles: u64,
+    /// Service cycles with parameter fetches elided (fully-warm dispatch).
+    pub warm_cycles: u64,
+    /// Total DMA cycles of the elidable parameter-fetch transfers.
+    pub param_fetch_cycles: u64,
+    /// Total bytes of the elidable parameter-fetch transfers.
+    pub param_bytes: u64,
+}
+
+impl DispatchCost {
+    /// Cycles a fully-warm dispatch saves over a cold one.
+    pub fn warm_saving_cycles(&self) -> u64 {
+        self.cold_cycles - self.warm_cycles
+    }
+}
+
+/// Price warm-vs-cold dispatch of `compiled` from its schedule: per tick,
+/// compute overlaps the datamover (`max`), and the warm variant drops
+/// every transfer of a parameter tile (the tiles named by the compute
+/// steps' `param_tile`) — the same rule the serving layer's
+/// `marginal_service_cycles` and residency filter apply to the emitted
+/// job program. `cold_cycles` equals `Schedule::total_cycles` and the
+/// job program's unfiltered service time; `warm_cycles` equals the job
+/// program's service time under the param-skipping filter.
+pub fn dispatch_cost(compiled: &crate::compiler::Compiled) -> DispatchCost {
+    let param_tiles: std::collections::HashSet<crate::compiler::TileId> =
+        compiled.program.steps.iter().filter_map(|s| s.param_tile).collect();
+    let is_param_fetch =
+        |tr: &crate::compiler::ScheduledTransfer| param_tiles.contains(&tr.tile);
+    let mut cost = DispatchCost::default();
+    for tick in &compiled.schedule.ticks {
+        let mut dm_cold = 0u64;
+        let mut dm_warm = 0u64;
+        for tr in &tick.transfers {
+            dm_cold += tr.cycles;
+            if is_param_fetch(tr) {
+                cost.param_fetch_cycles += tr.cycles;
+                cost.param_bytes += tr.bytes;
+            } else {
+                dm_warm += tr.cycles;
+            }
+        }
+        cost.cold_cycles += tick.compute_cycles.max(dm_cold);
+        cost.warm_cycles += tick.compute_cycles.max(dm_warm);
+    }
+    cost
 }
 
 #[cfg(test)]
@@ -466,6 +537,32 @@ mod tests {
         );
         assert_eq!(cm.calibration(), &cal);
         assert_eq!(cm.cfg().tcm_banks, cfg.tcm_banks);
+    }
+
+    #[test]
+    fn dispatch_cost_agrees_with_emitted_program() {
+        use crate::compiler::{compile, CompileOptions};
+        use crate::coordinator::{emit, Job};
+        let g = crate::zoo::mobilenet::mobilenet_v1();
+        let cfg = NeutronConfig::flagship_2tops();
+        let c = compile(&g, &cfg, &CompileOptions::default_partitioned());
+        let d = dispatch_cost(&c);
+        // Cold = the schedule's own latency = the job program's unfiltered
+        // service time; warm = the program under the param-skip filter.
+        assert_eq!(d.cold_cycles, c.schedule.total_cycles());
+        let p = emit(&c, "m");
+        assert_eq!(d.cold_cycles, p.service_cycles_where(|_| true));
+        let params = p.param_tiles();
+        let warm = p.service_cycles_where(|j| {
+            !matches!(j, Job::Dma { tile, .. } if params.contains(tile))
+        });
+        assert_eq!(d.warm_cycles, warm, "compiler warm pricing = program's marginal pricing");
+        assert!(d.warm_cycles < d.cold_cycles, "warm dispatch must save cycles");
+        assert!(d.param_fetch_cycles > 0);
+        assert!(d.param_bytes > 0);
+        assert_eq!(d.warm_saving_cycles(), d.cold_cycles - d.warm_cycles);
+        // The facade method is the same pricing.
+        assert_eq!(CostModel::uncalibrated(&cfg).dispatch_cost(&c), d);
     }
 
     #[test]

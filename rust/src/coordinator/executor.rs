@@ -91,62 +91,167 @@ impl Executor {
 
     /// Drive one inference through an arbitrary (borrowed) job program —
     /// the re-entrant form the serving layer uses with cached programs.
+    /// Every DMA job is counted (the cold-dispatch baseline); this is the
+    /// [`Executor::run_program_where`] fast path with an all-pass filter.
     pub fn run_program(
         &mut self,
         program: &JobProgram,
         run_numerics: Option<&dyn Fn() -> Result<Vec<i32>>>,
     ) -> Result<InferenceResult> {
-        let t0 = std::time::Instant::now();
+        self.run_program_where(program, |_| true, run_numerics)
+    }
+
+    /// [`Executor::run_program`] with a DMA filter: DMA jobs for which
+    /// `count_dma` returns false are *elided* — they contribute no
+    /// datamover cycles, no DMA-job count and no DDR traffic, exactly as
+    /// if the transfer never issued. This is how the serving layer runs a
+    /// residency-warm request whose parameter tiles are already in TCM.
+    pub fn run_program_where(
+        &mut self,
+        program: &JobProgram,
+        mut count_dma: impl FnMut(&Job) -> bool,
+        run_numerics: Option<&dyn Fn() -> Result<Vec<i32>>>,
+    ) -> Result<InferenceResult> {
+        let mut run = self.begin(program);
+        while run.step_tick(&mut count_dma).is_some() {}
+        run.finish(run_numerics)
+    }
+
+    /// Begin a resumable execution of `program`: the tick-loop form of
+    /// [`Executor::run_program`]. The caller drives the returned
+    /// [`ProgramRun`] one barrier-delimited tick at a time with
+    /// [`ProgramRun::step_tick`] and seals it with [`ProgramRun::finish`]
+    /// — which is what lets the serving layer hold one request's tail
+    /// in flight while reasoning about the next request's head.
+    pub fn begin<'e, 'p>(&'e mut self, program: &'p JobProgram) -> ProgramRun<'e, 'p> {
         // Each program's V2P updates were planned by its allocator against
         // an identity table; start every request from that state so
         // interleaved models replay the mappings their compiles assumed.
         self.v2p = V2pTable::identity(self.cfg.tcm_banks);
-        let mut result = InferenceResult::default();
-
-        for job in &program.jobs {
-            match job {
-                Job::Compute { .. } => result.compute_jobs += 1,
-                Job::Dma { bytes, kind, .. } => {
-                    result.dma_jobs += 1;
-                    if kind.uses_ddr() {
-                        result.ddr_bytes += bytes;
-                    }
-                }
-                Job::V2p { virt_bank, phys_bank } => {
-                    // Idle-mode remap: swap so the table stays a bijection.
-                    let cur = self.v2p.translate(*virt_bank);
-                    if cur != *phys_bank {
-                        // Find which virtual bank currently maps to phys.
-                        let other = (0..self.v2p.banks())
-                            .find(|&v| self.v2p.translate(v) == *phys_bank)
-                            .expect("bijection");
-                        self.v2p.swap(*virt_bank, other);
-                    }
-                    result.v2p_updates += 1;
-                }
-                Job::Barrier => result.ticks += 1,
-            }
+        ProgramRun {
+            executor: self,
+            program,
+            next_job: 0,
+            t0: std::time::Instant::now(),
+            result: InferenceResult::default(),
         }
-        // DAE tick timing (compute ∥ datamover) via the shared helper on
-        // the program, counting every DMA job.
-        let total_cycles = program.service_cycles_where(|_| true);
-
-        result.logits = match run_numerics {
-            Some(f) => Some(f()?),
-            None => None,
-        };
-
-        result.sim_cycles = total_cycles;
-        result.sim_ms = self.cfg.cycles_to_ms(total_cycles);
-        result.host_us = t0.elapsed().as_micros() as u64;
-        self.metrics.record(&result);
-        Ok(result)
     }
 
     /// The resident job program (empty for serving executors built with
     /// [`Executor::with_config`]).
     pub fn program(&self) -> &JobProgram {
         &self.program
+    }
+}
+
+/// What one [`ProgramRun::step_tick`] observed: the tick's DAE latency
+/// and its two overlapped components.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TickStats {
+    /// The tick's latency under the DAE model: `max(compute, dm)`.
+    pub latency_cycles: u64,
+    /// Total compute-engine cycles issued this tick.
+    pub compute_cycles: u64,
+    /// Total counted datamover cycles issued this tick.
+    pub dm_cycles: u64,
+}
+
+/// A resumable, in-flight execution of one [`JobProgram`] on an
+/// [`Executor`] — the coordinator's tick loop, reified so callers can
+/// interleave per-tick progress with scheduling decisions.
+///
+/// Invariants: [`ProgramRun::step_tick`] consumes jobs up to and
+/// including the next [`Job::Barrier`] (or the trailing unterminated
+/// tick) and advances the virtual clock by that tick's DAE latency;
+/// ticks sum to exactly [`JobProgram::service_cycles_where`] under the
+/// same filter. [`ProgramRun::finish`] runs the optional numerics
+/// closure, folds the request into the executor's [`Metrics`] and
+/// returns the [`InferenceResult`] — identical, field for field, to what
+/// the old run-to-completion loop produced.
+pub struct ProgramRun<'e, 'p> {
+    executor: &'e mut Executor,
+    program: &'p JobProgram,
+    next_job: usize,
+    t0: std::time::Instant,
+    result: InferenceResult,
+}
+
+impl<'e, 'p> ProgramRun<'e, 'p> {
+    /// Execute the next barrier-delimited tick. DMA jobs rejected by
+    /// `count_dma` are elided (no cycles, no job count, no DDR bytes).
+    /// Returns `None` once the job stream is exhausted.
+    pub fn step_tick(&mut self, mut count_dma: impl FnMut(&Job) -> bool) -> Option<TickStats> {
+        if self.next_job >= self.program.jobs.len() {
+            return None;
+        }
+        let mut stats = TickStats::default();
+        while let Some(job) = self.program.jobs.get(self.next_job) {
+            self.next_job += 1;
+            match job {
+                Job::Compute { cycles, .. } => {
+                    self.result.compute_jobs += 1;
+                    stats.compute_cycles += cycles;
+                }
+                Job::Dma { bytes, kind, cycles, .. } => {
+                    if count_dma(job) {
+                        self.result.dma_jobs += 1;
+                        if kind.uses_ddr() {
+                            self.result.ddr_bytes += bytes;
+                        }
+                        stats.dm_cycles += cycles;
+                    }
+                }
+                Job::V2p { virt_bank, phys_bank } => {
+                    // Idle-mode remap: swap so the table stays a bijection.
+                    let cur = self.executor.v2p.translate(*virt_bank);
+                    if cur != *phys_bank {
+                        // Find which virtual bank currently maps to phys.
+                        let other = (0..self.executor.v2p.banks())
+                            .find(|&v| self.executor.v2p.translate(v) == *phys_bank)
+                            .expect("bijection");
+                        self.executor.v2p.swap(*virt_bank, other);
+                    }
+                    self.result.v2p_updates += 1;
+                }
+                Job::Barrier => {
+                    self.result.ticks += 1;
+                    break;
+                }
+            }
+        }
+        stats.latency_cycles = stats.compute_cycles.max(stats.dm_cycles);
+        self.result.sim_cycles += stats.latency_cycles;
+        Some(stats)
+    }
+
+    /// Simulated cycles accumulated so far (the virtual clock).
+    pub fn cycles_so_far(&self) -> u64 {
+        self.result.sim_cycles
+    }
+
+    /// True when every job has been consumed.
+    pub fn is_done(&self) -> bool {
+        self.next_job >= self.program.jobs.len()
+    }
+
+    /// Seal the run: execute the optional numerics closure, stamp derived
+    /// fields, fold into the executor's aggregate [`Metrics`] and return
+    /// the per-request result. Any unconsumed ticks are first drained
+    /// counting every DMA job (so a sealed run is always complete).
+    pub fn finish(
+        mut self,
+        run_numerics: Option<&dyn Fn() -> Result<Vec<i32>>>,
+    ) -> Result<InferenceResult> {
+        while self.step_tick(|_| true).is_some() {}
+        let mut result = self.result;
+        result.logits = match run_numerics {
+            Some(f) => Some(f()?),
+            None => None,
+        };
+        result.sim_ms = self.executor.cfg.cycles_to_ms(result.sim_cycles);
+        result.host_us = self.t0.elapsed().as_micros() as u64;
+        self.executor.metrics.record(&result);
+        Ok(result)
     }
 }
 
@@ -223,6 +328,81 @@ mod tests {
         assert_eq!(a1.sim_cycles, c1.schedule.total_cycles());
         assert_eq!(b.sim_cycles, c2.schedule.total_cycles());
         assert_eq!(ex.metrics.requests, 3);
+    }
+
+    #[test]
+    fn resumable_tick_loop_matches_run_to_completion() {
+        let g = zoo::mobilenet::mobilenet_v2();
+        let cfg = NeutronConfig::flagship_2tops();
+        let c = compile(&g, &cfg, &CompileOptions::default_partitioned());
+        let p = emit(&c, "m");
+        let mut whole_ex = Executor::with_config(cfg.clone());
+        let whole = whole_ex.run_program(&p, None).unwrap();
+
+        let mut ex = Executor::with_config(cfg);
+        let mut run = ex.begin(&p);
+        let mut steps = 0usize;
+        let mut summed = 0u64;
+        while let Some(s) = run.step_tick(|_| true) {
+            steps += 1;
+            summed += s.latency_cycles;
+            assert_eq!(s.latency_cycles, s.compute_cycles.max(s.dm_cycles));
+            assert_eq!(run.cycles_so_far(), summed);
+        }
+        assert!(run.is_done());
+        let stepped = run.finish(None).unwrap();
+        // Barrier-terminated programs: one step per tick barrier.
+        assert_eq!(steps, p.tick_count());
+        assert_eq!(stepped.ticks, whole.ticks);
+        assert_eq!(stepped.sim_cycles, whole.sim_cycles);
+        assert_eq!(stepped.sim_ms, whole.sim_ms);
+        assert_eq!(stepped.compute_jobs, whole.compute_jobs);
+        assert_eq!(stepped.dma_jobs, whole.dma_jobs);
+        assert_eq!(stepped.v2p_updates, whole.v2p_updates);
+        assert_eq!(stepped.ddr_bytes, whole.ddr_bytes);
+        assert_eq!(ex.metrics.requests, 1);
+    }
+
+    #[test]
+    fn finish_drains_unconsumed_ticks() {
+        let g = zoo::mobilenet::mobilenet_v1();
+        let cfg = NeutronConfig::flagship_2tops();
+        let c = compile(&g, &cfg, &CompileOptions::default_partitioned());
+        let p = emit(&c, "m");
+        let mut ex = Executor::with_config(cfg.clone());
+        let whole = ex.run_program(&p, None).unwrap();
+        let mut run = ex.begin(&p);
+        run.step_tick(|_| true); // consume just the first tick…
+        let sealed = run.finish(None).unwrap(); // …finish drains the rest
+        assert_eq!(sealed.sim_cycles, whole.sim_cycles);
+        assert_eq!(sealed.ticks, whole.ticks);
+        assert_eq!(sealed.dma_jobs, whole.dma_jobs);
+    }
+
+    #[test]
+    fn run_program_where_elides_filtered_dma() {
+        use crate::arch::TransferKind;
+        let g = zoo::mobilenet::mobilenet_v1();
+        let cfg = NeutronConfig::flagship_2tops();
+        let c = compile(&g, &cfg, &CompileOptions::default_partitioned());
+        let p = emit(&c, "m");
+        let params = p.param_tiles();
+        let skip = |j: &Job| {
+            !matches!(j, Job::Dma { tile, kind: TransferKind::Fetch, .. }
+                if params.contains(tile))
+        };
+        let mut ex = Executor::with_config(cfg);
+        let cold = ex.run_program(&p, None).unwrap();
+        let warm = ex.run_program_where(&p, skip, None).unwrap();
+        // Elided fetches disappear from the clock, the job counts and the
+        // DDR traffic, and the effective time agrees with the program's
+        // own filtered pricing (one timing model, two consumers).
+        assert_eq!(warm.sim_cycles, p.service_cycles_where(skip));
+        assert!(warm.sim_cycles <= cold.sim_cycles);
+        assert!(warm.dma_jobs < cold.dma_jobs);
+        assert!(warm.ddr_bytes < cold.ddr_bytes);
+        assert_eq!(warm.compute_jobs, cold.compute_jobs);
+        assert_eq!(warm.ticks, cold.ticks);
     }
 
     #[test]

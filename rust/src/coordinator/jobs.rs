@@ -42,40 +42,126 @@ pub struct JobProgram {
     pub model: String,
 }
 
+/// Head/tail shape of a program under the tick timing model, used by the
+/// serving layer to price intra-instance pipelining (overlapping one
+/// request's tail with the next request's head parameter fetches).
+///
+/// `head_cycles` is the latency of the leading compute-less ticks (the
+/// prologue: pure parameter/input prefetch, no compute engine use) — the
+/// part of a request that can start while the predecessor is still
+/// finishing. `tail_window_cycles` is the latency after the last tick
+/// containing a counted DDR *fetch*: from there on the instance issues no
+/// inbound DDR reads (only compute and writeback pushes), so a
+/// successor's head fetches can share the window without contending for
+/// the inbound DDR stream. Both are measured with the same `count_dma`
+/// filter as [`JobProgram::service_cycles_where`], so residency-skipped
+/// fetches neither extend a head nor shrink a tail window.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PipelineProfile {
+    /// Latency of the leading compute-less (prefetch-only) ticks.
+    pub head_cycles: u64,
+    /// Latency after the last counted DDR-fetch tick (the fetch-free
+    /// tail). Equals the whole service time when nothing is fetched.
+    pub tail_window_cycles: u64,
+}
+
 impl JobProgram {
     /// Number of tick barriers (== scheduler ticks).
     pub fn tick_count(&self) -> usize {
         self.jobs.iter().filter(|j| matches!(j, Job::Barrier)).count()
     }
 
+    /// Barrier-delimited tick slices in program order (each slice excludes
+    /// its terminating [`Job::Barrier`]). The slice after the last barrier
+    /// is included too — it is empty for the barrier-terminated programs
+    /// [`emit`] produces, and carries the trailing unterminated tick
+    /// otherwise — so walking the slices covers every job exactly once.
+    /// Shared walker behind the timing queries and the executor's
+    /// resumable tick loop, so the two cannot drift apart.
+    pub fn tick_slices(&self) -> impl Iterator<Item = &[Job]> {
+        self.jobs.split(|j| matches!(j, Job::Barrier))
+    }
+
+    /// DAE latency of one tick slice: compute and datamover overlap, so
+    /// the tick costs `max(Σ compute, Σ counted DMA)`. `count_dma` selects
+    /// which DMA jobs occupy the datamover (see
+    /// [`JobProgram::service_cycles_where`]).
+    pub fn tick_latency_where(tick: &[Job], mut count_dma: impl FnMut(&Job) -> bool) -> u64 {
+        let mut compute = 0u64;
+        let mut dm = 0u64;
+        for job in tick {
+            match job {
+                Job::Compute { cycles, .. } => compute += cycles,
+                Job::Dma { cycles, .. } => {
+                    if count_dma(job) {
+                        dm += cycles;
+                    }
+                }
+                Job::V2p { .. } | Job::Barrier => {}
+            }
+        }
+        compute.max(dm)
+    }
+
     /// Tick-accurate DAE service time of this program: within each
     /// barrier-delimited tick, compute and datamover overlap
     /// (`max(compute, dm)`), and ticks sum. `count_dma` selects which DMA
     /// jobs contribute datamover cycles — the executor counts all of
-    /// them, while the serving layer prices batch followers with
-    /// parameter fetches excluded. Single source of truth for the tick
-    /// timing model, so the two cannot drift apart.
+    /// them, while the serving layer prices batch followers and
+    /// residency-warm requests with parameter fetches excluded. Single
+    /// source of truth for the tick timing model, so the consumers cannot
+    /// drift apart.
     pub fn service_cycles_where(&self, mut count_dma: impl FnMut(&Job) -> bool) -> u64 {
+        self.tick_slices()
+            .map(|tick| Self::tick_latency_where(tick, &mut count_dma))
+            .sum()
+    }
+
+    /// The pipelining shape of this program under `count_dma` — see
+    /// [`PipelineProfile`]. The head stops at the first tick containing a
+    /// compute job; the tail window opens after the last tick containing
+    /// a *counted* DDR-fetch DMA job ([`TransferKind::uses_ddr`] and not
+    /// a writeback push). `count_dma` must be a pure predicate here — it
+    /// is consulted more than once per DMA job.
+    pub fn pipeline_profile_where(&self, mut count_dma: impl FnMut(&Job) -> bool) -> PipelineProfile {
+        let is_inbound_fetch = |j: &Job| {
+            matches!(j, Job::Dma { kind, .. }
+                if kind.uses_ddr() && !matches!(kind, TransferKind::Push))
+        };
+        let mut head_cycles = 0u64;
+        let mut in_head = true;
         let mut total = 0u64;
-        let mut tick_compute = 0u64;
-        let mut tick_dm = 0u64;
-        for job in &self.jobs {
-            match job {
-                Job::Compute { cycles, .. } => tick_compute += cycles,
-                Job::Dma { cycles, .. } => {
-                    if count_dma(job) {
-                        tick_dm += cycles;
-                    }
-                }
-                Job::V2p { .. } => {}
-                Job::Barrier => {
-                    total += tick_compute.max(tick_dm);
-                    tick_compute = 0;
-                    tick_dm = 0;
-                }
+        // Running latency up to and including the last counted-fetch tick.
+        let mut through_last_fetch = 0u64;
+        for tick in self.tick_slices() {
+            let latency = Self::tick_latency_where(tick, &mut count_dma);
+            let has_compute = tick.iter().any(|j| matches!(j, Job::Compute { .. }));
+            let has_fetch = tick.iter().any(|j| is_inbound_fetch(j) && count_dma(j));
+            if in_head && has_compute {
+                in_head = false;
+            }
+            if in_head {
+                head_cycles += latency;
+            }
+            total += latency;
+            if has_fetch {
+                through_last_fetch = total;
             }
         }
-        total + tick_compute.max(tick_dm)
+        PipelineProfile { head_cycles, tail_window_cycles: total - through_last_fetch }
+    }
+
+    /// The set of parameter tiles this program's compute jobs read — the
+    /// tiles whose DDR fetches a residency hit (or a batch follower) can
+    /// skip.
+    pub fn param_tiles(&self) -> std::collections::HashSet<TileId> {
+        self.jobs
+            .iter()
+            .filter_map(|j| match j {
+                Job::Compute { param_tile, .. } => *param_tile,
+                _ => None,
+            })
+            .collect()
     }
 
     /// Per-op observed service cycles under the tick timing model: each
@@ -226,14 +312,12 @@ mod tests {
         assert!(per_op.iter().all(|&(op, _)| op != crate::ir::OpId(u32::MAX)));
     }
 
-    #[test]
-    fn per_op_tick_cycles_attribute_prologue_to_next_op() {
-        use crate::arch::{Format, TransferKind};
-        use crate::compiler::TileId;
+    /// Prologue DMA tick (600), compute tick for op 0 (1000 vs 300 DMA),
+    /// compute tick for op 1 (200), trailing writeback tick (50).
+    fn toy_program() -> JobProgram {
+        use crate::arch::Format;
         use crate::ir::OpId;
-        // Prologue DMA tick (600), compute tick for op 0 (1000 vs 300 DMA),
-        // compute tick for op 1 (200), trailing writeback tick (50).
-        let p = JobProgram {
+        JobProgram {
             jobs: vec![
                 Job::Dma { tile: TileId(9), kind: TransferKind::Fetch, bytes: 1, cycles: 600 },
                 Job::Barrier,
@@ -260,10 +344,70 @@ mod tests {
                 Job::Barrier,
             ],
             model: "toy".into(),
-        };
+        }
+    }
+
+    #[test]
+    fn per_op_tick_cycles_attribute_prologue_to_next_op() {
+        use crate::ir::OpId;
+        let p = toy_program();
         let per_op = p.per_op_tick_cycles();
         assert_eq!(per_op, vec![(OpId(0), 1_600), (OpId(1), 250)]);
         assert_eq!(p.service_cycles_where(|_| true), 1_850);
+    }
+
+    #[test]
+    fn tick_slices_cover_every_job_once() {
+        let p = toy_program();
+        // 4 barriers → 4 tick slices plus the empty trailing slice.
+        let slices: Vec<&[Job]> = p.tick_slices().collect();
+        assert_eq!(slices.len(), p.tick_count() + 1);
+        assert!(slices.last().unwrap().is_empty());
+        let walked: usize = slices.iter().map(|s| s.len()).sum();
+        assert_eq!(walked + p.tick_count(), p.jobs.len());
+        // Summing per-slice latencies is the service time, by construction.
+        let summed: u64 =
+            slices.iter().map(|s| JobProgram::tick_latency_where(s, |_| true)).sum();
+        assert_eq!(summed, p.service_cycles_where(|_| true));
+    }
+
+    #[test]
+    fn pipeline_profile_measures_head_and_fetch_free_tail() {
+        let p = toy_program();
+        // Head = the 600-cycle prefetch-only prologue; the last counted
+        // fetch lands in the 1000-cycle tick, leaving a 200+50 tail.
+        let all = p.pipeline_profile_where(|_| true);
+        assert_eq!(all, PipelineProfile { head_cycles: 600, tail_window_cycles: 250 });
+        // Skipping every fetch (a fully-warm request) empties the head and
+        // opens the entire shortened program as a fetch-free window.
+        let skip_fetches =
+            |j: &Job| !matches!(j, Job::Dma { kind: TransferKind::Fetch, .. });
+        assert_eq!(
+            p.pipeline_profile_where(skip_fetches),
+            PipelineProfile { head_cycles: 0, tail_window_cycles: 1_250 }
+        );
+        assert_eq!(p.service_cycles_where(skip_fetches), 1_250);
+    }
+
+    #[test]
+    fn pipeline_profile_of_real_program_is_consistent() {
+        let g = zoo::mobilenet::mobilenet_v2();
+        let cfg = NeutronConfig::flagship_2tops();
+        let c = compile(&g, &cfg, &CompileOptions::default_partitioned());
+        let p = emit(&c, "m");
+        let total = p.service_cycles_where(|_| true);
+        let prof = p.pipeline_profile_where(|_| true);
+        assert!(prof.head_cycles > 0, "emitted programs start with a prefetch tick");
+        assert!(prof.head_cycles < total);
+        assert!(prof.tail_window_cycles <= total);
+        // Param tiles are exactly the compute steps' declared param tiles.
+        let tiles = p.param_tiles();
+        assert!(!tiles.is_empty());
+        for s in &c.program.steps {
+            if let Some(t) = s.param_tile {
+                assert!(tiles.contains(&t));
+            }
+        }
     }
 
     #[test]

@@ -7,6 +7,6 @@ pub mod executor;
 pub mod jobs;
 pub mod metrics;
 
-pub use executor::{Executor, InferenceResult};
-pub use jobs::{emit, Job, JobProgram};
+pub use executor::{Executor, InferenceResult, ProgramRun, TickStats};
+pub use jobs::{emit, Job, JobProgram, PipelineProfile};
 pub use metrics::Metrics;

@@ -10,6 +10,7 @@
 //!   serve     [--requests N] [--instances K] [--models a,b,c] [--seed S]
 //!             [--mean-gap-cycles G] [--queue-capacity C] [--policy reject-newest|drop-oldest]
 //!             [--max-batch B] [--dynamic-batch] [--age-after-cycles A] [--priority-mix R,S,B]
+//!             [--pipeline] [--residency] [--warm-routing] [--residency-capacity BYTES]
 //!             [--record FILE] [--calibration FILE] [--artifact-dir DIR]
 //!                                               multi-tenant serving simulation;
 //!                                               --artifact-dir warms the compile cache
@@ -78,7 +79,8 @@ fn main() -> Result<()> {
                  [--models a,b,c] [--seed S] [--mean-gap-cycles G] \
                  [--queue-capacity C] [--policy reject-newest|drop-oldest] \
                  [--max-batch B] [--dynamic-batch] [--age-after-cycles A] \
-                 [--priority-mix R,S,B] [--record FILE] [--calibration FILE] \
+                 [--priority-mix R,S,B] [--pipeline] [--residency] [--warm-routing] \
+                 [--residency-capacity BYTES] [--record FILE] [--calibration FILE] \
                  [--speed F] [--save-calibration FILE] [--trace FILE]"
             );
             Ok(())
@@ -302,7 +304,7 @@ fn models_from(args: &Args) -> Result<Vec<ModelId>> {
 
 /// Every flag the `serve` / `record` experiment surface understands
 /// (`out` is `record`'s alternative to the positional trace path).
-const SERVE_KEYS: [&str; 13] = [
+const SERVE_KEYS: [&str; 17] = [
     "models",
     "requests",
     "mean-gap-cycles",
@@ -314,6 +316,10 @@ const SERVE_KEYS: [&str; 13] = [
     "dynamic-batch",
     "age-after-cycles",
     "priority-mix",
+    "pipeline",
+    "residency",
+    "warm-routing",
+    "residency-capacity",
     "record",
     "out",
 ];
@@ -371,6 +377,26 @@ fn serve_options_from(args: &Args, extra_keys: &[&str]) -> Result<ServeOptions> 
              (--max-batch >= 2, got {max_batch})"
         );
     }
+    let pipeline = args.has_flag("pipeline");
+    let weight_residency = args.has_flag("residency");
+    let warm_routing = args.has_flag("warm-routing");
+    if warm_routing && !weight_residency {
+        bail!(
+            "contradictory knobs: --warm-routing needs --residency \
+             (there is no warm state to route to)"
+        );
+    }
+    if args.flags.iter().any(|f| f == "residency-capacity") {
+        bail!("--residency-capacity wants a byte count");
+    }
+    let residency_capacity_bytes =
+        match args.opt_strict("residency-capacity", 0u64).map_err(strict)? {
+            0 => None,
+            cap => Some(cap),
+        };
+    if residency_capacity_bytes.is_some() && !weight_residency {
+        bail!("contradictory knobs: --residency-capacity needs --residency");
+    }
     Ok(ServeOptions {
         models,
         requests: args.opt_strict("requests", 200usize).map_err(strict)?,
@@ -384,6 +410,10 @@ fn serve_options_from(args: &Args, extra_keys: &[&str]) -> Result<ServeOptions> 
             max_batch,
             dynamic_batch,
             age_after_cycles,
+            pipeline,
+            weight_residency,
+            warm_routing,
+            residency_capacity_bytes,
         },
     })
 }

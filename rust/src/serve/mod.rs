@@ -19,7 +19,13 @@
 //!   (class first, then admission order, with an optional aging rule
 //!   against starvation) over the earliest-idle of N virtual NPU
 //!   instances, coalescing same-model same-class requests into batches of
-//!   up to [`SchedulerOptions::max_batch`] under backlog;
+//!   up to [`SchedulerOptions::max_batch`] under backlog — and, opted in
+//!   per knob, overlapping a dispatch's head parameter fetches with its
+//!   predecessor's fetch-free tail ([`SchedulerOptions::pipeline`]),
+//!   keeping hot models' parameter tiles TCM-resident across requests
+//!   ([`SchedulerOptions::weight_residency`]) and routing requests to the
+//!   instance with the cheapest warm/cold predicted finish
+//!   ([`SchedulerOptions::warm_routing`]);
 //! * [`serve`] / [`ServeReport`] — runs a synthetic trace and reports
 //!   offered load vs. goodput, shed rate, latency percentiles, batching
 //!   activity, cache hit rate and utilization.
@@ -44,7 +50,12 @@
 //!   precedes admission at equal times"), and admission-control decisions
 //!   see the queue in exactly that state;
 //! * per-request latency = queueing delay + service time, both in cycles
-//!   on the shared clock.
+//!   on the shared clock;
+//! * pipelining overlap windows, residency hit/miss/eviction decisions
+//!   and warm-routing placements all derive from the same deterministic
+//!   state (the dispatch history), never from host time — with every new
+//!   knob off, the scheduler reproduces the pre-pipelining timing bit for
+//!   bit (the differential executor suite locks this down).
 //!
 //! **Determinism:** same seed + same request trace + same options (+ same
 //! config) → identical [`ServeReport`], across runs and across machines —

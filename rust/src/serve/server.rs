@@ -98,6 +98,18 @@ pub struct TraceOutcome {
     pub shed: Vec<Request>,
     /// Cycles each instance spent occupied, indexed by instance id.
     pub per_instance_busy_cycles: Vec<u64>,
+    /// Parameter-tile TCM residency hits across instances (0 with
+    /// residency off).
+    pub residency_hits: u64,
+    /// Parameter-tile TCM residency misses across instances.
+    pub residency_misses: u64,
+    /// Residency evictions across instances.
+    pub residency_evictions: u64,
+    /// Dispatches that found every parameter tile already resident.
+    pub warm_dispatches: u64,
+    /// Head-fetch cycles hidden inside predecessors' fetch-free tails by
+    /// intra-instance pipelining (0 with pipelining off).
+    pub overlap_cycles: u64,
 }
 
 /// Aggregate serving report. Fully determined by `(config, options)`: no
@@ -145,6 +157,17 @@ pub struct ServeReport {
     pub cache_hits: u64,
     /// Compile-cache misses (cold compiles) during the run.
     pub cache_misses: u64,
+    /// Parameter-tile TCM residency hits (0 with residency off).
+    pub residency_hits: u64,
+    /// Parameter-tile TCM residency misses.
+    pub residency_misses: u64,
+    /// TCM residency evictions.
+    pub residency_evictions: u64,
+    /// Dispatches that found every parameter tile already TCM-resident.
+    pub warm_dispatches: u64,
+    /// Head-fetch cycles hidden by intra-instance pipelining (0 with
+    /// pipelining off).
+    pub overlap_cycles: u64,
     /// Per-model statistics, in the caller's model order.
     pub per_model: Vec<ModelStats>,
     /// Per-priority-class statistics, highest class first (always all
@@ -173,6 +196,17 @@ impl ServeReport {
             0.0
         } else {
             self.shed as f64 / self.offered as f64
+        }
+    }
+
+    /// Fraction of parameter-tile residency lookups that hit TCM (0 when
+    /// weight residency was off or nothing was looked up).
+    pub fn residency_hit_rate(&self) -> f64 {
+        let total = self.residency_hits + self.residency_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.residency_hits as f64 / total as f64
         }
     }
 
@@ -245,6 +279,23 @@ impl ServeReport {
             )
             .unwrap();
         }
+        writeln!(
+            s,
+            "pipelining:   {} overlap cycle(s) hidden in fetch-free tails",
+            self.overlap_cycles
+        )
+        .unwrap();
+        writeln!(
+            s,
+            "residency:    {} hits / {} misses ({:.1}% hit rate), {} eviction(s), \
+             {} warm dispatch(es)",
+            self.residency_hits,
+            self.residency_misses,
+            self.residency_hit_rate() * 100.0,
+            self.residency_evictions,
+            self.warm_dispatches
+        )
+        .unwrap();
         writeln!(
             s,
             "compile cache: {} hits / {} misses ({:.1}% hit rate)",
@@ -368,6 +419,11 @@ pub fn run_trace_recorded(
         completions,
         shed: scheduler.shed().to_vec(),
         per_instance_busy_cycles: scheduler.instances().iter().map(|i| i.busy_cycles()).collect(),
+        residency_hits: scheduler.residency_hits(),
+        residency_misses: scheduler.residency_misses(),
+        residency_evictions: scheduler.residency_evictions(),
+        warm_dispatches: scheduler.warm_dispatches(),
+        overlap_cycles: scheduler.overlap_cycles(),
     };
     if let Some(rec) = recorder {
         rec.record_outcome(&outcome);
@@ -545,6 +601,11 @@ pub fn report_from_outcome(
         batched_requests,
         cache_hits,
         cache_misses,
+        residency_hits: outcome.residency_hits,
+        residency_misses: outcome.residency_misses,
+        residency_evictions: outcome.residency_evictions,
+        warm_dispatches: outcome.warm_dispatches,
+        overlap_cycles: outcome.overlap_cycles,
         per_model,
         per_class,
         per_instance_busy_cycles: outcome.per_instance_busy_cycles.clone(),

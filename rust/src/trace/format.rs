@@ -34,7 +34,16 @@ use crate::serve::{AdmissionPolicy, Completion, Priority, Request, SchedulerOpti
 use crate::zoo::ModelId;
 
 /// The trace format version this build reads and writes.
-pub const TRACE_FORMAT_VERSION: u64 = 1;
+///
+/// Version history:
+/// - **1** — initial format (PR 4).
+/// - **2** — pipelining + TCM weight residency (PR 7): the header gains
+///   the `pipeline`, `weight_residency`, `warm_routing` and
+///   `residency_capacity_bytes` scheduler knobs, and completion records
+///   gain `overlap_cycles` and `residency_hit_cycles`. Version-1 files
+///   are rejected (their completions cannot carry the per-request
+///   overlap/residency attribution a v2 reader reports).
+pub const TRACE_FORMAT_VERSION: u64 = 2;
 
 /// The format name stamped into (and required from) every header.
 pub const TRACE_FORMAT_NAME: &str = "eiq-neutron-trace";
@@ -550,6 +559,14 @@ impl Trace {
                 "age_after_cycles".into(),
                 Json::UInt(m.scheduler.age_after_cycles.unwrap_or(0)),
             ),
+            ("pipeline".into(), Json::Bool(m.scheduler.pipeline)),
+            ("weight_residency".into(), Json::Bool(m.scheduler.weight_residency)),
+            ("warm_routing".into(), Json::Bool(m.scheduler.warm_routing)),
+            // 0 encodes "use the config's TCM size", the CLI convention.
+            (
+                "residency_capacity_bytes".into(),
+                Json::UInt(m.scheduler.residency_capacity_bytes.unwrap_or(0)),
+            ),
         ])
     }
 
@@ -606,10 +623,10 @@ impl Trace {
     }
 }
 
-/// Strict field check: a version-1 object may carry exactly the version-1
-/// keys. Tolerating extras would make the versioning rule ("adding a
-/// field requires a bump") unenforceable and would break the byte-exact
-/// re-render property (`parse(x).to_jsonl() == x`).
+/// Strict field check: an object may carry exactly the keys its format
+/// version defines. Tolerating extras would make the versioning rule
+/// ("adding a field requires a bump") unenforceable and would break the
+/// byte-exact re-render property (`parse(x).to_jsonl() == x`).
 fn reject_unknown_fields(j: &Json, known: &[&str]) -> Result<()> {
     if let Json::Object(fields) = j {
         for (k, _) in fields {
@@ -660,6 +677,10 @@ fn parse_header(j: &Json) -> Result<TraceMeta> {
             "max_batch",
             "dynamic_batch",
             "age_after_cycles",
+            "pipeline",
+            "weight_residency",
+            "warm_routing",
+            "residency_capacity_bytes",
         ],
     )?;
     let format = str_field(j, "format")?;
@@ -702,10 +723,25 @@ fn parse_header(j: &Json) -> Result<TraceMeta> {
         0 => None,
         age => Some(age),
     };
-    let dynamic_batch = j
-        .req("dynamic_batch")?
-        .as_bool()
-        .ok_or_else(|| anyhow!("field \"dynamic_batch\" must be a boolean"))?;
+    let bool_field = |key: &str| -> Result<bool> {
+        j.req(key)?
+            .as_bool()
+            .ok_or_else(|| anyhow!("field {key:?} must be a boolean"))
+    };
+    let dynamic_batch = bool_field("dynamic_batch")?;
+    let pipeline = bool_field("pipeline")?;
+    let weight_residency = bool_field("weight_residency")?;
+    let warm_routing = bool_field("warm_routing")?;
+    if warm_routing && !weight_residency {
+        bail!("header enables warm_routing without weight_residency");
+    }
+    let residency_capacity_bytes = match u64_field(j, "residency_capacity_bytes")? {
+        0 => None,
+        cap => Some(cap),
+    };
+    if residency_capacity_bytes.is_some() && !weight_residency {
+        bail!("header sets residency_capacity_bytes without weight_residency");
+    }
     Ok(TraceMeta {
         version,
         config_fingerprint: u64_field(j, "config_fingerprint")?,
@@ -722,6 +758,10 @@ fn parse_header(j: &Json) -> Result<TraceMeta> {
             max_batch,
             dynamic_batch,
             age_after_cycles,
+            pipeline,
+            weight_residency,
+            warm_routing,
+            residency_capacity_bytes,
         },
     })
 }
@@ -757,6 +797,8 @@ fn completion_json(c: &Completion) -> Json {
         ("arrival_cycles".into(), Json::UInt(c.arrival_cycles)),
         ("start_cycles".into(), Json::UInt(c.start_cycles)),
         ("finish_cycles".into(), Json::UInt(c.finish_cycles)),
+        ("overlap_cycles".into(), Json::UInt(c.overlap_cycles)),
+        ("residency_hit_cycles".into(), Json::UInt(c.residency_hit_cycles)),
     ])
 }
 
@@ -773,6 +815,8 @@ fn parse_completion(j: &Json) -> Result<Completion> {
             "arrival_cycles",
             "start_cycles",
             "finish_cycles",
+            "overlap_cycles",
+            "residency_hit_cycles",
         ],
     )?;
     Ok(Completion {
@@ -785,6 +829,8 @@ fn parse_completion(j: &Json) -> Result<Completion> {
         arrival_cycles: u64_field(j, "arrival_cycles")?,
         start_cycles: u64_field(j, "start_cycles")?,
         finish_cycles: u64_field(j, "finish_cycles")?,
+        overlap_cycles: u64_field(j, "overlap_cycles")?,
+        residency_hit_cycles: u64_field(j, "residency_hit_cycles")?,
     })
 }
 
@@ -925,9 +971,23 @@ mod tests {
     #[test]
     fn version_mismatch_is_rejected() {
         let t = tiny_trace();
-        let jsonl = t.to_jsonl().replace("\"version\":1", "\"version\":99");
+        let jsonl = t.to_jsonl().replace("\"version\":2", "\"version\":99");
         let err = Trace::parse(&jsonl).unwrap_err().to_string();
         assert!(err.contains("version 99"), "{err}");
+    }
+
+    #[test]
+    fn old_version_1_is_rejected_naming_both_versions() {
+        // A v1 file (completions lack the overlap/residency fields) must
+        // be refused with an error naming the file's version and ours.
+        let t = tiny_trace();
+        let jsonl = t.to_jsonl().replace("\"version\":2", "\"version\":1");
+        let err = Trace::parse(&jsonl).unwrap_err().to_string();
+        assert!(
+            err.contains("unsupported trace format version 1")
+                && err.contains("version 2"),
+            "{err}"
+        );
     }
 
     #[test]
@@ -971,6 +1031,8 @@ mod tests {
                 arrival_cycles: 5,
                 start_cycles: 5,
                 finish_cycles: 105,
+                overlap_cycles: 3,
+                residency_hit_cycles: 11,
             }],
             model_ops: vec![ModelOps {
                 model: ModelId::MobileNetV1,

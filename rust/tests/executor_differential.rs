@@ -1,0 +1,423 @@
+//! Differential test layer for intra-instance pipelining + TCM weight
+//! residency (PR 7). Two directions, both against independent oracles:
+//!
+//! * **Off ⇒ bit-identical to sequential.** With every new knob off, the
+//!   refactored tick-loop executor and the knob-aware scheduler must
+//!   reproduce the sequential run-to-completion behavior exactly: same
+//!   per-request cycle attribution, same executor `Metrics` (host time
+//!   excluded — it is wall clock), same `TraceOutcome`/`ServeReport`
+//!   down to every f64. The scheduler side is checked against a
+//!   hand-rolled FIFO earliest-idle reference simulator, not against
+//!   itself.
+//! * **On ⇒ makespan never increases.** Over the restricted distribution
+//!   where the monotonicity argument holds (single class, unbounded
+//!   queue, no batching, earliest-idle placement), turning pipelining
+//!   and/or residency on can only shrink per-dispatch service times, so
+//!   the makespan of a random synthetic trace never exceeds the
+//!   baseline's.
+//!
+//! Plus the residency property suite: the capacity invariant holds at
+//! every dispatch, eviction is deterministic across identical runs, a
+//! one-hot-model workload converges to a 100% hit rate after the first
+//! request, and utilization stays in `[0, 1]` for every knob combo.
+
+use std::collections::HashMap;
+
+use eiq_neutron::arch::{NeutronConfig, ResidencyEntry};
+use eiq_neutron::compiler::TileId;
+use eiq_neutron::coordinator::{Executor, Job, JobProgram, Metrics};
+use eiq_neutron::serve::{
+    marginal_service_cycles, run_trace, serve_with_cache, synthetic_trace, Completion,
+    CompileCache, PriorityMix, Scheduler, SchedulerOptions, ServeOptions,
+};
+use eiq_neutron::util::prop::{for_each_case, Rng};
+use eiq_neutron::zoo::ModelId;
+
+/// Cheap zoo subset (mirrors the serve suite's pool).
+const POOL: [ModelId; 4] = [
+    ModelId::MobileNetV1,
+    ModelId::MobileNetV2,
+    ModelId::MobileNetV3Min,
+    ModelId::EfficientNetLite0,
+];
+
+/// A random non-empty, duplicate-free subset of the pool.
+fn random_models(rng: &mut Rng) -> Vec<ModelId> {
+    let k = rng.usize(1, POOL.len());
+    let start = rng.usize(0, POOL.len() - 1);
+    (0..k).map(|i| POOL[(start + i) % POOL.len()]).collect()
+}
+
+fn makespan(completions: &[Completion]) -> u64 {
+    completions.iter().map(|c| c.finish_cycles).max().unwrap_or(0)
+}
+
+/// Bank-rounded install size of every distinct parameter tile a program
+/// fetches, in first-appearance order — the capacity charge the
+/// scheduler's residency pre-pass applies per tile.
+fn param_tile_install_sizes(program: &JobProgram, bank_bytes: u64) -> Vec<u64> {
+    let params = program.param_tiles();
+    let mut seen: Vec<(TileId, u64)> = Vec::new();
+    for job in &program.jobs {
+        if let Job::Dma { tile, bytes, .. } = job {
+            if params.contains(tile) {
+                match seen.iter_mut().find(|(t, _)| t == tile) {
+                    Some((_, b)) => *b = (*b).max(*bytes),
+                    None => seen.push((*tile, *bytes)),
+                }
+            }
+        }
+    }
+    seen.into_iter().map(|(_, b)| b.div_ceil(bank_bytes).max(1) * bank_bytes).collect()
+}
+
+/// A [`Metrics`] clone with the wall-clock field zeroed, so two runs of
+/// the same simulated work compare equal.
+fn sim_metrics(m: &Metrics) -> Metrics {
+    Metrics { total_host_us: 0, ..m.clone() }
+}
+
+#[test]
+fn resumable_tick_loop_matches_run_to_completion() {
+    // The tentpole refactor must be invisible when driven to completion:
+    // stepping a `ProgramRun` tick by tick and sealing it yields the same
+    // per-request cycle attribution and the same aggregate `Metrics` as
+    // the one-shot `run_program` path, and the per-tick latencies sum to
+    // exactly the program's tick service time.
+    let cfg = NeutronConfig::flagship_2tops();
+    let mut cache = CompileCache::for_serving(cfg.clone());
+    for model in [ModelId::MobileNetV3Min, ModelId::MobileNetV1] {
+        let entry = cache.get(model);
+
+        let mut whole = Executor::with_config(cfg.clone());
+        let full = whole.run_program(&entry.program, None).unwrap();
+
+        let mut stepped = Executor::with_config(cfg.clone());
+        let mut run = stepped.begin(&entry.program);
+        let mut latency_sum = 0u64;
+        while let Some(t) = run.step_tick(|_| true) {
+            assert_eq!(
+                t.latency_cycles,
+                t.compute_cycles.max(t.dm_cycles),
+                "{model:?}: tick latency must follow the DAE max(compute, dm) model"
+            );
+            latency_sum += t.latency_cycles;
+        }
+        let result = run.finish(None).unwrap();
+
+        assert_eq!(result.sim_cycles, full.sim_cycles, "{model:?}: sim cycles diverge");
+        assert_eq!(result.ticks, full.ticks, "{model:?}: tick counts diverge");
+        assert_eq!(result.compute_jobs, full.compute_jobs);
+        assert_eq!(result.dma_jobs, full.dma_jobs);
+        assert_eq!(result.ddr_bytes, full.ddr_bytes);
+        assert_eq!(result.v2p_updates, full.v2p_updates);
+        assert_eq!(latency_sum, result.sim_cycles, "{model:?}: tick latencies must sum up");
+        assert_eq!(
+            latency_sum,
+            entry.program.service_cycles_where(|_| true),
+            "{model:?}: the stepped clock must agree with the static tick accounting"
+        );
+        assert_eq!(
+            sim_metrics(&whole.metrics),
+            sim_metrics(&stepped.metrics),
+            "{model:?}: tick-loop metrics diverge from run-to-completion"
+        );
+    }
+}
+
+#[test]
+fn prop_knobs_off_reproduces_the_sequential_oracle() {
+    // With pipelining and residency off, the scheduler must be
+    // bit-identical to the sequential baseline. The baseline here is an
+    // independent oracle: FIFO in admission order onto the earliest-idle
+    // instance (lowest id on ties), every request paying its program's
+    // full tick service time — the documented pre-PR contract.
+    let cfg = NeutronConfig::flagship_2tops();
+    let mut cache = CompileCache::for_serving(cfg.clone());
+    for_each_case(10, 0xD1FF, |rng| {
+        let models = random_models(rng);
+        let n = rng.usize(1, 30);
+        let gap = rng.int(0, 1_000_000) as u64;
+        let instances = rng.usize(1, 4);
+        let trace = synthetic_trace(&models, n, gap, rng.next_u64());
+        let opts = SchedulerOptions { instances, ..SchedulerOptions::default() };
+        let outcome = run_trace(&cfg, &trace, &opts, &mut cache);
+
+        let full: HashMap<ModelId, u64> = models
+            .iter()
+            .map(|&m| (m, cache.get(m).program.service_cycles_where(|_| true)))
+            .collect();
+        let mut busy = vec![0u64; instances];
+        assert_eq!(outcome.completions.len(), n, "unbounded queue completes everything");
+        for (c, r) in outcome.completions.iter().zip(trace.iter()) {
+            let i = (0..instances).min_by_key(|&i| (busy[i], i)).unwrap();
+            let start = busy[i].max(r.arrival_cycles);
+            let finish = start + full[&r.model];
+            busy[i] = finish;
+            assert_eq!(
+                (c.id, c.instance, c.start_cycles, c.finish_cycles),
+                (r.id, i, start, finish),
+                "request {} diverges from the sequential oracle",
+                r.id
+            );
+            assert_eq!(c.batch_index, 0);
+            assert_eq!(c.overlap_cycles, 0, "no overlap may be attributed with pipelining off");
+            assert_eq!(c.residency_hit_cycles, 0, "no hits may be attributed with residency off");
+        }
+        assert_eq!(
+            (
+                outcome.overlap_cycles,
+                outcome.residency_hits,
+                outcome.residency_misses,
+                outcome.residency_evictions,
+                outcome.warm_dispatches
+            ),
+            (0, 0, 0, 0, 0),
+            "off-knob counters must stay zero"
+        );
+        // Explicitly-disabled knobs are bit-identical to the defaults —
+        // the whole outcome, not just the makespan.
+        let off = SchedulerOptions {
+            pipeline: false,
+            weight_residency: false,
+            warm_routing: false,
+            residency_capacity_bytes: None,
+            ..opts.clone()
+        };
+        assert_eq!(run_trace(&cfg, &trace, &off, &mut cache), outcome);
+    });
+}
+
+#[test]
+fn prop_pipelining_and_residency_never_increase_makespan() {
+    // The restricted distribution for which monotonicity provably holds:
+    // single class, unbounded queue, no batching, earliest-idle placement
+    // (no warm routing). Both knobs only ever shrink a dispatch's
+    // effective service time (hits elide DMA cycles, overlap hides head
+    // cycles), dispatch order is fixed by admission order, and shrinking
+    // service times under FIFO earliest-idle can only move every busy
+    // horizon earlier — so the makespan never exceeds the baseline's.
+    let cfg = NeutronConfig::flagship_2tops();
+    let mut cache = CompileCache::for_serving(cfg.clone());
+    for_each_case(10, 0x9107, |rng| {
+        let models = random_models(rng);
+        let n = rng.usize(2, 30);
+        let gap = rng.int(0, 800_000) as u64;
+        let instances = rng.usize(1, 3);
+        let trace = synthetic_trace(&models, n, gap, rng.next_u64());
+        let base_opts = SchedulerOptions { instances, ..SchedulerOptions::default() };
+        let base = run_trace(&cfg, &trace, &base_opts, &mut cache);
+        let base_makespan = makespan(&base.completions);
+
+        for (pipeline, weight_residency) in [(true, false), (false, true), (true, true)] {
+            let on = SchedulerOptions { pipeline, weight_residency, ..base_opts.clone() };
+            let outcome = run_trace(&cfg, &trace, &on, &mut cache);
+            assert_eq!(outcome.completions.len(), n);
+            assert!(
+                makespan(&outcome.completions) <= base_makespan,
+                "pipeline={pipeline} residency={weight_residency}: makespan {} exceeds \
+                 baseline {base_makespan}",
+                makespan(&outcome.completions)
+            );
+            // Every individual request also finishes no later — the
+            // pointwise form of the same induction.
+            for (on_c, base_c) in outcome.completions.iter().zip(base.completions.iter()) {
+                assert_eq!(on_c.id, base_c.id, "dispatch order is the admission order");
+                assert!(
+                    on_c.finish_cycles <= base_c.finish_cycles,
+                    "request {} finished later with the knobs on",
+                    on_c.id
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_residency_capacity_invariant_and_eviction_determinism() {
+    // At every dispatch, on every instance, the resident set must stay
+    // within the configured capacity and sum-consistent; and a second
+    // identical run must reproduce the completions, the final resident
+    // sets (eviction victims included) and the executor metrics exactly.
+    let cfg = NeutronConfig::flagship_2tops();
+    let mut cache = CompileCache::for_serving(cfg.clone());
+    let bank_bytes = cfg.bank_bytes() as u64;
+    for_each_case(8, 0x7C31, |rng| {
+        let models = random_models(rng);
+        let n = rng.usize(2, 20);
+        let instances = rng.usize(1, 2);
+        // Small capacities (1–8 banks) force rejects and evictions.
+        let capacity = bank_bytes * rng.int(1, 8) as u64;
+        let trace = synthetic_trace(&models, n, rng.int(0, 400_000) as u64, rng.next_u64());
+        let opts = SchedulerOptions {
+            instances,
+            weight_residency: true,
+            residency_capacity_bytes: Some(capacity),
+            pipeline: rng.bool(),
+            ..SchedulerOptions::default()
+        };
+
+        type DriveResult = (Vec<Completion>, Vec<Vec<ResidencyEntry>>, Vec<Metrics>, [u64; 5]);
+        let drive = |cache: &mut CompileCache| -> DriveResult {
+            let mut s = Scheduler::new(&cfg, &opts);
+            for &r in &trace {
+                s.admit(r);
+            }
+            let mut completions = Vec::new();
+            while let Some(model) = s.next_model() {
+                let entry = cache.get(model);
+                completions.extend(s.dispatch_next(model, &entry.program));
+                for inst in s.instances() {
+                    let r = inst.residency().expect("residency is enabled");
+                    assert!(
+                        r.resident_bytes() <= r.capacity_bytes(),
+                        "instance {}: resident {} exceeds capacity {}",
+                        inst.id,
+                        r.resident_bytes(),
+                        r.capacity_bytes()
+                    );
+                    assert_eq!(
+                        r.resident_bytes(),
+                        r.entries().iter().map(|e| e.bytes).sum::<u64>(),
+                        "resident-byte accounting must match the entry list"
+                    );
+                    assert_eq!(r.capacity_bytes(), capacity);
+                }
+            }
+            let residency_states = s
+                .instances()
+                .iter()
+                .map(|i| i.residency().unwrap().entries().to_vec())
+                .collect();
+            let metrics = s.instances().iter().map(|i| sim_metrics(i.metrics())).collect();
+            let counters = [
+                s.residency_hits(),
+                s.residency_misses(),
+                s.residency_evictions(),
+                s.warm_dispatches(),
+                s.overlap_cycles(),
+            ];
+            (completions, residency_states, metrics, counters)
+        };
+
+        let a = drive(&mut cache);
+        let b = drive(&mut cache);
+        assert_eq!(
+            a, b,
+            "same trace + same knobs must reproduce completions, resident sets \
+             (eviction victims included), metrics and counters exactly"
+        );
+    });
+}
+
+#[test]
+fn one_hot_workload_converges_to_full_hit_rate_after_first_request() {
+    // A single hot model under an ample capacity override: the first
+    // request compulsory-misses every parameter tile, every later request
+    // runs fully warm — the convergence property the TCM residency model
+    // exists to provide. The warm service time must equal the batching
+    // follower's marginal service time: both elide exactly the parameter
+    // tiles' DMA jobs.
+    let cfg = NeutronConfig::flagship_2tops();
+    let mut cache = CompileCache::for_serving(cfg.clone());
+    let model = ModelId::MobileNetV3Min;
+    let n = 16u64;
+    let trace = synthetic_trace(&[model], n as usize, 200_000, 3);
+    let opts = SchedulerOptions {
+        instances: 1,
+        weight_residency: true,
+        residency_capacity_bytes: Some(64 << 20),
+        ..SchedulerOptions::default()
+    };
+
+    let entry = cache.get(model);
+    let k = param_tile_install_sizes(&entry.program, cfg.bank_bytes() as u64).len() as u64;
+    assert!(k >= 1, "a real model program fetches parameter tiles");
+
+    let outcome = run_trace(&cfg, &trace, &opts, &mut cache);
+    assert_eq!(outcome.completions.len(), n as usize);
+    assert_eq!(outcome.residency_misses, k, "only the first request compulsory-misses");
+    assert_eq!(outcome.residency_hits, (n - 1) * k, "every later request runs fully warm");
+    assert_eq!(outcome.residency_evictions, 0, "nothing evicts under an ample capacity");
+    assert_eq!(outcome.warm_dispatches, n - 1);
+
+    let hit_cycles: Vec<u64> = outcome.completions.iter().map(|c| c.residency_hit_cycles).collect();
+    assert_eq!(hit_cycles[0], 0, "the first dispatch is cold");
+    assert!(
+        hit_cycles[1..].iter().all(|&c| c == hit_cycles[1] && c > 0),
+        "warm dispatches all save the same (positive) fetch cycles: {hit_cycles:?}"
+    );
+    let warm_service = outcome.completions.last().unwrap().service_cycles();
+    assert_eq!(
+        warm_service,
+        marginal_service_cycles(&entry.program),
+        "warm pricing and batching-follower pricing share the parameter-tile skip rule"
+    );
+}
+
+#[test]
+fn prop_utilization_stays_in_bounds_for_every_knob_combo() {
+    // Overlapped cycles are counted once (inside the predecessor's
+    // occupied interval), so utilization must stay within [0, 1] for
+    // every knob combination — and with everything off, the whole
+    // `ServeReport` (f64s included) must equal the baseline's.
+    let cfg = NeutronConfig::flagship_2tops();
+    let mut cache = CompileCache::for_serving(cfg.clone());
+    for model in POOL {
+        cache.get(model);
+    }
+    for_each_case(8, 0x07F1, |rng| {
+        let base_opts = ServeOptions {
+            models: random_models(rng),
+            requests: rng.usize(1, 25),
+            mean_gap_cycles: rng.int(0, 600_000) as u64,
+            seed: rng.next_u64(),
+            priority_mix: PriorityMix::standard_only(),
+            scheduler: SchedulerOptions {
+                instances: rng.usize(1, 3),
+                ..SchedulerOptions::default()
+            },
+        };
+        let base = serve_with_cache(&cfg, &base_opts, &mut cache);
+        assert!(base.utilization() > 0.0 && base.utilization() <= 1.0 + 1e-12);
+
+        let combos =
+            [(true, false, false), (false, true, false), (true, true, false), (true, true, true)];
+        for (pipeline, weight_residency, warm_routing) in combos {
+            let o = ServeOptions {
+                scheduler: SchedulerOptions {
+                    pipeline,
+                    weight_residency,
+                    warm_routing,
+                    ..base_opts.scheduler.clone()
+                },
+                ..base_opts.clone()
+            };
+            let r = serve_with_cache(&cfg, &o, &mut cache);
+            assert!(
+                r.utilization() > 0.0 && r.utilization() <= 1.0 + 1e-12,
+                "pipeline={pipeline} residency={weight_residency} routing={warm_routing}: \
+                 utilization {} out of bounds",
+                r.utilization()
+            );
+            assert_eq!(r.offered, base.offered);
+            assert_eq!(r.completed, base.completed, "knobs re-time requests, never drop them");
+        }
+
+        let off = ServeOptions {
+            scheduler: SchedulerOptions {
+                pipeline: false,
+                weight_residency: false,
+                warm_routing: false,
+                residency_capacity_bytes: None,
+                ..base_opts.scheduler.clone()
+            },
+            ..base_opts.clone()
+        };
+        assert_eq!(
+            serve_with_cache(&cfg, &off, &mut cache),
+            base,
+            "knobs explicitly off must reproduce the baseline report bit for bit"
+        );
+    });
+}

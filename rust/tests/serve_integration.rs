@@ -50,7 +50,11 @@ fn random_mix(rng: &mut Rng) -> PriorityMix {
     mix
 }
 
-/// Random scheduler knobs across the whole option space.
+/// Random scheduler knobs across the whole option space. The PR-7 knobs
+/// (pipelining, weight residency, warm routing) stay at their off
+/// defaults here — this suite pins down the baseline invariants, and the
+/// differential suite (`executor_differential.rs`) owns the knobs-on
+/// properties under the distributions where they provably hold.
 fn random_scheduler(rng: &mut Rng) -> SchedulerOptions {
     SchedulerOptions {
         instances: rng.usize(1, 4),
@@ -63,6 +67,7 @@ fn random_scheduler(rng: &mut Rng) -> SchedulerOptions {
         max_batch: rng.usize(1, 4),
         dynamic_batch: rng.bool(),
         age_after_cycles: if rng.bool() { Some(rng.int(1, 500_000) as u64) } else { None },
+        ..SchedulerOptions::default()
     }
 }
 

@@ -35,6 +35,10 @@ fn random_models(rng: &mut Rng) -> Vec<ModelId> {
 }
 
 fn random_scheduler(rng: &mut Rng) -> SchedulerOptions {
+    // The PR-7 knobs respect their coupling rules (warm routing and a
+    // capacity override both require residency — `validate()` and the
+    // header parser reject anything else).
+    let weight_residency = rng.bool();
     SchedulerOptions {
         instances: rng.usize(1, 4),
         queue_capacity: if rng.bool() { Some(rng.usize(1, 8)) } else { None },
@@ -46,6 +50,14 @@ fn random_scheduler(rng: &mut Rng) -> SchedulerOptions {
         max_batch: rng.usize(1, 6),
         dynamic_batch: rng.bool(),
         age_after_cycles: if rng.bool() { Some(rng.int(1, 500_000) as u64) } else { None },
+        pipeline: rng.bool(),
+        weight_residency,
+        warm_routing: weight_residency && rng.bool(),
+        residency_capacity_bytes: if weight_residency && rng.bool() {
+            Some(rng.int(1, 2_000_000) as u64)
+        } else {
+            None
+        },
     }
 }
 
@@ -85,6 +97,8 @@ fn random_trace(rng: &mut Rng) -> Trace {
             arrival_cycles: r.arrival_cycles,
             start_cycles: r.arrival_cycles.saturating_add(rng.next_u64() >> 40),
             finish_cycles: r.arrival_cycles.saturating_add((rng.next_u64() >> 40) + i as u64 + 1),
+            overlap_cycles: rng.next_u64() >> rng.usize(8, 63),
+            residency_hit_cycles: rng.next_u64() >> rng.usize(8, 63),
         });
     }
     let shed_ids: Vec<u64> = requests.iter().filter(|_| rng.bool()).map(|r| r.id).collect();
@@ -165,9 +179,17 @@ fn version_mismatch_and_foreign_files_are_rejected() {
     let trace = random_trace(&mut rng);
     let jsonl = trace.to_jsonl();
     // Future version.
-    let future = jsonl.replace("\"version\":1", "\"version\":2");
+    let future = jsonl.replace("\"version\":2", "\"version\":3");
     let err = Trace::parse(&future).unwrap_err().to_string();
-    assert!(err.contains("version 2"), "{err}");
+    assert!(err.contains("version 3"), "{err}");
+    // Stale version: a PR-4-era v1 trace (no pipelining/residency fields)
+    // must be rejected by name, not half-parsed with silent defaults.
+    let stale = jsonl.replace("\"version\":2", "\"version\":1");
+    let err = Trace::parse(&stale).unwrap_err().to_string();
+    assert!(
+        err.contains("unsupported trace format version 1") && err.contains("version 2"),
+        "stale-version error must name both versions: {err}"
+    );
     // Wrong format name.
     let foreign = jsonl.replace("eiq-neutron-trace", "some-other-format");
     assert!(Trace::parse(&foreign).is_err());
@@ -290,6 +312,7 @@ fn acceptance_record_replay_validate_pipeline() {
             max_batch: 4,
             dynamic_batch: true,
             age_after_cycles: Some(2_000_000),
+            ..SchedulerOptions::default()
         },
     };
     let mut cache = CompileCache::for_serving(cfg.clone());
@@ -307,4 +330,56 @@ fn acceptance_record_replay_validate_pipeline() {
     assert!(v.rows.len() >= 3, "a CNN mix spans several op classes: {:?}", v.rows);
     assert!(v.rows.iter().any(|r| r.class == OpClass::Conv));
     assert!(v.table().contains("overall MAPE"));
+}
+
+#[test]
+fn recorded_pipelined_resident_run_round_trips_its_new_fields() {
+    // PR-7 fields end to end: record a pipelined + resident run that
+    // actually warms the TCM (one hot model, saturating arrivals, a
+    // capacity override big enough that the whole parameter set stays
+    // resident), push the trace through its JSONL form, and check that
+    // (a) the header round-trips the new scheduler knobs, (b) non-zero
+    // `residency_hit_cycles` / `overlap_cycles` survive the format, and
+    // (c) replay still reproduces the report bit for bit.
+    let cfg = NeutronConfig::flagship_2tops();
+    let opts = ServeOptions {
+        models: vec![ModelId::MobileNetV3Min],
+        requests: 24,
+        mean_gap_cycles: 0,
+        seed: 13,
+        priority_mix: PriorityMix::standard_only(),
+        scheduler: SchedulerOptions {
+            instances: 1,
+            pipeline: true,
+            weight_residency: true,
+            residency_capacity_bytes: Some(64 << 20),
+            ..SchedulerOptions::default()
+        },
+    };
+    let mut cache = CompileCache::for_serving(cfg.clone());
+    let (recorded, trace) = serve_recorded(&cfg, &opts, &mut cache);
+    assert_eq!(trace.meta.version, TRACE_FORMAT_VERSION);
+    assert!(trace.meta.scheduler.pipeline && trace.meta.scheduler.weight_residency);
+    assert!(
+        recorded.residency_hits > 0,
+        "a single hot model under an ample capacity override must go warm"
+    );
+    assert!(
+        trace.completions.iter().any(|c| c.residency_hit_cycles > 0),
+        "warm dispatches must carry their hit cycles into the trace"
+    );
+    assert_eq!(
+        trace.completions.iter().map(|c| c.overlap_cycles).sum::<u64>(),
+        recorded.overlap_cycles,
+        "per-completion overlap must sum to the report's total"
+    );
+
+    let jsonl = trace.to_jsonl();
+    let parsed = Trace::parse(&jsonl).unwrap_or_else(|e| panic!("parse failed: {e}"));
+    assert_eq!(parsed, trace, "v2 completion fields must survive the JSONL round-trip");
+    assert_eq!(parsed.meta.scheduler, opts.scheduler, "header must round-trip the new knobs");
+
+    let replayed = ReplayDriver::from_jsonl(&jsonl).unwrap().replay(&cfg).unwrap();
+    assert!(replayed.matches_recording(), "{:?}", replayed.divergence);
+    assert_eq!(replayed.report, recorded);
 }
