@@ -1,0 +1,185 @@
+//! Bench: autoregressive decode serving — prefill/decode split, KV-cache
+//! residency and continuous batching. The continuous-batching sweep is
+//! the acceptance evidence for the GenAI scheduler: at every offered
+//! load, keeping decode weights pinned across admitted sequences must
+//! strictly cut both the makespan and the mean TPOT against
+//! request-boundary replay of the same trace (asserted, not just
+//! reported). The residency rows show the KV-cache side: with TCM
+//! residency on, decode steps re-stream fewer KV bytes from DDR.
+//!
+//! `--json PATH` additionally writes the measurements and sweep rows as
+//! a JSON array (used by ci.sh to emit `BENCH_genai_decode.json`).
+
+use eiq_neutron::arch::NeutronConfig;
+use eiq_neutron::serve::{serve_with_cache, CompileCache, SchedulerOptions, ServeOptions};
+use eiq_neutron::util::bench::{Bencher, Measurement};
+use eiq_neutron::zoo::ModelId;
+
+fn decode_opts(gap: u64, scheduler: SchedulerOptions) -> ServeOptions {
+    ServeOptions {
+        models: vec![ModelId::GptTiny],
+        requests: 48,
+        mean_gap_cycles: gap,
+        seed: 17,
+        scheduler,
+        decode: true,
+        prompt_tokens: 6,
+        decode_tokens: 8,
+        max_context: 16,
+        ..ServeOptions::default()
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+
+    let cfg = NeutronConfig::flagship_2tops();
+    let b = Bencher::quick();
+    let mut results: Vec<Measurement> = Vec::new();
+    let mut extra_json: Vec<String> = Vec::new();
+
+    // Warm cache shared by the whole bench: the decode bucket ladder
+    // compiles once, every row after that is pure scheduling.
+    let mut cache = CompileCache::for_serving(cfg.clone());
+    let warm = decode_opts(200_000, SchedulerOptions { instances: 1, ..Default::default() });
+    serve_with_cache(&cfg, &warm, &mut cache);
+    results.push(b.bench("decode serve 48 req, warm ladder, 1 instance", || {
+        serve_with_cache(&cfg, &warm, &mut cache).tokens_per_s
+    }));
+
+    // Continuous vs request-boundary sweep: same trace, same instance
+    // count, only the batching regime differs. The gap ramps from idle
+    // (every sequence runs alone) to saturated (deep decode backlog);
+    // the pinned-weights win must be strict at every point.
+    println!("continuous batching sweep: 48 decode requests, prompt 6 + 8 tokens, 1 instance");
+    println!(
+        "{:>9}  {:<16} {:>14} {:>9} {:>11} {:>11} {:>11}",
+        "gap cyc", "regime", "makespan cyc", "tok/s", "TTFT p50", "TTFT p99", "TPOT mean"
+    );
+    for gap in [800_000u64, 200_000, 50_000] {
+        let rb = serve_with_cache(
+            &cfg,
+            &decode_opts(gap, SchedulerOptions { instances: 1, ..Default::default() }),
+            &mut cache,
+        );
+        let cb = serve_with_cache(
+            &cfg,
+            &decode_opts(
+                gap,
+                SchedulerOptions { instances: 1, continuous_batch: true, ..Default::default() },
+            ),
+            &mut cache,
+        );
+        assert_eq!(rb.completed, cb.completed);
+        assert_eq!(rb.tokens_generated, cb.tokens_generated);
+        assert!(
+            cb.makespan_cycles < rb.makespan_cycles,
+            "gap {gap}: continuous batching must strictly cut the makespan \
+             ({} !< {})",
+            cb.makespan_cycles,
+            rb.makespan_cycles
+        );
+        assert!(
+            cb.tpot_mean_ms < rb.tpot_mean_ms,
+            "gap {gap}: continuous batching must strictly cut mean TPOT \
+             ({} !< {})",
+            cb.tpot_mean_ms,
+            rb.tpot_mean_ms
+        );
+        assert!(
+            cb.ttft_p50_ms <= rb.ttft_p50_ms,
+            "gap {gap}: continuous batching must never regress TTFT"
+        );
+        for (name, continuous, r) in
+            [("request-boundary", false, &rb), ("continuous", true, &cb)]
+        {
+            println!(
+                "{:>9}  {:<16} {:>14} {:>9.1} {:>8.3} ms {:>8.3} ms {:>8.3} ms",
+                gap,
+                name,
+                r.makespan_cycles,
+                r.tokens_per_s,
+                r.ttft_p50_ms,
+                r.ttft_p99_ms,
+                r.tpot_mean_ms
+            );
+            extra_json.push(format!(
+                "{{\"name\":\"decode_sweep_gap{}_{}\",\"continuous_batch\":{},\
+                 \"makespan_cycles\":{},\"tokens_per_s\":{},\"ttft_p50_ms\":{},\
+                 \"ttft_p99_ms\":{},\"tpot_mean_ms\":{},\"tokens_generated\":{}}}",
+                gap,
+                if continuous { "continuous" } else { "request_boundary" },
+                continuous,
+                r.makespan_cycles,
+                r.tokens_per_s,
+                r.ttft_p50_ms,
+                r.ttft_p99_ms,
+                r.tpot_mean_ms,
+                r.tokens_generated
+            ));
+        }
+    }
+
+    // KV residency: same saturated decode trace, with and without TCM
+    // weight+KV residency. Resident KV caches skip the DDR re-stream on
+    // decode steps whose cache survived in TCM since the previous step.
+    println!("\nKV residency: 48 decode requests, saturated arrivals, 1 instance");
+    for (name, weight_residency) in [("ddr-every-step", false), ("tcm-resident", true)] {
+        let r = serve_with_cache(
+            &cfg,
+            &decode_opts(
+                50_000,
+                SchedulerOptions {
+                    instances: 1,
+                    weight_residency,
+                    continuous_batch: true,
+                    ..Default::default()
+                },
+            ),
+            &mut cache,
+        );
+        println!(
+            "  {:<16} makespan {:>14} cyc  {:>7.1} tok/s  {} residency hit(s)  {} eviction(s)",
+            name, r.makespan_cycles, r.tokens_per_s, r.residency_hits, r.kv_evictions
+        );
+        extra_json.push(format!(
+            "{{\"name\":\"decode_kv_residency_{}\",\"weight_residency\":{},\
+             \"makespan_cycles\":{},\"tokens_per_s\":{},\"kv_evictions\":{}}}",
+            name, weight_residency, r.makespan_cycles, r.tokens_per_s, r.kv_evictions
+        ));
+    }
+
+    let report = serve_with_cache(
+        &cfg,
+        &decode_opts(
+            200_000,
+            SchedulerOptions { instances: 1, continuous_batch: true, ..Default::default() },
+        ),
+        &mut cache,
+    );
+    println!("\n{}", report.summary());
+
+    if let Some(path) = json_path {
+        let mut rows: Vec<String> = results
+            .iter()
+            .map(|m| {
+                format!(
+                    "{{\"name\":{:?},\"median_us\":{:.1},\"mean_us\":{:.1},\"stddev_us\":{:.1}}}",
+                    m.name,
+                    m.median().as_secs_f64() * 1e6,
+                    m.mean().as_secs_f64() * 1e6,
+                    m.stddev_us()
+                )
+            })
+            .collect();
+        rows.extend(extra_json);
+        let json = format!("[\n  {}\n]\n", rows.join(",\n  "));
+        std::fs::write(&path, json).expect("write bench JSON");
+        eprintln!("wrote {path}");
+    }
+}

@@ -145,6 +145,7 @@ fn main() {
                 warm_routing,
                 ..SchedulerOptions::default()
             },
+            ..ServeOptions::default()
         };
         let r = serve_with_cache(&cfg, &o, &mut cache);
         if name == "baseline" {

@@ -84,6 +84,30 @@ if ./target/release/neutron serve --warm-routing >/dev/null 2>&1; then
 fi
 echo "pipelining + residency smoke OK"
 
+# GenAI decode smoke: a recorded autoregressive serve run (prefill/decode
+# split, KV residency, continuous batching) must replay to a byte-identical
+# report through the v3 trace format, the decode context-curve fit must
+# render, and contradictory decode knobs must be rejected loudly.
+./target/release/neutron serve --models gpt-tiny --decode --requests 16 \
+    --instances 1 --seed 23 --mean-gap-cycles 100000 --prompt-tokens 6 \
+    --decode-tokens 5 --max-context 16 --continuous-batch --residency \
+    --record "$smoke_dir/decode.jsonl" > "$smoke_dir/decode_recorded.txt"
+grep -q "genai:" "$smoke_dir/decode_recorded.txt"
+./target/release/neutron replay "$smoke_dir/decode.jsonl" > "$smoke_dir/decode_replayed.txt"
+diff "$smoke_dir/decode_recorded.txt" "$smoke_dir/decode_replayed.txt"
+./target/release/neutron validate --decode-curve --max-context 16 \
+    | grep -q "context curve"
+if ./target/release/neutron serve --continuous-batch >/dev/null 2>&1; then
+    echo "ERROR: 'neutron serve --continuous-batch' without --decode should have been rejected" >&2
+    exit 1
+fi
+if ./target/release/neutron serve --models gpt-tiny --decode --prompt-tokens 20 \
+    --decode-tokens 20 --max-context 16 >/dev/null 2>&1; then
+    echo "ERROR: prompt+decode tokens above --max-context should have been rejected" >&2
+    exit 1
+fi
+echo "genai decode smoke OK"
+
 # Solver hot-path bench (includes the warm-vs-cold budget sweep and its
 # acceptance assertion); the measurements land in BENCH_solver_hotpath.json.
 cargo bench --bench solver_hotpath -- --json "$PWD/BENCH_solver_hotpath.json" \
@@ -96,6 +120,13 @@ echo "solver hotpath bench OK (BENCH_solver_hotpath.json)"
 cargo bench --bench serve_throughput -- --json "$PWD/BENCH_serve_throughput.json" \
     > /dev/null
 echo "serve throughput bench OK (BENCH_serve_throughput.json)"
+
+# GenAI decode bench (includes the continuous-vs-request-boundary sweep
+# and its strict makespan + TPOT assertions); the measurements land in
+# BENCH_genai_decode.json.
+cargo bench --bench genai_decode -- --json "$PWD/BENCH_genai_decode.json" \
+    > /dev/null
+echo "genai decode bench OK (BENCH_genai_decode.json)"
 
 # Docs must not rot: fail on any rustdoc warning (missing docs in the
 # serve module, broken intra-doc links, …). Vendored stand-ins are not

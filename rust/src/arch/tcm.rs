@@ -162,6 +162,7 @@ impl ResidencyEntry {
 #[derive(Debug, Clone)]
 pub struct TcmResidency {
     capacity_bytes: u64,
+    quota_bytes: Option<u64>,
     entries: Vec<ResidencyEntry>,
     resident_bytes: u64,
     seq: u64,
@@ -175,6 +176,7 @@ impl TcmResidency {
     pub fn new(capacity_bytes: u64) -> Self {
         Self {
             capacity_bytes,
+            quota_bytes: None,
             entries: Vec::new(),
             resident_bytes: 0,
             seq: 0,
@@ -184,9 +186,32 @@ impl TcmResidency {
         }
     }
 
+    /// Like [`TcmResidency::new`], with a per-owner residency cap: no
+    /// single owner id (tenant model, or decode sequence) may pin more
+    /// than `quota_bytes` at once. An install that would push its owner
+    /// over quota first evicts that owner's *own* lowest-value entries —
+    /// the over-quota tenant pays for its appetite before any neighbor
+    /// does — and a tile larger than the quota never installs at all.
+    pub fn with_quota(capacity_bytes: u64, quota_bytes: u64) -> Self {
+        let mut r = Self::new(capacity_bytes);
+        r.quota_bytes = Some(quota_bytes.min(capacity_bytes));
+        r
+    }
+
     /// Configured capacity the resident set is accounted against.
     pub fn capacity_bytes(&self) -> u64 {
         self.capacity_bytes
+    }
+
+    /// The per-owner cap, if one is configured (see
+    /// [`TcmResidency::with_quota`]).
+    pub fn quota_bytes(&self) -> Option<u64> {
+        self.quota_bytes
+    }
+
+    /// Bytes currently pinned by one owner id.
+    pub fn owner_bytes(&self, owner: u64) -> u64 {
+        self.entries.iter().filter(|e| e.owner == owner).map(|e| e.bytes).sum()
     }
 
     /// Bytes currently pinned by resident tiles (never exceeds capacity).
@@ -246,36 +271,59 @@ impl TcmResidency {
     /// Install a freshly-fetched tile, evicting lowest-value entries
     /// until it fits. Charges `bytes` against capacity (callers pass the
     /// bank-rounded size). Returns false — and keeps the set unchanged —
-    /// when the tile alone exceeds capacity. Installing an
-    /// already-resident tile just refreshes its recency.
+    /// when the tile alone exceeds capacity (or the per-owner quota).
+    /// Installing an already-resident tile just refreshes its recency.
     pub fn install(&mut self, owner: u64, tile: u32, bytes: u64, fetch_cycles: u64) -> bool {
+        self.install_evicting(owner, tile, bytes, fetch_cycles).is_some()
+    }
+
+    /// [`TcmResidency::install`], reporting who got evicted: returns the
+    /// displaced entries (possibly empty) on success, `None` — set
+    /// unchanged — when the tile cannot install. The serving layer uses
+    /// the victim list to charge preemption costs: a displaced KV-cache
+    /// entry means its sequence must re-stream that context from DDR on
+    /// its next decode step.
+    ///
+    /// Eviction runs in two deterministic phases: first the installing
+    /// owner's own lowest-value entries until the owner fits its quota
+    /// (no-op without a quota), then the globally lowest-value entries
+    /// until capacity fits. Victims are returned in eviction order.
+    pub fn install_evicting(
+        &mut self,
+        owner: u64,
+        tile: u32,
+        bytes: u64,
+        fetch_cycles: u64,
+    ) -> Option<Vec<ResidencyEntry>> {
         if bytes > self.capacity_bytes {
-            return false;
+            return None;
+        }
+        if let Some(quota) = self.quota_bytes {
+            if bytes > quota {
+                return None;
+            }
         }
         self.seq += 1;
         if let Some(e) =
             self.entries.iter_mut().find(|e| e.owner == owner && e.tile == tile)
         {
             e.last_use_seq = self.seq;
-            return true;
+            return Some(Vec::new());
+        }
+        let mut victims = Vec::new();
+        if let Some(quota) = self.quota_bytes {
+            while self.owner_bytes(owner) + bytes > quota {
+                let victim = self.lowest_value_index(|e| e.owner == owner).expect(
+                    "over quota implies the owner has a resident victim",
+                );
+                victims.push(self.evict_at(victim));
+            }
         }
         while self.resident_bytes + bytes > self.capacity_bytes {
             let victim = self
-                .entries
-                .iter()
-                .enumerate()
-                .min_by(|(_, a), (_, b)| {
-                    if a.keeps_less_value_than(b) {
-                        std::cmp::Ordering::Less
-                    } else {
-                        std::cmp::Ordering::Greater
-                    }
-                })
-                .map(|(i, _)| i)
+                .lowest_value_index(|_| true)
                 .expect("over capacity implies a resident victim exists");
-            let evicted = self.entries.swap_remove(victim);
-            self.resident_bytes -= evicted.bytes;
-            self.evictions += 1;
+            victims.push(self.evict_at(victim));
         }
         self.entries.push(ResidencyEntry {
             owner,
@@ -293,7 +341,53 @@ impl TcmResidency {
             self.resident_bytes,
             self.capacity_bytes
         );
-        true
+        Some(victims)
+    }
+
+    /// Voluntarily release every entry one owner holds (a decode sequence
+    /// leaving the instance frees its KV tiles). Returns the released
+    /// entries; does **not** count toward [`TcmResidency::evictions`] —
+    /// these are frees, not capacity pressure.
+    pub fn release_owner(&mut self, owner: u64) -> Vec<ResidencyEntry> {
+        let mut released = Vec::new();
+        let mut i = 0;
+        while i < self.entries.len() {
+            if self.entries[i].owner == owner {
+                let e = self.entries.remove(i);
+                self.resident_bytes -= e.bytes;
+                released.push(e);
+            } else {
+                i += 1;
+            }
+        }
+        released
+    }
+
+    /// Index of the lowest-value entry among those matching `pred`.
+    fn lowest_value_index(&self, pred: impl Fn(&ResidencyEntry) -> bool) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, e) in self.entries.iter().enumerate() {
+            if !pred(e) {
+                continue;
+            }
+            match best {
+                None => best = Some(i),
+                Some(b) => {
+                    if e.keeps_less_value_than(&self.entries[b]) {
+                        best = Some(i);
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    /// Remove the entry at `i`, counting it as a capacity eviction.
+    fn evict_at(&mut self, i: usize) -> ResidencyEntry {
+        let evicted = self.entries.remove(i);
+        self.resident_bytes -= evicted.bytes;
+        self.evictions += 1;
+        evicted
     }
 
     /// The resident entries (test/introspection aid; unspecified order).
@@ -411,6 +505,72 @@ mod tests {
         assert!(r.install(0, 1, 400, 1_000));
         assert_eq!(r.resident_bytes(), 400);
         assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn residency_quota_caps_each_owner_and_evicts_their_own_tiles_first() {
+        // 2000 bytes of TCM, but no owner may pin more than 800.
+        let mut r = TcmResidency::with_quota(2_000, 800);
+        assert_eq!(r.quota_bytes(), Some(800));
+        assert!(r.install(1, 10, 400, 4_000)); // owner 1: 400
+        assert!(r.install(1, 11, 400, 1_000)); // owner 1: 800 (at quota)
+        assert!(r.install(2, 20, 600, 2_000)); // owner 2 unaffected
+        // Owner 1's next install is over quota: its OWN lowest-value tile
+        // (11: 2.5 cyc/B vs 10: 10 cyc/B) goes, owner 2 keeps everything.
+        let victims = r.install_evicting(1, 12, 300, 9_000).expect("fits after self-evict");
+        assert_eq!(victims.len(), 1);
+        assert_eq!((victims[0].owner, victims[0].tile), (1, 11));
+        assert!(r.is_resident(2, 20), "neighbor never pays for owner 1's quota");
+        assert_eq!(r.owner_bytes(1), 700);
+        assert_eq!(r.evictions(), 1);
+        // A tile larger than the quota never installs, even with room.
+        assert!(!r.install(3, 30, 900, 50_000));
+        assert!(r.resident_bytes() <= r.capacity_bytes());
+    }
+
+    #[test]
+    fn residency_quota_eviction_is_deterministic() {
+        let run = || {
+            let mut r = TcmResidency::with_quota(4_000, 1_000);
+            let mut victim_log = Vec::new();
+            for (owner, tile, bytes, cycles) in [
+                (1u64, 1u32, 500u64, 900u64),
+                (1, 2, 400, 4_000),
+                (1, 3, 300, 600),
+                (2, 4, 800, 3_000),
+                (2, 5, 400, 2_000),
+                (1, 6, 600, 5_000),
+            ] {
+                if let Some(vs) = r.install_evicting(owner, tile, bytes, cycles) {
+                    victim_log.extend(vs.iter().map(|v| (v.owner, v.tile)));
+                }
+            }
+            let mut tiles: Vec<(u64, u32)> =
+                r.entries().iter().map(|e| (e.owner, e.tile)).collect();
+            tiles.sort_unstable();
+            (tiles, victim_log, r.resident_bytes())
+        };
+        assert_eq!(run(), run());
+        // Every surviving owner respects the quota.
+        let mut r = TcmResidency::with_quota(4_000, 1_000);
+        for (owner, tile) in [(1u64, 1u32), (1, 2), (1, 3), (2, 4), (1, 5)] {
+            r.install(owner, tile, 400, 1_000);
+        }
+        assert!(r.owner_bytes(1) <= 1_000);
+    }
+
+    #[test]
+    fn residency_release_owner_frees_without_counting_evictions() {
+        let mut r = TcmResidency::new(2_000);
+        assert!(r.install(5, 1, 400, 1_000));
+        assert!(r.install(5, 2, 300, 2_000));
+        assert!(r.install(6, 1, 500, 3_000));
+        let released = r.release_owner(5);
+        assert_eq!(released.len(), 2);
+        assert_eq!(r.evictions(), 0, "voluntary frees are not evictions");
+        assert_eq!(r.resident_bytes(), 500);
+        assert!(r.is_resident(6, 1));
+        assert!(r.release_owner(99).is_empty());
     }
 
     #[test]

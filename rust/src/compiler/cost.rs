@@ -327,6 +327,90 @@ impl<'a> CostModel<'a> {
     pub fn dispatch_cost(&self, compiled: &crate::compiler::Compiled) -> DispatchCost {
         dispatch_cost(compiled)
     }
+
+    /// Predicted decode-step cost at a KV length, through a fitted
+    /// [`ContextCurve`]. On the facade so consumers price context-length
+    /// scaling with the same object compilation uses.
+    pub fn decode_step_cycles(&self, curve: &ContextCurve, kv_len: u32) -> u64 {
+        curve.step_cycles(kv_len)
+    }
+}
+
+/// Context-length cost curve of a causal-attention decode step:
+/// `cycles(kv) ≈ base_cycles + cycles_per_kv · kv`. The attention GEMMs
+/// and the streamed KV cache scale linearly with context rows while the
+/// weight GEMMs are context-independent, so a two-parameter affine curve
+/// captures the regime (arxiv 2509.25155) that a static per-class scale
+/// cannot: the *same* op class costs more at longer context.
+///
+/// Fitted from per-bucket `(kv_len, observed step cycles)` samples by
+/// [`ContextCurve::fit`] (ordinary least squares); degenerate sample sets
+/// (fewer than two distinct KV lengths, non-finite or negative slope)
+/// yield `None` so a broken trace can never hand serving a wild curve.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ContextCurve {
+    /// Context-independent cycles per step (weight GEMMs, overheads).
+    pub base_cycles: f64,
+    /// Additional cycles per KV-cache row (attention + streaming).
+    pub cycles_per_kv: f64,
+}
+
+impl ContextCurve {
+    /// Predicted step cycles at `kv_len` context rows (≥ 1 cycle; the
+    /// line is clamped at zero before rounding so an extrapolation below
+    /// the fit range cannot go negative).
+    pub fn step_cycles(&self, kv_len: u32) -> u64 {
+        let y = self.base_cycles + self.cycles_per_kv * kv_len as f64;
+        y.max(0.0).round().max(1.0) as u64
+    }
+
+    /// Ordinary least-squares fit of `cycles ≈ base + slope · kv` over
+    /// `(kv_len, cycles)` samples. Returns `None` for degenerate inputs:
+    /// fewer than two samples with distinct KV lengths, or a non-finite
+    /// or negative fitted slope (a decode step can never get cheaper with
+    /// more context under the DAE model — such a fit means the samples
+    /// are corrupt, not that the curve slopes down).
+    pub fn fit(samples: &[(u32, u64)]) -> Option<ContextCurve> {
+        let n = samples.len() as f64;
+        if samples.len() < 2 {
+            return None;
+        }
+        let first = samples[0].0;
+        if samples.iter().all(|&(kv, _)| kv == first) {
+            return None;
+        }
+        let sx: f64 = samples.iter().map(|&(kv, _)| kv as f64).sum();
+        let sy: f64 = samples.iter().map(|&(_, c)| c as f64).sum();
+        let sxx: f64 = samples.iter().map(|&(kv, _)| (kv as f64) * (kv as f64)).sum();
+        let sxy: f64 = samples.iter().map(|&(kv, c)| kv as f64 * c as f64).sum();
+        let denom = n * sxx - sx * sx;
+        let slope = (n * sxy - sx * sy) / denom;
+        let base = (sy - slope * sx) / n;
+        if !(slope.is_finite() && base.is_finite()) || slope < 0.0 {
+            return None;
+        }
+        Some(ContextCurve { base_cycles: base, cycles_per_kv: slope })
+    }
+
+    /// Mean absolute percentage error of this curve over samples (the
+    /// same scoring rule as the per-class calibration MAPE; zero-cycle
+    /// samples are skipped).
+    pub fn mape_pct(&self, samples: &[(u32, u64)]) -> f64 {
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for &(kv, obs) in samples {
+            if obs == 0 {
+                continue;
+            }
+            sum += (self.step_cycles(kv) as f64 - obs as f64).abs() / obs as f64;
+            n += 1;
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f64 * 100.0
+        }
+    }
 }
 
 /// Warm-vs-cold dispatch price of one compiled artifact under the DAE
@@ -573,5 +657,37 @@ mod tests {
         let line = layer_latency_cycles(&g, op, &cfg, Format::Line);
         let depth = layer_latency_cycles(&g, op, &cfg, Format::Depth);
         assert!(depth < line, "line={line} depth={depth}");
+    }
+
+    #[test]
+    fn context_curve_fit_recovers_exact_line() {
+        // Samples on cycles = 1000 + 3·kv must fit back exactly.
+        let samples: Vec<(u32, u64)> =
+            [8u32, 16, 32, 64, 128].iter().map(|&kv| (kv, 1000 + 3 * kv as u64)).collect();
+        let curve = ContextCurve::fit(&samples).expect("clean line must fit");
+        assert!((curve.base_cycles - 1000.0).abs() < 1e-6, "base={}", curve.base_cycles);
+        assert!((curve.cycles_per_kv - 3.0).abs() < 1e-9, "slope={}", curve.cycles_per_kv);
+        for &(kv, obs) in &samples {
+            assert_eq!(curve.step_cycles(kv), obs);
+        }
+        assert_eq!(curve.mape_pct(&samples), 0.0);
+        // Monotone in kv: more context never predicts cheaper.
+        assert!(curve.step_cycles(256) > curve.step_cycles(128));
+        // The facade method is the same prediction.
+        let cfg = NeutronConfig::flagship_2tops();
+        assert_eq!(CostModel::uncalibrated(&cfg).decode_step_cycles(&curve, 64), curve.step_cycles(64));
+    }
+
+    #[test]
+    fn context_curve_rejects_degenerate_samples() {
+        // Under two samples, or all at one KV length: no fit.
+        assert!(ContextCurve::fit(&[]).is_none());
+        assert!(ContextCurve::fit(&[(16, 500)]).is_none());
+        assert!(ContextCurve::fit(&[(16, 500), (16, 700), (16, 900)]).is_none());
+        // Negative slope (cheaper at longer context) is corrupt data.
+        assert!(ContextCurve::fit(&[(8, 900), (64, 100)]).is_none());
+        // Prediction never rounds to zero cycles.
+        let flat = ContextCurve { base_cycles: 0.0, cycles_per_kv: 0.0 };
+        assert_eq!(flat.step_cycles(0), 1);
     }
 }

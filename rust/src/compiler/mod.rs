@@ -12,8 +12,8 @@ pub mod tiling;
 
 pub use allocation::{allocate, allocate_with, Allocation, Placement};
 pub use cost::{
-    calibrated_layer_latency_cycles, dispatch_cost, layer_latency_cycles, CostCalibration,
-    CostModel, DispatchCost, OpProfile,
+    calibrated_layer_latency_cycles, dispatch_cost, layer_latency_cycles, ContextCurve,
+    CostCalibration, CostModel, DispatchCost, OpProfile,
 };
 pub use format::{select_formats, select_formats_with, FormatPlan};
 pub use pipeline::{compile, Compiled, CompileOptions};

@@ -239,6 +239,128 @@ impl JobProgram {
     }
 }
 
+/// One KV-length bucket of a [`DecodeJob`]: the decode-step program
+/// compiled at `kv_len` context rows, plus the metadata the serving layer
+/// needs to price a step (which DMA jobs are the streamed KV cache, and
+/// what the compiler predicted the step would cost — the sample the
+/// context cost curve is fitted from).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DecodeBucket {
+    /// Context rows this bucket was compiled for; a step with
+    /// `kv <= kv_len` runs on this program.
+    pub kv_len: u32,
+    /// The emitted single-token step program.
+    pub program: JobProgram,
+    /// Tiles of the streamed KV-cache input tensors — the DMA jobs a
+    /// KV-resident sequence elides, exactly as weight residency elides
+    /// parameter-tile fetches.
+    pub kv_tiles: std::collections::HashSet<TileId>,
+    /// Compiler-predicted step cycles under the artifact's calibration —
+    /// joined against the observed tick service time by the context-curve
+    /// fit in `trace/validate.rs`.
+    pub predicted_cycles: u64,
+}
+
+impl DecodeBucket {
+    /// Counted datamover cycles of the bucket's KV-cache fetches: the
+    /// recompute-or-refetch price a preempted (evicted) sequence pays to
+    /// re-stream its context, and the cycles a KV-resident step saves.
+    pub fn kv_fetch_cycles(&self) -> u64 {
+        self.program
+            .jobs
+            .iter()
+            .filter_map(|j| match j {
+                Job::Dma { tile, kind, cycles, .. }
+                    if kind.uses_ddr()
+                        && !matches!(kind, TransferKind::Push)
+                        && self.kv_tiles.contains(tile) =>
+                {
+                    Some(*cycles)
+                }
+                _ => None,
+            })
+            .sum()
+    }
+
+    /// Bytes of KV cache the bucket streams from DDR, counting each KV
+    /// tile once at its largest transfer (a tile re-fetched across ticks
+    /// is still one resident footprint). This is the TCM footprint a
+    /// KV-resident sequence occupies.
+    pub fn kv_stream_bytes(&self) -> u64 {
+        let mut per_tile: std::collections::HashMap<TileId, u64> =
+            std::collections::HashMap::new();
+        for j in &self.program.jobs {
+            if let Job::Dma { tile, kind, bytes, .. } = j {
+                if kind.uses_ddr()
+                    && !matches!(kind, TransferKind::Push)
+                    && self.kv_tiles.contains(tile)
+                {
+                    let e = per_tile.entry(*tile).or_insert(0);
+                    *e = (*e).max(*bytes);
+                }
+            }
+        }
+        per_tile.values().sum()
+    }
+}
+
+/// The per-token executable form of an autoregressive model: the prefill
+/// program (prompt ingestion, produces the first token) plus decode-step
+/// programs bucketed by KV-cache length. Token `t` of a sequence whose
+/// context holds `kv` rows runs the smallest bucket with `kv_len >= kv`,
+/// so the per-token cost is a non-decreasing staircase over the true
+/// context-length cost curve — deterministic, and compiled only
+/// `O(log max_context)` times per model.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DecodeJob {
+    /// Model name (matches [`JobProgram::model`] of every program held).
+    pub model: String,
+    /// The prompt-ingestion program (the model's canonical prefill).
+    pub prefill: JobProgram,
+    /// Step buckets in strictly ascending `kv_len` order (non-empty).
+    pub buckets: Vec<DecodeBucket>,
+}
+
+impl DecodeJob {
+    /// Assemble and check the bucket invariants (non-empty, strictly
+    /// ascending KV lengths).
+    pub fn new(model: String, prefill: JobProgram, buckets: Vec<DecodeBucket>) -> Self {
+        assert!(!buckets.is_empty(), "a decode job needs at least one step bucket");
+        assert!(
+            buckets.windows(2).all(|w| w[0].kv_len < w[1].kv_len),
+            "decode buckets must be strictly ascending in kv_len"
+        );
+        Self { model, prefill, buckets }
+    }
+
+    /// The bucket serving a step over `kv` context rows: the smallest
+    /// bucket with `kv_len >= kv`, saturating at the largest bucket (the
+    /// serving layer clamps `kv` to `max_context` before asking).
+    pub fn bucket_for(&self, kv: u32) -> &DecodeBucket {
+        self.buckets
+            .iter()
+            .find(|b| b.kv_len >= kv)
+            .unwrap_or_else(|| self.buckets.last().expect("non-empty"))
+    }
+
+    /// Largest compiled context length.
+    pub fn max_kv(&self) -> u32 {
+        self.buckets.last().expect("non-empty").kv_len
+    }
+
+    /// `(kv_len, predicted, observed)` per bucket — the samples the
+    /// context cost curve is fitted from (observed = the bucket program's
+    /// full tick service time).
+    pub fn curve_samples(&self) -> Vec<(u32, u64, u64)> {
+        self.buckets
+            .iter()
+            .map(|b| {
+                (b.kv_len, b.predicted_cycles, b.program.service_cycles_where(|_| true))
+            })
+            .collect()
+    }
+}
+
 /// Lower a compiled artifact into the job program (backend code emission).
 pub fn emit(compiled: &crate::compiler::Compiled, model: &str) -> JobProgram {
     let mut jobs = Vec::new();
@@ -408,6 +530,55 @@ mod tests {
                 assert!(tiles.contains(&t));
             }
         }
+    }
+
+    #[test]
+    fn decode_job_buckets_resolve_by_kv_length() {
+        use std::collections::HashSet;
+        let bucket = |kv: u32, cycles: u64| DecodeBucket {
+            kv_len: kv,
+            program: JobProgram {
+                jobs: vec![
+                    Job::Dma {
+                        tile: TileId(7),
+                        kind: TransferKind::Fetch,
+                        bytes: 1,
+                        cycles,
+                    },
+                    Job::Barrier,
+                ],
+                model: "d".into(),
+            },
+            kv_tiles: HashSet::from([TileId(7)]),
+            predicted_cycles: cycles,
+        };
+        let job = DecodeJob::new(
+            "d".into(),
+            JobProgram::default(),
+            vec![bucket(16, 100), bucket(32, 180), bucket(64, 350)],
+        );
+        assert_eq!(job.max_kv(), 64);
+        assert_eq!(job.bucket_for(1).kv_len, 16);
+        assert_eq!(job.bucket_for(16).kv_len, 16);
+        assert_eq!(job.bucket_for(17).kv_len, 32);
+        // Saturates at the largest bucket when asked beyond it.
+        assert_eq!(job.bucket_for(1000).kv_len, 64);
+        // The KV fetch cycles are the counted DDR fetches of KV tiles.
+        assert_eq!(job.bucket_for(40).kv_fetch_cycles(), 350);
+        let samples = job.curve_samples();
+        assert_eq!(samples, vec![(16, 100, 100), (32, 180, 180), (64, 350, 350)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly ascending")]
+    fn decode_job_rejects_unsorted_buckets() {
+        let b = |kv: u32| DecodeBucket {
+            kv_len: kv,
+            program: JobProgram::default(),
+            kv_tiles: Default::default(),
+            predicted_cycles: 0,
+        };
+        DecodeJob::new("d".into(), JobProgram::default(), vec![b(32), b(16)]);
     }
 
     #[test]

@@ -8,5 +8,5 @@ pub mod jobs;
 pub mod metrics;
 
 pub use executor::{Executor, InferenceResult, ProgramRun, TickStats};
-pub use jobs::{emit, Job, JobProgram, PipelineProfile};
+pub use jobs::{emit, DecodeBucket, DecodeJob, Job, JobProgram, PipelineProfile};
 pub use metrics::Metrics;

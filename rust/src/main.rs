@@ -11,8 +11,14 @@
 //!             [--mean-gap-cycles G] [--queue-capacity C] [--policy reject-newest|drop-oldest]
 //!             [--max-batch B] [--dynamic-batch] [--age-after-cycles A] [--priority-mix R,S,B]
 //!             [--pipeline] [--residency] [--warm-routing] [--residency-capacity BYTES]
+//!             [--residency-quota BYTES] [--decode] [--prompt-tokens P] [--decode-tokens D]
+//!             [--max-context M] [--continuous-batch]
 //!             [--record FILE] [--calibration FILE] [--artifact-dir DIR]
 //!                                               multi-tenant serving simulation;
+//!                                               --decode switches to autoregressive
+//!                                               prefill+decode traffic (TTFT/TPOT in the
+//!                                               report), --continuous-batch admits new
+//!                                               sequences into running decode batches;
 //!                                               --artifact-dir warms the compile cache
 //!                                               from persistent .npu artifacts (and
 //!                                               saves what it had to compile cold)
@@ -22,7 +28,11 @@
 //!                                               report; --speed time-warps offered load,
 //!                                               --calibration recompiles under a fit)
 //!   validate  [FILE | --models a,b,c] [--save-calibration FILE]
-//!                                               predicted-vs-observed per-op-class calibration
+//!             [--decode-curve [--max-context M]]
+//!                                               predicted-vs-observed per-op-class calibration;
+//!                                               --decode-curve instead fits the per-token
+//!                                               context-length cost curve of each
+//!                                               decode-capable model's bucket ladder
 //!   tune      [--trace FILE | serve options] [--save-calibration FILE]
 //!                                               record → fit → recompile → replay loop
 //!   report    table1|table2|table3|table4|fig4|fig6|genai
@@ -44,8 +54,8 @@ use eiq_neutron::serve::{
 };
 use eiq_neutron::sim::{simulate, SimOptions};
 use eiq_neutron::trace::{
-    serve_recorded, tune_from_trace, CalibrationFile, ReplayDriver, ReplayOptions, Trace,
-    ValidationReport,
+    serve_recorded, tune_from_trace, CalibrationFile, DecodeCurveReport, ReplayDriver,
+    ReplayOptions, Trace, ValidationReport,
 };
 use eiq_neutron::util::cli::Args;
 use eiq_neutron::zoo::ModelId;
@@ -56,7 +66,13 @@ fn main() -> Result<()> {
         Some("list") => {
             for id in ModelId::all() {
                 let (gm, mp) = id.table_iv_reference();
-                println!("{:<22} {:>6.2} GMACs  {:>5.1} M params", id.display_name(), gm, mp);
+                let decode = if id.decode_config().is_some() { "  [decode]" } else { "" };
+                println!(
+                    "{:<22} {:>6.2} GMACs  {:>5.1} M params{decode}",
+                    id.display_name(),
+                    gm,
+                    mp
+                );
             }
             Ok(())
         }
@@ -80,8 +96,10 @@ fn main() -> Result<()> {
                  [--queue-capacity C] [--policy reject-newest|drop-oldest] \
                  [--max-batch B] [--dynamic-batch] [--age-after-cycles A] \
                  [--priority-mix R,S,B] [--pipeline] [--residency] [--warm-routing] \
-                 [--residency-capacity BYTES] [--record FILE] [--calibration FILE] \
-                 [--speed F] [--save-calibration FILE] [--trace FILE]"
+                 [--residency-capacity BYTES] [--residency-quota BYTES] [--decode] \
+                 [--prompt-tokens P] [--decode-tokens D] [--max-context M] \
+                 [--continuous-batch] [--record FILE] [--calibration FILE] \
+                 [--speed F] [--save-calibration FILE] [--trace FILE] [--decode-curve]"
             );
             Ok(())
         }
@@ -304,7 +322,7 @@ fn models_from(args: &Args) -> Result<Vec<ModelId>> {
 
 /// Every flag the `serve` / `record` experiment surface understands
 /// (`out` is `record`'s alternative to the positional trace path).
-const SERVE_KEYS: [&str; 17] = [
+const SERVE_KEYS: [&str; 23] = [
     "models",
     "requests",
     "mean-gap-cycles",
@@ -320,6 +338,12 @@ const SERVE_KEYS: [&str; 17] = [
     "residency",
     "warm-routing",
     "residency-capacity",
+    "residency-quota",
+    "decode",
+    "prompt-tokens",
+    "decode-tokens",
+    "max-context",
+    "continuous-batch",
     "record",
     "out",
 ];
@@ -397,12 +421,77 @@ fn serve_options_from(args: &Args, extra_keys: &[&str]) -> Result<ServeOptions> 
     if residency_capacity_bytes.is_some() && !weight_residency {
         bail!("contradictory knobs: --residency-capacity needs --residency");
     }
+    if args.flags.iter().any(|f| f == "residency-quota") {
+        bail!("--residency-quota wants a byte count");
+    }
+    let residency_quota_bytes = match args.opt_strict("residency-quota", 0u64).map_err(strict)? {
+        0 => None,
+        quota => Some(quota),
+    };
+    if residency_quota_bytes.is_some() && !weight_residency {
+        bail!(
+            "contradictory knobs: --residency-quota needs --residency \
+             (the quota caps per-owner TCM residency, which is off)"
+        );
+    }
+    if let (Some(quota), Some(cap)) = (residency_quota_bytes, residency_capacity_bytes) {
+        if quota > cap {
+            bail!(
+                "contradictory knobs: --residency-quota {quota} exceeds \
+                 --residency-capacity {cap} (a per-owner cap above the pool \
+                 size can never bind)"
+            );
+        }
+    }
+    let decode = args.has_flag("decode");
+    let continuous_batch = args.has_flag("continuous-batch");
+    if continuous_batch && !decode {
+        bail!(
+            "contradictory knobs: --continuous-batch needs --decode \
+             (single-shot inference has no decode rounds to join)"
+        );
+    }
+    for key in ["prompt-tokens", "decode-tokens", "max-context"] {
+        if args.flags.iter().any(|f| f == key) {
+            bail!("--{key} wants a token count");
+        }
+        if !decode && args.options.contains_key(key) {
+            bail!(
+                "contradictory knobs: --{key} needs --decode \
+                 (token counts only shape autoregressive traffic)"
+            );
+        }
+    }
+    let prompt_tokens = args.opt_strict_min("prompt-tokens", 8u32, 1).map_err(strict)?;
+    let decode_tokens = args.opt_strict_min("decode-tokens", 8u32, 1).map_err(strict)?;
+    let max_context = args.opt_strict_min("max-context", 32u32, 2).map_err(strict)?;
+    if decode {
+        if prompt_tokens.saturating_add(decode_tokens) > max_context {
+            bail!(
+                "contradictory knobs: --prompt-tokens {prompt_tokens} + \
+                 --decode-tokens {decode_tokens} exceeds --max-context {max_context}"
+            );
+        }
+        for &model in &models {
+            if model.decode_config().is_none() {
+                bail!(
+                    "--decode needs autoregressive models, but {} has no decode \
+                     configuration — try `neutron list` and pick [decode] entries",
+                    model.slug()
+                );
+            }
+        }
+    }
     Ok(ServeOptions {
         models,
         requests: args.opt_strict("requests", 200usize).map_err(strict)?,
         mean_gap_cycles,
         seed: args.opt_strict("seed", 7u64).map_err(strict)?,
         priority_mix: PriorityMix { realtime, standard, batch },
+        decode,
+        prompt_tokens,
+        decode_tokens,
+        max_context,
         scheduler: SchedulerOptions {
             instances: args.opt_strict_min("instances", 2usize, 1).map_err(strict)?,
             queue_capacity,
@@ -414,6 +503,8 @@ fn serve_options_from(args: &Args, extra_keys: &[&str]) -> Result<ServeOptions> 
             weight_residency,
             warm_routing,
             residency_capacity_bytes,
+            residency_quota_bytes,
+            continuous_batch,
         },
     })
 }
@@ -574,9 +665,15 @@ fn cmd_replay(args: &Args) -> Result<()> {
 }
 
 fn cmd_validate(args: &Args) -> Result<()> {
-    reject_unknown_keys(args, &["models", "save-calibration"])?;
-    require_value(args, &["models", "save-calibration"])?;
+    reject_unknown_keys(args, &["models", "save-calibration", "decode-curve", "max-context"])?;
+    require_value(args, &["models", "save-calibration", "max-context"])?;
     let cfg = NeutronConfig::flagship_2tops();
+    if args.has_flag("decode-curve") {
+        return cmd_validate_decode_curve(args, &cfg);
+    }
+    if args.options.contains_key("max-context") {
+        bail!("--max-context only shapes --decode-curve validation");
+    }
     let report = match args.positionals.first() {
         Some(path) => {
             if args.options.contains_key("models") {
@@ -594,6 +691,47 @@ fn cmd_validate(args: &Args) -> Result<()> {
     print!("{}", report.table());
     if let Some(path) = args.options.get("save-calibration") {
         save_calibration(path, &cfg, report.calibration_guarded())?;
+    }
+    Ok(())
+}
+
+/// `neutron validate --decode-curve`: compile each decode-capable model's
+/// bucket ladder and fit the linear context-length cost curve against the
+/// executor's observed per-step cycles — the decode analogue of the
+/// per-op-class calibration table.
+fn cmd_validate_decode_curve(args: &Args, cfg: &NeutronConfig) -> Result<()> {
+    if args.positionals.first().is_some() {
+        bail!(
+            "--decode-curve fits the compiled ladder directly, not a trace — \
+             pass --models (and optionally --max-context), no trace file"
+        );
+    }
+    if args.options.contains_key("save-calibration") {
+        bail!(
+            "--decode-curve fits a context-length curve, not a per-op-class \
+             calibration — --save-calibration does not apply"
+        );
+    }
+    let max_context = args.opt_strict_min("max-context", 32u32, 2).map_err(|e| anyhow!("{e}"))?;
+    // Without --models, sweep every decode-capable zoo entry; an explicit
+    // list must be decode-capable or the error names the offender.
+    let models: Vec<ModelId> = if args.options.contains_key("models") {
+        let models = models_from(args)?;
+        for &model in &models {
+            if model.decode_config().is_none() {
+                bail!(
+                    "--decode-curve needs autoregressive models, but {} has no decode \
+                     configuration — try `neutron list` and pick [decode] entries",
+                    model.slug()
+                );
+            }
+        }
+        models
+    } else {
+        ModelId::all().into_iter().filter(|m| m.decode_config().is_some()).collect()
+    };
+    for model in models {
+        print!("{}", DecodeCurveReport::from_model(model, max_context, cfg).table());
     }
     Ok(())
 }

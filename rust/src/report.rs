@@ -157,7 +157,7 @@ pub fn table4() {
     let mut t = Table::new(&[
         "Model", "GMACs (ours)", "GMACs (paper)", "MParams (ours)", "MParams (paper)",
     ]);
-    for id in ModelId::all() {
+    for id in ModelId::table_iv() {
         let g = id.build();
         let (gm_ref, mp_ref) = id.table_iv_reference();
         t.row(vec![

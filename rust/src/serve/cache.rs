@@ -14,11 +14,17 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::arch::NeutronConfig;
-use crate::compiler::{compile, CompileOptions, Compiled, CostCalibration};
-use crate::coordinator::{emit, JobProgram};
+use crate::compiler::{
+    calibrated_layer_latency_cycles, compile, CompileOptions, Compiled, CostCalibration,
+};
+use crate::coordinator::{emit, DecodeBucket, DecodeJob, JobProgram};
 use crate::cp::SearchConfig;
 use crate::ir::OpClass;
-use crate::zoo::ModelId;
+use crate::zoo::{decoder_decode_step, ModelId};
+
+/// Smallest decode KV-length bucket. The ladder doubles from here, so a
+/// `max_context` of `C` compiles `⌈log2(C/4)⌉ + 1` decode-step programs.
+pub const DECODE_BUCKET_MIN_KV: u32 = 4;
 
 /// FNV-1a over a sequence of 64-bit words — the one hash both
 /// fingerprints below share.
@@ -114,6 +120,12 @@ pub struct CompileCache {
     cfg: NeutronConfig,
     opts: CompileOptions,
     entries: HashMap<(ModelId, u64, u64), Arc<CachedModel>>,
+    /// Decode artifacts, keyed
+    /// `(model, max_context, config fp, calibration fp)` — one
+    /// [`DecodeJob`] covers every KV length up to its `max_context`
+    /// through its bucket ladder, so the KV length is *not* part of the
+    /// key.
+    decode_entries: HashMap<(ModelId, u32, u64, u64), Arc<DecodeJob>>,
     /// Lookups served from the cache.
     pub hits: u64,
     /// Lookups that ran a cold compile.
@@ -125,7 +137,14 @@ impl CompileCache {
     /// default (see [`CompileCache::get`]). `opts.calibration` is the
     /// cache's default calibration.
     pub fn new(cfg: NeutronConfig, opts: CompileOptions) -> Self {
-        Self { cfg, opts, entries: HashMap::new(), hits: 0, misses: 0 }
+        Self {
+            cfg,
+            opts,
+            entries: HashMap::new(),
+            decode_entries: HashMap::new(),
+            hits: 0,
+            misses: 0,
+        }
     }
 
     /// Serving default: deterministic solver budgets, identity
@@ -189,6 +208,100 @@ impl CompileCache {
         let entry = Arc::new(CachedModel { model, compiled, program });
         self.entries.insert(key, Arc::clone(&entry));
         entry
+    }
+
+    /// Resolve a model's autoregressive decode artifact: its prefill
+    /// program plus one compiled decode-step program per KV-length bucket
+    /// (powers of two from [`DECODE_BUCKET_MIN_KV`] up to the first
+    /// bucket ≥ `max_context`). Bucketing keeps the compile count
+    /// `O(log max_context)` while the per-bucket programs still price the
+    /// causal-attention and KV-streaming cost of their context length —
+    /// the KV caches are Input tensors of the decode-step graph, so their
+    /// DDR traffic is in the emitted program, not bolted on afterwards.
+    ///
+    /// Panics for models without a decode configuration (CNN classifiers)
+    /// and for `max_context == 0`; the CLI validates both before calling.
+    pub fn get_decode(&mut self, model: ModelId, max_context: u32) -> Arc<DecodeJob> {
+        assert!(max_context >= 1, "max_context must be at least 1");
+        let key = (
+            model,
+            max_context,
+            config_fingerprint(&self.cfg),
+            calibration_fingerprint(&self.opts.calibration),
+        );
+        if let Some(entry) = self.decode_entries.get(&key) {
+            self.hits += 1;
+            return Arc::clone(entry);
+        }
+        self.misses += 1;
+        let dcfg = model.decode_config().unwrap_or_else(|| {
+            panic!(
+                "model {} has no decode configuration (it is not an autoregressive model)",
+                model.slug()
+            )
+        });
+        // The prefill is the model's ordinary artifact (the zoo builds
+        // decode-capable models as their prefill graph), resolved through
+        // the regular entry map so prefill and single-shot serving share
+        // one compile.
+        let prefill = self.get(model).program.clone();
+        let mut buckets = Vec::new();
+        let mut kv_len = DECODE_BUCKET_MIN_KV;
+        loop {
+            buckets.push(self.build_decode_bucket(&dcfg, kv_len));
+            if kv_len >= max_context {
+                break;
+            }
+            kv_len = kv_len.saturating_mul(2);
+        }
+        let job = Arc::new(DecodeJob::new(model.slug().to_string(), prefill, buckets));
+        self.decode_entries.insert(key, Arc::clone(&job));
+        job
+    }
+
+    /// Compile one decode-step bucket: the step graph at `kv_len` cached
+    /// rows through the same deterministic mid-end as every other model,
+    /// plus the derived KV-tile set (the tiles of the `*.kcache` /
+    /// `*.vcache` Input tensors — the ones whose streaming a resident KV
+    /// cache elides) and the analytic calibrated cost prediction the
+    /// context-curve fit joins against.
+    fn build_decode_bucket(
+        &self,
+        dcfg: &crate::zoo::TransformerConfig,
+        kv_len: u32,
+    ) -> DecodeBucket {
+        let graph = decoder_decode_step(*dcfg, kv_len as usize);
+        let opts = CompileOptions {
+            calibration: self.opts.calibration.clone(),
+            warm_start: None,
+            ..self.opts.clone()
+        };
+        let compiled = compile(&graph, &self.cfg, &opts);
+        let program = emit(&compiled, &graph.name);
+        let kv_tiles = compiled
+            .program
+            .tiles
+            .iter()
+            .filter(|t| {
+                let name = &graph.tensors[t.tensor.0 as usize].name;
+                name.ends_with(".kcache") || name.ends_with(".vcache")
+            })
+            .map(|t| t.id)
+            .collect();
+        let predicted_cycles = graph
+            .ops
+            .iter()
+            .map(|op| {
+                calibrated_layer_latency_cycles(
+                    &graph,
+                    op,
+                    &self.cfg,
+                    compiled.formats.format_of(op.id),
+                    &compiled.calibration,
+                )
+            })
+            .sum();
+        DecodeBucket { kv_len, program, kv_tiles, predicted_cycles }
     }
 
     /// Nearest cached warm-start neighbor for a miss: same model and
@@ -344,6 +457,37 @@ mod tests {
         let via_default = calibrated_cache.get(ModelId::MobileNetV3Min);
         assert_eq!(via_default.compiled.calibration, cal);
         assert!(calibrated_cache.peek(ModelId::MobileNetV3Min).is_some());
+    }
+
+    #[test]
+    fn decode_job_bucket_ladder_covers_max_context_and_hits() {
+        let mut cache = CompileCache::for_serving(NeutronConfig::flagship_2tops());
+        let job = cache.get_decode(ModelId::GptTiny, 24);
+        // 4, 8, 16, 32: doubles until the last bucket covers max_context.
+        let kv: Vec<u32> = job.buckets.iter().map(|b| b.kv_len).collect();
+        assert_eq!(kv, vec![4, 8, 16, 32]);
+        assert!(job.max_kv() >= 24);
+        for b in &job.buckets {
+            assert!(!b.program.jobs.is_empty());
+            assert!(!b.kv_tiles.is_empty(), "kv={} bucket must stream KV tiles", b.kv_len);
+            assert!(b.predicted_cycles > 0);
+        }
+        // Larger contexts cost more: the ladder's analytic predictions
+        // are strictly increasing in KV length.
+        for w in job.buckets.windows(2) {
+            assert!(w[0].predicted_cycles < w[1].predicted_cycles);
+        }
+        assert!(!job.prefill.jobs.is_empty());
+        // Second resolve is a pure hit sharing the same Arc; the prefill
+        // compile counted as one extra miss on the ordinary entry map.
+        let again = cache.get_decode(ModelId::GptTiny, 24);
+        assert!(Arc::ptr_eq(&job, &again));
+        assert_eq!((cache.hits, cache.misses), (1, 2));
+        // A different max_context is a distinct artifact, but its prefill
+        // is now a hit.
+        let wider = cache.get_decode(ModelId::GptTiny, 64);
+        assert!(!Arc::ptr_eq(&job, &wider));
+        assert_eq!(wider.buckets.last().unwrap().kv_len, 64);
     }
 
     #[test]

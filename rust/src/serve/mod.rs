@@ -30,6 +30,28 @@
 //!   offered load vs. goodput, shed rate, latency percentiles, batching
 //!   activity, cache hit rate and utilization.
 //!
+//! ## Autoregressive GenAI serving
+//!
+//! A [`Request`] with `decode_tokens > 0` is a GenAI request: the model's
+//! prefill ingests its prompt (producing the first token — the TTFT
+//! anchor) and `decode_tokens − 1` single-token decode steps follow, each
+//! running the KV-length bucket of the model's
+//! [`crate::coordinator::DecodeJob`] that covers its growing context
+//! ([`CompileCache::get_decode`] compiles the `O(log max_context)` bucket
+//! ladder). KV caches are Input tensors of the decode-step graphs, so
+//! their DDR streaming is priced inside the emitted programs; with
+//! [`SchedulerOptions::weight_residency`] a sequence's cache can stay
+//! TCM-resident between steps ([`KV_OWNER_BASE`] owners in the same
+//! [`crate::arch::TcmResidency`] the weights use), eliding that streaming
+//! until capacity pressure evicts it — after which the sequence re-pays
+//! the stream as a preemption refetch.
+//! [`SchedulerOptions::continuous_batch`] switches decode from
+//! request-boundary scheduling (one sequence owns its instance from
+//! prefill to last token, cold program replay per step) to per-token
+//! rounds where sequences join at prefill end and the model's decode
+//! weights stay pinned while it has active sequences. TTFT, TPOT and
+//! tokens/s land in [`ServeReport`]; `docs/genai.md` is the guide.
+//!
 //! ## Virtual-clock contract
 //!
 //! All serving time lives on a shared **virtual clock** denominated in NPU
@@ -74,12 +96,12 @@ pub mod server;
 
 pub use cache::{
     calibration_fingerprint, calibration_l1_distance, config_fingerprint,
-    deterministic_compile_options, CachedModel, CompileCache,
+    deterministic_compile_options, CachedModel, CompileCache, DECODE_BUCKET_MIN_KV,
 };
 pub use queue::{
-    marginal_service_cycles, synthetic_trace, synthetic_trace_with_mix, Admission,
-    AdmissionPolicy, Completion, NpuInstance, Priority, PriorityMix, Request, Scheduler,
-    SchedulerOptions, MAX_MEAN_GAP_CYCLES,
+    marginal_service_cycles, synthetic_decode_trace, synthetic_trace, synthetic_trace_with_mix,
+    Admission, AdmissionPolicy, Completion, NpuInstance, Priority, PriorityMix, Request,
+    Scheduler, SchedulerOptions, KV_OWNER_BASE, MAX_MEAN_GAP_CYCLES,
 };
 pub use server::{
     report_from_outcome, run_trace, run_trace_recorded, serve, serve_with_cache,

@@ -228,6 +228,24 @@ pub struct SchedulerOptions {
     /// `None` charges against the config's full TCM size. Requires
     /// `weight_residency`.
     pub residency_capacity_bytes: Option<u64>,
+    /// Per-tenant (per-owner) residency quota in bytes: no single model's
+    /// weights — or single sequence's KV cache — may hold more than this
+    /// much TCM, with over-quota installs evicting the owner's own
+    /// lowest-value tiles first ([`TcmResidency::with_quota`]). `None`
+    /// lets any owner fill the whole capacity. Requires
+    /// `weight_residency`.
+    pub residency_quota_bytes: Option<u64>,
+    /// Continuous batching for decode requests: sequences join their
+    /// instance at prefill end and advance one token per round, with the
+    /// model's decode-step weights pinned on-chip for as long as it has
+    /// active sequences there — the first step of a model on an instance
+    /// pays its parameter streaming, every later step (same sequence or a
+    /// same-model follower) elides it (the batching marginal-cost rule
+    /// applied at token granularity). Off, a decode request occupies its
+    /// instance from prefill through last token and replays the bucket
+    /// program cold — re-paying parameter streaming — every step
+    /// (request-boundary scheduling).
+    pub continuous_batch: bool,
 }
 
 impl Default for SchedulerOptions {
@@ -246,6 +264,8 @@ impl Default for SchedulerOptions {
             weight_residency: false,
             warm_routing: false,
             residency_capacity_bytes: None,
+            residency_quota_bytes: None,
+            continuous_batch: false,
         }
     }
 }
@@ -271,10 +291,28 @@ impl SchedulerOptions {
             );
             assert!(cap >= 1, "residency capacity must be at least 1 byte (use None for the config TCM size)");
         }
+        if let Some(quota) = self.residency_quota_bytes {
+            assert!(
+                self.weight_residency,
+                "residency_quota_bytes requires weight_residency (there is no residency to cap)"
+            );
+            assert!(quota >= 1, "residency quota must be at least 1 byte (use None for no per-owner cap)");
+            if let Some(cap) = self.residency_capacity_bytes {
+                assert!(
+                    quota <= cap,
+                    "residency quota ({quota} bytes) exceeds the residency capacity ({cap} bytes)"
+                );
+            }
+        }
     }
 }
 
-/// One inference request on the virtual clock.
+/// One inference request on the virtual clock. A request with
+/// `decode_tokens > 0` is an autoregressive GenAI request: it runs its
+/// model's prefill over `prompt_tokens` prompt rows (producing the first
+/// token) and then `decode_tokens - 1` single-token decode steps over the
+/// growing KV cache. `decode_tokens == 0` is an ordinary single-shot
+/// inference — the PR-1 request, bit for bit.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Request {
     /// Caller-assigned id; [`synthetic_trace`] uses the trace index.
@@ -285,6 +323,40 @@ pub struct Request {
     pub priority: Priority,
     /// Arrival time in NPU core cycles on the shared virtual clock.
     pub arrival_cycles: u64,
+    /// Prompt length in tokens (decode requests only; 0 for single-shot
+    /// inference).
+    pub prompt_tokens: u32,
+    /// Total tokens to generate, counting the first token the prefill
+    /// produces. 0 marks a single-shot (non-decode) request.
+    pub decode_tokens: u32,
+}
+
+impl Request {
+    /// An ordinary single-shot inference request (no decode phase).
+    pub fn inference(id: u64, model: ModelId, priority: Priority, arrival_cycles: u64) -> Self {
+        Self { id, model, priority, arrival_cycles, prompt_tokens: 0, decode_tokens: 0 }
+    }
+
+    /// An autoregressive decode request: prefill `prompt_tokens` rows,
+    /// generate `decode_tokens` tokens total. Panics on zero counts — a
+    /// decode request needs a prompt and at least its first token.
+    pub fn decode(
+        id: u64,
+        model: ModelId,
+        priority: Priority,
+        arrival_cycles: u64,
+        prompt_tokens: u32,
+        decode_tokens: u32,
+    ) -> Self {
+        assert!(prompt_tokens >= 1, "a decode request needs at least one prompt token");
+        assert!(decode_tokens >= 1, "a decode request generates at least its first token");
+        Self { id, model, priority, arrival_cycles, prompt_tokens, decode_tokens }
+    }
+
+    /// Is this an autoregressive decode request?
+    pub fn is_decode(&self) -> bool {
+        self.decode_tokens > 0
+    }
 }
 
 /// Completion record: latency = queueing delay + service time.
@@ -316,7 +388,21 @@ pub struct Completion {
     /// were already resident in TCM
     /// ([`SchedulerOptions::weight_residency`]); 0 with residency off and
     /// for batch followers (whose marginal pricing already skips them).
+    /// For decode requests this also counts the KV-cache fetch cycles
+    /// elided by KV residency.
     pub residency_hit_cycles: u64,
+    /// When the request's first token became available. For a decode
+    /// request this is the prefill's finish (the TTFT anchor); for a
+    /// single-shot request it equals `finish_cycles`.
+    pub first_token_cycles: u64,
+    /// Tokens this completion produced: `decode_tokens` for a decode
+    /// request, 1 for a single-shot inference.
+    pub tokens: u32,
+    /// KV-cache fetch cycles a decode request re-paid because its cache
+    /// was evicted from TCM between steps (preemption refetch); 0 for
+    /// single-shot requests and with residency off (where every step
+    /// streams the cache and nothing counts as a *re*-fetch).
+    pub kv_refetch_cycles: u64,
 }
 
 impl Completion {
@@ -340,6 +426,31 @@ impl Completion {
     /// Did this request ride a batch as a follower?
     pub fn batched(&self) -> bool {
         self.batch_index > 0
+    }
+
+    /// Time to first token: arrival → first token available. Equals
+    /// `latency_cycles` for single-shot requests, so `TTFT ≤ latency`
+    /// holds universally.
+    pub fn ttft_cycles(&self) -> u64 {
+        self.first_token_cycles - self.arrival_cycles
+    }
+
+    /// Cycles spent in the decode phase (first token → finish); 0 for
+    /// single-shot requests.
+    pub fn decode_phase_cycles(&self) -> u64 {
+        self.finish_cycles - self.first_token_cycles
+    }
+
+    /// Mean time per output token over the decode phase, `None` for
+    /// completions that produced a single token (TPOT is undefined — no
+    /// inter-token gaps exist). By construction
+    /// `ttft + tpot·(tokens−1) = latency` exactly.
+    pub fn tpot_cycles(&self) -> Option<f64> {
+        if self.tokens <= 1 {
+            None
+        } else {
+            Some(self.decode_phase_cycles() as f64 / (self.tokens - 1) as f64)
+        }
     }
 }
 
@@ -389,7 +500,37 @@ pub fn synthetic_trace_with_mix(
             let model = *rng.choose(models);
             let priority = mix.pick(&mut rng);
             clock = clock.saturating_add(rng.int(0, gap_hi) as u64);
-            Request { id, model, priority, arrival_cycles: clock }
+            Request::inference(id, model, priority, clock)
+        })
+        .collect()
+}
+
+/// Deterministic synthetic *decode* trace: like [`synthetic_trace`], but
+/// every request is an autoregressive decode request with the given
+/// prompt and generation lengths (class [`Priority::Standard`]). The PRNG
+/// is consumed in the same fixed per-request order — model, gap — so the
+/// arrival skeleton is reproducible across runs and machines.
+pub fn synthetic_decode_trace(
+    models: &[ModelId],
+    requests: usize,
+    mean_gap_cycles: u64,
+    seed: u64,
+    prompt_tokens: u32,
+    decode_tokens: u32,
+) -> Vec<Request> {
+    assert!(!models.is_empty(), "trace needs at least one model");
+    assert!(
+        mean_gap_cycles <= MAX_MEAN_GAP_CYCLES,
+        "mean_gap_cycles {mean_gap_cycles} exceeds MAX_MEAN_GAP_CYCLES {MAX_MEAN_GAP_CYCLES}"
+    );
+    let gap_hi = (mean_gap_cycles * 2) as i64;
+    let mut rng = Rng::new(seed);
+    let mut clock = 0u64;
+    (0..requests as u64)
+        .map(|id| {
+            let model = *rng.choose(models);
+            clock = clock.saturating_add(rng.int(0, gap_hi) as u64);
+            Request::decode(id, model, Priority::Standard, clock, prompt_tokens, decode_tokens)
         })
         .collect()
 }
@@ -431,6 +572,24 @@ fn model_owner(model: ModelId) -> u64 {
         .expect("every ModelId appears in ModelId::all()") as u64
 }
 
+/// Residency owner ids at or above this value are per-sequence KV caches;
+/// below it they are per-model weight sets ([`model_owner`]). Keeping
+/// both in one [`TcmResidency`] makes weights and KV caches compete for
+/// the same TCM bytes under one deterministic eviction order — the
+/// capacity pressure Sec. VI describes.
+pub const KV_OWNER_BASE: u64 = 1 << 32;
+
+/// Residency owner id of a decode sequence's KV cache. Request ids at or
+/// above `KV_OWNER_BASE` would collide with other sequences' owners, so
+/// they are rejected loudly.
+fn kv_owner(request_id: u64) -> u64 {
+    assert!(
+        request_id < KV_OWNER_BASE,
+        "decode request id {request_id} too large for a KV residency owner"
+    );
+    KV_OWNER_BASE + request_id
+}
+
 /// Per-parameter-tile DMA footprint of a program, in first-appearance
 /// order: the capacity a residency install must charge (largest single
 /// transfer of the tile) and the datamover cycles a hit saves (all of
@@ -454,6 +613,27 @@ fn param_tile_stats(program: &JobProgram) -> Vec<(TileId, u64, u64)> {
     stats
 }
 
+/// One decode sequence resident on an instance under continuous
+/// batching: it joined at its prefill's end and advances one token per
+/// decode round until `tokens_done == decode_tokens`.
+struct ActiveSeq {
+    request: Request,
+    /// Tokens generated so far (≥ 1 once joined — the prefill produced
+    /// the first token).
+    tokens_done: u32,
+    first_token_cycles: u64,
+    start_cycles: u64,
+    /// Elided fetch cycles (weights at prefill + KV hits) accumulated
+    /// over the sequence's life; emitted on its completion record.
+    residency_hit_cycles: u64,
+    /// KV fetch cycles re-paid after an eviction (preemption refetch).
+    kv_refetch_cycles: u64,
+    /// Has this sequence's KV cache ever been installed in TCM? A miss
+    /// after a successful install is a preemption refetch, not a cold
+    /// start.
+    kv_installed: bool,
+}
+
 /// One virtual NPU instance: a re-entrant executor plus its position on
 /// the shared clock and (when enabled) its TCM weight-residency state.
 pub struct NpuInstance {
@@ -470,6 +650,16 @@ pub struct NpuInstance {
     /// Fetch-free tail window of the last solo dispatch (0 after a batch
     /// — the staggered follower replays make the window unreliable).
     last_tail_window_cycles: u64,
+    /// Decode sequences continuously batched on this instance, in join
+    /// order (empty unless [`SchedulerOptions::continuous_batch`]).
+    active: Vec<ActiveSeq>,
+    /// Models whose decode-step weights are currently pinned on this
+    /// instance: a model joins when its first continuous decode step pays
+    /// the parameter streaming and leaves when its last active sequence
+    /// completes. Every step while pinned elides the parameter fetches —
+    /// the mechanism by which continuous batching beats request-boundary
+    /// scheduling on both makespan and TPOT.
+    decode_warm: HashSet<ModelId>,
 }
 
 impl NpuInstance {
@@ -498,6 +688,11 @@ impl NpuInstance {
     /// [`SchedulerOptions::weight_residency`] is off).
     pub fn residency(&self) -> Option<&TcmResidency> {
         self.residency.as_ref()
+    }
+
+    /// Decode sequences currently continuously batched on this instance.
+    pub fn active_decode(&self) -> usize {
+        self.active.len()
     }
 }
 
@@ -542,12 +737,7 @@ struct Plan {
 /// let opts = SchedulerOptions { instances: 1, ..SchedulerOptions::default() };
 /// let mut scheduler = Scheduler::new(&cfg, &opts);
 /// for id in 0..3 {
-///     scheduler.admit(Request {
-///         id,
-///         model: ModelId::MobileNetV3Min,
-///         priority: Priority::Standard,
-///         arrival_cycles: 0,
-///     });
+///     scheduler.admit(Request::inference(id, ModelId::MobileNetV3Min, Priority::Standard, 0));
 /// }
 /// let mut completions = Vec::new();
 /// while let Some(model) = scheduler.next_model() {
@@ -569,6 +759,16 @@ pub struct Scheduler {
     skeletons: HashMap<ModelId, JobProgram>,
     warm_dispatches: u64,
     overlap_cycles_total: u64,
+    /// Decode artifacts by model, registered by the caller
+    /// ([`Scheduler::register_decode_job`]) before the first decode
+    /// request of that model dispatches.
+    decode_jobs: HashMap<ModelId, std::sync::Arc<crate::coordinator::DecodeJob>>,
+    /// KV-cache residency entries evicted from TCM (by weight installs or
+    /// other sequences' caches) — each one forces a preemption refetch.
+    kv_evictions: u64,
+    /// Tokens generated across all completed decode requests (single-shot
+    /// completions count 1 each).
+    tokens_generated: u64,
 }
 
 impl Scheduler {
@@ -586,11 +786,23 @@ impl Scheduler {
                     occupied_cycles: 0,
                     served: 0,
                     residency: opts.weight_residency.then(|| {
-                        TcmResidency::new(
-                            opts.residency_capacity_bytes.unwrap_or(cfg.tcm_bytes as u64),
-                        )
+                        let capacity =
+                            opts.residency_capacity_bytes.unwrap_or(cfg.tcm_bytes as u64);
+                        match opts.residency_quota_bytes {
+                            Some(quota) => {
+                                assert!(
+                                    quota <= capacity,
+                                    "residency quota ({quota} bytes) exceeds the TCM \
+                                     residency capacity ({capacity} bytes)"
+                                );
+                                TcmResidency::with_quota(capacity, quota)
+                            }
+                            None => TcmResidency::new(capacity),
+                        }
                     }),
                     last_tail_window_cycles: 0,
+                    active: Vec::new(),
+                    decode_warm: HashSet::new(),
                 })
                 .collect(),
             pending: Vec::new(),
@@ -599,7 +811,21 @@ impl Scheduler {
             skeletons: HashMap::new(),
             warm_dispatches: 0,
             overlap_cycles_total: 0,
+            decode_jobs: HashMap::new(),
+            kv_evictions: 0,
+            tokens_generated: 0,
         }
+    }
+
+    /// Register a model's decode artifact. Must be called (once per
+    /// model) before the first decode request of that model dispatches;
+    /// repeated registration replaces the artifact.
+    pub fn register_decode_job(
+        &mut self,
+        model: ModelId,
+        job: std::sync::Arc<crate::coordinator::DecodeJob>,
+    ) {
+        self.decode_jobs.insert(model, job);
     }
 
     /// Offer a request to the admission queue. When the queue is at
@@ -698,7 +924,11 @@ impl Scheduler {
             .min_by_key(|(_, q)| (self.effective_rank(&q.request, decision), q.seq))
             .map(|(i, _)| i)
             .expect("min_arrival guarantees at least one eligible request");
-        if !self.opts.warm_routing {
+        // Decode dispatches always take the earliest-idle instance: their
+        // cost structure (prefill + growing-context steps) is not the
+        // skeleton warm routing prices with, so warm routing does not
+        // apply to them.
+        if !self.opts.warm_routing || self.pending[pending_idx].request.is_decode() {
             return Some(Plan { pending_idx, instance_idx, start_cycles: decision });
         }
         let request = &self.pending[pending_idx].request;
@@ -778,12 +1008,20 @@ impl Scheduler {
              dispatch_next() (never admit between the two calls)"
         );
         let head = self.pending.remove(plan.pending_idx).request;
+        if head.is_decode() {
+            // Decode requests run through their registered DecodeJob (the
+            // passed `program` is the same prefill the job holds, resolved
+            // through the shared compile-cache entry).
+            return self.dispatch_decode(head, plan);
+        }
         let start = plan.start_cycles;
         let idx = plan.instance_idx;
 
         // Batching is a backlog optimization: coalesce only when no other
         // instance is idle at the start time (a free instance would serve
-        // a follower sooner than the batch's marginal tail).
+        // a follower sooner than the batch's marginal tail). Decode
+        // requests never ride as followers — their per-token service has
+        // nothing in common with the leader's single-shot replay.
         let others_busy = self
             .instances
             .iter()
@@ -800,6 +1038,7 @@ impl Scheduler {
                     q.request.model == head.model
                         && q.request.priority == head.priority
                         && q.request.arrival_cycles <= start
+                        && !q.request.is_decode()
                 })
                 .map(|(i, _)| i)
                 .take(batch_cap - 1)
@@ -810,36 +1049,7 @@ impl Scheduler {
             followers.reverse();
         }
 
-        // Weight-residency pre-pass: touch every parameter tile in this
-        // instance's TCM residency. Hits elide the tile's DMA jobs from
-        // the run (same rule batching uses for followers); misses install
-        // the tile, bank-rounded, evicting cold tiles as needed.
-        let mut skip_tiles: HashSet<TileId> = HashSet::new();
-        let mut residency_hit_cycles = 0u64;
-        if self.opts.weight_residency {
-            let owner = model_owner(model);
-            let stats = param_tile_stats(program);
-            let instance = &mut self.instances[idx];
-            let bank_bytes = instance.executor.config().bank_bytes() as u64;
-            let residency = instance
-                .residency
-                .as_mut()
-                .expect("weight_residency instances carry residency state");
-            let mut misses_here = 0usize;
-            for &(tile, bytes, cycles) in &stats {
-                if residency.touch(owner, tile.0) {
-                    skip_tiles.insert(tile);
-                    residency_hit_cycles += cycles;
-                } else {
-                    misses_here += 1;
-                    let rounded = bytes.div_ceil(bank_bytes).max(1) * bank_bytes;
-                    residency.install(owner, tile.0, rounded, cycles);
-                }
-            }
-            if !stats.is_empty() && misses_here == 0 {
-                self.warm_dispatches += 1;
-            }
-        }
+        let (skip_tiles, residency_hit_cycles) = self.weight_prepass(idx, model, program);
         let count_dma = |j: &Job| match j {
             Job::Dma { tile, .. } => !skip_tiles.contains(tile),
             _ => true,
@@ -881,6 +1091,9 @@ impl Scheduler {
             finish_cycles: finish,
             overlap_cycles: overlap,
             residency_hit_cycles,
+            first_token_cycles: finish,
+            tokens: 1,
+            kv_refetch_cycles: 0,
         });
         if !followers.is_empty() {
             // Followers replay the resident program: parameter fetches are
@@ -900,6 +1113,9 @@ impl Scheduler {
                     finish_cycles: finish,
                     overlap_cycles: 0,
                     residency_hit_cycles: 0,
+                    first_token_cycles: finish,
+                    tokens: 1,
+                    kv_refetch_cycles: 0,
                 });
             }
         }
@@ -917,6 +1133,344 @@ impl Scheduler {
         // once and utilization stays ≤ 1.
         instance.occupied_cycles += finish - start;
         instance.served += completions.len() as u64;
+        self.tokens_generated += completions.len() as u64;
+        completions
+    }
+
+    /// Weight-residency pre-pass for one dispatch: touch every parameter
+    /// tile of `program` in instance `idx`'s TCM residency. Hits elide
+    /// the tile's DMA jobs from the run (same rule batching uses for
+    /// followers); misses install the tile, bank-rounded, evicting
+    /// lowest-value tiles — weight or KV — as needed. Returns the tiles
+    /// the run skips and the datamover cycles those hits save; a no-op
+    /// `(∅, 0)` with residency off.
+    fn weight_prepass(
+        &mut self,
+        idx: usize,
+        model: ModelId,
+        program: &JobProgram,
+    ) -> (HashSet<TileId>, u64) {
+        let mut skip_tiles: HashSet<TileId> = HashSet::new();
+        let mut hit_cycles = 0u64;
+        if !self.opts.weight_residency {
+            return (skip_tiles, hit_cycles);
+        }
+        let owner = model_owner(model);
+        let stats = param_tile_stats(program);
+        let mut kv_victims = 0u64;
+        let instance = &mut self.instances[idx];
+        let bank_bytes = instance.executor.config().bank_bytes() as u64;
+        let residency = instance
+            .residency
+            .as_mut()
+            .expect("weight_residency instances carry residency state");
+        let mut misses_here = 0usize;
+        for &(tile, bytes, cycles) in &stats {
+            if residency.touch(owner, tile.0) {
+                skip_tiles.insert(tile);
+                hit_cycles += cycles;
+            } else {
+                misses_here += 1;
+                let rounded = bytes.div_ceil(bank_bytes).max(1) * bank_bytes;
+                if let Some(victims) = residency.install_evicting(owner, tile.0, rounded, cycles)
+                {
+                    kv_victims +=
+                        victims.iter().filter(|v| v.owner >= KV_OWNER_BASE).count() as u64;
+                }
+            }
+        }
+        if !stats.is_empty() && misses_here == 0 {
+            self.warm_dispatches += 1;
+        }
+        self.kv_evictions += kv_victims;
+        (skip_tiles, hit_cycles)
+    }
+
+    /// The registered decode artifact of `model`; panics when the caller
+    /// dispatched a decode request without registering one first.
+    fn decode_job(&self, model: ModelId) -> std::sync::Arc<crate::coordinator::DecodeJob> {
+        std::sync::Arc::clone(self.decode_jobs.get(&model).unwrap_or_else(|| {
+            panic!(
+                "no decode job registered for model {model:?} \
+                 (call Scheduler::register_decode_job before dispatching decode requests)"
+            )
+        }))
+    }
+
+    /// Free a finished (or abandoned) sequence's KV-cache bytes. Frees
+    /// are not evictions: the sequence is done with its cache.
+    fn release_kv(&mut self, idx: usize, request_id: u64) {
+        if let Some(residency) = self.instances[idx].residency.as_mut() {
+            residency.release_owner(kv_owner(request_id));
+        }
+    }
+
+    /// Price one decode step of `request` over `bucket` on instance
+    /// `idx`. KV residency decides whether the step's KV-cache streaming
+    /// is paid or elided; `pay_params` whether its parameter fetches are
+    /// paid (the first sequence of a model per continuous round pays,
+    /// same-model followers elide — request-boundary scheduling always
+    /// pays). Returns `(step cycles, elided KV cycles, refetched KV
+    /// cycles)`.
+    fn decode_step_cost(
+        &mut self,
+        idx: usize,
+        request: &Request,
+        bucket: &crate::coordinator::DecodeBucket,
+        pay_params: bool,
+        kv_installed: &mut bool,
+    ) -> (u64, u64, u64) {
+        let mut pay_kv = true;
+        let mut hit_cycles = 0u64;
+        let mut refetch_cycles = 0u64;
+        let mut kv_victims = 0u64;
+        if self.opts.weight_residency {
+            let owner = kv_owner(request.id);
+            let instance = &mut self.instances[idx];
+            let bank_bytes = instance.executor.config().bank_bytes() as u64;
+            let residency = instance
+                .residency
+                .as_mut()
+                .expect("weight_residency instances carry residency state");
+            let needed = bucket.kv_stream_bytes().div_ceil(bank_bytes).max(1) * bank_bytes;
+            let resident = residency.touch(owner, 0);
+            if resident && residency.owner_bytes(owner) >= needed {
+                // The whole cache (at this bucket's footprint) is in TCM:
+                // the step elides its KV streaming entirely.
+                pay_kv = false;
+                hit_cycles = bucket.kv_fetch_cycles();
+            } else {
+                // Cold, evicted between steps (preemption), or grown past
+                // its resident footprint: stream the cache and (re)install
+                // it at the bucket's size. A miss after a successful
+                // install is the preemption-refetch price.
+                if !resident && *kv_installed {
+                    refetch_cycles = bucket.kv_fetch_cycles();
+                }
+                residency.release_owner(owner);
+                if let Some(victims) =
+                    residency.install_evicting(owner, 0, needed, bucket.kv_fetch_cycles())
+                {
+                    kv_victims +=
+                        victims.iter().filter(|v| v.owner >= KV_OWNER_BASE).count() as u64;
+                    *kv_installed = true;
+                }
+            }
+        }
+        self.kv_evictions += kv_victims;
+        let param_tiles = bucket.program.param_tiles();
+        let cost = bucket.program.service_cycles_where(|j| match j {
+            Job::Dma { tile, .. } => {
+                if bucket.kv_tiles.contains(tile) {
+                    pay_kv
+                } else if param_tiles.contains(tile) {
+                    pay_params
+                } else {
+                    true
+                }
+            }
+            _ => true,
+        });
+        (cost.max(1), hit_cycles, refetch_cycles)
+    }
+
+    /// Dispatch a decode request: run its prefill as a solo dispatch
+    /// (weight residency applies; pipelining, warm routing and batching
+    /// do not), then either run the whole decode phase immediately
+    /// (request-boundary scheduling) or join the instance's active set to
+    /// advance one token per round (continuous batching, see
+    /// [`Scheduler::advance_decode`]).
+    fn dispatch_decode(&mut self, head: Request, plan: Plan) -> Vec<Completion> {
+        let job = self.decode_job(head.model);
+        let idx = plan.instance_idx;
+        let start = plan.start_cycles;
+        let (skip_tiles, prefill_hit_cycles) = self.weight_prepass(idx, head.model, &job.prefill);
+        let count_dma = |j: &Job| match j {
+            Job::Dma { tile, .. } => !skip_tiles.contains(tile),
+            _ => true,
+        };
+        let result = self.instances[idx]
+            .executor
+            .run_program_where(&job.prefill, count_dma, None)
+            .expect("sim-only dispatch cannot fail");
+        let first_token = start + result.sim_cycles;
+        let complete = |finish: u64, hits: u64, refetch: u64| Completion {
+            id: head.id,
+            model: head.model,
+            priority: head.priority,
+            instance: idx,
+            batch_index: 0,
+            arrival_cycles: head.arrival_cycles,
+            start_cycles: start,
+            finish_cycles: finish,
+            overlap_cycles: 0,
+            residency_hit_cycles: hits,
+            first_token_cycles: first_token,
+            tokens: head.decode_tokens,
+            kv_refetch_cycles: refetch,
+        };
+        if !self.opts.continuous_batch {
+            // Request-boundary scheduling: the sequence owns the instance
+            // from prefill through its last token, and every step re-pays
+            // the decode-step parameter streaming.
+            let mut now = first_token;
+            let mut hit_cycles = prefill_hit_cycles;
+            let mut kv_refetch = 0u64;
+            let mut kv_installed = false;
+            for step in 1..head.decode_tokens {
+                let kv_ctx = head.prompt_tokens.saturating_add(step - 1).clamp(1, job.max_kv());
+                let bucket = job.bucket_for(kv_ctx);
+                let (cost, hit, refetch) =
+                    self.decode_step_cost(idx, &head, bucket, true, &mut kv_installed);
+                now += cost;
+                hit_cycles += hit;
+                kv_refetch += refetch;
+            }
+            self.release_kv(idx, head.id);
+            let instance = &mut self.instances[idx];
+            instance.last_tail_window_cycles = 0;
+            instance.busy_until_cycles = now;
+            instance.occupied_cycles += now - start;
+            instance.served += 1;
+            self.tokens_generated += head.decode_tokens as u64;
+            return vec![complete(now, hit_cycles, kv_refetch)];
+        }
+        // Continuous batching: the instance is only committed through the
+        // prefill; the sequence joins the active set and advances with
+        // the instance's next rounds.
+        {
+            let instance = &mut self.instances[idx];
+            instance.last_tail_window_cycles = 0;
+            instance.busy_until_cycles = first_token;
+            instance.occupied_cycles += first_token - start;
+        }
+        if head.decode_tokens == 1 {
+            // Prefill-only request: the first token is the last.
+            self.release_kv(idx, head.id);
+            self.instances[idx].served += 1;
+            self.tokens_generated += 1;
+            return vec![complete(first_token, prefill_hit_cycles, 0)];
+        }
+        self.instances[idx].active.push(ActiveSeq {
+            request: head,
+            tokens_done: 1,
+            first_token_cycles: first_token,
+            start_cycles: start,
+            residency_hit_cycles: prefill_hit_cycles,
+            kv_refetch_cycles: 0,
+            kv_installed: false,
+        });
+        Vec::new()
+    }
+
+    /// Advance every active sequence on instance `idx` by one token, in
+    /// join order. The first step of a model on the instance pays its
+    /// decode-step parameter streaming and pins the weights
+    /// ([`NpuInstance::decode_warm`]); every later step of the model —
+    /// same sequence or a same-model follower — elides it until the
+    /// model's last active sequence completes. That amortization across
+    /// steps *and* sequences is what request-boundary scheduling (a cold
+    /// bucket-program replay per step) never gets. Steps run back to
+    /// back, so finishes stagger deterministically.
+    fn run_one_round(&mut self, idx: usize) -> Vec<Completion> {
+        let round_start = self.instances[idx].busy_until_cycles;
+        let mut now = round_start;
+        let mut completions = Vec::new();
+        for i in 0..self.instances[idx].active.len() {
+            let (request, tokens_done, mut kv_installed) = {
+                let s = &self.instances[idx].active[i];
+                (s.request, s.tokens_done, s.kv_installed)
+            };
+            let job = self.decode_job(request.model);
+            let kv_ctx =
+                request.prompt_tokens.saturating_add(tokens_done - 1).clamp(1, job.max_kv());
+            let bucket = job.bucket_for(kv_ctx);
+            let pay_params = self.instances[idx].decode_warm.insert(request.model);
+            let (cost, hit, refetch) =
+                self.decode_step_cost(idx, &request, bucket, pay_params, &mut kv_installed);
+            now += cost;
+            let s = &mut self.instances[idx].active[i];
+            s.tokens_done += 1;
+            s.kv_installed = kv_installed;
+            s.residency_hit_cycles += hit;
+            s.kv_refetch_cycles += refetch;
+            if s.tokens_done == s.request.decode_tokens {
+                completions.push(Completion {
+                    id: request.id,
+                    model: request.model,
+                    priority: request.priority,
+                    instance: idx,
+                    batch_index: 0,
+                    arrival_cycles: request.arrival_cycles,
+                    start_cycles: s.start_cycles,
+                    finish_cycles: now,
+                    overlap_cycles: 0,
+                    residency_hit_cycles: s.residency_hit_cycles,
+                    first_token_cycles: s.first_token_cycles,
+                    tokens: request.decode_tokens,
+                    kv_refetch_cycles: s.kv_refetch_cycles,
+                });
+            }
+        }
+        for c in &completions {
+            self.release_kv(idx, c.id);
+        }
+        let instance = &mut self.instances[idx];
+        instance.active.retain(|s| s.tokens_done < s.request.decode_tokens);
+        // A model's weights stay pinned only while it has active
+        // sequences; afterwards its TCM space is up for grabs again.
+        let still_active: HashSet<ModelId> =
+            instance.active.iter().map(|s| s.request.model).collect();
+        instance.decode_warm.retain(|m| still_active.contains(m));
+        instance.busy_until_cycles = now;
+        instance.occupied_cycles += now - round_start;
+        instance.served += completions.len() as u64;
+        self.tokens_generated += completions.iter().map(|c| c.tokens as u64).sum::<u64>();
+        completions
+    }
+
+    /// Does any instance still hold unfinished continuously-batched
+    /// decode sequences?
+    pub fn has_active_decode(&self) -> bool {
+        self.instances.iter().any(|i| !i.active.is_empty())
+    }
+
+    /// Start time of the earliest pending decode round: the smallest
+    /// `busy_until` among instances with active sequences.
+    pub fn next_decode_round_start(&self) -> Option<u64> {
+        self.instances
+            .iter()
+            .filter(|i| !i.active.is_empty())
+            .map(|i| i.busy_until_cycles)
+            .min()
+    }
+
+    /// Start time of the next planned dispatch, if any (the event loop
+    /// orders decode rounds against dispatches with this).
+    pub fn next_start_cycles(&self) -> Option<u64> {
+        self.plan().map(|p| p.start_cycles)
+    }
+
+    /// Run the earliest due decode round — the instance with active
+    /// sequences and the smallest `(busy_until, id)` — when it starts at
+    /// or before `horizon_cycles`. `None` when no round is due; `Some`
+    /// with the round's completions (possibly empty) otherwise.
+    pub fn advance_decode(&mut self, horizon_cycles: u64) -> Option<Vec<Completion>> {
+        let idx = self
+            .instances
+            .iter()
+            .filter(|i| !i.active.is_empty() && i.busy_until_cycles <= horizon_cycles)
+            .min_by_key(|i| (i.busy_until_cycles, i.id))
+            .map(|i| i.id)?;
+        Some(self.run_one_round(idx))
+    }
+
+    /// Run decode rounds to exhaustion (end-of-trace drain).
+    pub fn drain_decode(&mut self) -> Vec<Completion> {
+        let mut completions = Vec::new();
+        while let Some(mut batch) = self.advance_decode(u64::MAX) {
+            completions.append(&mut batch);
+        }
         completions
     }
 
@@ -957,6 +1511,19 @@ impl Scheduler {
             .filter_map(|i| i.residency.as_ref())
             .map(|r| r.evictions())
             .sum()
+    }
+
+    /// KV-cache residency entries evicted from TCM by competing installs
+    /// (weights or other sequences' caches) — each forces the victim
+    /// sequence to re-stream its context (preemption refetch).
+    pub fn kv_evictions(&self) -> u64 {
+        self.kv_evictions
+    }
+
+    /// Tokens generated across all completions: `decode_tokens` per
+    /// decode request, 1 per single-shot inference.
+    pub fn tokens_generated(&self) -> u64 {
+        self.tokens_generated
     }
 
     /// Clock cycle when the last instance goes idle (0 if nothing ran).
@@ -1032,7 +1599,7 @@ mod tests {
     }
 
     fn request(id: u64, priority: Priority, arrival: u64) -> Request {
-        Request { id, model: ModelId::MobileNetV1, priority, arrival_cycles: arrival }
+        Request::inference(id, ModelId::MobileNetV1, priority, arrival)
     }
 
     fn fifo_opts(instances: usize) -> SchedulerOptions {
@@ -1387,12 +1954,7 @@ mod tests {
         let mut s = Scheduler::new(&cfg, &opts);
         let p = weighted_program();
         s.admit(request(0, Priority::Standard, 0));
-        s.admit(Request {
-            id: 1,
-            model: ModelId::MobileNetV2,
-            priority: Priority::Standard,
-            arrival_cycles: 0,
-        });
+        s.admit(Request::inference(1, ModelId::MobileNetV2, Priority::Standard, 0));
         s.admit(request(2, Priority::Batch, 0));
         s.admit(request(3, Priority::Standard, 0));
         let batch = s.dispatch_next(ModelId::MobileNetV1, &p);
@@ -1561,12 +2123,7 @@ mod tests {
             let p = weighted_program();
             for id in 0..4 {
                 let model = if id % 2 == 0 { ModelId::MobileNetV1 } else { ModelId::MobileNetV2 };
-                s.admit(Request {
-                    id,
-                    model,
-                    priority: Priority::Standard,
-                    arrival_cycles: 0,
-                });
+                s.admit(Request::inference(id, model, Priority::Standard, 0));
             }
             while let Some(model) = s.next_model() {
                 s.dispatch_next(model, &p);
@@ -1582,6 +2139,246 @@ mod tests {
         assert_eq!(evictions, 3);
         assert_eq!(entries.len(), 1);
         assert_eq!(run(), (hits, misses, evictions, entries));
+    }
+
+    /// Toy decode bucket: a 600-cycle parameter prologue tick, then a
+    /// compute tick where a 500-cycle step races `100·kv` cycles of KV
+    /// streaming. Full step = `600 + max(500, 100·kv)`; params elided =
+    /// `max(500, 100·kv)`; KV elided = `600 + 500`.
+    fn decode_bucket(kv_len: u32) -> crate::coordinator::DecodeBucket {
+        let kv_cycles = 100 * kv_len as u64;
+        let program = JobProgram {
+            jobs: vec![
+                Job::Dma {
+                    tile: TileId(9),
+                    kind: TransferKind::Fetch,
+                    bytes: 4_096,
+                    cycles: 600,
+                },
+                Job::Barrier,
+                Job::Dma {
+                    tile: TileId(7),
+                    kind: TransferKind::Fetch,
+                    bytes: 64 * kv_len as u64,
+                    cycles: kv_cycles,
+                },
+                Job::Compute {
+                    op: OpId(0),
+                    out_tile: TileId(0),
+                    in_tiles: vec![TileId(7)],
+                    param_tile: Some(TileId(9)),
+                    format: Format::Depth,
+                    cycles: 500,
+                },
+                Job::Barrier,
+            ],
+            model: "toy-decode".to_string(),
+        };
+        crate::coordinator::DecodeBucket {
+            kv_len,
+            program,
+            kv_tiles: [TileId(7)].into_iter().collect(),
+            predicted_cycles: 600 + 500u64.max(kv_cycles),
+        }
+    }
+
+    /// Prefill = [`weighted_program`] (1600 cycles cold), buckets at KV
+    /// 4 / 8 / 16.
+    fn toy_decode_job() -> std::sync::Arc<crate::coordinator::DecodeJob> {
+        std::sync::Arc::new(crate::coordinator::DecodeJob::new(
+            "toy-decode".to_string(),
+            weighted_program(),
+            vec![decode_bucket(4), decode_bucket(8), decode_bucket(16)],
+        ))
+    }
+
+    fn decode_request(id: u64, arrival: u64, prompt: u32, tokens: u32) -> Request {
+        Request::decode(id, ModelId::MobileNetV1, Priority::Standard, arrival, prompt, tokens)
+    }
+
+    #[test]
+    fn request_boundary_decode_prices_prefill_and_bucketed_steps() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let mut s = Scheduler::new(&cfg, &fifo_opts(1));
+        s.register_decode_job(ModelId::MobileNetV1, toy_decode_job());
+        s.admit(decode_request(0, 0, 4, 3));
+        assert_eq!(s.next_model(), Some(ModelId::MobileNetV1));
+        let done = s.dispatch_next(ModelId::MobileNetV1, &weighted_program());
+        assert_eq!(done.len(), 1);
+        let c = done[0];
+        // Prefill 1600, then step 1 over kv=4 (bucket 4: 600+500) and
+        // step 2 over kv=5 (bucket 8: 600+800) — every step pays params.
+        assert_eq!(c.first_token_cycles, 1_600);
+        assert_eq!(c.finish_cycles, 1_600 + 1_100 + 1_400);
+        assert_eq!(c.tokens, 3);
+        assert_eq!(c.ttft_cycles(), 1_600);
+        assert_eq!(c.decode_phase_cycles(), 2_500);
+        assert_eq!(c.tpot_cycles(), Some(1_250.0));
+        // The TTFT/TPOT decomposition reconciles exactly with latency.
+        assert_eq!(
+            c.ttft_cycles() + (c.tpot_cycles().unwrap() * (c.tokens - 1) as f64) as u64,
+            c.latency_cycles()
+        );
+        assert_eq!(s.makespan_cycles(), 4_100);
+        assert_eq!(s.tokens_generated(), 3);
+        assert!(!s.has_active_decode());
+        assert_eq!(s.instances()[0].busy_cycles(), 4_100);
+    }
+
+    #[test]
+    fn continuous_batching_amortizes_decode_weights_across_steps() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let run = |continuous: bool| {
+            let opts = SchedulerOptions {
+                instances: 1,
+                continuous_batch: continuous,
+                ..SchedulerOptions::default()
+            };
+            let mut s = Scheduler::new(&cfg, &opts);
+            s.register_decode_job(ModelId::MobileNetV1, toy_decode_job());
+            s.admit(decode_request(0, 0, 4, 3));
+            let mut done = s.dispatch_next(ModelId::MobileNetV1, &weighted_program());
+            done.extend(s.drain_decode());
+            (done, s.makespan_cycles())
+        };
+        let (rb, rb_makespan) = run(false);
+        let (cont, cont_makespan) = run(true);
+        assert_eq!(rb_makespan, 4_100);
+        // Continuous: the first step pays the decode weights (1100) and
+        // pins them; the second elides them (800 at bucket 8).
+        assert_eq!(cont[0].first_token_cycles, 1_600);
+        assert_eq!(cont_makespan, 1_600 + 1_100 + 800);
+        assert!(cont_makespan < rb_makespan);
+        // Same TTFT, strictly better TPOT.
+        assert_eq!(cont[0].ttft_cycles(), rb[0].ttft_cycles());
+        assert!(cont[0].tpot_cycles().unwrap() < rb[0].tpot_cycles().unwrap());
+    }
+
+    #[test]
+    fn continuous_batching_shares_weights_across_sequences() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let run = |continuous: bool| {
+            let opts = SchedulerOptions {
+                instances: 1,
+                continuous_batch: continuous,
+                ..SchedulerOptions::default()
+            };
+            let mut s = Scheduler::new(&cfg, &opts);
+            s.register_decode_job(ModelId::MobileNetV1, toy_decode_job());
+            s.admit(decode_request(0, 0, 4, 3));
+            s.admit(decode_request(1, 0, 4, 3));
+            let mut done = Vec::new();
+            while let Some(model) = s.next_model() {
+                done.extend(s.dispatch_next(model, &weighted_program()));
+            }
+            done.extend(s.drain_decode());
+            (done, s.makespan_cycles())
+        };
+        let (_, rb_makespan) = run(false);
+        let (cont, cont_makespan) = run(true);
+        // Request-boundary serializes the two sequences: 2 × 4100.
+        assert_eq!(rb_makespan, 8_200);
+        // Continuous: prefills at 0–1600 and 1600–3200, then round 1
+        // (leader pays 1100, follower elides to 500) and round 2 (both
+        // elide: 800 + 800).
+        assert_eq!(cont_makespan, 3_200 + 1_100 + 500 + 800 + 800);
+        assert!(cont_makespan < rb_makespan);
+        assert_eq!(cont.len(), 2);
+        assert_eq!(cont[0].id, 0);
+        assert_eq!(cont[0].finish_cycles, 3_200 + 1_100 + 500 + 800);
+        assert_eq!(cont[1].finish_cycles, cont_makespan);
+        // Sequence 1's first token came from its own prefill, not a round.
+        assert_eq!(cont[1].first_token_cycles, 3_200);
+        assert_eq!(s_tokens(&cont), 6);
+    }
+
+    fn s_tokens(completions: &[Completion]) -> u64 {
+        completions.iter().map(|c| c.tokens as u64).sum()
+    }
+
+    #[test]
+    fn kv_residency_elides_repeat_kv_streaming() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let opts = SchedulerOptions {
+            instances: 1,
+            weight_residency: true,
+            ..SchedulerOptions::default()
+        };
+        let mut s = Scheduler::new(&cfg, &opts);
+        s.register_decode_job(ModelId::MobileNetV1, toy_decode_job());
+        s.admit(decode_request(0, 0, 4, 4));
+        let done = s.dispatch_next(ModelId::MobileNetV1, &weighted_program());
+        let c = done[0];
+        // Step 1 (kv=4) streams and installs the cache; steps 2 and 3
+        // (kv=5, 6 → bucket 8, same 1-bank footprint) hit and elide their
+        // 800-cycle KV fetches, running at 600 + 500 instead of 600 + 800.
+        assert_eq!(c.finish_cycles, 1_600 + 1_100 + 1_100 + 1_100);
+        assert_eq!(c.residency_hit_cycles, 1_600);
+        assert_eq!(c.kv_refetch_cycles, 0);
+        assert_eq!(s.kv_evictions(), 0);
+        // The sequence released its cache at completion; only the prefill
+        // weight tile remains resident.
+        let res = s.instances()[0].residency().unwrap();
+        assert_eq!(res.len(), 1);
+        assert!(res.is_resident(model_owner(ModelId::MobileNetV1), 9));
+    }
+
+    #[test]
+    fn kv_preemption_under_capacity_pressure_is_paid_and_counted() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let run = || {
+            let opts = SchedulerOptions {
+                instances: 1,
+                weight_residency: true,
+                continuous_batch: true,
+                // One bank: the two sequences' KV caches (and the weight
+                // tile) cannot coexist, so every step evicts something.
+                residency_capacity_bytes: Some(cfg.bank_bytes() as u64),
+                ..SchedulerOptions::default()
+            };
+            let mut s = Scheduler::new(&cfg, &opts);
+            s.register_decode_job(ModelId::MobileNetV1, toy_decode_job());
+            s.admit(decode_request(0, 0, 4, 3));
+            s.admit(decode_request(1, 0, 4, 3));
+            let mut done = Vec::new();
+            while let Some(model) = s.next_model() {
+                done.extend(s.dispatch_next(model, &weighted_program()));
+            }
+            done.extend(s.drain_decode());
+            (done, s.kv_evictions())
+        };
+        let (done, kv_evictions) = run();
+        // Round 1: sequence 0 installs its cache (evicting the weight
+        // tile — not a KV eviction), then sequence 1's install evicts it.
+        // Round 2: each sequence's install evicts the other's cache and
+        // re-pays its 800-cycle KV stream as a preemption refetch.
+        assert_eq!(kv_evictions, 3);
+        assert_eq!(done[0].kv_refetch_cycles, 800);
+        assert_eq!(done[1].kv_refetch_cycles, 800);
+        // Deterministic replay: same trace, same counters, same records.
+        assert_eq!(run(), (done, kv_evictions));
+    }
+
+    #[test]
+    fn decode_requests_do_not_ride_single_shot_batches() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let opts = SchedulerOptions {
+            instances: 1,
+            max_batch: 8,
+            ..SchedulerOptions::default()
+        };
+        let mut s = Scheduler::new(&cfg, &opts);
+        s.register_decode_job(ModelId::MobileNetV1, toy_decode_job());
+        s.admit(request(0, Priority::Standard, 0));
+        s.admit(decode_request(1, 0, 4, 2));
+        s.admit(request(2, Priority::Standard, 0));
+        let batch = s.dispatch_next(ModelId::MobileNetV1, &weighted_program());
+        // The decode request must not be absorbed as a follower of the
+        // single-shot batch.
+        assert_eq!(batch.iter().map(|c| c.id).collect::<Vec<_>>(), vec![0, 2]);
+        let decode = s.dispatch_next(ModelId::MobileNetV1, &weighted_program());
+        assert_eq!(decode[0].id, 1);
+        assert_eq!(decode[0].tokens, 2);
     }
 
     #[test]

@@ -12,8 +12,8 @@ use crate::zoo::ModelId;
 
 use super::cache::CompileCache;
 use super::queue::{
-    synthetic_trace_with_mix, Completion, Priority, PriorityMix, Request, Scheduler,
-    SchedulerOptions,
+    synthetic_decode_trace, synthetic_trace_with_mix, Completion, Priority, PriorityMix,
+    Request, Scheduler, SchedulerOptions,
 };
 
 /// Serving scenario parameters: the trace shape plus the scheduler knobs.
@@ -31,6 +31,20 @@ pub struct ServeOptions {
     pub priority_mix: PriorityMix,
     /// Admission, priority and batching configuration.
     pub scheduler: SchedulerOptions,
+    /// Generate an autoregressive decode trace instead of single-shot
+    /// inference requests: every request prefills `prompt_tokens` and
+    /// generates `decode_tokens` tokens. Every model in `models` must be
+    /// decode-capable ([`ModelId::decode_config`]).
+    pub decode: bool,
+    /// Prompt length per decode request, tokens (decode traces only).
+    pub prompt_tokens: u32,
+    /// Tokens generated per decode request, counting the prefill's first
+    /// token (decode traces only).
+    pub decode_tokens: u32,
+    /// Context-length budget per sequence: `prompt_tokens + decode_tokens`
+    /// must fit (validated before the trace is generated). The compiled
+    /// bucket ladder covers the KV lengths the trace actually reaches.
+    pub max_context: u32,
 }
 
 impl Default for ServeOptions {
@@ -48,6 +62,10 @@ impl Default for ServeOptions {
             seed: 7,
             priority_mix: PriorityMix::default(),
             scheduler: SchedulerOptions::default(),
+            decode: false,
+            prompt_tokens: 8,
+            decode_tokens: 8,
+            max_context: 32,
         }
     }
 }
@@ -110,6 +128,13 @@ pub struct TraceOutcome {
     /// Head-fetch cycles hidden inside predecessors' fetch-free tails by
     /// intra-instance pipelining (0 with pipelining off).
     pub overlap_cycles: u64,
+    /// KV-cache residency entries evicted by other tenants' installs
+    /// (capacity preemption; 0 without decode requests or with residency
+    /// off).
+    pub kv_evictions: u64,
+    /// Tokens generated: `decode_tokens` per decode request, 1 per
+    /// single-shot inference.
+    pub tokens_generated: u64,
 }
 
 /// Aggregate serving report. Fully determined by `(config, options)`: no
@@ -168,6 +193,27 @@ pub struct ServeReport {
     /// Head-fetch cycles hidden by intra-instance pipelining (0 with
     /// pipelining off).
     pub overlap_cycles: u64,
+    /// Completed decode (GenAI) requests; 0 in single-shot traces.
+    pub decode_requests: u64,
+    /// Tokens generated across all completions: `decode_tokens` per
+    /// decode request, 1 per single-shot inference.
+    pub tokens_generated: u64,
+    /// Median time-to-first-token over completed decode requests,
+    /// milliseconds (arrival → prefill finish; 0 without decode
+    /// requests).
+    pub ttft_p50_ms: f64,
+    /// 99th-percentile time-to-first-token, milliseconds.
+    pub ttft_p99_ms: f64,
+    /// Mean time-per-output-token over completions that generated at
+    /// least 2 tokens, milliseconds: decode-phase span divided by
+    /// `tokens − 1`, averaged per request.
+    pub tpot_mean_ms: f64,
+    /// Generation throughput: tokens generated per second of makespan.
+    pub tokens_per_s: f64,
+    /// KV-cache residency entries evicted by other installs (capacity
+    /// preemption; each forces the victim sequence to re-pay its cache
+    /// stream).
+    pub kv_evictions: u64,
     /// Per-model statistics, in the caller's model order.
     pub per_model: Vec<ModelStats>,
     /// Per-priority-class statistics, highest class first (always all
@@ -276,6 +322,21 @@ impl ServeReport {
                 c.mean_latency_ms,
                 c.p99_ms,
                 c.p999_ms
+            )
+            .unwrap();
+        }
+        if self.decode_requests > 0 {
+            writeln!(
+                s,
+                "genai:        {} decode request(s), {} token(s) at {:.1} tok/s  \
+                 TTFT p50 {:.3} ms p99 {:.3} ms  TPOT mean {:.3} ms  {} KV eviction(s)",
+                self.decode_requests,
+                self.tokens_generated,
+                self.tokens_per_s,
+                self.ttft_p50_ms,
+                self.ttft_p99_ms,
+                self.tpot_mean_ms,
+                self.kv_evictions
             )
             .unwrap();
         }
@@ -394,27 +455,43 @@ pub fn run_trace_recorded(
         "trace arrivals must be non-decreasing"
     );
     let mut scheduler = Scheduler::new(cfg, scheduler_opts);
+    // Resolve the decode-bucket ladder for every decode-capable model the
+    // trace touches before any event runs. The ladder covers the largest
+    // context the trace actually reaches (prompt + generated tokens), in
+    // first-occurrence order so compile order — and therefore the recorded
+    // trace bytes — stays deterministic.
+    let mut decode_models: Vec<(ModelId, u32)> = Vec::new();
+    for r in trace.iter().filter(|r| r.is_decode()) {
+        let need = r.prompt_tokens.saturating_add(r.decode_tokens);
+        match decode_models.iter_mut().find(|(m, _)| *m == r.model) {
+            Some((_, max_ctx)) => *max_ctx = (*max_ctx).max(need),
+            None => decode_models.push((r.model, need)),
+        }
+    }
+    for &(model, max_ctx) in &decode_models {
+        let job = cache.get_decode(model, max_ctx);
+        if let Some(rec) = recorder.as_deref_mut() {
+            let entry = cache.get(model);
+            rec.record_model_profile(cfg, &entry);
+        }
+        scheduler.register_decode_job(model, job);
+    }
     let mut completions = Vec::with_capacity(trace.len());
     for &request in trace {
-        while let Some(model) = scheduler.next_model_before(request.arrival_cycles) {
-            let entry = cache.get(model);
-            if let Some(rec) = recorder.as_deref_mut() {
-                rec.record_model_profile(cfg, &entry);
-            }
-            completions.extend(scheduler.dispatch_next(model, &entry.program));
-        }
+        run_due_events(
+            cfg,
+            &mut scheduler,
+            cache,
+            &mut recorder,
+            &mut completions,
+            request.arrival_cycles,
+        );
         if let Some(rec) = recorder.as_deref_mut() {
             rec.record_request(&request);
         }
         scheduler.admit(request);
     }
-    while let Some(model) = scheduler.next_model() {
-        let entry = cache.get(model);
-        if let Some(rec) = recorder.as_deref_mut() {
-            rec.record_model_profile(cfg, &entry);
-        }
-        completions.extend(scheduler.dispatch_next(model, &entry.program));
-    }
+    run_due_events(cfg, &mut scheduler, cache, &mut recorder, &mut completions, u64::MAX);
     let outcome = TraceOutcome {
         completions,
         shed: scheduler.shed().to_vec(),
@@ -424,11 +501,50 @@ pub fn run_trace_recorded(
         residency_evictions: scheduler.residency_evictions(),
         warm_dispatches: scheduler.warm_dispatches(),
         overlap_cycles: scheduler.overlap_cycles(),
+        kv_evictions: scheduler.kv_evictions(),
+        tokens_generated: scheduler.tokens_generated(),
     };
     if let Some(rec) = recorder {
         rec.record_outcome(&outcome);
     }
     outcome
+}
+
+/// Run every service event due at or before `horizon_cycles`: decode
+/// rounds (continuous batching) and queue dispatches, whichever starts
+/// earlier, with decode rounds winning ties so in-flight sequences make
+/// progress before new work lands on their instance. Called with an
+/// arrival's timestamp between admissions and with `u64::MAX` to drain.
+fn run_due_events(
+    cfg: &NeutronConfig,
+    scheduler: &mut Scheduler,
+    cache: &mut CompileCache,
+    recorder: &mut Option<&mut TraceRecorder>,
+    completions: &mut Vec<Completion>,
+    horizon_cycles: u64,
+) {
+    loop {
+        let round = scheduler.next_decode_round_start().filter(|&t| t <= horizon_cycles);
+        let dispatch = scheduler.next_start_cycles().filter(|&t| t <= horizon_cycles);
+        match (round, dispatch) {
+            (None, None) => break,
+            (Some(r), d) if d.map_or(true, |d| r <= d) => {
+                if let Some(batch) = scheduler.advance_decode(horizon_cycles) {
+                    completions.extend(batch);
+                }
+            }
+            _ => {
+                let model = scheduler
+                    .next_model_before(horizon_cycles)
+                    .expect("a dispatch due by the horizon must resolve a model");
+                let entry = cache.get(model);
+                if let Some(rec) = recorder.as_deref_mut() {
+                    rec.record_model_profile(cfg, &entry);
+                }
+                completions.extend(scheduler.dispatch_next(model, &entry.program));
+            }
+        }
+    }
 }
 
 /// Serve a synthetic multi-tenant trace with a caller-owned cache (reuse
@@ -454,13 +570,41 @@ pub fn serve_with_cache_recorded(
 ) -> ServeReport {
     assert!(!opts.models.is_empty(), "serving needs at least one model");
     let (hits0, misses0) = (cache.hits, cache.misses);
-    let trace = synthetic_trace_with_mix(
-        &opts.models,
-        opts.requests,
-        opts.mean_gap_cycles,
-        opts.seed,
-        &opts.priority_mix,
-    );
+    let trace = if opts.decode {
+        assert!(opts.prompt_tokens >= 1, "decode serving needs a prompt of at least 1 token");
+        assert!(opts.decode_tokens >= 1, "decode serving generates at least 1 token");
+        assert!(
+            opts.prompt_tokens.saturating_add(opts.decode_tokens) <= opts.max_context,
+            "prompt_tokens ({}) + decode_tokens ({}) exceeds max_context ({})",
+            opts.prompt_tokens,
+            opts.decode_tokens,
+            opts.max_context
+        );
+        for &model in &opts.models {
+            assert!(
+                model.decode_config().is_some(),
+                "model {} has no decode configuration (decode serving needs autoregressive \
+                 models)",
+                model.slug()
+            );
+        }
+        synthetic_decode_trace(
+            &opts.models,
+            opts.requests,
+            opts.mean_gap_cycles,
+            opts.seed,
+            opts.prompt_tokens,
+            opts.decode_tokens,
+        )
+    } else {
+        synthetic_trace_with_mix(
+            &opts.models,
+            opts.requests,
+            opts.mean_gap_cycles,
+            opts.seed,
+            &opts.priority_mix,
+        )
+    };
     let outcome = run_trace_recorded(cfg, &trace, &opts.scheduler, cache, recorder);
     report_from_outcome(
         cfg,
@@ -524,6 +668,31 @@ pub fn report_from_outcome(
     };
     let batched_requests = completions.iter().filter(|c| c.batch_index > 0).count() as u64;
     let batches = completions.iter().filter(|c| c.batch_index == 1).count() as u64;
+
+    // Token metrics. TTFT percentiles cover decode requests only (a
+    // single-shot request's "first token" is just its latency and would
+    // pollute the distribution); TPOT averages over completions that
+    // actually decoded (tokens ≥ 2).
+    let decode_ids: std::collections::HashSet<u64> =
+        trace.iter().filter(|r| r.is_decode()).map(|r| r.id).collect();
+    let mut ttfts: Vec<u64> = completions
+        .iter()
+        .filter(|c| decode_ids.contains(&c.id))
+        .map(|c| c.ttft_cycles())
+        .collect();
+    ttfts.sort_unstable();
+    let decode_requests = ttfts.len() as u64;
+    let tpots: Vec<f64> = completions.iter().filter_map(|c| c.tpot_cycles()).collect();
+    let tpot_mean_cycles = if tpots.is_empty() {
+        0.0
+    } else {
+        tpots.iter().sum::<f64>() / tpots.len() as f64
+    };
+    let tokens_per_s = if makespan == 0 {
+        0.0
+    } else {
+        outcome.tokens_generated as f64 * freq * 1e9 / makespan as f64
+    };
 
     // Per-model stats in the caller's model order (first occurrence wins,
     // so duplicate entries in `models` stay deterministic).
@@ -606,6 +775,13 @@ pub fn report_from_outcome(
         residency_evictions: outcome.residency_evictions,
         warm_dispatches: outcome.warm_dispatches,
         overlap_cycles: outcome.overlap_cycles,
+        decode_requests,
+        tokens_generated: outcome.tokens_generated,
+        ttft_p50_ms: cycles_to_ms(percentile(&ttfts, 0.50) as f64, freq),
+        ttft_p99_ms: cycles_to_ms(percentile(&ttfts, 0.99) as f64, freq),
+        tpot_mean_ms: cycles_to_ms(tpot_mean_cycles, freq),
+        tokens_per_s,
+        kv_evictions: outcome.kv_evictions,
         per_model,
         per_class,
         per_instance_busy_cycles: outcome.per_instance_busy_cycles.clone(),
@@ -680,6 +856,7 @@ mod tests {
             seed: 3,
             priority_mix: PriorityMix::standard_only(),
             scheduler: SchedulerOptions { instances: 1, ..SchedulerOptions::default() },
+            ..ServeOptions::default()
         };
         let mut cache = CompileCache::for_serving(cfg.clone());
         let unbounded = serve_with_cache(&cfg, &base, &mut cache);
@@ -706,6 +883,78 @@ mod tests {
         assert!(r.makespan_cycles <= unbounded.makespan_cycles);
         let s = r.summary();
         assert!(s.contains("shed") && s.contains("goodput"));
+    }
+
+    #[test]
+    fn decode_serve_reports_token_metrics_and_is_deterministic() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let opts = ServeOptions {
+            models: vec![ModelId::GptTiny],
+            requests: 6,
+            mean_gap_cycles: 200_000,
+            seed: 5,
+            scheduler: SchedulerOptions { instances: 1, ..SchedulerOptions::default() },
+            decode: true,
+            prompt_tokens: 6,
+            decode_tokens: 5,
+            max_context: 16,
+            ..ServeOptions::default()
+        };
+        let a = serve(&cfg, &opts);
+        assert_eq!(a.offered, 6);
+        assert_eq!(a.completed, 6);
+        assert_eq!(a.decode_requests, 6);
+        assert_eq!(a.tokens_generated, 6 * 5);
+        assert!(a.tokens_per_s > 0.0);
+        assert!(a.ttft_p50_ms > 0.0);
+        assert!(a.ttft_p50_ms <= a.ttft_p99_ms);
+        // Per-request TTFT ≤ latency, so the sorted distributions dominate
+        // pointwise and every TTFT percentile bounds its latency peer.
+        assert!(a.ttft_p99_ms <= a.p99_ms);
+        assert!(a.tpot_mean_ms > 0.0);
+        assert!(a.summary().contains("genai:"));
+
+        // Same options, fresh cache: bit-identical report.
+        let b = serve(&cfg, &opts);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn continuous_batching_improves_decode_makespan_and_tpot() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let base = ServeOptions {
+            models: vec![ModelId::GptTiny],
+            requests: 8,
+            mean_gap_cycles: 50_000,
+            seed: 9,
+            scheduler: SchedulerOptions { instances: 1, ..SchedulerOptions::default() },
+            decode: true,
+            prompt_tokens: 4,
+            decode_tokens: 6,
+            max_context: 16,
+            ..ServeOptions::default()
+        };
+        let mut cache = CompileCache::for_serving(cfg.clone());
+        let rb = serve_with_cache(&cfg, &base, &mut cache);
+        let cont = ServeOptions {
+            scheduler: SchedulerOptions {
+                instances: 1,
+                continuous_batch: true,
+                ..SchedulerOptions::default()
+            },
+            ..base.clone()
+        };
+        let cb = serve_with_cache(&cfg, &cont, &mut cache);
+        assert_eq!(cb.completed, rb.completed);
+        assert_eq!(cb.tokens_generated, rb.tokens_generated);
+        // Pinned decode weights elide per-step parameter streaming, so
+        // continuous batching strictly beats request-boundary replay on
+        // both throughput and per-token latency.
+        assert!(cb.makespan_cycles < rb.makespan_cycles);
+        assert!(cb.tpot_mean_ms < rb.tpot_mean_ms);
+        // Earlier finishes free the instance sooner, so queueing — and
+        // with it TTFT — never regresses.
+        assert!(cb.ttft_p50_ms <= rb.ttft_p50_ms);
     }
 
     #[test]

@@ -43,7 +43,15 @@ use crate::zoo::ModelId;
 ///   gain `overlap_cycles` and `residency_hit_cycles`. Version-1 files
 ///   are rejected (their completions cannot carry the per-request
 ///   overlap/residency attribution a v2 reader reports).
-pub const TRACE_FORMAT_VERSION: u64 = 2;
+/// - **3** — autoregressive GenAI serving (PR 8): the header gains the
+///   `continuous_batch` and `residency_quota_bytes` scheduler knobs,
+///   request records gain `prompt_tokens` / `decode_tokens` (0/0 for
+///   single-shot inference), and completion records gain
+///   `first_token_cycles`, `tokens` and `kv_refetch_cycles` — the fields
+///   TTFT/TPOT reporting and decode replay reconcile against. Version-2
+///   files are rejected (their completions cannot distinguish a prefill
+///   from a full decode).
+pub const TRACE_FORMAT_VERSION: u64 = 3;
 
 /// The format name stamped into (and required from) every header.
 pub const TRACE_FORMAT_NAME: &str = "eiq-neutron-trace";
@@ -567,6 +575,12 @@ impl Trace {
                 "residency_capacity_bytes".into(),
                 Json::UInt(m.scheduler.residency_capacity_bytes.unwrap_or(0)),
             ),
+            // 0 encodes "no per-owner cap", the CLI convention.
+            (
+                "residency_quota_bytes".into(),
+                Json::UInt(m.scheduler.residency_quota_bytes.unwrap_or(0)),
+            ),
+            ("continuous_batch".into(), Json::Bool(m.scheduler.continuous_batch)),
         ])
     }
 
@@ -681,6 +695,8 @@ fn parse_header(j: &Json) -> Result<TraceMeta> {
             "weight_residency",
             "warm_routing",
             "residency_capacity_bytes",
+            "residency_quota_bytes",
+            "continuous_batch",
         ],
     )?;
     let format = str_field(j, "format")?;
@@ -742,6 +758,22 @@ fn parse_header(j: &Json) -> Result<TraceMeta> {
     if residency_capacity_bytes.is_some() && !weight_residency {
         bail!("header sets residency_capacity_bytes without weight_residency");
     }
+    let residency_quota_bytes = match u64_field(j, "residency_quota_bytes")? {
+        0 => None,
+        quota => Some(quota),
+    };
+    if residency_quota_bytes.is_some() && !weight_residency {
+        bail!("header sets residency_quota_bytes without weight_residency");
+    }
+    if let (Some(quota), Some(cap)) = (residency_quota_bytes, residency_capacity_bytes) {
+        if quota > cap {
+            bail!(
+                "header residency_quota_bytes ({quota}) exceeds residency_capacity_bytes \
+                 ({cap})"
+            );
+        }
+    }
+    let continuous_batch = bool_field("continuous_batch")?;
     Ok(TraceMeta {
         version,
         config_fingerprint: u64_field(j, "config_fingerprint")?,
@@ -762,6 +794,8 @@ fn parse_header(j: &Json) -> Result<TraceMeta> {
             weight_residency,
             warm_routing,
             residency_capacity_bytes,
+            residency_quota_bytes,
+            continuous_batch,
         },
     })
 }
@@ -773,16 +807,34 @@ fn request_json(r: &Request) -> Json {
         ("model".into(), Json::Str(r.model.slug().into())),
         ("class".into(), Json::Str(r.priority.display_name().into())),
         ("arrival_cycles".into(), Json::UInt(r.arrival_cycles)),
+        ("prompt_tokens".into(), Json::UInt(r.prompt_tokens as u64)),
+        ("decode_tokens".into(), Json::UInt(r.decode_tokens as u64)),
     ])
 }
 
+fn u32_field(j: &Json, key: &str) -> Result<u32> {
+    u32::try_from(u64_field(j, key)?).map_err(|_| anyhow!("field {key:?} out of range"))
+}
+
 fn parse_request(j: &Json) -> Result<Request> {
-    reject_unknown_fields(j, &["event", "id", "model", "class", "arrival_cycles"])?;
+    reject_unknown_fields(
+        j,
+        &["event", "id", "model", "class", "arrival_cycles", "prompt_tokens", "decode_tokens"],
+    )?;
+    let prompt_tokens = u32_field(j, "prompt_tokens")?;
+    let decode_tokens = u32_field(j, "decode_tokens")?;
+    // 0/0 is a single-shot inference; a decode request needs both.
+    if (decode_tokens > 0) != (prompt_tokens > 0) {
+        bail!("request has prompt_tokens {prompt_tokens} but decode_tokens {decode_tokens} (a \
+               decode request needs both, single-shot inference neither)");
+    }
     Ok(Request {
         id: u64_field(j, "id")?,
         model: model_field(j, "model")?,
         priority: class_field(j, "class")?,
         arrival_cycles: u64_field(j, "arrival_cycles")?,
+        prompt_tokens,
+        decode_tokens,
     })
 }
 
@@ -799,6 +851,9 @@ fn completion_json(c: &Completion) -> Json {
         ("finish_cycles".into(), Json::UInt(c.finish_cycles)),
         ("overlap_cycles".into(), Json::UInt(c.overlap_cycles)),
         ("residency_hit_cycles".into(), Json::UInt(c.residency_hit_cycles)),
+        ("first_token_cycles".into(), Json::UInt(c.first_token_cycles)),
+        ("tokens".into(), Json::UInt(c.tokens as u64)),
+        ("kv_refetch_cycles".into(), Json::UInt(c.kv_refetch_cycles)),
     ])
 }
 
@@ -817,20 +872,35 @@ fn parse_completion(j: &Json) -> Result<Completion> {
             "finish_cycles",
             "overlap_cycles",
             "residency_hit_cycles",
+            "first_token_cycles",
+            "tokens",
+            "kv_refetch_cycles",
         ],
     )?;
+    let first_token_cycles = u64_field(j, "first_token_cycles")?;
+    let finish_cycles = u64_field(j, "finish_cycles")?;
+    if first_token_cycles > finish_cycles {
+        bail!("completion first_token_cycles ({first_token_cycles}) exceeds finish_cycles \
+               ({finish_cycles})");
+    }
+    let tokens = u32_field(j, "tokens")?;
+    if tokens == 0 {
+        bail!("completion produced 0 tokens (single-shot inference counts as 1)");
+    }
     Ok(Completion {
         id: u64_field(j, "id")?,
         model: model_field(j, "model")?,
         priority: class_field(j, "class")?,
         instance: u64_field(j, "instance")? as usize,
-        batch_index: u32::try_from(u64_field(j, "batch_index")?)
-            .map_err(|_| anyhow!("batch_index out of range"))?,
+        batch_index: u32_field(j, "batch_index")?,
         arrival_cycles: u64_field(j, "arrival_cycles")?,
         start_cycles: u64_field(j, "start_cycles")?,
-        finish_cycles: u64_field(j, "finish_cycles")?,
+        finish_cycles,
         overlap_cycles: u64_field(j, "overlap_cycles")?,
         residency_hit_cycles: u64_field(j, "residency_hit_cycles")?,
+        first_token_cycles,
+        tokens,
+        kv_refetch_cycles: u64_field(j, "kv_refetch_cycles")?,
     })
 }
 
@@ -971,21 +1041,21 @@ mod tests {
     #[test]
     fn version_mismatch_is_rejected() {
         let t = tiny_trace();
-        let jsonl = t.to_jsonl().replace("\"version\":2", "\"version\":99");
+        let jsonl = t.to_jsonl().replace("\"version\":3", "\"version\":99");
         let err = Trace::parse(&jsonl).unwrap_err().to_string();
         assert!(err.contains("version 99"), "{err}");
     }
 
     #[test]
-    fn old_version_1_is_rejected_naming_both_versions() {
-        // A v1 file (completions lack the overlap/residency fields) must
+    fn old_version_2_is_rejected_naming_both_versions() {
+        // A v2 file (completions lack the first-token/decode fields) must
         // be refused with an error naming the file's version and ours.
         let t = tiny_trace();
-        let jsonl = t.to_jsonl().replace("\"version\":2", "\"version\":1");
+        let jsonl = t.to_jsonl().replace("\"version\":3", "\"version\":2");
         let err = Trace::parse(&jsonl).unwrap_err().to_string();
         assert!(
-            err.contains("unsupported trace format version 1")
-                && err.contains("version 2"),
+            err.contains("unsupported trace format version 2")
+                && err.contains("version 3"),
             "{err}"
         );
     }
@@ -1015,25 +1085,57 @@ mod tests {
                 models: vec![ModelId::MobileNetV1],
                 scheduler: SchedulerOptions::default(),
             },
-            requests: vec![Request {
-                id: 0,
-                model: ModelId::MobileNetV1,
-                priority: Priority::Standard,
-                arrival_cycles: 5,
-            }],
+            requests: vec![
+                Request {
+                    id: 0,
+                    model: ModelId::MobileNetV1,
+                    priority: Priority::Standard,
+                    arrival_cycles: 5,
+                    prompt_tokens: 0,
+                    decode_tokens: 0,
+                },
+                Request {
+                    id: 1,
+                    model: ModelId::MobileNetV1,
+                    priority: Priority::Standard,
+                    arrival_cycles: 9,
+                    prompt_tokens: 4,
+                    decode_tokens: 3,
+                },
+            ],
             shed_ids: vec![],
-            completions: vec![Completion {
-                id: 0,
-                model: ModelId::MobileNetV1,
-                priority: Priority::Standard,
-                instance: 0,
-                batch_index: 0,
-                arrival_cycles: 5,
-                start_cycles: 5,
-                finish_cycles: 105,
-                overlap_cycles: 3,
-                residency_hit_cycles: 11,
-            }],
+            completions: vec![
+                Completion {
+                    id: 0,
+                    model: ModelId::MobileNetV1,
+                    priority: Priority::Standard,
+                    instance: 0,
+                    batch_index: 0,
+                    arrival_cycles: 5,
+                    start_cycles: 5,
+                    finish_cycles: 105,
+                    overlap_cycles: 3,
+                    residency_hit_cycles: 11,
+                    first_token_cycles: 105,
+                    tokens: 1,
+                    kv_refetch_cycles: 0,
+                },
+                Completion {
+                    id: 1,
+                    model: ModelId::MobileNetV1,
+                    priority: Priority::Standard,
+                    instance: 0,
+                    batch_index: 0,
+                    arrival_cycles: 9,
+                    start_cycles: 105,
+                    finish_cycles: 300,
+                    overlap_cycles: 0,
+                    residency_hit_cycles: 0,
+                    first_token_cycles: 160,
+                    tokens: 3,
+                    kv_refetch_cycles: 7,
+                },
+            ],
             model_ops: vec![ModelOps {
                 model: ModelId::MobileNetV1,
                 ops: vec![OpRecord {

@@ -44,4 +44,4 @@ pub use format::{Json, ModelOps, OpRecord, Trace, TraceMeta, TRACE_FORMAT_NAME, 
 pub use record::{profile_model_ops, serve_recorded, TraceRecorder};
 pub use replay::{ReplayDriver, ReplayOptions, ReplayOutcome};
 pub use tune::{tune_from_trace, TuneOutcome};
-pub use validate::{ClassCalibrationRow, ValidationReport};
+pub use validate::{ClassCalibrationRow, DecodeCurveReport, ValidationReport};

@@ -278,6 +278,39 @@ mod tests {
     }
 
     #[test]
+    fn decode_replay_reproduces_the_recorded_report_bit_for_bit() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let opts = ServeOptions {
+            models: vec![ModelId::GptTiny],
+            requests: 5,
+            mean_gap_cycles: 150_000,
+            seed: 13,
+            scheduler: SchedulerOptions {
+                instances: 1,
+                weight_residency: true,
+                continuous_batch: true,
+                ..SchedulerOptions::default()
+            },
+            decode: true,
+            prompt_tokens: 5,
+            decode_tokens: 4,
+            max_context: 16,
+            ..ServeOptions::default()
+        };
+        let mut cache = CompileCache::for_serving(cfg.clone());
+        let (recorded, trace) = serve_recorded(&cfg, &opts, &mut cache);
+        assert!(recorded.decode_requests == 5);
+        assert!(recorded.tokens_generated > recorded.completed);
+        // Through the serialized v3 form: decode requests, first-token
+        // and KV-refetch fields all survive the round trip, and the
+        // replayed decode rounds land on identical cycles.
+        let driver = ReplayDriver::from_jsonl(&trace.to_jsonl()).unwrap();
+        let replayed = driver.replay(&cfg).unwrap();
+        assert!(replayed.matches_recording(), "{:?}", replayed.divergence);
+        assert_eq!(replayed.report, recorded);
+    }
+
+    #[test]
     fn replay_rejects_a_mismatching_config() {
         let cfg = NeutronConfig::flagship_2tops();
         let mut cache = CompileCache::for_serving(cfg.clone());

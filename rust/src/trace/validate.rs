@@ -29,7 +29,7 @@
 use anyhow::{bail, Result};
 
 use crate::arch::NeutronConfig;
-use crate::compiler::CostCalibration;
+use crate::compiler::{ContextCurve, CostCalibration};
 use crate::ir::OpClass;
 use crate::serve::CompileCache;
 use crate::util::table::Table;
@@ -222,6 +222,90 @@ impl ValidationReport {
     }
 }
 
+/// Context-length cost-curve validation for one decode-capable model:
+/// the per-bucket `(kv_len, predicted, observed)` samples of its compiled
+/// decode ladder, the [`ContextCurve`] OLS-fitted to the observed tick
+/// cycles, and the error of both the fitted line and the compiler's
+/// per-bucket predictions against the observations. This is the decode
+/// analogue of [`ValidationReport`]: where the per-op join scores the
+/// cost model op by op, this scores the `base + slope·kv` abstraction the
+/// serving layer uses to reason about growing contexts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecodeCurveReport {
+    /// The decode-capable model the ladder belongs to.
+    pub model: ModelId,
+    /// `(kv_len, predicted, observed)` per compiled bucket, ascending
+    /// KV length (see `coordinator::DecodeJob::curve_samples`).
+    pub samples: Vec<(u32, u64, u64)>,
+    /// Line fitted to the observed cycles; `None` when the ladder is
+    /// degenerate (a single bucket fits no slope).
+    pub curve: Option<ContextCurve>,
+    /// MAPE of the fitted line against the observed samples (0 without a
+    /// curve).
+    pub fit_mape_pct: f64,
+    /// MAPE of the compiler's per-bucket predictions against the
+    /// observed tick cycles.
+    pub predicted_mape_pct: f64,
+}
+
+impl DecodeCurveReport {
+    /// Compile `model`'s decode ladder up to `max_context` under the
+    /// deterministic serving options and validate its context curve.
+    /// Panics (inside the compile cache) when the model has no decode
+    /// configuration.
+    pub fn from_model(model: ModelId, max_context: u32, cfg: &NeutronConfig) -> Self {
+        let mut cache = CompileCache::for_serving(cfg.clone());
+        let job = cache.get_decode(model, max_context);
+        Self::from_samples(model, &job.curve_samples())
+    }
+
+    /// Build from already-collected per-bucket samples.
+    pub fn from_samples(model: ModelId, samples: &[(u32, u64, u64)]) -> Self {
+        let observed: Vec<(u32, u64)> = samples.iter().map(|&(kv, _, o)| (kv, o)).collect();
+        let curve = ContextCurve::fit(&observed);
+        DecodeCurveReport {
+            model,
+            samples: samples.to_vec(),
+            fit_mape_pct: curve.as_ref().map(|c| c.mape_pct(&observed)).unwrap_or(0.0),
+            predicted_mape_pct: mape(samples.iter().map(|&(_, p, o)| (p as f64, o))),
+            curve,
+        }
+    }
+
+    /// Render the per-bucket table plus the fitted-curve summary line.
+    pub fn table(&self) -> String {
+        let mut t = Table::new(&["kv len", "predicted cyc", "observed cyc", "curve cyc"]);
+        for &(kv, predicted, observed) in &self.samples {
+            t.row(vec![
+                kv.to_string(),
+                predicted.to_string(),
+                observed.to_string(),
+                self.curve
+                    .as_ref()
+                    .map(|c| c.step_cycles(kv).to_string())
+                    .unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        match &self.curve {
+            Some(c) => format!(
+                "{}context curve [{}]: {:.0} + {:.1}/kv cycles  fit MAPE {:.1}%  \
+                 (compiler predictions {:.1}%)\n",
+                t.render(),
+                self.model.slug(),
+                c.base_cycles,
+                c.cycles_per_kv,
+                self.fit_mape_pct,
+                self.predicted_mape_pct
+            ),
+            None => format!(
+                "{}context curve [{}]: degenerate ladder (no slope to fit)\n",
+                t.render(),
+                self.model.slug()
+            ),
+        }
+    }
+}
+
 /// MAPE (%) over `(predicted, observed)` pairs; pairs with zero observed
 /// cycles are skipped (0 when nothing is scorable).
 fn mape(pairs: impl Iterator<Item = (f64, u64)>) -> f64 {
@@ -352,6 +436,31 @@ mod tests {
         assert!((guarded.scale_for(OpClass::Pool) - 2.0).abs() < 1e-9, "improving fit kept");
         // The unguarded calibration still carries the raw fit.
         assert!(v.calibration().scale_for(OpClass::Conv) > 1.0);
+    }
+
+    #[test]
+    fn decode_curve_fits_the_compiled_ladder() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let v = DecodeCurveReport::from_model(ModelId::GptTiny, 24, &cfg);
+        // Ladder 4, 8, 16, 32 (doubling from the minimum until ≥ 24).
+        let kvs: Vec<u32> = v.samples.iter().map(|&(kv, _, _)| kv).collect();
+        assert_eq!(kvs, vec![4, 8, 16, 32]);
+        assert!(
+            v.samples.windows(2).all(|w| w[0].2 < w[1].2),
+            "observed step cycles must grow with context: {:?}",
+            v.samples
+        );
+        let curve = v.curve.expect("4 distinct KV lengths fit a line");
+        assert!(curve.cycles_per_kv > 0.0, "more context must cost more");
+        assert!(v.fit_mape_pct < 25.0, "fit MAPE {}", v.fit_mape_pct);
+        let s = v.table();
+        assert!(s.contains("kv len") && s.contains("context curve"));
+
+        // Degenerate single-bucket ladder: no slope, rendered as such.
+        let one = DecodeCurveReport::from_samples(ModelId::GptTiny, &v.samples[..1]);
+        assert!(one.curve.is_none());
+        assert_eq!(one.fit_mape_pct, 0.0);
+        assert!(one.table().contains("degenerate"));
     }
 
     #[test]

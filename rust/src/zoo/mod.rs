@@ -15,9 +15,12 @@ pub mod yolo;
 
 use crate::ir::Graph;
 
-pub use transformer::{decoder_prefill, TransformerConfig};
+pub use transformer::{
+    decoder_decode_step, decoder_prefill, kv_bytes_per_token, TransformerConfig,
+};
 
-/// Model identifiers matching Table III/IV rows.
+/// Model identifiers matching Table III/IV rows, plus the Sec. VI Gen-AI
+/// decoder ([`ModelId::GptTiny`]) the autoregressive serving layer uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ModelId {
     MobileNetV1,
@@ -32,11 +35,39 @@ pub enum ModelId {
     MobileNetV1Ssd,
     MobileNetV2Ssd,
     DamoYoloNl,
+    /// Tiny decoder-only transformer (2 × 64, canonical 32-token prompt):
+    /// the decode-capable model the GenAI serving path schedules
+    /// token-by-token. Appended after the Table-IV rows so existing
+    /// owner indices ([`crate::serve::Scheduler`]'s residency accounting)
+    /// are unchanged.
+    GptTiny,
 }
 
 impl ModelId {
-    /// All Table-IV models in the paper's row order.
-    pub fn all() -> [ModelId; 12] {
+    /// Every servable model: the Table-IV rows in the paper's order plus
+    /// the Gen-AI decoder appended at the end.
+    pub fn all() -> [ModelId; 13] {
+        use ModelId::*;
+        [
+            MobileNetV1,
+            MobileNetV2,
+            MobileNetV3Min,
+            ResNet50V1,
+            EfficientNetLite0,
+            EfficientDetLite0,
+            YoloV8nDet,
+            YoloV8s,
+            YoloV8nSeg,
+            MobileNetV1Ssd,
+            MobileNetV2Ssd,
+            DamoYoloNl,
+            GptTiny,
+        ]
+    }
+
+    /// The Table-IV models in the paper's row order (the rows
+    /// [`ModelId::table_iv_reference`] describes).
+    pub fn table_iv() -> [ModelId; 12] {
         use ModelId::*;
         [
             MobileNetV1,
@@ -57,7 +88,7 @@ impl ModelId {
     /// The Table-III benchmark subset (YOLOv8S appears in Table IV but not
     /// in Table III; the second detection row pairs YOLOv8N-det + YOLOv8S).
     pub fn table3() -> [ModelId; 12] {
-        Self::all()
+        Self::table_iv()
     }
 
     /// Human-readable name matching the paper's tables.
@@ -76,6 +107,7 @@ impl ModelId {
             MobileNetV1Ssd => "MobileNet V1 SSD",
             MobileNetV2Ssd => "MobileNet V2 SSD",
             DamoYoloNl => "DAMO YOLO-NL",
+            GptTiny => "GPT Tiny",
         }
     }
 
@@ -97,6 +129,7 @@ impl ModelId {
             MobileNetV1Ssd => "mobilenet-v1-ssd",
             MobileNetV2Ssd => "mobilenet-v2-ssd",
             DamoYoloNl => "damo-yolo",
+            GptTiny => "gpt-tiny",
         }
     }
 
@@ -116,6 +149,7 @@ impl ModelId {
             "mobilenet-v1-ssd" => MobileNetV1Ssd,
             "mobilenet-v2-ssd" | "mobilenet-v2-ssdlite" => MobileNetV2Ssd,
             "damo-yolo" | "damo-yolo-nl" => DamoYoloNl,
+            "gpt-tiny" | "gpttiny" => GptTiny,
             _ => return None,
         })
     }
@@ -136,10 +170,35 @@ impl ModelId {
             MobileNetV1Ssd => ssd::mobilenet_v1_ssd(),
             MobileNetV2Ssd => ssd::mobilenet_v2_ssdlite(),
             DamoYoloNl => yolo::damo_yolo_nl(),
+            GptTiny => decoder_prefill(Self::GPT_TINY_CONFIG),
         }
     }
 
-    /// (GMACs, M params) reference values from Table IV.
+    /// The [`ModelId::GptTiny`] transformer shape: 2 × 64 decoder with a
+    /// canonical 32-token prompt (prefill compiles at this length; decode
+    /// steps grow the KV cache from each request's own prompt length).
+    pub const GPT_TINY_CONFIG: TransformerConfig = TransformerConfig {
+        layers: 2,
+        d_model: 64,
+        d_ff: 256,
+        heads: 4,
+        tokens: 32,
+        vocab: 512,
+    };
+
+    /// The transformer shape of a decode-capable model; `None` for the
+    /// single-shot CNN zoo. A `Some` here is what lets the serving layer
+    /// build per-token decode-step programs for the model.
+    pub fn decode_config(self) -> Option<TransformerConfig> {
+        match self {
+            ModelId::GptTiny => Some(Self::GPT_TINY_CONFIG),
+            _ => None,
+        }
+    }
+
+    /// (GMACs, M params) reference values from Table IV. Only meaningful
+    /// for [`ModelId::table_iv`] rows; the Gen-AI decoder reports its own
+    /// builder-derived footprint.
     pub fn table_iv_reference(self) -> (f64, f64) {
         use ModelId::*;
         match self {
@@ -155,6 +214,9 @@ impl ModelId {
             MobileNetV1Ssd => (1.3, 5.1),
             MobileNetV2Ssd => (0.8, 4.3),
             DamoYoloNl => (3.0, 5.7),
+            // Not a Table-IV row: builder-derived footprint of the tiny
+            // decoder (prefill at the canonical 32-token prompt).
+            GptTiny => (0.005, 0.14),
         }
     }
 }
@@ -184,5 +246,21 @@ mod tests {
         for id in ModelId::all() {
             assert_eq!(ModelId::parse(id.slug()), Some(id), "{id:?}");
         }
+    }
+
+    #[test]
+    fn gpt_tiny_is_decode_capable_and_appended_last() {
+        // Appending (not inserting) keeps every Table-IV owner index
+        // stable — the serving residency accounting depends on it.
+        assert_eq!(*ModelId::all().last().unwrap(), ModelId::GptTiny);
+        assert_eq!(ModelId::table_iv().len(), 12);
+        assert!(!ModelId::table_iv().contains(&ModelId::GptTiny));
+        let cfg = ModelId::GptTiny.decode_config().expect("decode-capable");
+        assert_eq!(cfg.tokens, 32);
+        for id in ModelId::table_iv() {
+            assert!(id.decode_config().is_none(), "{id:?} is single-shot");
+        }
+        // The decode-step graph at the canonical prompt length validates.
+        decoder_decode_step(cfg, cfg.tokens).validate().unwrap();
     }
 }

@@ -147,6 +147,142 @@ pub fn decoder_prefill(cfg: TransformerConfig) -> Graph {
     g
 }
 
+/// Bytes of KV-cache state one decoded token appends across every layer
+/// (K and V rows of `d_model` Int8 values per layer) — the per-token TCM
+/// footprint the serving layer's KV residency accounting charges.
+pub fn kv_bytes_per_token(cfg: &TransformerConfig) -> u64 {
+    (2 * cfg.layers * cfg.d_model) as u64
+}
+
+/// Build the single-token decode-step graph at a given KV-cache length:
+/// one new token's activations flow through the per-layer QKV / attention /
+/// FFN GEMMs while the layer's K/V caches — `kv_len + 1` rows each,
+/// including the step's own freshly appended row — enter as **input
+/// tensors**. Streaming those caches is what makes the step's memory
+/// traffic (and therefore its cost under the DAE timing model) grow
+/// linearly with context length: exactly the causal-attention regime the
+/// context cost curves in `compiler::cost` model.
+pub fn decoder_decode_step(cfg: TransformerConfig, kv_len: usize) -> Graph {
+    let ctx_rows = kv_len + 1;
+    let mut g = Graph::new(format!(
+        "decode{}x{}kv{}",
+        cfg.layers, cfg.d_model, kv_len
+    ));
+    // One token: H=1, C=d_model per the paper's token-as-H rule.
+    let mut cur = g.add_tensor(
+        "token",
+        Shape::hwc(1, 1, cfg.d_model),
+        DType::Int8,
+        TensorKind::Input,
+    );
+    let gemm = |g: &mut Graph, name: String, inp, in_f: usize, out_f: usize| {
+        let w = g.add_tensor(
+            format!("{name}.w"),
+            Shape(vec![out_f, 1, 1, in_f]),
+            DType::Int8,
+            TensorKind::Parameter,
+        );
+        let out = g.add_tensor(
+            format!("{name}.out"),
+            Shape::hwc(1, 1, out_f),
+            DType::Int8,
+            TensorKind::Activation,
+        );
+        g.add_op(
+            name,
+            OpKind::MatMul { out_features: out_f },
+            vec![inp],
+            Some(w),
+            out,
+            Activation::None,
+        );
+        out
+    };
+    for l in 0..cfg.layers {
+        let d = cfg.d_model;
+        let q = gemm(&mut g, format!("l{l}.q"), cur, d, d);
+        let _k = gemm(&mut g, format!("l{l}.k"), cur, d, d);
+        let _v = gemm(&mut g, format!("l{l}.v"), cur, d, d);
+        // The KV caches stream in as inputs sized by the context length.
+        let kcache = g.add_tensor(
+            format!("l{l}.kcache"),
+            Shape::hwc(ctx_rows, 1, d),
+            DType::Int8,
+            TensorKind::Input,
+        );
+        let vcache = g.add_tensor(
+            format!("l{l}.vcache"),
+            Shape::hwc(ctx_rows, 1, d),
+            DType::Int8,
+            TensorKind::Input,
+        );
+        // Attention scores over the whole context: 1×ctx_rows GEMM.
+        let scores = g.add_tensor(
+            format!("l{l}.scores"),
+            Shape::hwc(1, 1, ctx_rows),
+            DType::Int8,
+            TensorKind::Activation,
+        );
+        g.add_op(
+            format!("l{l}.qk"),
+            OpKind::MatMul { out_features: ctx_rows },
+            vec![q, kcache],
+            None,
+            scores,
+            Activation::None,
+        );
+        let smax = g.add_tensor(
+            format!("l{l}.smax"),
+            Shape::hwc(1, 1, ctx_rows),
+            DType::Int8,
+            TensorKind::Activation,
+        );
+        g.add_op(
+            format!("l{l}.softmax"),
+            OpKind::Softmax,
+            vec![scores],
+            None,
+            smax,
+            Activation::None,
+        );
+        let ctx = g.add_tensor(
+            format!("l{l}.ctx"),
+            Shape::hwc(1, 1, d),
+            DType::Int8,
+            TensorKind::Activation,
+        );
+        g.add_op(
+            format!("l{l}.sv"),
+            OpKind::MatMul { out_features: d },
+            vec![smax, vcache],
+            None,
+            ctx,
+            Activation::None,
+        );
+        let o = gemm(&mut g, format!("l{l}.o"), ctx, d, d);
+        let res1 = g.add_tensor(
+            format!("l{l}.res1"),
+            Shape::hwc(1, 1, d),
+            DType::Int8,
+            TensorKind::Activation,
+        );
+        g.add_op(format!("l{l}.add1"), OpKind::Add, vec![cur, o], None, res1, Activation::None);
+        let up = gemm(&mut g, format!("l{l}.ffn_up"), res1, d, cfg.d_ff);
+        let down = gemm(&mut g, format!("l{l}.ffn_down"), up, cfg.d_ff, d);
+        let res2 = g.add_tensor(
+            format!("l{l}.res2"),
+            Shape::hwc(1, 1, d),
+            DType::Int8,
+            TensorKind::Activation,
+        );
+        g.add_op(format!("l{l}.add2"), OpKind::Add, vec![res1, down], None, res2, Activation::None);
+        cur = res2;
+    }
+    let logits = gemm(&mut g, "lm_head".into(), cur, cfg.d_model, cfg.vocab);
+    g.mark_output(logits);
+    g
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -171,5 +307,30 @@ mod tests {
         let g = decoder_prefill(TransformerConfig::tiny(8));
         g.validate().unwrap();
         assert_eq!(g.topo_order().len(), g.ops.len());
+    }
+
+    #[test]
+    fn decode_step_is_valid_and_grows_with_kv_length() {
+        let cfg = TransformerConfig::tiny(8);
+        let short = decoder_decode_step(cfg, 8);
+        let long = decoder_decode_step(cfg, 64);
+        short.validate().unwrap();
+        long.validate().unwrap();
+        assert_eq!(short.topo_order().len(), short.ops.len());
+        // Same op structure at every KV length; only operand sizes grow.
+        assert_eq!(short.ops.len(), long.ops.len());
+        // A longer context means more attention MACs and more streamed
+        // bytes — the property the context cost curve models.
+        assert!(long.total_macs() > short.total_macs());
+        // Weights are context-independent: both steps carry identical
+        // parameter footprints.
+        assert_eq!(short.total_params(), long.total_params());
+    }
+
+    #[test]
+    fn kv_bytes_per_token_counts_k_and_v_rows() {
+        let cfg = TransformerConfig::tiny(8);
+        assert_eq!(kv_bytes_per_token(&cfg), (2 * cfg.layers * cfg.d_model) as u64);
+        assert!(kv_bytes_per_token(&TransformerConfig::gpt_100m(128)) > kv_bytes_per_token(&cfg));
     }
 }

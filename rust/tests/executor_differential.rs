@@ -377,6 +377,7 @@ fn prop_utilization_stays_in_bounds_for_every_knob_combo() {
                 instances: rng.usize(1, 3),
                 ..SchedulerOptions::default()
             },
+            ..ServeOptions::default()
         };
         let base = serve_with_cache(&cfg, &base_opts, &mut cache);
         assert!(base.utilization() > 0.0 && base.utilization() <= 1.0 + 1e-12);

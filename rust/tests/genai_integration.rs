@@ -1,0 +1,167 @@
+//! Integration + property tests for the autoregressive GenAI serving
+//! path: the token-metric decomposition (`TTFT ≤ latency` universally,
+//! and `TTFT + TPOT·(tokens−1)` reconstructs the end-to-end latency
+//! exactly), knobs-off neutrality (the decode-shaping fields are inert
+//! for single-shot traffic, so the PR-7 serving behavior is reproduced
+//! bit for bit), and the decode record → replay loop (a recorded decode
+//! run survives the v3 JSONL round trip and replays to an identical
+//! `ServeReport` under every knob combination).
+
+use eiq_neutron::arch::NeutronConfig;
+use eiq_neutron::serve::{
+    run_trace, serve_with_cache, synthetic_decode_trace, CompileCache, PriorityMix,
+    SchedulerOptions, ServeOptions,
+};
+use eiq_neutron::trace::{serve_recorded, ReplayDriver, Trace};
+use eiq_neutron::util::prop::{for_each_case, Rng};
+use eiq_neutron::zoo::ModelId;
+
+/// Random decode-relevant scheduler knobs. Residency/continuous-batch
+/// draw independently so every legal combination appears; the quota only
+/// makes sense under residency, mirroring `SchedulerOptions::validate`.
+fn random_decode_scheduler(rng: &mut Rng) -> SchedulerOptions {
+    let weight_residency = rng.bool();
+    SchedulerOptions {
+        instances: rng.usize(1, 2),
+        weight_residency,
+        residency_quota_bytes: if weight_residency && rng.bool() {
+            Some(rng.int(64_000, 2_000_000) as u64)
+        } else {
+            None
+        },
+        continuous_batch: rng.bool(),
+        ..SchedulerOptions::default()
+    }
+}
+
+#[test]
+fn prop_ttft_and_tpot_decompose_latency_exactly() {
+    let cfg = NeutronConfig::flagship_2tops();
+    let mut cache = CompileCache::for_serving(cfg.clone());
+    for_each_case(10, 0x6E4A1, |rng| {
+        let n = rng.usize(1, 10);
+        let prompt_tokens = rng.usize(1, 8) as u32;
+        let decode_tokens = rng.usize(1, 6) as u32;
+        let gap = rng.int(0, 400_000) as u64;
+        // Fixed max_context is implied by the trace itself: the scheduler
+        // derives the bucket ladder from prompt+decode, so a shared cache
+        // still reuses compiled buckets across cases.
+        let trace = synthetic_decode_trace(
+            &[ModelId::GptTiny],
+            n,
+            gap,
+            rng.next_u64(),
+            prompt_tokens,
+            decode_tokens,
+        );
+        let sched = random_decode_scheduler(rng);
+        let outcome = run_trace(&cfg, &trace, &sched, &mut cache);
+
+        assert_eq!(outcome.completions.len(), n, "unbounded queue completes everything");
+        let mut tokens_total = 0u64;
+        for c in &outcome.completions {
+            tokens_total += c.tokens as u64;
+            assert_eq!(c.tokens, decode_tokens, "a decode request emits decode_tokens tokens");
+            // TTFT is anchored at the end of prefill, so it can never
+            // exceed the end-to-end latency…
+            assert!(c.first_token_cycles > c.start_cycles);
+            assert!(c.first_token_cycles <= c.finish_cycles);
+            assert!(c.ttft_cycles() <= c.latency_cycles());
+            // …and the phases tile the latency exactly on the virtual
+            // clock: arrival→first token, then first token→finish.
+            assert_eq!(c.ttft_cycles() + c.decode_phase_cycles(), c.latency_cycles());
+            match c.tpot_cycles() {
+                // TPOT is the mean inter-token gap, so scaling it back up
+                // by (tokens−1) reconstructs the decode phase to within
+                // one f64 rounding step per token.
+                Some(tpot) => {
+                    let rebuilt = c.ttft_cycles() as f64 + tpot * (c.tokens - 1) as f64;
+                    let err = (rebuilt - c.latency_cycles() as f64).abs();
+                    assert!(err <= 1e-6 * rebuilt.max(1.0), "|{rebuilt} - {}|", c.latency_cycles());
+                }
+                None => {
+                    assert_eq!(c.tokens, 1, "TPOT is only undefined for single-token output");
+                    assert_eq!(c.first_token_cycles, c.finish_cycles);
+                }
+            }
+        }
+        assert_eq!(outcome.tokens_generated, tokens_total, "token accounting must balance");
+    });
+}
+
+#[test]
+fn prop_decode_knob_fields_are_inert_for_single_shot_traffic() {
+    // The PR-7 oracle: with `decode: false`, the token-shape fields must
+    // not influence the run in any way — the single-shot path is the
+    // pre-GenAI scheduler, bit for bit (f64s included).
+    let cfg = NeutronConfig::flagship_2tops();
+    let mut cache = CompileCache::for_serving(cfg.clone());
+    for_each_case(8, 0x0FF0, |rng| {
+        let base = ServeOptions {
+            models: vec![ModelId::MobileNetV3Min, ModelId::MobileNetV1],
+            requests: rng.usize(1, 20),
+            mean_gap_cycles: rng.int(0, 800_000) as u64,
+            seed: rng.next_u64(),
+            priority_mix: PriorityMix::default(),
+            scheduler: SchedulerOptions {
+                instances: rng.usize(1, 2),
+                ..SchedulerOptions::default()
+            },
+            ..ServeOptions::default()
+        };
+        let reference = serve_with_cache(&cfg, &base, &mut cache);
+        assert_eq!(reference.decode_requests, 0);
+        assert_eq!(
+            reference.tokens_generated, reference.completed,
+            "single-shot inference counts one token per request"
+        );
+        let scrambled = ServeOptions {
+            prompt_tokens: rng.usize(1, 100) as u32,
+            decode_tokens: rng.usize(1, 100) as u32,
+            max_context: rng.usize(2, 4096) as u32,
+            ..base.clone()
+        };
+        assert_eq!(
+            serve_with_cache(&cfg, &scrambled, &mut cache),
+            reference,
+            "token-shape knobs must be inert without --decode"
+        );
+    });
+}
+
+#[test]
+fn prop_decode_record_replay_reproduces_the_report() {
+    let cfg = NeutronConfig::flagship_2tops();
+    let mut cache = CompileCache::for_serving(cfg.clone());
+    for_each_case(6, 0x4EC0DE, |rng| {
+        let prompt_tokens = rng.usize(1, 6) as u32;
+        let decode_tokens = rng.usize(1, 5) as u32;
+        let opts = ServeOptions {
+            models: vec![ModelId::GptTiny],
+            requests: rng.usize(1, 8),
+            mean_gap_cycles: rng.int(0, 300_000) as u64,
+            seed: rng.next_u64(),
+            scheduler: random_decode_scheduler(rng),
+            decode: true,
+            prompt_tokens,
+            decode_tokens,
+            // Fixed budget so the shared cache reuses one bucket ladder.
+            max_context: 16,
+            ..ServeOptions::default()
+        };
+        let (recorded, trace) = serve_recorded(&cfg, &opts, &mut cache);
+        assert_eq!(recorded.decode_requests, opts.requests as u64);
+        assert_eq!(
+            recorded.tokens_generated,
+            opts.requests as u64 * decode_tokens as u64,
+            "every request generates its full budget with an unbounded queue"
+        );
+
+        // The v3 JSONL round trip preserves every field the replay needs.
+        let parsed = Trace::parse(&trace.to_jsonl()).unwrap();
+        assert_eq!(parsed, trace, "trace must survive serialization unchanged");
+        let replayed = ReplayDriver::new(parsed).replay(&cfg).unwrap();
+        assert!(replayed.matches_recording(), "{:?}", replayed.divergence);
+        assert_eq!(replayed.report, recorded, "faithful replay must reproduce the report");
+    });
+}

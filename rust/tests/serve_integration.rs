@@ -399,6 +399,7 @@ fn prop_same_seed_produces_identical_reports() {
             seed: rng.next_u64(),
             priority_mix: random_mix(rng),
             scheduler: random_scheduler(rng),
+            ..ServeOptions::default()
         };
         let a = serve_with_cache(&cfg, &opts, &mut cache);
         let b = serve_with_cache(&cfg, &opts, &mut cache);

@@ -35,10 +35,21 @@ fn random_models(rng: &mut Rng) -> Vec<ModelId> {
 }
 
 fn random_scheduler(rng: &mut Rng) -> SchedulerOptions {
-    // The PR-7 knobs respect their coupling rules (warm routing and a
-    // capacity override both require residency — `validate()` and the
-    // header parser reject anything else).
+    // The PR-7/PR-8 knobs respect their coupling rules (warm routing, a
+    // capacity override and a per-owner quota all require residency, and
+    // a quota never exceeds the capacity — `validate()` and the header
+    // parser reject anything else).
     let weight_residency = rng.bool();
+    let residency_capacity_bytes = if weight_residency && rng.bool() {
+        Some(rng.int(1, 2_000_000) as u64)
+    } else {
+        None
+    };
+    let residency_quota_bytes = if weight_residency && rng.bool() {
+        Some((rng.int(1, 2_000_000) as u64).min(residency_capacity_bytes.unwrap_or(u64::MAX)))
+    } else {
+        None
+    };
     SchedulerOptions {
         instances: rng.usize(1, 4),
         queue_capacity: if rng.bool() { Some(rng.usize(1, 8)) } else { None },
@@ -53,11 +64,9 @@ fn random_scheduler(rng: &mut Rng) -> SchedulerOptions {
         pipeline: rng.bool(),
         weight_residency,
         warm_routing: weight_residency && rng.bool(),
-        residency_capacity_bytes: if weight_residency && rng.bool() {
-            Some(rng.int(1, 2_000_000) as u64)
-        } else {
-            None
-        },
+        residency_capacity_bytes,
+        residency_quota_bytes,
+        continuous_batch: rng.bool(),
     }
 }
 
@@ -75,11 +84,16 @@ fn random_trace(rng: &mut Rng) -> Trace {
     let requests: Vec<Request> = (0..n as u64)
         .map(|id| {
             clock = clock.saturating_add(rng.next_u64() >> rng.usize(8, 63));
+            // Mix single-shot (0/0) and decode requests — the v3 format
+            // carries both, and a decode request needs both token counts.
+            let decode = rng.bool();
             Request {
                 id,
                 model: *rng.choose(&models),
                 priority: random_priority(rng),
                 arrival_cycles: clock,
+                prompt_tokens: if decode { rng.usize(1, 64) as u32 } else { 0 },
+                decode_tokens: if decode { rng.usize(1, 16) as u32 } else { 0 },
             }
         })
         .collect();
@@ -88,6 +102,8 @@ fn random_trace(rng: &mut Rng) -> Trace {
         if !rng.bool() {
             continue;
         }
+        let finish_cycles =
+            r.arrival_cycles.saturating_add((rng.next_u64() >> 40) + i as u64 + 1);
         completions.push(Completion {
             id: r.id,
             model: r.model,
@@ -96,9 +112,13 @@ fn random_trace(rng: &mut Rng) -> Trace {
             batch_index: rng.usize(0, 5) as u32,
             arrival_cycles: r.arrival_cycles,
             start_cycles: r.arrival_cycles.saturating_add(rng.next_u64() >> 40),
-            finish_cycles: r.arrival_cycles.saturating_add((rng.next_u64() >> 40) + i as u64 + 1),
+            finish_cycles,
             overlap_cycles: rng.next_u64() >> rng.usize(8, 63),
             residency_hit_cycles: rng.next_u64() >> rng.usize(8, 63),
+            // The parser enforces first_token ≤ finish and tokens ≥ 1.
+            first_token_cycles: finish_cycles.saturating_sub(rng.next_u64() >> 44),
+            tokens: rng.usize(1, 16) as u32,
+            kv_refetch_cycles: rng.next_u64() >> rng.usize(8, 63),
         });
     }
     let shed_ids: Vec<u64> = requests.iter().filter(|_| rng.bool()).map(|r| r.id).collect();
@@ -179,15 +199,15 @@ fn version_mismatch_and_foreign_files_are_rejected() {
     let trace = random_trace(&mut rng);
     let jsonl = trace.to_jsonl();
     // Future version.
-    let future = jsonl.replace("\"version\":2", "\"version\":3");
+    let future = jsonl.replace("\"version\":3", "\"version\":4");
     let err = Trace::parse(&future).unwrap_err().to_string();
-    assert!(err.contains("version 3"), "{err}");
-    // Stale version: a PR-4-era v1 trace (no pipelining/residency fields)
+    assert!(err.contains("version 4"), "{err}");
+    // Stale version: a PR-7-era v2 trace (no decode/first-token fields)
     // must be rejected by name, not half-parsed with silent defaults.
-    let stale = jsonl.replace("\"version\":2", "\"version\":1");
+    let stale = jsonl.replace("\"version\":3", "\"version\":2");
     let err = Trace::parse(&stale).unwrap_err().to_string();
     assert!(
-        err.contains("unsupported trace format version 1") && err.contains("version 2"),
+        err.contains("unsupported trace format version 2") && err.contains("version 3"),
         "stale-version error must name both versions: {err}"
     );
     // Wrong format name.
@@ -201,14 +221,26 @@ fn random_serve_options(rng: &mut Rng) -> ServeOptions {
     let mut scheduler = random_scheduler(rng);
     // Keep property runtime bounded.
     scheduler.instances = rng.usize(1, 2);
-    ServeOptions {
+    let mut opts = ServeOptions {
         models: random_models(rng),
         requests: rng.usize(1, 25),
         mean_gap_cycles: rng.int(0, 1_000_000) as u64,
         seed: rng.next_u64(),
         priority_mix: PriorityMix { realtime: 1, standard: 2, batch: 1 },
         scheduler,
+        ..ServeOptions::default()
+    };
+    // Roughly a quarter of the cases exercise the decode path end to end
+    // (GptTiny is the zoo's decode-capable model).
+    if rng.usize(0, 3) == 0 {
+        opts.models = vec![ModelId::GptTiny];
+        opts.requests = rng.usize(1, 8);
+        opts.decode = true;
+        opts.prompt_tokens = rng.usize(1, 8) as u32;
+        opts.decode_tokens = rng.usize(1, 6) as u32;
+        opts.max_context = 16;
     }
+    opts
 }
 
 #[test]
@@ -314,6 +346,7 @@ fn acceptance_record_replay_validate_pipeline() {
             age_after_cycles: Some(2_000_000),
             ..SchedulerOptions::default()
         },
+        ..ServeOptions::default()
     };
     let mut cache = CompileCache::for_serving(cfg.clone());
     let (recorded, trace) = serve_recorded(&cfg, &opts, &mut cache);
@@ -355,6 +388,7 @@ fn recorded_pipelined_resident_run_round_trips_its_new_fields() {
             residency_capacity_bytes: Some(64 << 20),
             ..SchedulerOptions::default()
         },
+        ..ServeOptions::default()
     };
     let mut cache = CompileCache::for_serving(cfg.clone());
     let (recorded, trace) = serve_recorded(&cfg, &opts, &mut cache);
