@@ -1,0 +1,247 @@
+//! Bench: the energy accounting subsystem (PR 9) — meter overhead,
+//! the race-to-idle vs stretch Pareto points, budget shedding under a
+//! draining joule budget, and the analytic J/inference table for the
+//! zoo. The race/stretch comparison is the acceptance evidence for
+//! energy-aware scheduling: the two modes must land on *different*
+//! (makespan, joules) points — stretch strictly serializes work
+//! (makespan up) while eliding follower parameter-fetch DMA (DMA
+//! joules down) — so neither dominates and the knob is a real policy
+//! choice, not a no-op.
+//!
+//! `--json PATH` additionally writes the measurements and the sweep rows
+//! as a JSON array (used by ci.sh to emit `BENCH_energy_sweep.json`).
+
+use eiq_neutron::arch::NeutronConfig;
+use eiq_neutron::energy::{fj_to_joules, EnergyChannel, EnergyMode, EnergyModel};
+use eiq_neutron::serve::{
+    serve_with_cache, CompileCache, Priority, PriorityMix, Request, Scheduler, SchedulerOptions,
+    ServeOptions,
+};
+use eiq_neutron::util::bench::{Bencher, Measurement};
+use eiq_neutron::zoo::ModelId;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+
+    let cfg = NeutronConfig::flagship_2tops();
+    let b = Bencher::quick();
+    let mut results: Vec<Measurement> = Vec::new();
+    let mut extra_json: Vec<String> = Vec::new();
+
+    // Meter overhead: the same warm-cache workload with the meter off vs
+    // on. Pricing is pure observation on the tick walk, so the overhead
+    // should be small and the timing identical (asserted below in the
+    // race/stretch sweep via the scheduler clocks).
+    let mut cache = CompileCache::for_serving(cfg.clone());
+    let base = ServeOptions::default();
+    for &model in &base.models {
+        cache.get(model);
+    }
+    for (name, energy) in [("meter off", false), ("meter on", true)] {
+        let o = ServeOptions {
+            scheduler: SchedulerOptions { energy, ..base.scheduler.clone() },
+            ..base.clone()
+        };
+        results.push(b.bench(&format!("serve 200 req warm cache, {name}"), || {
+            serve_with_cache(&cfg, &o, &mut cache).goodput_inf_s
+        }));
+    }
+
+    // Race-to-idle vs stretch: one instance per request, all arrivals at
+    // t=0, one hot model. Race always finds an idle peer (or an empty
+    // queue), so every dispatch is solo and the fleet finishes in one
+    // service time; stretch coalesces everything into one batch whose
+    // followers skip their parameter fetches. Driven through the
+    // Scheduler directly so both runs replay the identical compiled
+    // program and the comparison is pure policy.
+    println!("race-to-idle vs stretch: 6 requests at t=0, 6 instances, mobilenet-v2");
+    println!(
+        "{:>12}  {:>14} {:>12} {:>12} {:>12} {:>8}",
+        "mode", "makespan cyc", "total J", "dma J", "idle J", "batched"
+    );
+    let program = cache.get(ModelId::MobileNetV2).program.clone();
+    let run = |mode: EnergyMode| {
+        let opts = SchedulerOptions {
+            instances: 6,
+            max_batch: 6,
+            energy: true,
+            energy_mode: mode,
+            ..SchedulerOptions::default()
+        };
+        let mut s = Scheduler::new(&cfg, &opts);
+        for id in 0..6 {
+            s.admit(Request {
+                id,
+                model: ModelId::MobileNetV2,
+                priority: Priority::Standard,
+                arrival_cycles: 0,
+                prompt_tokens: 0,
+                decode_tokens: 0,
+            });
+        }
+        let mut done = Vec::new();
+        while s.next_model().is_some() {
+            done.extend(s.dispatch_next(ModelId::MobileNetV2, &program));
+        }
+        let dma: u64 = done.iter().map(|c| c.energy_dma_fj).sum();
+        let idle: u64 = done.iter().map(|c| c.energy_idle_fj).sum();
+        let batched = done.iter().filter(|c| c.batch_index > 0).count();
+        (s.makespan_cycles(), s.energy_spent_fj(), dma, idle, batched)
+    };
+    let race = run(EnergyMode::RaceToIdle);
+    let stretch = run(EnergyMode::Stretch);
+    for (name, r) in [("race-to-idle", &race), ("stretch", &stretch)] {
+        println!(
+            "{:>12}  {:>14} {:>12.6} {:>12.6} {:>12.6} {:>8}",
+            name,
+            r.0,
+            fj_to_joules(r.1),
+            fj_to_joules(r.2),
+            fj_to_joules(r.3),
+            r.4
+        );
+        extra_json.push(format!(
+            "{{\"name\":\"energy_mode_{}\",\"makespan_cycles\":{},\"total_fj\":{},\
+             \"dma_fj\":{},\"idle_fj\":{},\"batched\":{}}}",
+            name, r.0, r.1, r.2, r.3, r.4
+        ));
+    }
+    assert_eq!(race.4, 0, "race-to-idle must not batch with idle instances available");
+    assert!(stretch.4 > 0, "stretch must coalesce followers");
+    assert!(
+        stretch.0 > race.0,
+        "stretch serializes work: makespan {} vs {}",
+        stretch.0,
+        race.0
+    );
+    assert!(
+        stretch.2 < race.2,
+        "stretch elides follower parameter-fetch DMA: {} vs {} fJ",
+        stretch.2,
+        race.2
+    );
+    assert!(
+        (race.0, race.1) != (stretch.0, stretch.1),
+        "the two modes must reach different (makespan, joules) points"
+    );
+
+    // Budget sweep: the same overload trace under a draining joule
+    // budget. An unbounded budget sheds nothing; a binding one sheds
+    // Batch first, then Standard, never Realtime — goodput degrades
+    // class by class instead of collapsing.
+    println!("\nenergy budget sweep: 120 requests, 2 instances, mobilenet-v1, seed 21");
+    println!(
+        "{:>12}  {:>9} {:>6} {:>12} {:>14}",
+        "budget J", "completed", "shed", "spent J", "J/inference"
+    );
+    let free = {
+        let o = budget_options(None);
+        serve_with_cache(&cfg, &o, &mut cache)
+    };
+    assert_eq!(free.shed, 0, "no budget, no energy shedding");
+    let budgets = [
+        None,
+        Some(free.energy_total_fj / 2),
+        Some(free.energy_total_fj / 4),
+        Some(free.energy_total_fj / 8),
+    ];
+    let mut prev_completed = u64::MAX;
+    for budget in budgets {
+        let o = budget_options(budget);
+        let r = serve_with_cache(&cfg, &o, &mut cache);
+        assert_eq!(
+            r.energy_compute_fj + r.energy_dma_fj + r.energy_idle_fj,
+            r.energy_total_fj,
+            "conservation must hold under shedding"
+        );
+        println!(
+            "{:>12}  {:>9} {:>6} {:>12.6} {:>14.9}",
+            budget.map_or("unbounded".to_string(), |b| format!("{:.4}", fj_to_joules(b))),
+            r.completed,
+            r.shed,
+            fj_to_joules(r.energy_total_fj),
+            r.joules_per_inference
+        );
+        extra_json.push(format!(
+            "{{\"name\":\"energy_budget\",\"budget_fj\":{},\"completed\":{},\"shed\":{},\
+             \"energy_total_fj\":{},\"joules_per_inference\":{}}}",
+            budget.unwrap_or(0),
+            r.completed,
+            r.shed,
+            r.energy_total_fj,
+            r.joules_per_inference
+        ));
+        assert!(
+            r.completed <= prev_completed,
+            "a tighter budget must not complete more work"
+        );
+        prev_completed = r.completed;
+    }
+
+    // Analytic J/inference table for the zoo — the same
+    // `EnergyModel::predict_inference` the calibration loop scores and
+    // `neutron list --energy-calibration` prints.
+    println!("\nanalytic J/inference (uncalibrated):");
+    let model = EnergyModel::for_config(&cfg);
+    for id in ModelId::all() {
+        let g = id.build();
+        let p = model.predict_inference(&cfg, g.total_macs(), g.total_params());
+        let total = EnergyChannel::all()
+            .into_iter()
+            .map(|c| match c {
+                EnergyChannel::Compute => p.compute_fj,
+                EnergyChannel::Dma => p.dma_fj,
+                EnergyChannel::Idle => p.idle_fj,
+            })
+            .sum::<u64>();
+        println!("{:<22} {:>12.6} J/inf", id.display_name(), fj_to_joules(total));
+        extra_json.push(format!(
+            "{{\"name\":\"predicted_j_per_inf_{}\",\"total_fj\":{}}}",
+            id.slug(),
+            total
+        ));
+    }
+
+    if let Some(path) = json_path {
+        let mut rows: Vec<String> = results
+            .iter()
+            .map(|m| {
+                format!(
+                    "{{\"name\":{:?},\"median_us\":{:.1},\"mean_us\":{:.1},\"stddev_us\":{:.1}}}",
+                    m.name,
+                    m.median().as_secs_f64() * 1e6,
+                    m.mean().as_secs_f64() * 1e6,
+                    m.stddev_us()
+                )
+            })
+            .collect();
+        rows.extend(extra_json);
+        let json = format!("[\n  {}\n]\n", rows.join(",\n  "));
+        std::fs::write(&path, json).expect("write bench JSON");
+        eprintln!("wrote {path}");
+    }
+}
+
+/// The budget sweep's fixed workload: overloaded enough that a binding
+/// budget has traffic left to shed when it drains.
+fn budget_options(energy_budget_fj: Option<u64>) -> ServeOptions {
+    ServeOptions {
+        models: vec![ModelId::MobileNetV1],
+        requests: 120,
+        mean_gap_cycles: 100_000,
+        seed: 21,
+        priority_mix: PriorityMix { realtime: 1, standard: 1, batch: 1 },
+        scheduler: SchedulerOptions {
+            instances: 2,
+            energy: true,
+            energy_budget_fj,
+            ..SchedulerOptions::default()
+        },
+        ..ServeOptions::default()
+    }
+}

@@ -3,6 +3,17 @@
 set -euo pipefail
 cd "$(dirname "$0")"
 
+# Every integration test must actually run: `autotests = false` means a
+# rust/tests/*.rs file without a [[test]] entry in Cargo.toml silently
+# never executes.
+for t in rust/tests/*.rs; do
+    name=$(basename "$t" .rs)
+    if ! grep -q "name = \"$name\"" Cargo.toml; then
+        echo "ERROR: $t has no [[test]] entry in Cargo.toml — it would never run" >&2
+        exit 1
+    fi
+done
+
 cargo build --release
 cargo build --release --benches
 cargo test -q
@@ -108,6 +119,54 @@ if ./target/release/neutron serve --models gpt-tiny --decode --prompt-tokens 20 
 fi
 echo "genai decode smoke OK"
 
+# Energy accounting smoke: a metered serve run reports joules, records a
+# v4 trace that replays byte-identically (joules included), fits an
+# improve-only per-channel energy calibration through validate/tune, and
+# prices the zoo via `list`. The meter must be invisible when off, and
+# contradictory energy knobs must be rejected loudly.
+./target/release/neutron serve --requests 24 --instances 2 --seed 29 \
+    --mean-gap-cycles 200000 --max-batch 4 --energy --energy-mode stretch \
+    --record "$smoke_dir/energy.jsonl" > "$smoke_dir/energy_recorded.txt"
+grep -q "energy:" "$smoke_dir/energy_recorded.txt"
+./target/release/neutron replay "$smoke_dir/energy.jsonl" > "$smoke_dir/energy_replayed.txt"
+diff "$smoke_dir/energy_recorded.txt" "$smoke_dir/energy_replayed.txt"
+./target/release/neutron serve --requests 8 --seed 29 > "$smoke_dir/unmetered.txt"
+if grep -q "energy:" "$smoke_dir/unmetered.txt"; then
+    echo "ERROR: an unmetered serve run must not print an energy summary line" >&2
+    exit 1
+fi
+./target/release/neutron validate --energy "$smoke_dir/energy.jsonl" \
+    --save-energy-calibration "$smoke_dir/ecal.json" > /dev/null
+./target/release/neutron tune --energy --trace "$smoke_dir/energy.jsonl" \
+    > "$smoke_dir/energy_tune.txt"
+etune_line=$(grep '^tune-energy: ' "$smoke_dir/energy_tune.txt")
+echo "$etune_line"
+emape_before=$(printf '%s\n' "$etune_line" | sed -n 's/.*mape_before_pct=\([0-9.]*\).*/\1/p')
+emape_after=$(printf '%s\n' "$etune_line" | sed -n 's/.*mape_after_pct=\([0-9.]*\).*/\1/p')
+if [ -z "$emape_before" ] || [ -z "$emape_after" ]; then
+    echo "ERROR: could not parse tune-energy summary line" >&2
+    exit 1
+fi
+if ! awk -v after="$emape_after" -v before="$emape_before" 'BEGIN { exit !(after <= before + 0.001) }'; then
+    echo "ERROR: energy calibration worsened per-channel MAPE ($emape_before% -> $emape_after%)" >&2
+    exit 1
+fi
+./target/release/neutron list --energy-calibration "$smoke_dir/ecal.json" \
+    | grep -q "J/inf"
+if ./target/release/neutron serve --energy-budget 0.5 >/dev/null 2>&1; then
+    echo "ERROR: 'neutron serve --energy-budget' without --energy should have been rejected" >&2
+    exit 1
+fi
+if ./target/release/neutron serve --energy-mode stretch >/dev/null 2>&1; then
+    echo "ERROR: 'neutron serve --energy-mode' without --energy should have been rejected" >&2
+    exit 1
+fi
+if ./target/release/neutron serve --energy --energy-mode sprint >/dev/null 2>&1; then
+    echo "ERROR: unknown --energy-mode should have been rejected" >&2
+    exit 1
+fi
+echo "energy accounting smoke OK ($emape_before% -> $emape_after% energy MAPE)"
+
 # Solver hot-path bench (includes the warm-vs-cold budget sweep and its
 # acceptance assertion); the measurements land in BENCH_solver_hotpath.json.
 cargo bench --bench solver_hotpath -- --json "$PWD/BENCH_solver_hotpath.json" \
@@ -127,6 +186,14 @@ echo "serve throughput bench OK (BENCH_serve_throughput.json)"
 cargo bench --bench genai_decode -- --json "$PWD/BENCH_genai_decode.json" \
     > /dev/null
 echo "genai decode bench OK (BENCH_genai_decode.json)"
+
+# Energy sweep bench (race-to-idle vs stretch Pareto points, budget
+# shedding, the zoo's analytic J/inference table — with the
+# different-(makespan, joules)-points assertion); the measurements land
+# in BENCH_energy_sweep.json.
+cargo bench --bench energy_sweep -- --json "$PWD/BENCH_energy_sweep.json" \
+    > /dev/null
+echo "energy sweep bench OK (BENCH_energy_sweep.json)"
 
 # Docs must not rot: fail on any rustdoc warning (missing docs in the
 # serve module, broken intra-doc links, …). Vendored stand-ins are not

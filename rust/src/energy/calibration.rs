@@ -1,0 +1,356 @@
+//! Energy calibration: per-channel scale corrections of the analytic
+//! energy model, fitted from recorded traces (`trace/validate.rs`) and
+//! saved in the same strict single-line JSON shape as the timing
+//! calibration file:
+//!
+//! ```json
+//! {"format":"eiq-neutron-energy-calibration","version":1,
+//!  "config_fingerprint":1234,"energy_model_version":1,
+//!  "scales":[{"channel":"compute","scale":1.31},{"channel":"dma","scale":0.8}]}
+//! ```
+//!
+//! Strictness follows `trace/calibration.rs` exactly: exact format name
+//! and version, no unknown fields, known channels only, every scale
+//! finite and inside `[EnergyCalibration::MIN_SCALE, MAX_SCALE]`,
+//! duplicates rejected. Two pins guard against correcting the wrong
+//! model: the config fingerprint (a fit transplanted onto different
+//! hardware geometry is wrong) and [`ENERGY_MODEL_VERSION`] (a fit
+//! measured against an older coefficient derivation is equally wrong).
+//!
+//! The calibration corrects *analytic predictions only* — observed
+//! per-completion energy in a trace is raw model output and never
+//! rescaled, so record → replay bit-identity needs no calibration
+//! plumbing.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::arch::NeutronConfig;
+use crate::serve::config_fingerprint;
+use crate::trace::Json;
+
+use super::model::ENERGY_MODEL_VERSION;
+use super::EnergyChannel;
+
+/// The energy-calibration file format version this build reads and writes.
+pub const ENERGY_CALIBRATION_FORMAT_VERSION: u64 = 1;
+
+/// The format name stamped into (and required from) every file.
+pub const ENERGY_CALIBRATION_FORMAT_NAME: &str = "eiq-neutron-energy-calibration";
+
+/// Per-channel linear correction of the analytic energy predictor. A
+/// channel's corrected estimate is `scale · predicted`;
+/// [`EnergyCalibration::identity`] leaves every channel untouched, so
+/// carrying a calibration is always optional.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnergyCalibration {
+    scales: Vec<(EnergyChannel, f64)>,
+}
+
+impl Default for EnergyCalibration {
+    fn default() -> Self {
+        Self::identity()
+    }
+}
+
+impl EnergyCalibration {
+    /// Smallest scale a fit may carry — a correction below this claims
+    /// the analytic model over-predicts by more than 4×, which no
+    /// healthy trace produces (same rationale as the timing clamp).
+    pub const MIN_SCALE: f64 = 0.25;
+
+    /// Largest scale a fit may carry (see [`Self::MIN_SCALE`]).
+    pub const MAX_SCALE: f64 = 4.0;
+
+    /// Clamp a fitted scale into `[MIN_SCALE, MAX_SCALE]`.
+    pub fn clamp_scale(scale: f64) -> f64 {
+        scale.clamp(Self::MIN_SCALE, Self::MAX_SCALE)
+    }
+
+    /// The no-op calibration: every channel scale is 1.0.
+    pub fn identity() -> Self {
+        Self { scales: Vec::new() }
+    }
+
+    /// Build from explicit `(channel, scale)` pairs (later entries win).
+    /// Non-finite or non-positive scales are rejected.
+    pub fn from_scales(scales: &[(EnergyChannel, f64)]) -> Self {
+        for &(channel, s) in scales {
+            assert!(
+                s.is_finite() && s > 0.0,
+                "energy calibration scale for {channel:?} must be finite and positive, got {s}"
+            );
+        }
+        Self { scales: scales.to_vec() }
+    }
+
+    /// The fitted `(channel, scale)` pairs, in insertion order.
+    pub fn scales(&self) -> &[(EnergyChannel, f64)] {
+        &self.scales
+    }
+
+    /// Correction factor for one channel (1.0 when unfitted).
+    pub fn scale_for(&self, channel: EnergyChannel) -> f64 {
+        self.scales
+            .iter()
+            .rev()
+            .find(|(c, _)| *c == channel)
+            .map(|&(_, s)| s)
+            .unwrap_or(1.0)
+    }
+
+    /// Apply the channel correction to a predicted femtojoule count
+    /// (rounded, floored at 1 for non-zero predictions). A scale of
+    /// exactly 1.0 passes the prediction through untouched — never via
+    /// `f64` — so an identity calibration is bit-transparent.
+    pub fn apply(&self, channel: EnergyChannel, predicted_fj: u64) -> u64 {
+        if predicted_fj == 0 {
+            return 0;
+        }
+        let scale = self.scale_for(channel);
+        if scale == 1.0 {
+            return predicted_fj;
+        }
+        let corrected = (predicted_fj as f64 * scale).round() as u64;
+        corrected.max(1)
+    }
+
+    /// True when no channel carries an effective correction.
+    pub fn is_identity(&self) -> bool {
+        EnergyChannel::all().into_iter().all(|c| self.scale_for(c) == 1.0)
+    }
+}
+
+/// A saved energy calibration: fitted scales plus the config fingerprint
+/// and energy-model version they were measured against.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnergyCalibrationFile {
+    /// FNV-1a fingerprint of the `NeutronConfig` the fit was measured on.
+    pub config_fingerprint: u64,
+    /// The fitted per-channel corrections.
+    pub calibration: EnergyCalibration,
+}
+
+impl EnergyCalibrationFile {
+    /// Wrap a fitted calibration for saving against `cfg`.
+    pub fn new(cfg: &NeutronConfig, calibration: EnergyCalibration) -> Self {
+        Self { config_fingerprint: config_fingerprint(cfg), calibration }
+    }
+
+    /// Serialize to the single-line JSON document (plus a trailing
+    /// newline, so the file is a well-formed text file).
+    pub fn to_json(&self) -> String {
+        let scales = self
+            .calibration
+            .scales()
+            .iter()
+            .map(|&(channel, scale)| {
+                Json::Object(vec![
+                    ("channel".into(), Json::Str(channel.name().into())),
+                    ("scale".into(), Json::Float(scale)),
+                ])
+            })
+            .collect();
+        let doc = Json::Object(vec![
+            ("format".into(), Json::Str(ENERGY_CALIBRATION_FORMAT_NAME.into())),
+            ("version".into(), Json::UInt(ENERGY_CALIBRATION_FORMAT_VERSION)),
+            ("config_fingerprint".into(), Json::UInt(self.config_fingerprint)),
+            ("energy_model_version".into(), Json::UInt(ENERGY_MODEL_VERSION)),
+            ("scales".into(), Json::Array(scales)),
+        ]);
+        let mut out = doc.to_string_compact();
+        out.push('\n');
+        out
+    }
+
+    /// Parse an energy-calibration file. Strict: exact format name,
+    /// version and energy-model version, no unknown fields, known
+    /// channels only, every scale finite and within the clamp range.
+    pub fn parse(text: &str) -> Result<EnergyCalibrationFile> {
+        let j = Json::parse(text.trim())?;
+        if let Json::Object(fields) = &j {
+            for (k, _) in fields {
+                if !["format", "version", "config_fingerprint", "energy_model_version", "scales"]
+                    .contains(&k.as_str())
+                {
+                    bail!("unknown field {k:?} (adding fields requires a version bump)");
+                }
+            }
+        } else {
+            bail!("energy calibration file must be a JSON object");
+        }
+        let format = j
+            .req("format")?
+            .as_str()
+            .ok_or_else(|| anyhow!("field \"format\" must be a string"))?;
+        if format != ENERGY_CALIBRATION_FORMAT_NAME {
+            bail!("not a {ENERGY_CALIBRATION_FORMAT_NAME} file (format {format:?})");
+        }
+        let version = j
+            .req("version")?
+            .as_u64()
+            .ok_or_else(|| anyhow!("field \"version\" must be an unsigned integer"))?;
+        if version != ENERGY_CALIBRATION_FORMAT_VERSION {
+            bail!(
+                "unsupported energy calibration format version {version} (this build reads \
+                 only version {ENERGY_CALIBRATION_FORMAT_VERSION})"
+            );
+        }
+        let config_fingerprint = j
+            .req("config_fingerprint")?
+            .as_u64()
+            .ok_or_else(|| anyhow!("field \"config_fingerprint\" must be an unsigned integer"))?;
+        let model_version = j
+            .req("energy_model_version")?
+            .as_u64()
+            .ok_or_else(|| anyhow!("field \"energy_model_version\" must be an unsigned integer"))?;
+        if model_version != ENERGY_MODEL_VERSION {
+            bail!(
+                "energy calibration was fitted against energy model version {model_version}; \
+                 this build prices with version {ENERGY_MODEL_VERSION} — refit"
+            );
+        }
+        let mut scales: Vec<(EnergyChannel, f64)> = Vec::new();
+        for entry in j
+            .req("scales")?
+            .as_array()
+            .ok_or_else(|| anyhow!("field \"scales\" must be an array"))?
+        {
+            if let Json::Object(fields) = entry {
+                for (k, _) in fields {
+                    if !["channel", "scale"].contains(&k.as_str()) {
+                        bail!("unknown scale field {k:?}");
+                    }
+                }
+            }
+            let channel_name = entry
+                .req("channel")?
+                .as_str()
+                .ok_or_else(|| anyhow!("scale field \"channel\" must be a string"))?;
+            let channel = EnergyChannel::parse(channel_name)
+                .ok_or_else(|| anyhow!("unknown energy channel {channel_name:?}"))?;
+            let scale = entry
+                .req("scale")?
+                .as_f64()
+                .ok_or_else(|| anyhow!("scale field \"scale\" must be a number"))?;
+            if !scale.is_finite()
+                || scale < EnergyCalibration::MIN_SCALE
+                || scale > EnergyCalibration::MAX_SCALE
+            {
+                bail!(
+                    "scale {scale} for channel {channel_name:?} outside the sane range \
+                     [{}, {}] — corrupt file?",
+                    EnergyCalibration::MIN_SCALE,
+                    EnergyCalibration::MAX_SCALE
+                );
+            }
+            if scales.iter().any(|&(c, _)| c == channel) {
+                bail!("duplicate scale entry for channel {channel_name:?}");
+            }
+            scales.push((channel, scale));
+        }
+        Ok(EnergyCalibrationFile {
+            config_fingerprint,
+            calibration: EnergyCalibration::from_scales(&scales),
+        })
+    }
+
+    /// The wrapped calibration, after checking the file was measured on
+    /// `cfg`.
+    pub fn calibration_for(&self, cfg: &NeutronConfig) -> Result<EnergyCalibration> {
+        let live = config_fingerprint(cfg);
+        if live != self.config_fingerprint {
+            bail!(
+                "config mismatch: energy calibration was fitted on config fingerprint {:#x}, \
+                 pricing on {:#x} — refit on the live config",
+                self.config_fingerprint,
+                live
+            );
+        }
+        Ok(self.calibration.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> EnergyCalibrationFile {
+        EnergyCalibrationFile::new(
+            &NeutronConfig::flagship_2tops(),
+            EnergyCalibration::from_scales(&[
+                (EnergyChannel::Compute, 1.3125),
+                (EnergyChannel::Dma, 0.875),
+                (EnergyChannel::Idle, 2.0 / 3.0), // not exactly representable
+            ]),
+        )
+    }
+
+    #[test]
+    fn energy_calibration_file_round_trips_bit_exactly() {
+        let f = sample();
+        let parsed = EnergyCalibrationFile::parse(&f.to_json()).unwrap();
+        assert_eq!(parsed, f);
+        for channel in EnergyChannel::all() {
+            assert_eq!(
+                parsed.calibration.scale_for(channel).to_bits(),
+                f.calibration.scale_for(channel).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn identity_energy_calibration_saves_and_loads() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let f = EnergyCalibrationFile::new(&cfg, EnergyCalibration::identity());
+        let parsed = EnergyCalibrationFile::parse(&f.to_json()).unwrap();
+        assert!(parsed.calibration.is_identity());
+        assert!(parsed.calibration_for(&cfg).unwrap().is_identity());
+    }
+
+    #[test]
+    fn identity_apply_is_bit_transparent() {
+        let cal = EnergyCalibration::identity();
+        for fj in [0u64, 1, 17, u64::MAX - 3] {
+            assert_eq!(cal.apply(EnergyChannel::Compute, fj), fj);
+        }
+        let scaled = EnergyCalibration::from_scales(&[(EnergyChannel::Dma, 0.5)]);
+        assert_eq!(scaled.apply(EnergyChannel::Dma, 1000), 500);
+        assert_eq!(scaled.apply(EnergyChannel::Dma, 1), 1, "nonzero stays nonzero");
+        assert_eq!(scaled.apply(EnergyChannel::Dma, 0), 0);
+        assert_eq!(scaled.apply(EnergyChannel::Compute, 1000), 1000, "unfitted channel");
+    }
+
+    #[test]
+    fn strict_parse_rejects_bad_files() {
+        let good = sample().to_json();
+        for (bad, why) in [
+            (good.replace("eiq-neutron-energy-calibration", "eiq-neutron-calibration"),
+             "format name"),
+            (good.replace("\"version\":1,", "\"version\":9,"), "version"),
+            (good.replace("\"energy_model_version\":1", "\"energy_model_version\":7"),
+             "energy model version"),
+            (good.replace("\"compute\"", "\"warp-drive\""), "unknown channel"),
+            (good.replace("1.3125", "400.0"), "out-of-range scale"),
+            (good.replace("1.3125", "0.0"), "non-positive scale"),
+            (good.replace("{\"format\"", "{\"extra\":1,\"format\""), "unknown field"),
+            ("not json at all".to_string(), "garbage"),
+        ] {
+            assert!(EnergyCalibrationFile::parse(&bad).is_err(), "{why} should be rejected");
+        }
+        let dup = good.replace(
+            "{\"channel\":\"compute\",\"scale\":1.3125}",
+            "{\"channel\":\"compute\",\"scale\":1.3125},{\"channel\":\"compute\",\"scale\":1.5}",
+        );
+        assert!(EnergyCalibrationFile::parse(&dup).is_err());
+    }
+
+    #[test]
+    fn config_mismatch_is_refused() {
+        let f = sample();
+        let err = f
+            .calibration_for(&NeutronConfig::mcu_half_tops())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("config mismatch"), "{err}");
+    }
+}

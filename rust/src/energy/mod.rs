@@ -1,0 +1,149 @@
+//! Per-tick energy attribution for the serving simulator.
+//!
+//! Latency answers "how fast"; at the edge the deciding figure of merit
+//! is joules per inference (and joules per token for decode) — both the
+//! µNPU benchmarking study (arxiv 2503.22567) and the MCU
+//! energy-efficiency study (arxiv 2509.17533) show platform choice is
+//! power-bound, not TOPS-bound. This module prices the simulator's
+//! existing deterministic tick loop into energy without touching it:
+//!
+//! - [`EnergyCoefficients`] — a versioned set of per-component fJ/cycle
+//!   rates (PE array, TCM banks, DMA engines, leakage floor) derived
+//!   from the [`crate::arch::NeutronConfig`] geometry.
+//! - [`EnergyModel`] — prices each tick's `(latency, compute, dm)`
+//!   triple (exactly the executor's `TickStats`) into a [`TickEnergy`]:
+//!   active energy for the cycles a component worked, idle energy for
+//!   the rest of the tick, leakage for every cycle. All arithmetic is
+//!   integer femtojoules, so `compute + dma + idle == total` holds
+//!   *exactly* at every tick (the conservation invariant, mirror of the
+//!   PR 4 per-op-tick timing attribution).
+//! - [`EnergyCalibration`] / [`EnergyCalibrationFile`] — per-channel
+//!   scale corrections fitted from recorded traces through the same
+//!   record → fit → replay loop as the timing `CostCalibration`, in the
+//!   same strict single-line JSON file format with config-fingerprint
+//!   pinning. Calibration corrects *analytic predictions* only — the
+//!   observed per-completion joules in a trace are raw model output, so
+//!   record → replay stays bit-identical with no calibration plumbing.
+//! - [`EnergyMode`] — the scheduling objective: `race-to-idle` (default,
+//!   finish fast and let the fleet idle) vs `stretch` (coalesce work
+//!   onto fewer instances to elide parameter-fetch DMA, trading makespan
+//!   for joules). See `docs/energy.md`.
+//!
+//! Energy accounting is strictly opt-in: with `SchedulerOptions::energy`
+//! off, every completion carries zero energy and no timing field, report
+//! byte, or trace byte changes — the property suite in
+//! `rust/tests/energy_integration.rs` pins this.
+
+mod calibration;
+mod model;
+
+pub use calibration::{
+    EnergyCalibration, EnergyCalibrationFile, ENERGY_CALIBRATION_FORMAT_NAME,
+    ENERGY_CALIBRATION_FORMAT_VERSION,
+};
+pub use model::{
+    fj_to_joules, EnergyBreakdown, EnergyCoefficients, EnergyModel, TickEnergy,
+    ENERGY_MODEL_VERSION, FJ_PER_JOULE,
+};
+
+use anyhow::{bail, Result};
+
+/// The three attribution channels every tick's energy is split into.
+/// Component-level terms (PE, TCM, DMA, leakage) collapse onto these
+/// channels for reporting and calibration: active PE + active TCM form
+/// `Compute`, active DMA engines form `Dma`, and everything a stalled or
+/// waiting component burns — including leakage — forms `Idle`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EnergyChannel {
+    /// Energy spent while the PE array (and the TCM banks feeding it)
+    /// execute compute jobs.
+    Compute,
+    /// Energy spent by DMA engines moving counted bytes.
+    Dma,
+    /// Energy burned waiting: idle floors of unoccupied components plus
+    /// the leakage every cycle pays regardless of activity.
+    Idle,
+}
+
+impl EnergyChannel {
+    /// Every channel, in canonical (serialization) order.
+    pub fn all() -> [EnergyChannel; 3] {
+        [EnergyChannel::Compute, EnergyChannel::Dma, EnergyChannel::Idle]
+    }
+
+    /// Stable lower-case name used in calibration files and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            EnergyChannel::Compute => "compute",
+            EnergyChannel::Dma => "dma",
+            EnergyChannel::Idle => "idle",
+        }
+    }
+
+    /// Inverse of [`Self::name`].
+    pub fn parse(name: &str) -> Option<EnergyChannel> {
+        Self::all().into_iter().find(|c| c.name() == name)
+    }
+}
+
+/// The energy-aware scheduling objective (`neutron serve --energy-mode`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EnergyMode {
+    /// Finish each request as early as possible and let instances idle
+    /// (the classic race-to-idle policy). This is the plain scheduler:
+    /// timing is bit-identical to energy accounting switched off.
+    RaceToIdle,
+    /// Trade makespan for joules: coalesce same-model work into batches
+    /// even when idle instances are available, so followers skip their
+    /// parameter-fetch DMA. Work stretches out in time but the fleet
+    /// moves fewer bytes.
+    Stretch,
+}
+
+impl EnergyMode {
+    /// Stable kebab-case name used by the CLI and the trace header.
+    pub fn name(self) -> &'static str {
+        match self {
+            EnergyMode::RaceToIdle => "race-to-idle",
+            EnergyMode::Stretch => "stretch",
+        }
+    }
+
+    /// Inverse of [`Self::name`]; lists the valid modes on error.
+    pub fn parse(name: &str) -> Result<EnergyMode> {
+        match name {
+            "race-to-idle" => Ok(EnergyMode::RaceToIdle),
+            "stretch" => Ok(EnergyMode::Stretch),
+            other => bail!("unknown energy mode {other:?} (expected race-to-idle or stretch)"),
+        }
+    }
+}
+
+impl Default for EnergyMode {
+    fn default() -> Self {
+        EnergyMode::RaceToIdle
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn channel_names_round_trip() {
+        for c in EnergyChannel::all() {
+            assert_eq!(EnergyChannel::parse(c.name()), Some(c));
+        }
+        assert_eq!(EnergyChannel::parse("warp-drive"), None);
+    }
+
+    #[test]
+    fn mode_names_round_trip() {
+        for m in [EnergyMode::RaceToIdle, EnergyMode::Stretch] {
+            assert_eq!(EnergyMode::parse(m.name()).unwrap(), m);
+        }
+        let err = EnergyMode::parse("sprint").unwrap_err().to_string();
+        assert!(err.contains("race-to-idle") && err.contains("stretch"), "{err}");
+        assert_eq!(EnergyMode::default(), EnergyMode::RaceToIdle);
+    }
+}

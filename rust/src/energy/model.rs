@@ -1,0 +1,396 @@
+//! The energy model proper: per-component fJ/cycle coefficients derived
+//! from the architecture geometry, per-tick pricing with an exact integer
+//! conservation invariant, and the coarse analytic predictor the
+//! calibration fit corrects.
+
+use crate::arch::NeutronConfig;
+use crate::coordinator::{Job, JobProgram};
+
+/// Version of the coefficient derivation below. Bump whenever
+/// [`EnergyCoefficients::for_config`] changes so a saved energy
+/// calibration (fitted against the old rates) cannot silently correct
+/// the wrong model — the calibration file carries this next to the
+/// config fingerprint.
+pub const ENERGY_MODEL_VERSION: u64 = 1;
+
+/// Femtojoules per joule: all internal accounting is integer fJ so
+/// attribution sums are exact; joules appear only at the report edge.
+pub const FJ_PER_JOULE: f64 = 1e15;
+
+/// Convert integer femtojoules to joules (report edge only).
+pub fn fj_to_joules(fj: u64) -> f64 {
+    fj as f64 / FJ_PER_JOULE
+}
+
+/// Per-component energy rates in femtojoules per cycle, derived
+/// deterministically from the [`NeutronConfig`] geometry (version
+/// [`ENERGY_MODEL_VERSION`]). Every rate is at least 1 fJ/cycle, so an
+/// energy-enabled run never prices a nonempty program at zero joules.
+///
+/// The absolute numbers are deliberately simple first-order physics —
+/// ~0.2 pJ per int8 MAC for the PE array, per-bank TCM access energy,
+/// per-byte bus movement for the DMA engines, and a leakage floor
+/// proportional to TCM capacity. Their *ratios* carry the scheduling
+/// signal (DMA vs compute vs idle); the absolute scale is what the
+/// energy calibration fits from hardware traces.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EnergyCoefficients {
+    /// PE array, fJ per cycle of compute (all cores' MAC grids active).
+    pub pe_active_fj: u64,
+    /// PE array clock/control floor, fJ per cycle it sits idle.
+    pub pe_idle_fj: u64,
+    /// TCM banks feeding active compute, fJ per compute cycle.
+    pub tcm_active_fj: u64,
+    /// TCM retention/precharge floor, fJ per non-compute cycle.
+    pub tcm_idle_fj: u64,
+    /// DMA engines moving counted bytes, fJ per datamover-busy cycle.
+    pub dma_active_fj: u64,
+    /// DMA engine idle floor, fJ per datamover-idle cycle.
+    pub dma_idle_fj: u64,
+    /// Always-on leakage across the subsystem, fJ per cycle.
+    pub leak_fj: u64,
+}
+
+impl EnergyCoefficients {
+    /// Derive the rate set for `cfg`. Deterministic: same config, same
+    /// coefficients, every build.
+    pub fn for_config(cfg: &NeutronConfig) -> Self {
+        // ~0.2 pJ per int8 MAC; one cycle runs n·m MACs on each core.
+        let macs_per_cycle = (cfg.n * cfg.m * cfg.cores) as u64;
+        let pe_active = (200 * macs_per_cycle).max(1);
+        // Feeding those MACs streams operands through the banks; banked
+        // access energy scales with bank count, not capacity.
+        let tcm_active = (400 * cfg.tcm_banks as u64).max(1);
+        // Bus movement: ~150 fJ per byte-lane per cycle across the
+        // per-core operand/result buses.
+        let dma_active =
+            (150 * (cfg.bus_bytes * cfg.buses_per_core * cfg.cores) as u64).max(1);
+        // Leakage grows with on-chip SRAM: ~1 fJ per KiB per cycle.
+        let leak = (cfg.tcm_bytes as u64 / 1024).max(1);
+        Self {
+            pe_active_fj: pe_active,
+            pe_idle_fj: (pe_active / 20).max(1),
+            tcm_active_fj: tcm_active,
+            tcm_idle_fj: (tcm_active / 10).max(1),
+            dma_active_fj: dma_active,
+            dma_idle_fj: (dma_active / 20).max(1),
+            leak_fj: leak,
+        }
+    }
+}
+
+/// Energy of one tick (or any span of cycles), split along both axes:
+/// by component (the seven raw terms) and by channel (the
+/// compute/dma/idle accessors used everywhere downstream). Integer fJ
+/// throughout, so the channel split sums *exactly* to [`Self::total_fj`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TickEnergy {
+    /// PE array active energy, fJ.
+    pub pe_active_fj: u64,
+    /// PE array idle-floor energy, fJ.
+    pub pe_idle_fj: u64,
+    /// TCM active (operand-streaming) energy, fJ.
+    pub tcm_active_fj: u64,
+    /// TCM idle-floor energy, fJ.
+    pub tcm_idle_fj: u64,
+    /// DMA engine active energy, fJ.
+    pub dma_active_fj: u64,
+    /// DMA engine idle-floor energy, fJ.
+    pub dma_idle_fj: u64,
+    /// Leakage energy, fJ.
+    pub leak_fj: u64,
+}
+
+impl TickEnergy {
+    /// The zero-energy tick.
+    pub const ZERO: TickEnergy = TickEnergy {
+        pe_active_fj: 0,
+        pe_idle_fj: 0,
+        tcm_active_fj: 0,
+        tcm_idle_fj: 0,
+        dma_active_fj: 0,
+        dma_idle_fj: 0,
+        leak_fj: 0,
+    };
+
+    /// Compute-channel energy: the PE array plus the TCM banks feeding it.
+    pub fn compute_fj(&self) -> u64 {
+        self.pe_active_fj + self.tcm_active_fj
+    }
+
+    /// DMA-channel energy: the datamover engines moving counted bytes.
+    pub fn dma_fj(&self) -> u64 {
+        self.dma_active_fj
+    }
+
+    /// Idle-channel energy: every idle floor plus leakage.
+    pub fn idle_fj(&self) -> u64 {
+        self.pe_idle_fj + self.tcm_idle_fj + self.dma_idle_fj + self.leak_fj
+    }
+
+    /// Total energy: the sum of all seven component terms. By
+    /// construction `compute_fj() + dma_fj() + idle_fj() == total_fj()`
+    /// exactly — each component term lands in exactly one channel.
+    pub fn total_fj(&self) -> u64 {
+        self.pe_active_fj
+            + self.pe_idle_fj
+            + self.tcm_active_fj
+            + self.tcm_idle_fj
+            + self.dma_active_fj
+            + self.dma_idle_fj
+            + self.leak_fj
+    }
+
+    /// Component-wise saturating accumulation (saturation is a ~52-day
+    /// virtual-clock overflow guard, unreachable in any real run).
+    pub fn add(&mut self, other: &TickEnergy) {
+        self.pe_active_fj = self.pe_active_fj.saturating_add(other.pe_active_fj);
+        self.pe_idle_fj = self.pe_idle_fj.saturating_add(other.pe_idle_fj);
+        self.tcm_active_fj = self.tcm_active_fj.saturating_add(other.tcm_active_fj);
+        self.tcm_idle_fj = self.tcm_idle_fj.saturating_add(other.tcm_idle_fj);
+        self.dma_active_fj = self.dma_active_fj.saturating_add(other.dma_active_fj);
+        self.dma_idle_fj = self.dma_idle_fj.saturating_add(other.dma_idle_fj);
+        self.leak_fj = self.leak_fj.saturating_add(other.leak_fj);
+    }
+}
+
+/// Channel-level energy summary (compute / dma / idle), used for
+/// analytic predictions and report aggregation where the component split
+/// no longer matters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct EnergyBreakdown {
+    /// Compute-channel energy, fJ.
+    pub compute_fj: u64,
+    /// DMA-channel energy, fJ.
+    pub dma_fj: u64,
+    /// Idle-channel energy, fJ.
+    pub idle_fj: u64,
+}
+
+impl EnergyBreakdown {
+    /// Total energy across the three channels.
+    pub fn total_fj(&self) -> u64 {
+        self.compute_fj + self.dma_fj + self.idle_fj
+    }
+
+    /// Collapse a [`TickEnergy`] onto its channels.
+    pub fn from_tick(t: &TickEnergy) -> Self {
+        Self { compute_fj: t.compute_fj(), dma_fj: t.dma_fj(), idle_fj: t.idle_fj() }
+    }
+}
+
+/// Prices ticks into femtojoules. Construction is the only place the
+/// architecture enters; after that pricing is a pure function of the
+/// tick shape, so it can run inside the scheduler without touching the
+/// executor's timing path at all.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EnergyModel {
+    /// The per-component rates this model prices with.
+    pub coefficients: EnergyCoefficients,
+}
+
+impl EnergyModel {
+    /// Model with the rates derived for `cfg`.
+    pub fn for_config(cfg: &NeutronConfig) -> Self {
+        Self { coefficients: EnergyCoefficients::for_config(cfg) }
+    }
+
+    /// Price one tick from its DAE shape: `latency` cycles total, of
+    /// which `compute` ran the PE array and `dm` ran the datamover
+    /// (`compute ≤ latency`, `dm ≤ latency` — the executor guarantees
+    /// `latency = max(compute, dm)`). Components are active for their
+    /// own cycles and idle for the remainder; leakage covers every
+    /// cycle. `price_tick(cycles, 0, 0)` therefore prices a pure idle
+    /// gap, which is how inter-dispatch idle energy is accounted.
+    pub fn price_tick(&self, latency: u64, compute: u64, dm: u64) -> TickEnergy {
+        debug_assert!(compute <= latency && dm <= latency);
+        let c = &self.coefficients;
+        TickEnergy {
+            pe_active_fj: compute * c.pe_active_fj,
+            pe_idle_fj: (latency - compute) * c.pe_idle_fj,
+            tcm_active_fj: compute * c.tcm_active_fj,
+            tcm_idle_fj: (latency - compute) * c.tcm_idle_fj,
+            dma_active_fj: dm * c.dma_active_fj,
+            dma_idle_fj: (latency - dm) * c.dma_idle_fj,
+            leak_fj: latency * c.leak_fj,
+        }
+    }
+
+    /// Price a whole program under a DMA filter, replicating the
+    /// executor's tick walk exactly: per tick, compute cycles sum, DMA
+    /// cycles sum over jobs `count_dma` accepts, latency is their max
+    /// (`JobProgram::tick_latency_where`). Because this walks the same
+    /// slices with the same filter the scheduler used for timing, the
+    /// priced energy is consistent with the charged service cycles.
+    pub fn price_program_where(
+        &self,
+        program: &JobProgram,
+        mut count_dma: impl FnMut(&Job) -> bool,
+    ) -> TickEnergy {
+        let mut total = TickEnergy::ZERO;
+        for tick in program.tick_slices() {
+            let mut compute = 0u64;
+            let mut dm = 0u64;
+            for job in tick {
+                match job {
+                    Job::Compute { cycles, .. } => compute += cycles,
+                    Job::Dma { cycles, .. } => {
+                        if count_dma(job) {
+                            dm += cycles;
+                        }
+                    }
+                    Job::V2p { .. } | Job::Barrier => {}
+                }
+            }
+            total.add(&self.price_tick(compute.max(dm), compute, dm));
+        }
+        total
+    }
+
+    /// Coarse analytic prediction for one single-shot inference of a
+    /// model with `total_macs` MACs and `total_param_bytes` parameter
+    /// bytes on `cfg`: one ideal DAE tick where the PE array streams
+    /// every MAC at full width while the datamover streams every
+    /// parameter byte at DDR bandwidth. Deliberately ignorant of tiling,
+    /// batching, and residency — the gap between this and the observed
+    /// per-completion energy is exactly what the calibration fit
+    /// corrects.
+    pub fn predict_inference(
+        &self,
+        cfg: &NeutronConfig,
+        total_macs: u64,
+        total_param_bytes: u64,
+    ) -> EnergyBreakdown {
+        let macs_per_cycle = (cfg.n * cfg.m * cfg.cores) as u64;
+        let compute = total_macs.div_ceil(macs_per_cycle.max(1));
+        let ddr = cfg.ddr_bytes_per_cycle().max(1.0);
+        let dm = (total_param_bytes as f64 / ddr).ceil() as u64;
+        let latency = compute.max(dm);
+        EnergyBreakdown::from_tick(&self.price_tick(latency, compute, dm))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{Format, TransferKind};
+    use crate::compiler::TileId;
+    use crate::ir::OpId;
+
+    fn model() -> EnergyModel {
+        EnergyModel::for_config(&NeutronConfig::flagship_2tops())
+    }
+
+    #[test]
+    fn coefficients_are_deterministic_and_nonzero() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let a = EnergyCoefficients::for_config(&cfg);
+        let b = EnergyCoefficients::for_config(&cfg);
+        assert_eq!(a, b);
+        // Flagship: 16·16·4 MACs/cycle at 200 fJ each.
+        assert_eq!(a.pe_active_fj, 204_800);
+        assert_eq!(a.dma_active_fj, 150 * 16 * 3 * 4);
+        assert_eq!(a.leak_fj, 1024);
+        for rate in [
+            a.pe_active_fj,
+            a.pe_idle_fj,
+            a.tcm_active_fj,
+            a.tcm_idle_fj,
+            a.dma_active_fj,
+            a.dma_idle_fj,
+            a.leak_fj,
+        ] {
+            assert!(rate >= 1, "every rate has a 1 fJ/cycle floor");
+        }
+        // A smaller machine prices compute cheaper per cycle.
+        let mcu = EnergyCoefficients::for_config(&NeutronConfig::mcu_half_tops());
+        assert!(mcu.pe_active_fj < a.pe_active_fj);
+    }
+
+    #[test]
+    fn tick_energy_conserves_exactly() {
+        let m = model();
+        for (latency, compute, dm) in
+            [(0u64, 0u64, 0u64), (1, 1, 0), (1000, 1000, 300), (1000, 250, 1000), (7, 3, 5)]
+        {
+            let latency = latency.max(compute).max(dm);
+            let e = m.price_tick(latency, compute, dm);
+            assert_eq!(
+                e.compute_fj() + e.dma_fj() + e.idle_fj(),
+                e.total_fj(),
+                "conservation must be exact for ({latency},{compute},{dm})"
+            );
+        }
+    }
+
+    #[test]
+    fn idle_gap_pricing_is_pure_idle() {
+        let m = model();
+        let e = m.price_tick(1000, 0, 0);
+        assert_eq!(e.compute_fj(), 0);
+        assert_eq!(e.dma_fj(), 0);
+        assert!(e.idle_fj() > 0);
+        assert_eq!(e.idle_fj(), e.total_fj());
+    }
+
+    #[test]
+    fn program_pricing_matches_hand_priced_ticks() {
+        let m = model();
+        // Two ticks: a DMA-bound fetch tick, then a compute-bound tick
+        // with a shorter overlapped fetch.
+        let program = JobProgram {
+            jobs: vec![
+                Job::Dma { tile: TileId(9), kind: TransferKind::Fetch, bytes: 64, cycles: 600 },
+                Job::Barrier,
+                Job::Compute {
+                    op: OpId(0),
+                    out_tile: TileId(2),
+                    in_tiles: vec![TileId(1)],
+                    param_tile: None,
+                    format: Format::Depth,
+                    cycles: 1000,
+                },
+                Job::Dma { tile: TileId(1), kind: TransferKind::Fetch, bytes: 32, cycles: 300 },
+                Job::Barrier,
+            ],
+            model: "toy".into(),
+        };
+        let priced = m.price_program_where(&program, |_| true);
+        let mut expect = m.price_tick(600, 0, 600);
+        expect.add(&m.price_tick(1000, 1000, 300));
+        // The trailing Barrier yields an empty tick, priced at zero.
+        expect.add(&m.price_tick(0, 0, 0));
+        assert_eq!(priced, expect);
+        assert_eq!(priced.compute_fj() + priced.dma_fj() + priced.idle_fj(), priced.total_fj());
+
+        // Filtering out the tile-1 fetch removes its DMA energy and
+        // extends the datamover's idle share of the second tick.
+        let filtered = m.price_program_where(&program, |j| match j {
+            Job::Dma { tile, .. } => *tile != TileId(1),
+            _ => true,
+        });
+        assert!(filtered.dma_fj() < priced.dma_fj());
+        assert!(filtered.dma_idle_fj > priced.dma_idle_fj);
+        assert_eq!(
+            filtered.compute_fj() + filtered.dma_fj() + filtered.idle_fj(),
+            filtered.total_fj()
+        );
+    }
+
+    #[test]
+    fn analytic_prediction_scales_with_work() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let m = model();
+        let small = m.predict_inference(&cfg, 1_000_000, 100_000);
+        let big = m.predict_inference(&cfg, 10_000_000, 1_000_000);
+        assert!(big.total_fj() > small.total_fj());
+        assert!(small.compute_fj > 0 && small.dma_fj > 0 && small.idle_fj > 0);
+        assert_eq!(small.compute_fj + small.dma_fj + small.idle_fj, small.total_fj());
+    }
+
+    #[test]
+    fn fj_to_joules_edge() {
+        assert_eq!(fj_to_joules(0), 0.0);
+        assert!((fj_to_joules(1_000_000_000_000_000) - 1.0).abs() < 1e-12);
+    }
+}

@@ -9,7 +9,11 @@
 //! executes AOT-lowered JAX/Pallas kernels for numerics, and a
 //! multi-tenant serving layer (compile cache + overload-aware
 //! virtual-clock scheduler over N simulated NPU instances) with a trace
-//! capture/replay + timing-model calibration subsystem on top.
+//! capture/replay + timing-model calibration subsystem on top. Energy is
+//! a first-class metric: `energy/` prices every tick into joules
+//! (compute / DMA / idle, exactly conserved), fits an energy calibration
+//! through the same trace loop, and drives energy-aware scheduling
+//! (race-to-idle vs stretch, per-class joule budgets).
 //!
 //! See `README.md` for the architecture map and `docs/serving.md` for
 //! the serving layer's contract.
@@ -18,6 +22,7 @@ pub mod arch;
 pub mod baselines;
 pub mod compiler;
 pub mod coordinator;
+pub mod energy;
 pub mod report;
 pub mod runtime;
 pub mod serve;

@@ -13,12 +13,17 @@
 //!             [--pipeline] [--residency] [--warm-routing] [--residency-capacity BYTES]
 //!             [--residency-quota BYTES] [--decode] [--prompt-tokens P] [--decode-tokens D]
 //!             [--max-context M] [--continuous-batch]
+//!             [--energy] [--energy-mode race-to-idle|stretch] [--energy-budget J]
 //!             [--record FILE] [--calibration FILE] [--artifact-dir DIR]
 //!                                               multi-tenant serving simulation;
 //!                                               --decode switches to autoregressive
 //!                                               prefill+decode traffic (TTFT/TPOT in the
 //!                                               report), --continuous-batch admits new
 //!                                               sequences into running decode batches;
+//!                                               --energy meters femtojoule attribution
+//!                                               (per-inference/per-token joules in the
+//!                                               report; --energy-mode and --energy-budget
+//!                                               trade makespan for joules);
 //!                                               --artifact-dir warms the compile cache
 //!                                               from persistent .npu artifacts (and
 //!                                               saves what it had to compile cold)
@@ -29,19 +34,29 @@
 //!                                               --calibration recompiles under a fit)
 //!   validate  [FILE | --models a,b,c] [--save-calibration FILE]
 //!             [--decode-curve [--max-context M]]
+//!             [--energy [--save-energy-calibration FILE]]
 //!                                               predicted-vs-observed per-op-class calibration;
 //!                                               --decode-curve instead fits the per-token
 //!                                               context-length cost curve of each
-//!                                               decode-capable model's bucket ladder
-//!   tune      [--trace FILE | serve options] [--save-calibration FILE]
-//!                                               record → fit → recompile → replay loop
+//!                                               decode-capable model's bucket ladder;
+//!                                               --energy fits per-channel energy scales
+//!                                               from a trace recorded with --energy
+//!   tune      [--trace FILE | serve options] [--save-calibration FILE] [--energy]
+//!                                               record → fit → recompile → replay loop;
+//!                                               --energy fits the energy calibration
+//!                                               instead (no recompile leg)
 //!   report    table1|table2|table3|table4|fig4|fig6|genai
-//!   list                                        list zoo models
+//!   list      [--energy-calibration FILE]       list zoo models; with a calibration,
+//!                                               adds an estimated J/inference column
 
 use anyhow::{anyhow, bail, Result};
 
 use eiq_neutron::arch::NeutronConfig;
 use eiq_neutron::compiler::{compile, CompileOptions, CostCalibration};
+use eiq_neutron::energy::{
+    fj_to_joules, EnergyCalibration, EnergyCalibrationFile, EnergyChannel, EnergyMode,
+    EnergyModel, FJ_PER_JOULE,
+};
 use eiq_neutron::coordinator::{emit, Executor};
 use eiq_neutron::report;
 use eiq_neutron::runtime::{
@@ -54,8 +69,8 @@ use eiq_neutron::serve::{
 };
 use eiq_neutron::sim::{simulate, SimOptions};
 use eiq_neutron::trace::{
-    serve_recorded, tune_from_trace, CalibrationFile, DecodeCurveReport, ReplayDriver,
-    ReplayOptions, Trace, ValidationReport,
+    serve_recorded, tune_energy_from_trace, tune_from_trace, CalibrationFile,
+    DecodeCurveReport, EnergyFitReport, ReplayDriver, ReplayOptions, Trace, ValidationReport,
 };
 use eiq_neutron::util::cli::Args;
 use eiq_neutron::zoo::ModelId;
@@ -63,19 +78,7 @@ use eiq_neutron::zoo::ModelId;
 fn main() -> Result<()> {
     let args = Args::from_env();
     match args.subcommand.as_deref() {
-        Some("list") => {
-            for id in ModelId::all() {
-                let (gm, mp) = id.table_iv_reference();
-                let decode = if id.decode_config().is_some() { "  [decode]" } else { "" };
-                println!(
-                    "{:<22} {:>6.2} GMACs  {:>5.1} M params{decode}",
-                    id.display_name(),
-                    gm,
-                    mp
-                );
-            }
-            Ok(())
-        }
+        Some("list") => cmd_list(&args),
         Some("compile") => cmd_compile(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("infer") => cmd_infer(&args),
@@ -98,7 +101,9 @@ fn main() -> Result<()> {
                  [--priority-mix R,S,B] [--pipeline] [--residency] [--warm-routing] \
                  [--residency-capacity BYTES] [--residency-quota BYTES] [--decode] \
                  [--prompt-tokens P] [--decode-tokens D] [--max-context M] \
-                 [--continuous-batch] [--record FILE] [--calibration FILE] \
+                 [--continuous-batch] [--energy] [--energy-mode race-to-idle|stretch] \
+                 [--energy-budget J] [--energy-calibration FILE] \
+                 [--save-energy-calibration FILE] [--record FILE] [--calibration FILE] \
                  [--speed F] [--save-calibration FILE] [--trace FILE] [--decode-curve]"
             );
             Ok(())
@@ -152,6 +157,74 @@ fn save_calibration(path: &str, cfg: &NeutronConfig, calibration: CostCalibratio
     std::fs::write(path, CalibrationFile::new(cfg, calibration).to_json())
         .map_err(|e| anyhow!("cannot write calibration file {path:?}: {e}"))?;
     eprintln!("saved calibration{guarded_note} to {path}");
+    Ok(())
+}
+
+/// Load the `--energy-calibration FILE` per-channel fit (identity when
+/// the flag is absent), refusing a file measured on a different config.
+fn energy_calibration_from(args: &Args, cfg: &NeutronConfig) -> Result<EnergyCalibration> {
+    require_value(args, &["energy-calibration"])?;
+    match args.options.get("energy-calibration") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow!("cannot read energy calibration file {path:?}: {e}"))?;
+            EnergyCalibrationFile::parse(&text)
+                .map_err(|e| anyhow!("energy calibration file {path:?}: {e}"))?
+                .calibration_for(cfg)
+        }
+        None => Ok(EnergyCalibration::identity()),
+    }
+}
+
+/// Write a fitted energy calibration to `path` as a calibration file.
+fn save_energy_calibration(
+    path: &str,
+    cfg: &NeutronConfig,
+    calibration: EnergyCalibration,
+) -> Result<()> {
+    let guarded_note = if calibration.is_identity() { " (identity)" } else { "" };
+    std::fs::write(path, EnergyCalibrationFile::new(cfg, calibration).to_json())
+        .map_err(|e| anyhow!("cannot write energy calibration file {path:?}: {e}"))?;
+    eprintln!("saved energy calibration{guarded_note} to {path}");
+    Ok(())
+}
+
+/// `neutron list`: the zoo roster. With `--energy-calibration FILE` each
+/// row gains the analytic estimated joules per single-shot inference
+/// under that fit (the same `EnergyModel::predict_inference` the energy
+/// calibration loop scores).
+fn cmd_list(args: &Args) -> Result<()> {
+    reject_unknown_keys(args, &["energy-calibration"])?;
+    require_value(args, &["energy-calibration"])?;
+    let with_energy = args.options.contains_key("energy-calibration");
+    let cfg = NeutronConfig::flagship_2tops();
+    let calibration = energy_calibration_from(args, &cfg)?;
+    let model = EnergyModel::for_config(&cfg);
+    for id in ModelId::all() {
+        let (gm, mp) = id.table_iv_reference();
+        let decode = if id.decode_config().is_some() { "  [decode]" } else { "" };
+        if with_energy {
+            let g = id.build();
+            let predicted = model.predict_inference(&cfg, g.total_macs(), g.total_params());
+            let fj = calibration.apply(EnergyChannel::Compute, predicted.compute_fj)
+                + calibration.apply(EnergyChannel::Dma, predicted.dma_fj)
+                + calibration.apply(EnergyChannel::Idle, predicted.idle_fj);
+            println!(
+                "{:<22} {:>6.2} GMACs  {:>5.1} M params  {:>10.6} J/inf{decode}",
+                id.display_name(),
+                gm,
+                mp,
+                fj_to_joules(fj)
+            );
+        } else {
+            println!(
+                "{:<22} {:>6.2} GMACs  {:>5.1} M params{decode}",
+                id.display_name(),
+                gm,
+                mp
+            );
+        }
+    }
     Ok(())
 }
 
@@ -322,7 +395,7 @@ fn models_from(args: &Args) -> Result<Vec<ModelId>> {
 
 /// Every flag the `serve` / `record` experiment surface understands
 /// (`out` is `record`'s alternative to the positional trace path).
-const SERVE_KEYS: [&str; 23] = [
+const SERVE_KEYS: [&str; 26] = [
     "models",
     "requests",
     "mean-gap-cycles",
@@ -344,6 +417,9 @@ const SERVE_KEYS: [&str; 23] = [
     "decode-tokens",
     "max-context",
     "continuous-batch",
+    "energy",
+    "energy-mode",
+    "energy-budget",
     "record",
     "out",
 ];
@@ -443,6 +519,40 @@ fn serve_options_from(args: &Args, extra_keys: &[&str]) -> Result<ServeOptions> 
             );
         }
     }
+    let energy = args.has_flag("energy");
+    for key in ["energy-mode", "energy-budget"] {
+        if args.flags.iter().any(|f| f == key) {
+            bail!("--{key} wants a value");
+        }
+    }
+    let energy_mode = match args.options.get("energy-mode") {
+        Some(raw) => {
+            if !energy {
+                bail!(
+                    "contradictory knobs: --energy-mode needs --energy \
+                     (there is no meter to spend differently)"
+                );
+            }
+            EnergyMode::parse(raw)?
+        }
+        None => EnergyMode::default(),
+    };
+    let energy_budget_fj = match args.options.get("energy-budget") {
+        Some(_) => {
+            if !energy {
+                bail!(
+                    "contradictory knobs: --energy-budget needs --energy \
+                     (an unmetered run cannot spend against a budget)"
+                );
+            }
+            let joules = args.opt_strict("energy-budget", 0.0f64).map_err(strict)?;
+            if !joules.is_finite() || joules <= 0.0 {
+                bail!("--energy-budget wants a positive joule count, got {joules}");
+            }
+            Some((joules * FJ_PER_JOULE).round() as u64)
+        }
+        None => None,
+    };
     let decode = args.has_flag("decode");
     let continuous_batch = args.has_flag("continuous-batch");
     if continuous_batch && !decode {
@@ -505,6 +615,9 @@ fn serve_options_from(args: &Args, extra_keys: &[&str]) -> Result<ServeOptions> 
             residency_capacity_bytes,
             residency_quota_bytes,
             continuous_batch,
+            energy,
+            energy_mode,
+            energy_budget_fj,
         },
     })
 }
@@ -665,9 +778,40 @@ fn cmd_replay(args: &Args) -> Result<()> {
 }
 
 fn cmd_validate(args: &Args) -> Result<()> {
-    reject_unknown_keys(args, &["models", "save-calibration", "decode-curve", "max-context"])?;
-    require_value(args, &["models", "save-calibration", "max-context"])?;
+    reject_unknown_keys(
+        args,
+        &[
+            "models",
+            "save-calibration",
+            "decode-curve",
+            "max-context",
+            "energy",
+            "save-energy-calibration",
+        ],
+    )?;
+    require_value(args, &["models", "save-calibration", "max-context", "save-energy-calibration"])?;
     let cfg = NeutronConfig::flagship_2tops();
+    if args.options.contains_key("save-energy-calibration") && !args.has_flag("energy") {
+        bail!(
+            "contradictory knobs: --save-energy-calibration needs --energy \
+             (the per-op-class timing fit saves via --save-calibration)"
+        );
+    }
+    if args.has_flag("energy") {
+        if args.has_flag("decode-curve") {
+            bail!(
+                "contradictory knobs: --energy fits per-channel energy scales, \
+                 --decode-curve fits a context-length timing curve — pick one"
+            );
+        }
+        if args.options.contains_key("save-calibration") {
+            bail!(
+                "contradictory knobs: --energy fits an energy calibration — \
+                 save it with --save-energy-calibration, not --save-calibration"
+            );
+        }
+        return cmd_validate_energy(args, &cfg);
+    }
     if args.has_flag("decode-curve") {
         return cmd_validate_decode_curve(args, &cfg);
     }
@@ -691,6 +835,36 @@ fn cmd_validate(args: &Args) -> Result<()> {
     print!("{}", report.table());
     if let Some(path) = args.options.get("save-calibration") {
         save_calibration(path, &cfg, report.calibration_guarded())?;
+    }
+    Ok(())
+}
+
+/// `neutron validate --energy`: join the analytic energy predictions
+/// against a metered trace's per-completion observations, report the
+/// per-channel MAPE table and optionally save the guarded fit.
+fn cmd_validate_energy(args: &Args, cfg: &NeutronConfig) -> Result<()> {
+    if args.options.contains_key("max-context") {
+        bail!("--max-context only shapes --decode-curve validation");
+    }
+    if args.options.contains_key("models") {
+        bail!(
+            "--energy fits against a metered trace's observations, which already \
+             names its models — pass a trace recorded with --energy, not --models"
+        );
+    }
+    let Some(path) = args.positionals.first() else {
+        bail!(
+            "usage: neutron validate --energy <trace.jsonl> \
+             [--save-energy-calibration FILE] — the trace must be recorded \
+             with `neutron record ... --energy`"
+        );
+    };
+    let text = std::fs::read_to_string(path)?;
+    let trace = Trace::parse(&text).map_err(|e| anyhow!("trace file {path:?}: {e}"))?;
+    let report = EnergyFitReport::from_trace(&trace, cfg)?;
+    print!("{}", report.table());
+    if let Some(out) = args.options.get("save-energy-calibration") {
+        save_energy_calibration(out, cfg, report.calibration_guarded())?;
     }
     Ok(())
 }
@@ -742,9 +916,25 @@ fn cmd_validate_decode_curve(args: &Args, cfg: &NeutronConfig) -> Result<()> {
 /// usual serve flags.
 fn cmd_tune(args: &Args) -> Result<()> {
     let cfg = NeutronConfig::flagship_2tops();
-    require_value(args, &["trace", "save-calibration"])?;
+    require_value(args, &["trace", "save-calibration", "save-energy-calibration"])?;
     if args.has_flag("record") || args.options.contains_key("out") {
         bail!("neutron tune records internally — pass --trace FILE to reuse a recording");
+    }
+    // `--energy` switches the whole loop to the energy fit: the same
+    // trace, per-channel scales instead of per-op-class ones, and no
+    // recompile/replay leg (the fit corrects predictions only).
+    let energy = args.has_flag("energy");
+    if energy && args.options.contains_key("save-calibration") {
+        bail!(
+            "contradictory knobs: --energy fits an energy calibration — \
+             save it with --save-energy-calibration, not --save-calibration"
+        );
+    }
+    if !energy && args.options.contains_key("save-energy-calibration") {
+        bail!(
+            "contradictory knobs: --save-energy-calibration needs --energy \
+             (the per-op-class timing fit saves via --save-calibration)"
+        );
     }
     let trace_path = args
         .options
@@ -756,7 +946,9 @@ fn cmd_tune(args: &Args) -> Result<()> {
             // Serve-shape flags describe the recording run; with an
             // existing trace they would be silently ignored — refuse.
             for key in args.options.keys().chain(args.flags.iter()) {
-                if !["trace", "save-calibration"].contains(&key.as_str()) {
+                if !["trace", "save-calibration", "energy", "save-energy-calibration"]
+                    .contains(&key.as_str())
+                {
                     bail!("--{key} has no effect when tuning an existing trace {path:?}");
                 }
             }
@@ -764,7 +956,9 @@ fn cmd_tune(args: &Args) -> Result<()> {
             Trace::parse(&text).map_err(|e| anyhow!("trace file {path:?}: {e}"))?
         }
         None => {
-            let opts = serve_options_from(args, &["save-calibration"])?;
+            // `--energy` is part of the serve surface, so an energy tune
+            // without a trace records a metered run automatically.
+            let opts = serve_options_from(args, &["save-calibration", "save-energy-calibration"])?;
             let mut cache = CompileCache::for_serving(cfg.clone());
             let (_, trace) = serve_recorded(&cfg, &opts, &mut cache);
             eprintln!(
@@ -775,6 +969,14 @@ fn cmd_tune(args: &Args) -> Result<()> {
             trace
         }
     };
+    if energy {
+        let outcome = tune_energy_from_trace(&cfg, &trace)?;
+        print!("{}", outcome.table());
+        if let Some(path) = args.options.get("save-energy-calibration") {
+            save_energy_calibration(path, &cfg, outcome.calibration.clone())?;
+        }
+        return Ok(());
+    }
     let outcome = tune_from_trace(&cfg, &trace)?;
     print!("{}", outcome.table());
     if let Some(path) = args.options.get("save-calibration") {

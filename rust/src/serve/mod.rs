@@ -52,6 +52,20 @@
 //! weights stay pinned while it has active sequences. TTFT, TPOT and
 //! tokens/s land in [`ServeReport`]; `docs/genai.md` is the guide.
 //!
+//! ## Energy accounting
+//!
+//! With [`SchedulerOptions::energy`] on, every dispatch's ticks are
+//! priced into femtojoules by the [`crate::energy::EnergyModel`] derived
+//! from the config — same tick walk, same DMA-counting filters as the
+//! timing path, so batching/residency/pipelining discounts carry over to
+//! joules automatically. Completions carry their exactly-conserved
+//! compute/DMA/idle split, [`ServeReport`] adds joules per inference and
+//! per token (plus fleet-wide inter-dispatch idle energy), and two knobs
+//! spend the meter: [`SchedulerOptions::energy_mode`] (`race-to-idle` vs
+//! `stretch`) and [`SchedulerOptions::energy_budget_fj`] (class-ordered
+//! shedding as the budget drains). Off, the meter reads zero and every
+//! report and trace byte is unchanged. `docs/energy.md` is the guide.
+//!
 //! ## Virtual-clock contract
 //!
 //! All serving time lives on a shared **virtual clock** denominated in NPU

@@ -44,12 +44,24 @@
 //! host-clock value ever enters a decision. Residency decisions, overlap
 //! windows and warm routing all derive from the same deterministic state,
 //! so the extended scheduler still replays bit-identically.
+//!
+//! **Energy accounting** ([`SchedulerOptions::energy`]) prices every
+//! dispatch's ticks into femtojoules with the same DMA filters the
+//! timing path uses — a pure observation layered beside the executor,
+//! never inside it, so switching the meter on cannot move a single
+//! timing field. [`SchedulerOptions::energy_mode`] and
+//! [`SchedulerOptions::energy_budget_fj`] then make joules an objective:
+//! stretch-mode batching coalesces same-model work even when instances
+//! idle (eliding follower parameter-fetch DMA at a makespan cost), and a
+//! fleet joule budget sheds Batch arrivals at ¾ spend and Standard
+//! arrivals at exhaustion, Realtime never.
 
 use std::collections::{HashMap, HashSet};
 
 use crate::arch::{NeutronConfig, TcmResidency};
 use crate::compiler::TileId;
 use crate::coordinator::{Executor, Job, JobProgram, Metrics};
+use crate::energy::{EnergyMode, EnergyModel, TickEnergy};
 use crate::util::prop::Rng;
 use crate::zoo::ModelId;
 
@@ -246,6 +258,26 @@ pub struct SchedulerOptions {
     /// program cold — re-paying parameter streaming — every step
     /// (request-boundary scheduling).
     pub continuous_batch: bool,
+    /// Energy accounting: price every dispatch's ticks into femtojoules
+    /// with the [`crate::energy::EnergyModel`] derived from the config,
+    /// carried on each [`Completion`] (compute / DMA / idle channels,
+    /// exactly conserved). Off, every completion carries zero energy and
+    /// nothing else changes — timing, reports and traces are bit-
+    /// identical to a build without energy accounting.
+    pub energy: bool,
+    /// Energy objective ([`EnergyMode`]): `RaceToIdle` (default) leaves
+    /// scheduling untouched; `Stretch` coalesces same-model batches even
+    /// when idle instances are available, trading makespan for the
+    /// parameter-fetch DMA energy the followers elide. Stretch requires
+    /// `energy` — there is no point stretching without the meter on.
+    pub energy_mode: EnergyMode,
+    /// Fleet-wide joule budget in femtojoules: once ¾ of it is spent,
+    /// arriving [`Priority::Batch`] requests are shed; once it is
+    /// exhausted, [`Priority::Standard`] arrivals are shed too.
+    /// [`Priority::Realtime`] is always admitted (budgets degrade
+    /// best-effort work first, never interactive traffic). Requires
+    /// `energy` — the budget is enforced against metered spend.
+    pub energy_budget_fj: Option<u64>,
 }
 
 impl Default for SchedulerOptions {
@@ -266,6 +298,9 @@ impl Default for SchedulerOptions {
             residency_capacity_bytes: None,
             residency_quota_bytes: None,
             continuous_batch: false,
+            energy: false,
+            energy_mode: EnergyMode::RaceToIdle,
+            energy_budget_fj: None,
         }
     }
 }
@@ -303,6 +338,17 @@ impl SchedulerOptions {
                     "residency quota ({quota} bytes) exceeds the residency capacity ({cap} bytes)"
                 );
             }
+        }
+        assert!(
+            self.energy || self.energy_mode == EnergyMode::RaceToIdle,
+            "energy_mode stretch requires energy accounting (there is no meter to optimize)"
+        );
+        if let Some(budget) = self.energy_budget_fj {
+            assert!(
+                self.energy,
+                "energy_budget_fj requires energy accounting (there is no spend to budget)"
+            );
+            assert!(budget >= 1, "energy budget must be at least 1 fJ (use None for no budget)");
         }
     }
 }
@@ -403,6 +449,15 @@ pub struct Completion {
     /// single-shot requests and with residency off (where every step
     /// streams the cache and nothing counts as a *re*-fetch).
     pub kv_refetch_cycles: u64,
+    /// Compute-channel energy this request's service consumed, in
+    /// femtojoules ([`SchedulerOptions::energy`]); 0 with energy
+    /// accounting off.
+    pub energy_compute_fj: u64,
+    /// DMA-channel energy, femtojoules; 0 with energy accounting off.
+    pub energy_dma_fj: u64,
+    /// Idle-channel energy (idle floors + leakage inside the request's
+    /// service ticks), femtojoules; 0 with energy accounting off.
+    pub energy_idle_fj: u64,
 }
 
 impl Completion {
@@ -451,6 +506,14 @@ impl Completion {
         } else {
             Some(self.decode_phase_cycles() as f64 / (self.tokens - 1) as f64)
         }
+    }
+
+    /// Total energy this request's service consumed, femtojoules. Equals
+    /// the exact sum of the three channel fields (the conservation
+    /// invariant is enforced where the channels are priced); 0 with
+    /// energy accounting off.
+    pub fn energy_total_fj(&self) -> u64 {
+        self.energy_compute_fj + self.energy_dma_fj + self.energy_idle_fj
     }
 }
 
@@ -632,6 +695,10 @@ struct ActiveSeq {
     /// after a successful install is a preemption refetch, not a cold
     /// start.
     kv_installed: bool,
+    /// Energy accumulated over the sequence's life (prefill + every
+    /// decode step so far); emitted on its completion record.
+    /// [`TickEnergy::ZERO`] throughout with energy accounting off.
+    energy: TickEnergy,
 }
 
 /// One virtual NPU instance: a re-entrant executor plus its position on
@@ -769,6 +836,14 @@ pub struct Scheduler {
     /// Tokens generated across all completed decode requests (single-shot
     /// completions count 1 each).
     tokens_generated: u64,
+    /// Energy pricer, `Some` iff [`SchedulerOptions::energy`]. Pricing is
+    /// a pure observation of dispatch shapes — it never feeds back into
+    /// timing (except through the explicitly opt-in budget/stretch
+    /// knobs).
+    energy_model: Option<EnergyModel>,
+    /// Total femtojoules metered so far across all dispatches (the
+    /// budget-enforcement accumulator); 0 with energy accounting off.
+    energy_spent_fj: u64,
 }
 
 impl Scheduler {
@@ -814,6 +889,8 @@ impl Scheduler {
             decode_jobs: HashMap::new(),
             kv_evictions: 0,
             tokens_generated: 0,
+            energy_model: opts.energy.then(|| EnergyModel::for_config(cfg)),
+            energy_spent_fj: 0,
         }
     }
 
@@ -832,6 +909,23 @@ impl Scheduler {
     /// capacity the configured [`AdmissionPolicy`] decides who is shed;
     /// the victim is recorded in [`Scheduler::shed`] and returned.
     pub fn admit(&mut self, request: Request) -> Admission {
+        // Energy-budget shedding runs before capacity: once ¾ of the
+        // fleet joule budget is metered, Batch arrivals are shed; once it
+        // is exhausted, Standard arrivals too. Realtime always passes —
+        // budgets degrade best-effort work first, never interactive
+        // traffic. (u128 keeps `spent·4` overflow-proof for any budget.)
+        if let Some(budget) = self.opts.energy_budget_fj {
+            let spent = self.energy_spent_fj as u128;
+            let shed_now = match request.priority {
+                Priority::Realtime => false,
+                Priority::Standard => spent >= budget as u128,
+                Priority::Batch => spent * 4 >= budget as u128 * 3,
+            };
+            if shed_now {
+                self.shed.push(request);
+                return Admission::Shed(request);
+            }
+        }
         if let Some(cap) = self.opts.queue_capacity {
             if self.pending.len() >= cap {
                 match self.opts.policy {
@@ -1026,9 +1120,15 @@ impl Scheduler {
             .instances
             .iter()
             .all(|i| i.id == idx || i.busy_until_cycles > start);
+        // Stretch mode widens the coalescing condition: followers ride
+        // even when another instance sits idle, because a follower's
+        // marginal replay skips its parameter-fetch DMA — fewer bytes
+        // moved, at the cost of serializing work the idle instance could
+        // have raced (see `EnergyMode::Stretch`).
+        let stretch = self.opts.energy_mode == EnergyMode::Stretch;
         let batch_cap = self.effective_max_batch();
         let mut followers: Vec<Request> = Vec::new();
-        if batch_cap > 1 && others_busy {
+        if batch_cap > 1 && (others_busy || stretch) {
             // `pending` is seq-sorted, so iteration order = admission order.
             let picked: Vec<usize> = self
                 .pending
@@ -1078,6 +1178,31 @@ impl Scheduler {
         }
         self.overlap_cycles_total += overlap;
 
+        // Energy: price the leader under the same DMA filter the executor
+        // just timed with; each follower is priced as its marginal replay
+        // (every parameter-tile fetch skipped — the exact filter of
+        // [`marginal_service_cycles`]). `None` (energy off) prices
+        // everything at zero, bit for bit.
+        let leader_energy = match &self.energy_model {
+            Some(m) => m.price_program_where(program, count_dma),
+            None => TickEnergy::ZERO,
+        };
+        let follower_energy = match &self.energy_model {
+            Some(m) if !followers.is_empty() => {
+                let param_tiles = program.param_tiles();
+                m.price_program_where(program, |job| match job {
+                    Job::Dma { tile, .. } => !param_tiles.contains(tile),
+                    _ => true,
+                })
+            }
+            _ => TickEnergy::ZERO,
+        };
+        self.energy_spent_fj = self.energy_spent_fj.saturating_add(
+            leader_energy
+                .total_fj()
+                .saturating_add(follower_energy.total_fj() * followers.len() as u64),
+        );
+
         let mut finish = start + full - overlap;
         let mut completions = Vec::with_capacity(1 + followers.len());
         completions.push(Completion {
@@ -1094,6 +1219,9 @@ impl Scheduler {
             first_token_cycles: finish,
             tokens: 1,
             kv_refetch_cycles: 0,
+            energy_compute_fj: leader_energy.compute_fj(),
+            energy_dma_fj: leader_energy.dma_fj(),
+            energy_idle_fj: leader_energy.idle_fj(),
         });
         if !followers.is_empty() {
             // Followers replay the resident program: parameter fetches are
@@ -1116,6 +1244,9 @@ impl Scheduler {
                     first_token_cycles: finish,
                     tokens: 1,
                     kv_refetch_cycles: 0,
+                    energy_compute_fj: follower_energy.compute_fj(),
+                    energy_dma_fj: follower_energy.dma_fj(),
+                    energy_idle_fj: follower_energy.idle_fj(),
                 });
             }
         }
@@ -1211,7 +1342,9 @@ impl Scheduler {
     /// paid (the first sequence of a model per continuous round pays,
     /// same-model followers elide — request-boundary scheduling always
     /// pays). Returns `(step cycles, elided KV cycles, refetched KV
-    /// cycles)`.
+    /// cycles, step energy)` — the energy priced under exactly the DMA
+    /// filter the step was timed with ([`TickEnergy::ZERO`] with energy
+    /// accounting off) and already added to the fleet spend meter.
     fn decode_step_cost(
         &mut self,
         idx: usize,
@@ -1219,7 +1352,7 @@ impl Scheduler {
         bucket: &crate::coordinator::DecodeBucket,
         pay_params: bool,
         kv_installed: &mut bool,
-    ) -> (u64, u64, u64) {
+    ) -> (u64, u64, u64, TickEnergy) {
         let mut pay_kv = true;
         let mut hit_cycles = 0u64;
         let mut refetch_cycles = 0u64;
@@ -1259,7 +1392,7 @@ impl Scheduler {
         }
         self.kv_evictions += kv_victims;
         let param_tiles = bucket.program.param_tiles();
-        let cost = bucket.program.service_cycles_where(|j| match j {
+        let count_dma = |j: &Job| match j {
             Job::Dma { tile, .. } => {
                 if bucket.kv_tiles.contains(tile) {
                     pay_kv
@@ -1270,8 +1403,14 @@ impl Scheduler {
                 }
             }
             _ => true,
-        });
-        (cost.max(1), hit_cycles, refetch_cycles)
+        };
+        let cost = bucket.program.service_cycles_where(count_dma);
+        let energy = match &self.energy_model {
+            Some(m) => m.price_program_where(&bucket.program, count_dma),
+            None => TickEnergy::ZERO,
+        };
+        self.energy_spent_fj = self.energy_spent_fj.saturating_add(energy.total_fj());
+        (cost.max(1), hit_cycles, refetch_cycles, energy)
     }
 
     /// Dispatch a decode request: run its prefill as a solo dispatch
@@ -1294,7 +1433,15 @@ impl Scheduler {
             .run_program_where(&job.prefill, count_dma, None)
             .expect("sim-only dispatch cannot fail");
         let first_token = start + result.sim_cycles;
-        let complete = |finish: u64, hits: u64, refetch: u64| Completion {
+        // Prefill energy under the same residency-elision filter the
+        // executor timed with; decode-step energy accumulates on top as
+        // the steps are priced.
+        let prefill_energy = match &self.energy_model {
+            Some(m) => m.price_program_where(&job.prefill, count_dma),
+            None => TickEnergy::ZERO,
+        };
+        self.energy_spent_fj = self.energy_spent_fj.saturating_add(prefill_energy.total_fj());
+        let complete = |finish: u64, hits: u64, refetch: u64, energy: TickEnergy| Completion {
             id: head.id,
             model: head.model,
             priority: head.priority,
@@ -1308,6 +1455,9 @@ impl Scheduler {
             first_token_cycles: first_token,
             tokens: head.decode_tokens,
             kv_refetch_cycles: refetch,
+            energy_compute_fj: energy.compute_fj(),
+            energy_dma_fj: energy.dma_fj(),
+            energy_idle_fj: energy.idle_fj(),
         };
         if !self.opts.continuous_batch {
             // Request-boundary scheduling: the sequence owns the instance
@@ -1317,14 +1467,16 @@ impl Scheduler {
             let mut hit_cycles = prefill_hit_cycles;
             let mut kv_refetch = 0u64;
             let mut kv_installed = false;
+            let mut energy = prefill_energy;
             for step in 1..head.decode_tokens {
                 let kv_ctx = head.prompt_tokens.saturating_add(step - 1).clamp(1, job.max_kv());
                 let bucket = job.bucket_for(kv_ctx);
-                let (cost, hit, refetch) =
+                let (cost, hit, refetch, step_energy) =
                     self.decode_step_cost(idx, &head, bucket, true, &mut kv_installed);
                 now += cost;
                 hit_cycles += hit;
                 kv_refetch += refetch;
+                energy.add(&step_energy);
             }
             self.release_kv(idx, head.id);
             let instance = &mut self.instances[idx];
@@ -1333,7 +1485,7 @@ impl Scheduler {
             instance.occupied_cycles += now - start;
             instance.served += 1;
             self.tokens_generated += head.decode_tokens as u64;
-            return vec![complete(now, hit_cycles, kv_refetch)];
+            return vec![complete(now, hit_cycles, kv_refetch, energy)];
         }
         // Continuous batching: the instance is only committed through the
         // prefill; the sequence joins the active set and advances with
@@ -1349,7 +1501,7 @@ impl Scheduler {
             self.release_kv(idx, head.id);
             self.instances[idx].served += 1;
             self.tokens_generated += 1;
-            return vec![complete(first_token, prefill_hit_cycles, 0)];
+            return vec![complete(first_token, prefill_hit_cycles, 0, prefill_energy)];
         }
         self.instances[idx].active.push(ActiveSeq {
             request: head,
@@ -1359,6 +1511,7 @@ impl Scheduler {
             residency_hit_cycles: prefill_hit_cycles,
             kv_refetch_cycles: 0,
             kv_installed: false,
+            energy: prefill_energy,
         });
         Vec::new()
     }
@@ -1386,7 +1539,7 @@ impl Scheduler {
                 request.prompt_tokens.saturating_add(tokens_done - 1).clamp(1, job.max_kv());
             let bucket = job.bucket_for(kv_ctx);
             let pay_params = self.instances[idx].decode_warm.insert(request.model);
-            let (cost, hit, refetch) =
+            let (cost, hit, refetch, step_energy) =
                 self.decode_step_cost(idx, &request, bucket, pay_params, &mut kv_installed);
             now += cost;
             let s = &mut self.instances[idx].active[i];
@@ -1394,6 +1547,7 @@ impl Scheduler {
             s.kv_installed = kv_installed;
             s.residency_hit_cycles += hit;
             s.kv_refetch_cycles += refetch;
+            s.energy.add(&step_energy);
             if s.tokens_done == s.request.decode_tokens {
                 completions.push(Completion {
                     id: request.id,
@@ -1409,6 +1563,9 @@ impl Scheduler {
                     first_token_cycles: s.first_token_cycles,
                     tokens: request.decode_tokens,
                     kv_refetch_cycles: s.kv_refetch_cycles,
+                    energy_compute_fj: s.energy.compute_fj(),
+                    energy_dma_fj: s.energy.dma_fj(),
+                    energy_idle_fj: s.energy.idle_fj(),
                 });
             }
         }
@@ -1524,6 +1681,13 @@ impl Scheduler {
     /// decode request, 1 per single-shot inference.
     pub fn tokens_generated(&self) -> u64 {
         self.tokens_generated
+    }
+
+    /// Total femtojoules metered across all dispatches so far (the
+    /// accumulator [`SchedulerOptions::energy_budget_fj`] is enforced
+    /// against); 0 with energy accounting off.
+    pub fn energy_spent_fj(&self) -> u64 {
+        self.energy_spent_fj
     }
 
     /// Clock cycle when the last instance goes idle (0 if nothing ran).
@@ -2405,5 +2569,155 @@ mod tests {
         });
         assert_eq!(base, off);
         assert!(base.0.iter().all(|c| c.overlap_cycles == 0 && c.residency_hit_cycles == 0));
+    }
+
+    #[test]
+    fn energy_accounting_observes_without_touching_timing() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let trace = synthetic_trace(&[ModelId::MobileNetV1], 20, 800, 7);
+        let run = |energy: bool| {
+            let opts = SchedulerOptions { instances: 2, energy, ..SchedulerOptions::default() };
+            let mut s = Scheduler::new(&cfg, &opts);
+            for r in &trace {
+                s.admit(*r);
+            }
+            let mut done = Vec::new();
+            while s.next_model().is_some() {
+                done.extend(s.dispatch_next(ModelId::MobileNetV1, &weighted_program()));
+            }
+            (done, s.makespan_cycles(), s.energy_spent_fj())
+        };
+        let (off, off_makespan, off_spent) = run(false);
+        let (on, on_makespan, on_spent) = run(true);
+        assert_eq!(off_makespan, on_makespan, "the meter must never move the clock");
+        assert_eq!(off_spent, 0);
+        assert!(on_spent > 0);
+        assert_eq!(off.len(), on.len());
+        for (a, b) in off.iter().zip(&on) {
+            // Every timing field bit-identical; only the energy differs.
+            assert_eq!(
+                (a.id, a.start_cycles, a.finish_cycles, a.first_token_cycles, a.instance),
+                (b.id, b.start_cycles, b.finish_cycles, b.first_token_cycles, b.instance)
+            );
+            assert_eq!(a.energy_total_fj(), 0);
+            assert!(b.energy_total_fj() > 0, "leakage floors every priced request above 0");
+            assert_eq!(
+                b.energy_compute_fj + b.energy_dma_fj + b.energy_idle_fj,
+                b.energy_total_fj()
+            );
+        }
+        // The fleet meter is exactly the sum of the per-request meters
+        // (no idle-gap energy at the scheduler level — the report layer
+        // adds that from the makespan).
+        assert_eq!(on.iter().map(|c| c.energy_total_fj()).sum::<u64>(), on_spent);
+    }
+
+    #[test]
+    fn stretch_trades_makespan_for_follower_dma_energy() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let run = |mode: EnergyMode| {
+            // One instance per request: race-to-idle always finds an idle
+            // peer (or an empty queue on the last dispatch), so it never
+            // forms followers — every coalescing decision below is
+            // attributable to stretch alone.
+            let opts = SchedulerOptions {
+                instances: 4,
+                max_batch: 4,
+                energy: true,
+                energy_mode: mode,
+                ..SchedulerOptions::default()
+            };
+            let mut s = Scheduler::new(&cfg, &opts);
+            for id in 0..4 {
+                s.admit(request(id, Priority::Standard, 0));
+            }
+            let mut done = Vec::new();
+            while s.next_model().is_some() {
+                done.extend(s.dispatch_next(ModelId::MobileNetV1, &weighted_program()));
+            }
+            (done, s.makespan_cycles(), s.energy_spent_fj())
+        };
+        let (race, race_makespan, race_spent) = run(EnergyMode::RaceToIdle);
+        let (stretch, stretch_makespan, stretch_spent) = run(EnergyMode::Stretch);
+        // Race-to-idle spreads the four requests over the four instances
+        // (idle capacity wins); stretch coalesces them into one batch
+        // whose followers skip the 600-cycle parameter fetch.
+        assert!(race.iter().all(|c| c.batch_index == 0));
+        assert!(stretch.iter().any(|c| c.batch_index > 0));
+        assert!(
+            stretch_makespan > race_makespan,
+            "stretch serializes work: {stretch_makespan} vs {race_makespan}"
+        );
+        assert!(
+            stretch_spent < race_spent,
+            "stretch elides follower DMA: {stretch_spent} vs {race_spent}"
+        );
+        let dma = |cs: &[Completion]| cs.iter().map(|c| c.energy_dma_fj).sum::<u64>();
+        assert!(dma(&stretch) < dma(&race), "the savings come from the DMA channel");
+    }
+
+    #[test]
+    fn energy_budget_sheds_batch_then_standard_never_realtime() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let opts = SchedulerOptions {
+            instances: 1,
+            energy: true,
+            energy_budget_fj: Some(1), // exhausted by the very first dispatch
+            ..SchedulerOptions::default()
+        };
+        let mut s = Scheduler::new(&cfg, &opts);
+        // Before anything is metered, every class is admitted.
+        assert_eq!(s.admit(request(0, Priority::Batch, 0)), Admission::Accepted);
+        s.dispatch_next(ModelId::MobileNetV1, &weighted_program());
+        assert!(s.energy_spent_fj() >= 1, "the budget is now exhausted");
+        // Past exhaustion: Batch and Standard shed, Realtime still lands.
+        let batch = request(1, Priority::Batch, 2_000);
+        assert_eq!(s.admit(batch), Admission::Shed(batch));
+        let standard = request(2, Priority::Standard, 2_000);
+        assert_eq!(s.admit(standard), Admission::Shed(standard));
+        assert_eq!(s.admit(request(3, Priority::Realtime, 2_000)), Admission::Accepted);
+        assert_eq!(s.shed().len(), 2);
+        let done = s.dispatch_next(ModelId::MobileNetV1, &weighted_program());
+        assert_eq!(done[0].id, 3, "realtime work still runs under an exhausted budget");
+    }
+
+    #[test]
+    fn continuous_decode_spends_less_energy_than_request_boundary() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let run = |continuous_batch: bool| {
+            let opts = SchedulerOptions {
+                instances: 1,
+                continuous_batch,
+                energy: true,
+                ..SchedulerOptions::default()
+            };
+            let mut s = Scheduler::new(&cfg, &opts);
+            s.register_decode_job(ModelId::MobileNetV1, toy_decode_job());
+            s.admit(decode_request(0, 0, 4, 4));
+            let mut done = Vec::new();
+            while let Some(model) = s.next_model() {
+                done.extend(s.dispatch_next(model, &weighted_program()));
+            }
+            done.extend(s.drain_decode());
+            (done, s.energy_spent_fj())
+        };
+        let (boundary, boundary_spent) = run(false);
+        let (continuous, continuous_spent) = run(true);
+        assert_eq!(boundary[0].tokens, 4);
+        assert_eq!(continuous[0].tokens, 4);
+        for c in boundary.iter().chain(&continuous) {
+            assert!(c.energy_total_fj() > 0);
+            assert_eq!(
+                c.energy_compute_fj + c.energy_dma_fj + c.energy_idle_fj,
+                c.energy_total_fj()
+            );
+        }
+        // Pinned decode weights elide per-step parameter streaming, so
+        // continuous batching also wins on joules, not just makespan.
+        assert!(
+            continuous_spent < boundary_spent,
+            "continuous {continuous_spent} fJ vs boundary {boundary_spent} fJ"
+        );
+        assert_eq!(continuous[0].energy_total_fj(), continuous_spent);
     }
 }

@@ -7,6 +7,7 @@
 //! it with trace generation and report building.
 
 use crate::arch::NeutronConfig;
+use crate::energy::{fj_to_joules, EnergyModel};
 use crate::trace::TraceRecorder;
 use crate::zoo::ModelId;
 
@@ -214,6 +215,27 @@ pub struct ServeReport {
     /// preemption; each forces the victim sequence to re-pay its cache
     /// stream).
     pub kv_evictions: u64,
+    /// Total energy metered over the run, femtojoules: the sum of every
+    /// completion's attributed energy plus the fleet's inter-dispatch
+    /// idle energy (instances waiting between requests still leak and
+    /// pay idle floors up to the makespan). Exactly
+    /// `energy_compute_fj + energy_dma_fj + energy_idle_fj` — the
+    /// conservation invariant, held in integer femtojoules. 0 when
+    /// energy accounting is off.
+    pub energy_total_fj: u64,
+    /// Energy attributed to compute (PE array + TCM banks active), fJ.
+    pub energy_compute_fj: u64,
+    /// Energy attributed to counted DMA transfers, fJ.
+    pub energy_dma_fj: u64,
+    /// Energy attributed to idle floors and leakage — including the
+    /// inter-dispatch gaps instances spent waiting — fJ.
+    pub energy_idle_fj: u64,
+    /// Mean metered energy per completed request, joules (0 when energy
+    /// accounting is off or nothing completed).
+    pub joules_per_inference: f64,
+    /// Mean metered energy per generated token over decode completions
+    /// only, joules (0 without decode requests or with energy off).
+    pub joules_per_token: f64,
     /// Per-model statistics, in the caller's model order.
     pub per_model: Vec<ModelStats>,
     /// Per-priority-class statistics, highest class first (always all
@@ -339,6 +361,23 @@ impl ServeReport {
                 self.kv_evictions
             )
             .unwrap();
+        }
+        if self.energy_total_fj > 0 {
+            write!(
+                s,
+                "energy:       {:.6} J total ({:.1}% compute, {:.1}% dma, {:.1}% idle)  \
+                 {:.6} J/inf",
+                fj_to_joules(self.energy_total_fj),
+                self.energy_compute_fj as f64 / self.energy_total_fj as f64 * 100.0,
+                self.energy_dma_fj as f64 / self.energy_total_fj as f64 * 100.0,
+                self.energy_idle_fj as f64 / self.energy_total_fj as f64 * 100.0,
+                self.joules_per_inference
+            )
+            .unwrap();
+            if self.decode_requests > 0 {
+                write!(s, "  {:.9} J/tok", self.joules_per_token).unwrap();
+            }
+            writeln!(s).unwrap();
         }
         writeln!(
             s,
@@ -694,6 +733,53 @@ pub fn report_from_outcome(
         outcome.tokens_generated as f64 * freq * 1e9 / makespan as f64
     };
 
+    // Energy. Whether the run was metered is read off the completions
+    // themselves — the leakage floor prices every non-empty service
+    // above 0 fJ — so replayed traces fold energy through this same
+    // builder with no extra plumbing. The scheduler attributes energy
+    // to requests; the inter-dispatch gaps (instances waiting between
+    // requests still leak and pay idle floors) are priced here, because
+    // only the report sees the fleet-wide makespan.
+    let mut energy_compute_fj: u64 = 0;
+    let mut energy_dma_fj: u64 = 0;
+    let mut energy_idle_fj: u64 = 0;
+    for c in completions {
+        energy_compute_fj = energy_compute_fj.saturating_add(c.energy_compute_fj);
+        energy_dma_fj = energy_dma_fj.saturating_add(c.energy_dma_fj);
+        energy_idle_fj = energy_idle_fj.saturating_add(c.energy_idle_fj);
+    }
+    let energy_on = energy_compute_fj > 0 || energy_dma_fj > 0 || energy_idle_fj > 0;
+    if energy_on {
+        let model = EnergyModel::for_config(cfg);
+        for &busy in &outcome.per_instance_busy_cycles {
+            let gap = makespan.saturating_sub(busy);
+            energy_idle_fj = energy_idle_fj.saturating_add(model.price_tick(gap, 0, 0).total_fj());
+        }
+    }
+    let energy_total_fj = energy_compute_fj
+        .saturating_add(energy_dma_fj)
+        .saturating_add(energy_idle_fj);
+    let joules_per_inference = if n == 0 {
+        0.0
+    } else {
+        fj_to_joules(energy_total_fj) / n as f64
+    };
+    let decode_energy_fj: u64 = completions
+        .iter()
+        .filter(|c| decode_ids.contains(&c.id))
+        .map(|c| c.energy_total_fj())
+        .sum();
+    let decode_token_count: u64 = completions
+        .iter()
+        .filter(|c| decode_ids.contains(&c.id))
+        .map(|c| c.tokens as u64)
+        .sum();
+    let joules_per_token = if decode_token_count == 0 {
+        0.0
+    } else {
+        fj_to_joules(decode_energy_fj) / decode_token_count as f64
+    };
+
     // Per-model stats in the caller's model order (first occurrence wins,
     // so duplicate entries in `models` stay deterministic).
     let mut per_model = Vec::new();
@@ -782,6 +868,12 @@ pub fn report_from_outcome(
         tpot_mean_ms: cycles_to_ms(tpot_mean_cycles, freq),
         tokens_per_s,
         kv_evictions: outcome.kv_evictions,
+        energy_total_fj,
+        energy_compute_fj,
+        energy_dma_fj,
+        energy_idle_fj,
+        joules_per_inference,
+        joules_per_token,
         per_model,
         per_class,
         per_instance_busy_cycles: outcome.per_instance_busy_cycles.clone(),
@@ -981,5 +1073,84 @@ mod tests {
         assert_eq!(r.cache_hit_rate(), 0.0);
         assert_eq!(r.shed_rate(), 0.0);
         assert!(r.summary().contains("offered"));
+        assert_eq!(r.energy_total_fj, 0);
+        assert_eq!(r.joules_per_inference, 0.0);
+    }
+
+    #[test]
+    fn energy_report_conserves_and_is_invisible_when_off() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let base = ServeOptions {
+            models: vec![ModelId::MobileNetV3Min, ModelId::MobileNetV1],
+            requests: 16,
+            mean_gap_cycles: 500_000,
+            seed: 13,
+            scheduler: SchedulerOptions { instances: 2, ..SchedulerOptions::default() },
+            ..ServeOptions::default()
+        };
+        let off = serve(&cfg, &base);
+        assert_eq!(off.energy_total_fj, 0);
+        assert_eq!(off.joules_per_inference, 0.0);
+        assert!(!off.summary().contains("energy:"), "off-run summaries show no energy line");
+
+        let on_opts = ServeOptions {
+            scheduler: SchedulerOptions {
+                instances: 2,
+                energy: true,
+                ..SchedulerOptions::default()
+            },
+            ..base.clone()
+        };
+        let on = serve(&cfg, &on_opts);
+        // The meter never moves the clock: every timing field matches.
+        assert_eq!(off.makespan_cycles, on.makespan_cycles);
+        assert_eq!(
+            (off.p50_ms, off.p99_ms, off.goodput_inf_s, off.mean_queue_ms),
+            (on.p50_ms, on.p99_ms, on.goodput_inf_s, on.mean_queue_ms)
+        );
+        assert_eq!(off.per_model, on.per_model);
+        // Conservation is exact in integer femtojoules.
+        assert!(on.energy_total_fj > 0);
+        assert_eq!(
+            on.energy_compute_fj + on.energy_dma_fj + on.energy_idle_fj,
+            on.energy_total_fj
+        );
+        assert!(on.joules_per_inference > 0.0);
+        assert_eq!(on.joules_per_token, 0.0, "no decode requests, no per-token figure");
+        assert!(on.summary().contains("energy:"));
+        assert!(on.summary().contains("J/inf"));
+        // Determinism: rerun is bit-identical, energy included.
+        let again = serve(&cfg, &on_opts);
+        assert_eq!(on, again);
+    }
+
+    #[test]
+    fn decode_energy_report_prices_tokens() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let opts = ServeOptions {
+            models: vec![ModelId::GptTiny],
+            requests: 4,
+            mean_gap_cycles: 200_000,
+            seed: 5,
+            scheduler: SchedulerOptions {
+                instances: 1,
+                energy: true,
+                ..SchedulerOptions::default()
+            },
+            decode: true,
+            prompt_tokens: 6,
+            decode_tokens: 5,
+            max_context: 16,
+            ..ServeOptions::default()
+        };
+        let r = serve(&cfg, &opts);
+        assert_eq!(r.decode_requests, 4);
+        assert!(r.energy_total_fj > 0);
+        assert!(r.joules_per_token > 0.0);
+        assert!(
+            r.joules_per_token < r.joules_per_inference,
+            "a token is a fraction of a multi-token inference"
+        );
+        assert!(r.summary().contains("J/tok"));
     }
 }

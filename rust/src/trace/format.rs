@@ -29,6 +29,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::energy::EnergyMode;
 use crate::ir::OpClass;
 use crate::serve::{AdmissionPolicy, Completion, Priority, Request, SchedulerOptions};
 use crate::zoo::ModelId;
@@ -51,7 +52,14 @@ use crate::zoo::ModelId;
 ///   TTFT/TPOT reporting and decode replay reconcile against. Version-2
 ///   files are rejected (their completions cannot distinguish a prefill
 ///   from a full decode).
-pub const TRACE_FORMAT_VERSION: u64 = 3;
+/// - **4** — energy accounting (PR 9): the header gains the `energy`,
+///   `energy_mode` and `energy_budget_fj` scheduler knobs, and completion
+///   records gain `energy_compute_fj`, `energy_dma_fj` and
+///   `energy_idle_fj` — the exactly-conserved femtojoule attribution
+///   replay reconciles bit for bit (all three are 0 when the recording
+///   run had energy accounting off). Version-3 files are rejected (their
+///   completions carry no energy attribution to validate against).
+pub const TRACE_FORMAT_VERSION: u64 = 4;
 
 /// The format name stamped into (and required from) every header.
 pub const TRACE_FORMAT_NAME: &str = "eiq-neutron-trace";
@@ -581,6 +589,13 @@ impl Trace {
                 Json::UInt(m.scheduler.residency_quota_bytes.unwrap_or(0)),
             ),
             ("continuous_batch".into(), Json::Bool(m.scheduler.continuous_batch)),
+            ("energy".into(), Json::Bool(m.scheduler.energy)),
+            ("energy_mode".into(), Json::Str(m.scheduler.energy_mode.name().into())),
+            // 0 encodes "no budget", the CLI convention.
+            (
+                "energy_budget_fj".into(),
+                Json::UInt(m.scheduler.energy_budget_fj.unwrap_or(0)),
+            ),
         ])
     }
 
@@ -697,6 +712,9 @@ fn parse_header(j: &Json) -> Result<TraceMeta> {
             "residency_capacity_bytes",
             "residency_quota_bytes",
             "continuous_batch",
+            "energy",
+            "energy_mode",
+            "energy_budget_fj",
         ],
     )?;
     let format = str_field(j, "format")?;
@@ -774,6 +792,18 @@ fn parse_header(j: &Json) -> Result<TraceMeta> {
         }
     }
     let continuous_batch = bool_field("continuous_batch")?;
+    let energy = bool_field("energy")?;
+    let energy_mode = EnergyMode::parse(str_field(j, "energy_mode")?)?;
+    if energy_mode != EnergyMode::RaceToIdle && !energy {
+        bail!("header sets energy_mode {:?} without energy accounting", energy_mode.name());
+    }
+    let energy_budget_fj = match u64_field(j, "energy_budget_fj")? {
+        0 => None,
+        budget => Some(budget),
+    };
+    if energy_budget_fj.is_some() && !energy {
+        bail!("header sets energy_budget_fj without energy accounting");
+    }
     Ok(TraceMeta {
         version,
         config_fingerprint: u64_field(j, "config_fingerprint")?,
@@ -796,6 +826,9 @@ fn parse_header(j: &Json) -> Result<TraceMeta> {
             residency_capacity_bytes,
             residency_quota_bytes,
             continuous_batch,
+            energy,
+            energy_mode,
+            energy_budget_fj,
         },
     })
 }
@@ -854,6 +887,9 @@ fn completion_json(c: &Completion) -> Json {
         ("first_token_cycles".into(), Json::UInt(c.first_token_cycles)),
         ("tokens".into(), Json::UInt(c.tokens as u64)),
         ("kv_refetch_cycles".into(), Json::UInt(c.kv_refetch_cycles)),
+        ("energy_compute_fj".into(), Json::UInt(c.energy_compute_fj)),
+        ("energy_dma_fj".into(), Json::UInt(c.energy_dma_fj)),
+        ("energy_idle_fj".into(), Json::UInt(c.energy_idle_fj)),
     ])
 }
 
@@ -875,6 +911,9 @@ fn parse_completion(j: &Json) -> Result<Completion> {
             "first_token_cycles",
             "tokens",
             "kv_refetch_cycles",
+            "energy_compute_fj",
+            "energy_dma_fj",
+            "energy_idle_fj",
         ],
     )?;
     let first_token_cycles = u64_field(j, "first_token_cycles")?;
@@ -901,6 +940,9 @@ fn parse_completion(j: &Json) -> Result<Completion> {
         first_token_cycles,
         tokens,
         kv_refetch_cycles: u64_field(j, "kv_refetch_cycles")?,
+        energy_compute_fj: u64_field(j, "energy_compute_fj")?,
+        energy_dma_fj: u64_field(j, "energy_dma_fj")?,
+        energy_idle_fj: u64_field(j, "energy_idle_fj")?,
     })
 }
 
@@ -1041,23 +1083,45 @@ mod tests {
     #[test]
     fn version_mismatch_is_rejected() {
         let t = tiny_trace();
-        let jsonl = t.to_jsonl().replace("\"version\":3", "\"version\":99");
+        let jsonl = t.to_jsonl().replace("\"version\":4", "\"version\":99");
         let err = Trace::parse(&jsonl).unwrap_err().to_string();
         assert!(err.contains("version 99"), "{err}");
     }
 
     #[test]
-    fn old_version_2_is_rejected_naming_both_versions() {
-        // A v2 file (completions lack the first-token/decode fields) must
-        // be refused with an error naming the file's version and ours.
+    fn old_version_3_is_rejected_naming_both_versions() {
+        // A v3 file (completions carry no energy attribution) must be
+        // refused with an error naming the file's version and ours.
         let t = tiny_trace();
-        let jsonl = t.to_jsonl().replace("\"version\":3", "\"version\":2");
+        let jsonl = t.to_jsonl().replace("\"version\":4", "\"version\":3");
         let err = Trace::parse(&jsonl).unwrap_err().to_string();
         assert!(
-            err.contains("unsupported trace format version 2")
-                && err.contains("version 3"),
+            err.contains("unsupported trace format version 3")
+                && err.contains("version 4"),
             "{err}"
         );
+    }
+
+    #[test]
+    fn energy_knob_consistency_is_enforced() {
+        let t = tiny_trace();
+        let jsonl = t.to_jsonl();
+        // Stretch mode without the energy meter is contradictory.
+        let stretched =
+            jsonl.replace("\"energy_mode\":\"race-to-idle\"", "\"energy_mode\":\"stretch\"");
+        assert_ne!(stretched, jsonl);
+        let err = Trace::parse(&stretched).unwrap_err().to_string();
+        assert!(err.contains("energy_mode") && err.contains("without energy"), "{err}");
+        // So is a budget without the meter.
+        let budgeted = jsonl.replace("\"energy_budget_fj\":0", "\"energy_budget_fj\":5");
+        assert_ne!(budgeted, jsonl);
+        let err = Trace::parse(&budgeted).unwrap_err().to_string();
+        assert!(err.contains("energy_budget_fj") && err.contains("without energy"), "{err}");
+        // An unknown mode names the valid ones.
+        let unknown =
+            jsonl.replace("\"energy_mode\":\"race-to-idle\"", "\"energy_mode\":\"sprint\"");
+        let err = Trace::parse(&unknown).unwrap_err().to_string();
+        assert!(err.contains("unknown energy mode"), "{err}");
     }
 
     #[test]
@@ -1119,6 +1183,9 @@ mod tests {
                     first_token_cycles: 105,
                     tokens: 1,
                     kv_refetch_cycles: 0,
+                    energy_compute_fj: 120,
+                    energy_dma_fj: 30,
+                    energy_idle_fj: 9,
                 },
                 Completion {
                     id: 1,
@@ -1134,6 +1201,9 @@ mod tests {
                     first_token_cycles: 160,
                     tokens: 3,
                     kv_refetch_cycles: 7,
+                    energy_compute_fj: 0,
+                    energy_dma_fj: 0,
+                    energy_idle_fj: 0,
                 },
             ],
             model_ops: vec![ModelOps {

@@ -29,6 +29,15 @@
 //!   (`neutron tune`): fit a guarded calibration from a recorded trace,
 //!   recompile every model under it, replay the same requests and report
 //!   per-op-class MAPE and makespan before vs after.
+//!
+//! The same loop calibrates the energy model: a trace recorded with
+//! `--energy` carries per-completion femtojoule attribution, `neutron
+//! validate --energy` fits the per-channel [`EnergyFitReport`] /
+//! `energy::EnergyCalibration` (saved in its own strict single-line JSON
+//! format, fingerprint-pinned like the timing calibration), and `neutron
+//! tune --energy` reports the energy MAPE before vs after the guarded
+//! fit — no recompile leg, because the energy calibration corrects
+//! analytic predictions only and replay stays bit-identical.
 
 #![warn(missing_docs)]
 
@@ -43,5 +52,8 @@ pub use calibration::{CalibrationFile, CALIBRATION_FORMAT_NAME, CALIBRATION_FORM
 pub use format::{Json, ModelOps, OpRecord, Trace, TraceMeta, TRACE_FORMAT_NAME, TRACE_FORMAT_VERSION};
 pub use record::{profile_model_ops, serve_recorded, TraceRecorder};
 pub use replay::{ReplayDriver, ReplayOptions, ReplayOutcome};
-pub use tune::{tune_from_trace, TuneOutcome};
-pub use validate::{ClassCalibrationRow, DecodeCurveReport, ValidationReport};
+pub use tune::{tune_energy_from_trace, tune_from_trace, EnergyTuneOutcome, TuneOutcome};
+pub use validate::{
+    energy_pairs_from_trace, ClassCalibrationRow, DecodeCurveReport, EnergyChannelRow,
+    EnergyFitReport, ValidationReport,
+};

@@ -22,13 +22,14 @@ use anyhow::{bail, Result};
 
 use crate::arch::NeutronConfig;
 use crate::compiler::CostCalibration;
+use crate::energy::EnergyCalibration;
 use crate::serve::{CompileCache, ServeReport};
 use crate::zoo::ModelId;
 
 use super::format::Trace;
 use super::record::profile_model_ops;
 use super::replay::{ReplayDriver, ReplayOptions};
-use super::validate::ValidationReport;
+use super::validate::{energy_pairs_from_trace, EnergyFitReport, ValidationReport};
 
 /// Result of one tuning iteration over a recorded trace.
 #[derive(Debug, Clone)]
@@ -169,6 +170,84 @@ pub fn tune_from_trace(cfg: &NeutronConfig, trace: &Trace) -> Result<TuneOutcome
     })
 }
 
+/// Result of one energy-tuning iteration over a recorded trace.
+///
+/// Unlike the timing tune, there is no recompile/replay leg: the energy
+/// calibration corrects *analytic predictions* only (the per-completion
+/// observations are raw model output and never change), so the honest
+/// after-score is simply the joined pairs re-scored under the guarded
+/// fit.
+#[derive(Debug, Clone)]
+pub struct EnergyTuneOutcome {
+    /// The guarded, clamped per-channel calibration.
+    pub calibration: EnergyCalibration,
+    /// Predicted-vs-observed scoring of the raw analytic predictor.
+    pub before: EnergyFitReport,
+    /// The same pairs re-scored with the guarded calibration applied to
+    /// every prediction.
+    pub after: EnergyFitReport,
+}
+
+impl EnergyTuneOutcome {
+    /// Overall energy MAPE of the raw analytic predictor, percent.
+    pub fn mape_before_pct(&self) -> f64 {
+        self.before.overall_mape_pct
+    }
+
+    /// Overall energy MAPE under the guarded calibration, percent.
+    pub fn mape_after_pct(&self) -> f64 {
+        self.after.overall_mape_pct
+    }
+
+    /// One machine-greppable line (`ci.sh` asserts on it).
+    pub fn summary_line(&self) -> String {
+        format!(
+            "tune-energy: mape_before_pct={:.3} mape_after_pct={:.3}",
+            self.mape_before_pct(),
+            self.mape_after_pct(),
+        )
+    }
+
+    /// Human-readable report: both scoring tables and the fitted scales,
+    /// ending with [`EnergyTuneOutcome::summary_line`].
+    pub fn table(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        writeln!(s, "== recorded run (uncalibrated energy model) ==").unwrap();
+        s.push_str(&self.before.table());
+        writeln!(s, "\n== fitted energy calibration (guarded, clamped) ==").unwrap();
+        if self.calibration.is_identity() {
+            writeln!(s, "identity — no channel fit improved its recorded MAPE").unwrap();
+        } else {
+            for &(channel, scale) in self.calibration.scales() {
+                writeln!(s, "  {:<8} × {:.3}", channel.name(), scale).unwrap();
+            }
+        }
+        writeln!(s, "\n== calibrated predictions, re-scored ==").unwrap();
+        s.push_str(&self.after.table());
+        writeln!(s, "{}", self.summary_line()).unwrap();
+        s
+    }
+}
+
+/// Run one energy-tuning iteration over a recorded trace: join the
+/// analytic predictions against the recorded per-completion energy, fit
+/// the guarded per-channel calibration, and re-score the same pairs under
+/// it. Because the guard keeps only improving scales, the after-MAPE can
+/// never exceed the before-MAPE on the fitted data. Fails when the trace
+/// was recorded without `--energy`.
+pub fn tune_energy_from_trace(cfg: &NeutronConfig, trace: &Trace) -> Result<EnergyTuneOutcome> {
+    let pairs = energy_pairs_from_trace(trace, cfg)?;
+    let before = EnergyFitReport::from_pairs(&pairs);
+    let calibration = before.calibration_guarded();
+    let scaled: Vec<_> = pairs
+        .iter()
+        .map(|&(c, p, o)| (c, calibration.apply(c, p), o))
+        .collect();
+    let after = EnergyFitReport::from_pairs(&scaled);
+    Ok(EnergyTuneOutcome { calibration, before, after })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -235,5 +314,55 @@ mod tests {
         let mut trace = recorded_trace(&cfg);
         trace.model_ops.clear();
         assert!(tune_from_trace(&cfg, &trace).is_err());
+    }
+
+    fn recorded_energy_trace(cfg: &NeutronConfig) -> Trace {
+        let opts = ServeOptions {
+            models: vec![ModelId::MobileNetV3Min, ModelId::MobileNetV1],
+            requests: 10,
+            mean_gap_cycles: 300_000,
+            seed: 13,
+            scheduler: SchedulerOptions {
+                instances: 2,
+                energy: true,
+                ..SchedulerOptions::default()
+            },
+            ..ServeOptions::default()
+        };
+        let mut cache = CompileCache::for_serving(cfg.clone());
+        serve_recorded(cfg, &opts, &mut cache).1
+    }
+
+    #[test]
+    fn energy_tune_never_worsens_mape_and_is_deterministic() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let trace = recorded_energy_trace(&cfg);
+        let a = tune_energy_from_trace(&cfg, &trace).unwrap();
+        assert!(a.mape_before_pct().is_finite());
+        // Improve-only guard: re-scoring under the kept scales can only
+        // lower (or hold) the joined MAPE. The microscopic epsilon covers
+        // integer-femtojoule rounding in EnergyCalibration::apply.
+        assert!(
+            a.mape_after_pct() <= a.mape_before_pct() + 1e-6,
+            "after {} vs before {}",
+            a.mape_after_pct(),
+            a.mape_before_pct()
+        );
+        let line = a.summary_line();
+        assert!(line.starts_with("tune-energy: mape_before_pct="), "{line}");
+        let table = a.table();
+        assert!(table.contains("energy MAPE") && table.contains(&line), "{table}");
+
+        let b = tune_energy_from_trace(&cfg, &trace).unwrap();
+        assert_eq!(a.calibration, b.calibration);
+        assert_eq!(a.summary_line(), b.summary_line());
+    }
+
+    #[test]
+    fn energy_tune_refuses_an_unmetered_trace() {
+        let cfg = NeutronConfig::flagship_2tops();
+        let trace = recorded_trace(&cfg);
+        let err = tune_energy_from_trace(&cfg, &trace).unwrap_err().to_string();
+        assert!(err.contains("--energy"), "{err}");
     }
 }

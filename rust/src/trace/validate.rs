@@ -25,15 +25,22 @@
 //! data (a single least-squares slope minimizes squared error, not MAPE,
 //! so a heterogeneous class can fit a slope that makes its MAPE worse) —
 //! the form the tune loop feeds back into compilation.
+//!
+//! [`EnergyFitReport`] runs the same machinery over energy instead of
+//! cycles: per-[`EnergyChannel`] least-squares scales joining the
+//! analytic joules predictor against the per-completion energy a trace
+//! recorded with `--energy` observed, with the same clamp and
+//! improve-only guard feeding [`EnergyCalibration`].
 
 use anyhow::{bail, Result};
 
 use crate::arch::NeutronConfig;
 use crate::compiler::{ContextCurve, CostCalibration};
+use crate::energy::{EnergyBreakdown, EnergyCalibration, EnergyChannel, EnergyModel};
 use crate::ir::OpClass;
 use crate::serve::CompileCache;
 use crate::util::table::Table;
-use crate::zoo::ModelId;
+use crate::zoo::{decoder_decode_step, ModelId};
 
 use super::format::Trace;
 use super::record::profile_model_ops;
@@ -306,6 +313,147 @@ impl DecodeCurveReport {
     }
 }
 
+/// Per-channel predicted-vs-observed energy statistics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnergyChannelRow {
+    /// The energy channel this row describes.
+    pub channel: EnergyChannel,
+    /// Completions that contributed a pair to this channel.
+    pub completions: usize,
+    /// Total analytically predicted energy across those completions, fJ.
+    pub predicted_fj: u64,
+    /// Total trace-observed (tick-attributed) energy, fJ.
+    pub observed_fj: u64,
+    /// Mean absolute percentage error of the raw analytic predictor.
+    pub mape_pct: f64,
+    /// MAPE after applying this channel's own fitted scale — the guarded
+    /// calibration keeps only scales where this is no worse than
+    /// [`EnergyChannelRow::mape_pct`].
+    pub post_fit_mape_pct: f64,
+    /// Fitted linear correction (`observed ≈ scale · predicted`), clamped
+    /// into `[EnergyCalibration::MIN_SCALE, MAX_SCALE]`.
+    pub scale: f64,
+}
+
+/// Energy-model calibration: join the coarse analytic per-request energy
+/// prediction ([`EnergyModel::predict_inference`] over the model's MAC
+/// and parameter totals; decode requests add `(tokens − 1)` decode steps
+/// predicted at their mid-generation KV length) against the
+/// tick-attributed energy each completion of a recorded trace actually
+/// observed, per [`EnergyChannel`]. The energy analogue of
+/// [`ValidationReport`]: same least-squares-through-the-origin fit, same
+/// clamp, same improve-only guard — the observed side is raw model
+/// output, so the fitted [`EnergyCalibration`] corrects predictions
+/// without ever touching replay.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnergyFitReport {
+    /// One row per channel with at least one joined completion.
+    pub rows: Vec<EnergyChannelRow>,
+    /// MAPE over every scored pair, raw analytic predictor.
+    pub overall_mape_pct: f64,
+    /// MAPE over every scored pair after the fitted per-channel scales.
+    pub post_fit_mape_pct: f64,
+}
+
+impl EnergyFitReport {
+    /// Build from raw `(channel, predicted_fj, observed_fj)` tuples.
+    pub fn from_pairs(pairs: &[(EnergyChannel, u64, u64)]) -> Self {
+        let mut rows = Vec::new();
+        for channel in EnergyChannel::all() {
+            let of_channel: Vec<&(EnergyChannel, u64, u64)> =
+                pairs.iter().filter(|(c, _, _)| *c == channel).collect();
+            if of_channel.is_empty() {
+                continue;
+            }
+            let predicted: u64 = of_channel.iter().map(|(_, p, _)| p).sum();
+            let observed: u64 = of_channel.iter().map(|(_, _, o)| o).sum();
+            let scale = fit_energy_scale(of_channel.iter().map(|&&(_, p, o)| (p, o)));
+            rows.push(EnergyChannelRow {
+                channel,
+                completions: of_channel.len(),
+                predicted_fj: predicted,
+                observed_fj: observed,
+                mape_pct: mape(of_channel.iter().map(|&&(_, p, o)| (p as f64, o))),
+                post_fit_mape_pct: mape(
+                    of_channel.iter().map(|&&(_, p, o)| (p as f64 * scale, o)),
+                ),
+                scale,
+            });
+        }
+        let scale_of = |channel: EnergyChannel| {
+            rows.iter().find(|r| r.channel == channel).map(|r| r.scale).unwrap_or(1.0)
+        };
+        EnergyFitReport {
+            overall_mape_pct: mape(pairs.iter().map(|&(_, p, o)| (p as f64, o))),
+            post_fit_mape_pct: mape(
+                pairs.iter().map(|&(c, p, o)| (p as f64 * scale_of(c), o)),
+            ),
+            rows,
+        }
+    }
+
+    /// Join a recorded trace's per-completion energy against the analytic
+    /// predictor for `cfg`. Fails when the trace was recorded without
+    /// energy accounting (its completions carry only zeros — there is
+    /// nothing to fit).
+    pub fn from_trace(trace: &Trace, cfg: &NeutronConfig) -> Result<Self> {
+        Ok(Self::from_pairs(&energy_pairs_from_trace(trace, cfg)?))
+    }
+
+    /// The fitted per-channel corrections, unguarded.
+    pub fn calibration(&self) -> EnergyCalibration {
+        EnergyCalibration::from_scales(
+            &self.rows.iter().map(|r| (r.channel, r.scale)).collect::<Vec<_>>(),
+        )
+    }
+
+    /// The fitted corrections with the improve-only guard applied: a
+    /// channel keeps its scale only when the fit does not worsen that
+    /// channel's MAPE on the joined data, and no-op scales are dropped —
+    /// the mirror of [`ValidationReport::calibration_guarded`].
+    pub fn calibration_guarded(&self) -> EnergyCalibration {
+        EnergyCalibration::from_scales(
+            &self
+                .rows
+                .iter()
+                .filter(|r| r.scale != 1.0 && r.post_fit_mape_pct <= r.mape_pct)
+                .map(|r| (r.channel, r.scale))
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    /// Render the per-channel table plus the overall MAPE before/after
+    /// the fitted scales.
+    pub fn table(&self) -> String {
+        let mut t = Table::new(&[
+            "channel",
+            "completions",
+            "predicted fJ",
+            "observed fJ",
+            "MAPE %",
+            "fit MAPE %",
+            "fit scale",
+        ]);
+        for r in &self.rows {
+            t.row(vec![
+                r.channel.name().to_string(),
+                r.completions.to_string(),
+                r.predicted_fj.to_string(),
+                r.observed_fj.to_string(),
+                format!("{:.1}", r.mape_pct),
+                format!("{:.1}", r.post_fit_mape_pct),
+                format!("{:.3}", r.scale),
+            ]);
+        }
+        format!(
+            "{}energy MAPE: {:.1}%  →  {:.1}% after per-channel calibration\n",
+            t.render(),
+            self.overall_mape_pct,
+            self.post_fit_mape_pct
+        )
+    }
+}
+
 /// MAPE (%) over `(predicted, observed)` pairs; pairs with zero observed
 /// cycles are skipped (0 when nothing is scorable).
 fn mape(pairs: impl Iterator<Item = (f64, u64)>) -> f64 {
@@ -341,6 +489,100 @@ fn fit_scale(pairs: impl Iterator<Item = (u64, u64)>) -> f64 {
     let scale = num / den;
     if scale.is_finite() && scale > 0.0 {
         CostCalibration::clamp_scale(scale)
+    } else {
+        1.0
+    }
+}
+
+/// The `(channel, predicted_fj, observed_fj)` join behind
+/// [`EnergyFitReport::from_trace`], exposed so the tune loop can re-score
+/// the same pairs under a fitted calibration. Per completion: the
+/// analytic prediction is [`EnergyModel::predict_inference`] over the
+/// model's MAC/parameter totals; decode completions add `(tokens − 1)`
+/// steps predicted at their mid-generation KV length (step cost is
+/// linear in KV, so the midpoint is the exact mean). Fails when the
+/// trace was recorded without energy accounting or has no completions.
+pub fn energy_pairs_from_trace(
+    trace: &Trace,
+    cfg: &NeutronConfig,
+) -> Result<Vec<(EnergyChannel, u64, u64)>> {
+    if !trace.meta.scheduler.energy {
+        bail!(
+            "trace was recorded without energy accounting (re-record with --energy to fit \
+             an energy calibration)"
+        );
+    }
+    if trace.completions.is_empty() {
+        bail!("trace has no completions to fit an energy calibration from");
+    }
+    let model = EnergyModel::for_config(cfg);
+    // Analytic predictions depend only on (model) resp. (model, kv
+    // midpoint), so memoize the graph builds.
+    let mut base: Vec<(ModelId, EnergyBreakdown)> = Vec::new();
+    let mut steps: Vec<((ModelId, u32), EnergyBreakdown)> = Vec::new();
+    let mut pairs: Vec<(EnergyChannel, u64, u64)> = Vec::new();
+    for c in &trace.completions {
+        let mut predicted = match base.iter().find(|(m, _)| *m == c.model) {
+            Some(&(_, b)) => b,
+            None => {
+                let g = c.model.build();
+                let b = model.predict_inference(cfg, g.total_macs(), g.total_params());
+                base.push((c.model, b));
+                b
+            }
+        };
+        if c.tokens > 1 {
+            let tcfg = match c.model.decode_config() {
+                Some(t) => t,
+                None => bail!(
+                    "completion {} decoded {} tokens on non-decode model {}",
+                    c.id,
+                    c.tokens,
+                    c.model.slug()
+                ),
+            };
+            let prompt = trace
+                .requests
+                .iter()
+                .find(|r| r.id == c.id)
+                .map(|r| r.prompt_tokens)
+                .unwrap_or(0);
+            let mid_kv = prompt + c.tokens / 2;
+            let step = match steps.iter().find(|(k, _)| *k == (c.model, mid_kv)) {
+                Some(&(_, s)) => s,
+                None => {
+                    let g = decoder_decode_step(tcfg, mid_kv as usize);
+                    let s = model.predict_inference(cfg, g.total_macs(), g.total_params());
+                    steps.push(((c.model, mid_kv), s));
+                    s
+                }
+            };
+            let n = (c.tokens - 1) as u64;
+            predicted.compute_fj =
+                predicted.compute_fj.saturating_add(step.compute_fj.saturating_mul(n));
+            predicted.dma_fj = predicted.dma_fj.saturating_add(step.dma_fj.saturating_mul(n));
+            predicted.idle_fj =
+                predicted.idle_fj.saturating_add(step.idle_fj.saturating_mul(n));
+        }
+        pairs.push((EnergyChannel::Compute, predicted.compute_fj, c.energy_compute_fj));
+        pairs.push((EnergyChannel::Dma, predicted.dma_fj, c.energy_dma_fj));
+        pairs.push((EnergyChannel::Idle, predicted.idle_fj, c.energy_idle_fj));
+    }
+    Ok(pairs)
+}
+
+/// [`fit_scale`] for energy pairs: identical least-squares slope, clamped
+/// into the energy calibration's own `[MIN_SCALE, MAX_SCALE]` range.
+fn fit_energy_scale(pairs: impl Iterator<Item = (u64, u64)>) -> f64 {
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (pred, obs) in pairs {
+        num += pred as f64 * obs as f64;
+        den += (pred as f64) * (pred as f64);
+    }
+    let scale = num / den;
+    if scale.is_finite() && scale > 0.0 {
+        EnergyCalibration::clamp_scale(scale)
     } else {
         1.0
     }
@@ -461,6 +703,48 @@ mod tests {
         assert!(one.curve.is_none());
         assert_eq!(one.fit_mape_pct, 0.0);
         assert!(one.table().contains("degenerate"));
+    }
+
+    #[test]
+    fn energy_fit_mirrors_the_timing_fit() {
+        // Observed is exactly 1.5× predicted on compute, exact on dma:
+        // the fit corrects compute fully and leaves dma at identity.
+        let pairs = [
+            (EnergyChannel::Compute, 1_000, 1_500),
+            (EnergyChannel::Compute, 4_000, 6_000),
+            (EnergyChannel::Dma, 800, 800),
+        ];
+        let v = EnergyFitReport::from_pairs(&pairs);
+        assert_eq!(v.rows.len(), 2, "only channels with pairs get rows");
+        let compute = v.rows.iter().find(|r| r.channel == EnergyChannel::Compute).unwrap();
+        assert!((compute.scale - 1.5).abs() < 1e-9);
+        assert!(compute.post_fit_mape_pct < 1e-9);
+        let cal = v.calibration_guarded();
+        assert_eq!(cal.apply(EnergyChannel::Compute, 1_000), 1_500);
+        assert_eq!(cal.apply(EnergyChannel::Dma, 777), 777, "no-op scale dropped");
+        assert!(v.post_fit_mape_pct <= v.overall_mape_pct, "the guard's invariant");
+        let s = v.table();
+        assert!(s.contains("compute") && s.contains("energy MAPE"));
+    }
+
+    #[test]
+    fn energy_fit_clamps_and_guards_like_the_timing_fit() {
+        // 100× under-prediction clamps at MAX_SCALE.
+        let v = EnergyFitReport::from_pairs(&[(EnergyChannel::Idle, 10, 1_000)]);
+        assert_eq!(v.rows[0].scale, EnergyCalibration::MAX_SCALE);
+        // A heterogeneous channel whose least-squares slope worsens MAPE
+        // is dropped by the guard (same shape as the timing-fit case).
+        let v = EnergyFitReport::from_pairs(&[
+            (EnergyChannel::Dma, 1, 1),
+            (EnergyChannel::Dma, 100, 200),
+        ]);
+        let dma = v.rows.iter().find(|r| r.channel == EnergyChannel::Dma).unwrap();
+        assert!(dma.post_fit_mape_pct > dma.mape_pct, "{dma:?}");
+        assert!(v.calibration_guarded().is_identity());
+        assert!(!v.calibration().is_identity(), "unguarded keeps the raw fit");
+        // Degenerate all-zero predictions fall back to identity.
+        let v = EnergyFitReport::from_pairs(&[(EnergyChannel::Compute, 0, 500)]);
+        assert_eq!(v.rows[0].scale, 1.0);
     }
 
     #[test]

@@ -1,0 +1,260 @@
+//! Integration + property tests for the energy accounting subsystem
+//! (PR 9): exact femtojoule conservation across random schedules, strict
+//! knobs-off neutrality on the full `ServeReport`, v4 trace round-trips
+//! with record → replay energy bit-identity, class-ordered budget
+//! shedding end to end, and the improve-only energy calibration fit with
+//! its fingerprint-pinned file format.
+
+use eiq_neutron::arch::NeutronConfig;
+use eiq_neutron::energy::{EnergyCalibrationFile, EnergyChannel, EnergyMode};
+use eiq_neutron::serve::{
+    run_trace, synthetic_trace_with_mix, CompileCache, Priority, PriorityMix, SchedulerOptions,
+    ServeOptions,
+};
+use eiq_neutron::trace::{serve_recorded, tune_energy_from_trace, EnergyFitReport, ReplayDriver};
+use eiq_neutron::util::prop::{for_each_case, Rng};
+use eiq_neutron::zoo::ModelId;
+
+/// Cheap zoo subset (mirrors the trace suite's pool).
+const POOL: [ModelId; 3] =
+    [ModelId::MobileNetV1, ModelId::MobileNetV3Min, ModelId::EfficientNetLite0];
+
+fn random_energy_options(rng: &mut Rng) -> ServeOptions {
+    let k = rng.usize(1, POOL.len());
+    let start = rng.usize(0, POOL.len() - 1);
+    let mut opts = ServeOptions {
+        models: (0..k).map(|i| POOL[(start + i) % POOL.len()]).collect(),
+        requests: rng.usize(1, 20),
+        mean_gap_cycles: rng.int(0, 800_000) as u64,
+        seed: rng.next_u64(),
+        priority_mix: PriorityMix { realtime: 1, standard: 2, batch: 1 },
+        scheduler: SchedulerOptions {
+            instances: rng.usize(1, 3),
+            max_batch: rng.usize(1, 4),
+            energy: true,
+            energy_mode: if rng.bool() { EnergyMode::Stretch } else { EnergyMode::RaceToIdle },
+            ..SchedulerOptions::default()
+        },
+        ..ServeOptions::default()
+    };
+    // A quarter of the cases exercise decode pricing end to end.
+    if rng.usize(0, 3) == 0 {
+        opts.models = vec![ModelId::GptTiny];
+        opts.requests = rng.usize(1, 6);
+        opts.decode = true;
+        opts.prompt_tokens = rng.usize(1, 8) as u32;
+        opts.decode_tokens = rng.usize(1, 6) as u32;
+        opts.max_context = 16;
+        opts.scheduler.continuous_batch = rng.bool();
+    }
+    opts
+}
+
+#[test]
+fn prop_energy_is_exactly_conserved_across_random_schedules() {
+    // compute + dma + idle == total, in integer femtojoules, for the
+    // fleet report of every random schedule — batching, stretch mode and
+    // decode included. Conservation is exact, not approximate: the whole
+    // pipeline is u64 arithmetic.
+    let cfg = NeutronConfig::flagship_2tops();
+    for_each_case(12, 0x0E9E51, |rng| {
+        let opts = random_energy_options(rng);
+        let mut cache = CompileCache::for_serving(cfg.clone());
+        let (report, trace) = serve_recorded(&cfg, &opts, &mut cache);
+        assert_eq!(
+            report.energy_compute_fj + report.energy_dma_fj + report.energy_idle_fj,
+            report.energy_total_fj,
+            "fleet conservation must be exact"
+        );
+        if report.completed > 0 {
+            assert!(report.energy_total_fj > 0, "leakage floors every metered run above 0");
+            assert!(report.joules_per_inference > 0.0);
+        }
+        // Per-completion attribution sums to the fleet total minus the
+        // report-level inter-dispatch idle pricing — i.e. never exceeds
+        // the total, and matches the recorded trace exactly.
+        let completion_sum: u64 = trace
+            .completions
+            .iter()
+            .map(|c| c.energy_compute_fj + c.energy_dma_fj + c.energy_idle_fj)
+            .sum();
+        assert!(completion_sum <= report.energy_total_fj);
+        assert_eq!(
+            trace.completions.iter().map(|c| c.energy_compute_fj).sum::<u64>(),
+            report.energy_compute_fj
+        );
+        assert_eq!(
+            trace.completions.iter().map(|c| c.energy_dma_fj).sum::<u64>(),
+            report.energy_dma_fj
+        );
+    });
+}
+
+#[test]
+fn prop_energy_off_is_bit_transparent_on_the_full_report() {
+    // With the meter off (the default), the entire ServeReport — every
+    // counter, every f64 percentile — is bit-identical to a metered run
+    // of the same workload with its energy fields zeroed: pricing is pure
+    // observation and moves nothing else.
+    let cfg = NeutronConfig::flagship_2tops();
+    for_each_case(10, 0x0FF0, |rng| {
+        let on_opts = random_energy_options(rng);
+        // Stretch changes dispatch decisions by design; neutrality is
+        // only claimed for the meter itself.
+        let mut on_opts = on_opts;
+        on_opts.scheduler.energy_mode = EnergyMode::RaceToIdle;
+        let mut off_opts = on_opts.clone();
+        off_opts.scheduler.energy = false;
+
+        let mut cache = CompileCache::for_serving(cfg.clone());
+        let (on, _) = serve_recorded(&cfg, &on_opts, &mut cache);
+        let mut cache = CompileCache::for_serving(cfg.clone());
+        let (off, off_trace) = serve_recorded(&cfg, &off_opts, &mut cache);
+
+        assert_eq!(off.energy_total_fj, 0);
+        assert_eq!(off.joules_per_inference, 0.0);
+        assert_eq!(off.joules_per_token, 0.0);
+        assert!(!off.summary().contains("energy:"), "no meter, no summary line");
+        assert!(off_trace.completions.iter().all(|c| {
+            c.energy_compute_fj == 0 && c.energy_dma_fj == 0 && c.energy_idle_fj == 0
+        }));
+
+        let mut neutralized = on.clone();
+        neutralized.energy_total_fj = 0;
+        neutralized.energy_compute_fj = 0;
+        neutralized.energy_dma_fj = 0;
+        neutralized.energy_idle_fj = 0;
+        neutralized.joules_per_inference = 0.0;
+        neutralized.joules_per_token = 0.0;
+        assert_eq!(neutralized, off, "the meter must not move any non-energy field");
+    });
+}
+
+#[test]
+fn prop_metered_traces_replay_their_energy_bit_for_bit() {
+    // The v4 contract: a trace recorded with the meter on replays to a
+    // bit-identical report — joules included — after a full JSONL
+    // round-trip, and the header carries the energy knobs.
+    let cfg = NeutronConfig::flagship_2tops();
+    for_each_case(8, 0x4EA1, |rng| {
+        let opts = random_energy_options(rng);
+        let mut cache = CompileCache::for_serving(cfg.clone());
+        let (recorded, trace) = serve_recorded(&cfg, &opts, &mut cache);
+        assert!(trace.meta.scheduler.energy);
+        assert_eq!(trace.meta.scheduler.energy_mode, opts.scheduler.energy_mode);
+
+        let replayed = ReplayDriver::from_jsonl(&trace.to_jsonl())
+            .unwrap_or_else(|e| panic!("reparse failed: {e}"))
+            .replay(&cfg)
+            .unwrap_or_else(|e| panic!("replay failed: {e}"));
+        assert!(replayed.matches_recording(), "{:?}", replayed.divergence);
+        assert_eq!(replayed.report, recorded, "joules must replay bit-identically");
+        assert_eq!(replayed.report.energy_total_fj, recorded.energy_total_fj);
+    });
+}
+
+#[test]
+fn energy_budget_sheds_by_class_end_to_end() {
+    // A draining budget sheds Batch before Standard and never Realtime,
+    // through the full serving path (not just the scheduler unit): under
+    // a budget tight enough to shed, every shed request is Batch or
+    // Standard and every Realtime request completes.
+    let cfg = NeutronConfig::flagship_2tops();
+    let trace = synthetic_trace_with_mix(
+        &[ModelId::MobileNetV1],
+        40,
+        100_000,
+        21,
+        &PriorityMix { realtime: 1, standard: 1, batch: 1 },
+    );
+    let realtime_offered = trace.iter().filter(|r| r.priority == Priority::Realtime).count();
+    assert!(realtime_offered > 0, "the mix must offer realtime work");
+    let run = |budget: Option<u64>| {
+        let opts = SchedulerOptions {
+            instances: 2,
+            energy: true,
+            energy_budget_fj: budget,
+            ..SchedulerOptions::default()
+        };
+        let mut cache = CompileCache::for_serving(cfg.clone());
+        run_trace(&cfg, &trace, &opts, &mut cache)
+    };
+    let free = run(None);
+    assert!(free.shed.is_empty(), "no budget, no shedding");
+    let spent_unbounded: u64 = free
+        .completions
+        .iter()
+        .map(|c| c.energy_compute_fj + c.energy_dma_fj + c.energy_idle_fj)
+        .sum();
+    // A budget around a third of the unbounded spend must bind.
+    let capped = run(Some(spent_unbounded / 3));
+    assert!(!capped.shed.is_empty(), "a binding budget must shed");
+    assert!(
+        capped.shed.iter().all(|r| r.priority != Priority::Realtime),
+        "realtime is never shed for energy"
+    );
+    let realtime_done =
+        capped.completions.iter().filter(|c| c.priority == Priority::Realtime).count();
+    assert_eq!(realtime_done, realtime_offered, "every realtime request still completes");
+}
+
+#[test]
+fn energy_calibration_fit_improves_and_round_trips_its_file() {
+    // The fit is improve-only (guarded per channel), deterministic, and
+    // its file format round-trips exactly — including the config
+    // fingerprint pin that rejects a fit measured on a different config.
+    let cfg = NeutronConfig::flagship_2tops();
+    let opts = ServeOptions {
+        models: vec![ModelId::MobileNetV1, ModelId::MobileNetV3Min],
+        requests: 30,
+        mean_gap_cycles: 150_000,
+        seed: 5,
+        priority_mix: PriorityMix::default(),
+        scheduler: SchedulerOptions {
+            instances: 2,
+            max_batch: 3,
+            energy: true,
+            ..SchedulerOptions::default()
+        },
+        ..ServeOptions::default()
+    };
+    let mut cache = CompileCache::for_serving(cfg.clone());
+    let (_, trace) = serve_recorded(&cfg, &opts, &mut cache);
+
+    let report = EnergyFitReport::from_trace(&trace, &cfg).unwrap();
+    assert_eq!(report.rows.len(), EnergyChannel::all().len());
+    assert!(report.overall_mape_pct.is_finite() && report.overall_mape_pct >= 0.0);
+    // Guarded fit: never worse than the identity it started from (the
+    // tiny epsilon absorbs integer-femtojoule rounding in `apply`).
+    let outcome = tune_energy_from_trace(&cfg, &trace).unwrap();
+    assert!(
+        outcome.mape_after_pct() <= outcome.mape_before_pct() + 1e-6,
+        "fit must be improve-only: {} -> {}",
+        outcome.mape_before_pct(),
+        outcome.mape_after_pct()
+    );
+    // Deterministic: the same trace fits the same calibration.
+    assert_eq!(tune_energy_from_trace(&cfg, &trace).unwrap().calibration, outcome.calibration);
+
+    // File round-trip, scale clamping, fingerprint pinning.
+    let fitted = report.calibration_guarded();
+    let file = EnergyCalibrationFile::new(&cfg, fitted.clone());
+    let parsed = EnergyCalibrationFile::parse(&file.to_json()).unwrap();
+    assert_eq!(parsed.calibration_for(&cfg).unwrap(), fitted);
+    for c in EnergyChannel::all() {
+        let s = fitted.scale_for(c);
+        assert!((0.25..=4.0).contains(&s), "{c:?} scale {s} outside the clamp");
+    }
+    let mut other = cfg.clone();
+    other.tcm_banks += 1;
+    let err = parsed.calibration_for(&other).unwrap_err().to_string();
+    assert!(err.contains("config mismatch"), "wrong-config fits are rejected by name: {err}");
+
+    // An unmetered trace cannot be fitted, and says how to fix that.
+    let mut unmetered_opts = opts.clone();
+    unmetered_opts.scheduler.energy = false;
+    let mut cache = CompileCache::for_serving(cfg.clone());
+    let (_, unmetered) = serve_recorded(&cfg, &unmetered_opts, &mut cache);
+    let err = EnergyFitReport::from_trace(&unmetered, &cfg).unwrap_err().to_string();
+    assert!(err.contains("--energy"), "{err}");
+}

@@ -8,6 +8,7 @@
 
 use eiq_neutron::arch::NeutronConfig;
 use eiq_neutron::coordinator::Executor;
+use eiq_neutron::energy::EnergyMode;
 use eiq_neutron::ir::OpClass;
 use eiq_neutron::serve::{
     AdmissionPolicy, Completion, CompileCache, Priority, PriorityMix, Request, SchedulerOptions,
@@ -35,11 +36,13 @@ fn random_models(rng: &mut Rng) -> Vec<ModelId> {
 }
 
 fn random_scheduler(rng: &mut Rng) -> SchedulerOptions {
-    // The PR-7/PR-8 knobs respect their coupling rules (warm routing, a
-    // capacity override and a per-owner quota all require residency, and
-    // a quota never exceeds the capacity — `validate()` and the header
-    // parser reject anything else).
+    // The PR-7/PR-8/PR-9 knobs respect their coupling rules (warm
+    // routing, a capacity override and a per-owner quota all require
+    // residency, a quota never exceeds the capacity, and the energy mode
+    // and budget require the meter — `validate()` and the header parser
+    // reject anything else).
     let weight_residency = rng.bool();
+    let energy = rng.bool();
     let residency_capacity_bytes = if weight_residency && rng.bool() {
         Some(rng.int(1, 2_000_000) as u64)
     } else {
@@ -67,6 +70,13 @@ fn random_scheduler(rng: &mut Rng) -> SchedulerOptions {
         residency_capacity_bytes,
         residency_quota_bytes,
         continuous_batch: rng.bool(),
+        energy,
+        energy_mode: if energy && rng.bool() { EnergyMode::Stretch } else { EnergyMode::RaceToIdle },
+        energy_budget_fj: if energy && rng.bool() {
+            Some(rng.int(1, 1_000_000_000) as u64 * 1_000)
+        } else {
+            None
+        },
     }
 }
 
@@ -119,6 +129,9 @@ fn random_trace(rng: &mut Rng) -> Trace {
             first_token_cycles: finish_cycles.saturating_sub(rng.next_u64() >> 44),
             tokens: rng.usize(1, 16) as u32,
             kv_refetch_cycles: rng.next_u64() >> rng.usize(8, 63),
+            energy_compute_fj: rng.next_u64() >> rng.usize(8, 63),
+            energy_dma_fj: rng.next_u64() >> rng.usize(8, 63),
+            energy_idle_fj: rng.next_u64() >> rng.usize(8, 63),
         });
     }
     let shed_ids: Vec<u64> = requests.iter().filter(|_| rng.bool()).map(|r| r.id).collect();
@@ -199,15 +212,16 @@ fn version_mismatch_and_foreign_files_are_rejected() {
     let trace = random_trace(&mut rng);
     let jsonl = trace.to_jsonl();
     // Future version.
-    let future = jsonl.replace("\"version\":3", "\"version\":4");
+    let future = jsonl.replace("\"version\":4", "\"version\":5");
     let err = Trace::parse(&future).unwrap_err().to_string();
-    assert!(err.contains("version 4"), "{err}");
-    // Stale version: a PR-7-era v2 trace (no decode/first-token fields)
-    // must be rejected by name, not half-parsed with silent defaults.
-    let stale = jsonl.replace("\"version\":3", "\"version\":2");
+    assert!(err.contains("version 5"), "{err}");
+    // Stale version: a PR-8-era v3 trace (no per-completion energy
+    // fields) must be rejected by name, not half-parsed with silent
+    // defaults.
+    let stale = jsonl.replace("\"version\":4", "\"version\":3");
     let err = Trace::parse(&stale).unwrap_err().to_string();
     assert!(
-        err.contains("unsupported trace format version 2") && err.contains("version 3"),
+        err.contains("unsupported trace format version 3") && err.contains("version 4"),
         "stale-version error must name both versions: {err}"
     );
     // Wrong format name.
@@ -280,7 +294,8 @@ fn prop_validation_mape_is_computed_from_real_sim_ticks() {
     let mut cache = CompileCache::for_serving(cfg.clone());
     for_each_case(6, 0xCA1B, |rng| {
         let mut opts = random_serve_options(rng);
-        opts.scheduler.queue_capacity = None; // everything dispatches
+        opts.scheduler.queue_capacity = None; // everything dispatches...
+        opts.scheduler.energy_budget_fj = None; // ...and nothing is shed
         opts.requests = rng.usize(4, 16);
         let mut fresh = CompileCache::for_serving(cfg.clone());
         let (_, trace) = serve_recorded(&cfg, &opts, &mut fresh);
