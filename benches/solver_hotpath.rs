@@ -15,8 +15,11 @@
 use std::sync::Arc;
 
 use eiq_neutron::arch::NeutronConfig;
-use eiq_neutron::compiler::{compile, CompileOptions};
-use eiq_neutron::cp::{solve, CpModel, LinExpr, SearchConfig};
+use eiq_neutron::compiler::{
+    compile, compile_with_stats, schedule_with_stats, select_formats_with, tile_graph_with_stats,
+    CompileOptions, CostModel,
+};
+use eiq_neutron::cp::{solve, CpModel, EngineKind, LinExpr, SearchConfig, SolveStats};
 use eiq_neutron::serve::deterministic_compile_options;
 use eiq_neutron::util::bench::{Bencher, Measurement};
 use eiq_neutron::zoo::ModelId;
@@ -178,6 +181,123 @@ fn main() {
             sweep_model.slug(),
             warm.inference_ms,
             cold.inference_ms
+        ));
+    }
+
+    // Old-vs-new engine comparison: compile every zoo model once per engine
+    // at the deterministic serving budgets (node-limited, no wall clock) and
+    // report nodes/sec and propagations/node. The equivalence contract
+    // (rust/tests/cp_differential.rs, docs/solver.md) makes the two trees
+    // identical, so the acceptance bound "incremental explores no more
+    // nodes than the reference at equal budgets" must hold with equality —
+    // any violation means the engines diverged.
+    let engine_opts = |engine: EngineKind| -> CompileOptions {
+        let mut o = deterministic_compile_options();
+        o.tiling.solver.engine = engine;
+        o.scheduling.solver.engine = engine;
+        o.allocation_solver.engine = engine;
+        o
+    };
+    let nodes_per_sec = |st: &SolveStats, secs: f64| {
+        if secs > 0.0 {
+            st.nodes as f64 / secs
+        } else {
+            0.0
+        }
+    };
+    let props_per_node = |st: &SolveStats| {
+        if st.nodes > 0 {
+            st.propagations as f64 / st.nodes as f64
+        } else {
+            0.0
+        }
+    };
+    println!("engine comparison (deterministic serving budgets, full zoo):");
+    for model in ModelId::all() {
+        let g = model.build();
+        let t0 = std::time::Instant::now();
+        let (_, ref_stats) = compile_with_stats(&g, &cfg, &engine_opts(EngineKind::Reference));
+        let ref_secs = t0.elapsed().as_secs_f64();
+        let t1 = std::time::Instant::now();
+        let (_, inc_stats) = compile_with_stats(&g, &cfg, &engine_opts(EngineKind::Incremental));
+        let inc_secs = t1.elapsed().as_secs_f64();
+        assert!(
+            inc_stats.nodes <= ref_stats.nodes,
+            "{}: incremental explored more nodes than the reference ({} vs {})",
+            model.slug(),
+            inc_stats.nodes,
+            ref_stats.nodes
+        );
+        println!(
+            "  {:<22} {:>8} nodes | inc {:>9.0} n/s {:>6.1} p/n | ref {:>9.0} n/s {:>6.1} p/n",
+            model.slug(),
+            inc_stats.nodes,
+            nodes_per_sec(&inc_stats, inc_secs),
+            props_per_node(&inc_stats),
+            nodes_per_sec(&ref_stats, ref_secs),
+            props_per_node(&ref_stats)
+        );
+        extra_json.push(format!(
+            "{{\"name\":\"engine_cmp_{}\",\"inc_nodes\":{},\"ref_nodes\":{},\
+             \"inc_nodes_per_sec\":{:.1},\"ref_nodes_per_sec\":{:.1},\
+             \"inc_props_per_node\":{:.3},\"ref_props_per_node\":{:.3}}}",
+            model.slug(),
+            inc_stats.nodes,
+            ref_stats.nodes,
+            nodes_per_sec(&inc_stats, inc_secs),
+            nodes_per_sec(&ref_stats, ref_secs),
+            props_per_node(&inc_stats),
+            props_per_node(&ref_stats)
+        ));
+    }
+
+    // Scheduling-CP head-to-head on the heaviest zoo model: same tiled
+    // program, one timed scheduling pass per engine. DAE window placement
+    // is the hot path the cached activities target, so the nodes/sec ratio
+    // here is the headline number for the incremental rewrite.
+    {
+        let heaviest = ModelId::all()
+            .into_iter()
+            .max_by_key(|m| m.build().total_macs())
+            .expect("zoo is non-empty");
+        let g = heaviest.build();
+        let cost = CostModel::uncalibrated(&cfg);
+        let formats = select_formats_with(&g, &cost);
+        let det = deterministic_compile_options();
+        let (prog, _) = tile_graph_with_stats(&g, &formats, &cost, &det.tiling);
+        let timed = |engine: EngineKind| {
+            let mut opts = det.scheduling.clone();
+            opts.solver.engine = engine;
+            let t0 = std::time::Instant::now();
+            let (_, stats) = schedule_with_stats(&prog, &cost, &opts);
+            (t0.elapsed().as_secs_f64(), stats)
+        };
+        let (ref_secs, ref_stats) = timed(EngineKind::Reference);
+        let (inc_secs, inc_stats) = timed(EngineKind::Incremental);
+        assert!(
+            inc_stats.nodes <= ref_stats.nodes,
+            "scheduling CP: incremental explored more nodes ({} vs {})",
+            inc_stats.nodes,
+            ref_stats.nodes
+        );
+        let speedup = if inc_secs > 0.0 { ref_secs / inc_secs } else { 0.0 };
+        println!(
+            "scheduling CP on {} ({} nodes): inc {:.0} n/s vs ref {:.0} n/s ({:.2}x)",
+            heaviest.slug(),
+            inc_stats.nodes,
+            nodes_per_sec(&inc_stats, inc_secs),
+            nodes_per_sec(&ref_stats, ref_secs),
+            speedup
+        );
+        extra_json.push(format!(
+            "{{\"name\":\"engine_cmp_scheduling_{}\",\"inc_nodes\":{},\"ref_nodes\":{},\
+             \"inc_nodes_per_sec\":{:.1},\"ref_nodes_per_sec\":{:.1},\"speedup\":{:.3}}}",
+            heaviest.slug(),
+            inc_stats.nodes,
+            ref_stats.nodes,
+            nodes_per_sec(&inc_stats, inc_secs),
+            nodes_per_sec(&ref_stats, ref_secs),
+            speedup
         ));
     }
 

@@ -167,10 +167,15 @@ if ./target/release/neutron serve --energy --energy-mode sprint >/dev/null 2>&1;
 fi
 echo "energy accounting smoke OK ($emape_before% -> $emape_after% energy MAPE)"
 
-# Solver hot-path bench (includes the warm-vs-cold budget sweep and its
-# acceptance assertion); the measurements land in BENCH_solver_hotpath.json.
+# Solver hot-path bench (includes the warm-vs-cold budget sweep and the
+# old-vs-new propagation-engine comparison with its ≤-node acceptance
+# assertion); the measurements land in BENCH_solver_hotpath.json.
 cargo bench --bench solver_hotpath -- --json "$PWD/BENCH_solver_hotpath.json" \
     > /dev/null
+# The engine-comparison rows must actually land in the JSON — a bench
+# refactor that drops them would silently retire the equivalence bound.
+grep -q '"name":"engine_cmp_' BENCH_solver_hotpath.json
+grep -q '"name":"engine_cmp_scheduling_' BENCH_solver_hotpath.json
 echo "solver hotpath bench OK (BENCH_solver_hotpath.json)"
 
 # Serve throughput bench (includes the pipelining × residency sweep and

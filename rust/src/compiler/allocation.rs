@@ -28,7 +28,7 @@ use std::collections::HashMap;
 use super::scheduling::Schedule;
 use super::tiling::{TiledProgram, TileId};
 use crate::arch::{NeutronConfig, V2pTable};
-use crate::cp::{Cmp, CpModel, LinExpr, SearchConfig, Status};
+use crate::cp::{Cmp, CpModel, LinExpr, SearchConfig, SolveStats, Status};
 use crate::ir::TensorId;
 
 /// Per-tile placement: virtual bank interval.
@@ -109,6 +109,20 @@ pub fn allocate_with(
     solver_cfg: &SearchConfig,
     warm: Option<&Allocation>,
 ) -> Allocation {
+    allocate_with_stats(prog, sched, cfg, solver_cfg, warm).0
+}
+
+/// Like [`allocate_with`], additionally returning the merged [`SolveStats`]
+/// of every cluster CP solve (propagation-engine telemetry — never part of
+/// the allocation itself, so artifact bytes and plan equality are
+/// unaffected).
+pub fn allocate_with_stats(
+    prog: &TiledProgram,
+    sched: &Schedule,
+    cfg: &NeutronConfig,
+    solver_cfg: &SearchConfig,
+    warm: Option<&Allocation>,
+) -> (Allocation, SolveStats) {
     let lifetimes = tile_lifetimes(prog, sched);
     let mut tiles: Vec<TileId> = lifetimes.keys().copied().collect();
     tiles.sort();
@@ -188,9 +202,11 @@ pub fn allocate_with(
         clusters.push(cluster);
     }
 
+    let mut cp_stats = SolveStats::default();
     for cl in &clusters {
         alloc.subproblems += 1;
-        let solved = solve_cluster(prog, &group_list, cl, cfg, solver_cfg, warm, &mut alloc);
+        let solved =
+            solve_cluster(prog, &group_list, cl, cfg, solver_cfg, warm, &mut alloc, &mut cp_stats);
         if !solved {
             first_fit_cluster(prog, &group_list, cl, cfg, &mut alloc);
         }
@@ -213,7 +229,7 @@ pub fn allocate_with(
         }
         let _ = &mut v2p;
     }
-    alloc
+    (alloc, cp_stats)
 }
 
 /// CP model for one cluster: start-bank integers + pairwise no-overlap for
@@ -227,6 +243,7 @@ fn solve_cluster(
     solver_cfg: &SearchConfig,
     warm: Option<&Allocation>,
     alloc: &mut Allocation,
+    cp_stats: &mut SolveStats,
 ) -> bool {
     let c = cfg.tcm_banks as i64;
     let mut m = CpModel::new();
@@ -303,6 +320,7 @@ fn solve_cluster(
         ..solver_cfg.clone()
     };
     let sol = crate::cp::solve(&m, cfg_with_hint);
+    cp_stats.merge(&sol.stats);
     if !matches!(sol.status, Status::Optimal | Status::Feasible) {
         return false;
     }

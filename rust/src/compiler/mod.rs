@@ -10,16 +10,18 @@ pub mod pipeline;
 pub mod scheduling;
 pub mod tiling;
 
-pub use allocation::{allocate, allocate_with, Allocation, Placement};
+pub use allocation::{allocate, allocate_with, allocate_with_stats, Allocation, Placement};
 pub use cost::{
     calibrated_layer_latency_cycles, dispatch_cost, layer_latency_cycles, ContextCurve,
     CostCalibration, CostModel, DispatchCost, OpProfile,
 };
 pub use format::{select_formats, select_formats_with, FormatPlan};
-pub use pipeline::{compile, Compiled, CompileOptions};
+pub use pipeline::{compile, compile_with_stats, Compiled, CompileOptions};
 pub use scheduling::{
-    schedule, schedule_with, Schedule, ScheduledTransfer, SchedulingOptions, Tick,
+    schedule, schedule_with, schedule_with_stats, Schedule, ScheduledTransfer, SchedulingOptions,
+    Tick,
 };
 pub use tiling::{
-    tile_graph, tile_graph_with, ComputeStep, Tile, TileId, TiledProgram, TilingOptions,
+    tile_graph, tile_graph_with, tile_graph_with_stats, ComputeStep, Tile, TileId, TiledProgram,
+    TilingOptions,
 };

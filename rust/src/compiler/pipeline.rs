@@ -5,13 +5,13 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use super::allocation::{allocate_with, Allocation};
+use super::allocation::{allocate_with_stats, Allocation};
 use super::cost::{CostCalibration, CostModel};
 use super::format::{select_formats_with, FormatPlan};
-use super::scheduling::{schedule_with, Schedule, SchedulingOptions};
-use super::tiling::{tile_graph_with, TiledProgram, TilingOptions};
+use super::scheduling::{schedule_with_stats, Schedule, SchedulingOptions};
+use super::tiling::{tile_graph_with_stats, TiledProgram, TilingOptions};
 use crate::arch::NeutronConfig;
-use crate::cp::SearchConfig;
+use crate::cp::{SearchConfig, SolveStats};
 use crate::ir::Graph;
 
 /// Compilation options — the Table II matrix is spanned by the two
@@ -130,6 +130,20 @@ impl Compiled {
 /// emitted job cycles and `Compiled::inference_ms` agree on a single cost
 /// model.
 pub fn compile(graph: &Graph, cfg: &NeutronConfig, opts: &CompileOptions) -> Compiled {
+    compile_with_stats(graph, cfg, opts).0
+}
+
+/// Like [`compile`], additionally returning the [`SolveStats`] merged over
+/// every CP solve of the three mid-end passes (tiling regions, scheduling
+/// windows, allocation clusters). The stats are pure telemetry: they are
+/// not part of [`Compiled`], are never persisted into `.npu` artifacts,
+/// and have no bearing on plan equality — the `neutron compile` verbose
+/// output and the solver benches consume them.
+pub fn compile_with_stats(
+    graph: &Graph,
+    cfg: &NeutronConfig,
+    opts: &CompileOptions,
+) -> (Compiled, SolveStats) {
     let t0 = Instant::now();
     let cost = CostModel::new(cfg, opts.calibration.clone());
     let formats = select_formats_with(graph, &cost);
@@ -152,18 +166,22 @@ pub fn compile(graph: &Graph, cfg: &NeutronConfig, opts: &CompileOptions) -> Com
         }
     }
 
-    let program = tile_graph_with(graph, &formats, &cost, &tiling);
-    let sched = schedule_with(&program, &cost, &scheduling);
-    let allocation = allocate_with(
+    let mut stats = SolveStats::default();
+    let (program, tile_stats) = tile_graph_with_stats(graph, &formats, &cost, &tiling);
+    stats.merge(&tile_stats);
+    let (sched, sched_stats) = schedule_with_stats(&program, &cost, &scheduling);
+    stats.merge(&sched_stats);
+    let (allocation, alloc_stats) = allocate_with_stats(
         &program,
         &sched,
         cfg,
         &opts.allocation_solver,
         opts.warm_start.as_ref().map(|p| &p.allocation),
     );
+    stats.merge(&alloc_stats);
     let compile_ms = t0.elapsed().as_millis() as u64;
     let inference_ms = cfg.cycles_to_ms(sched.total_cycles());
-    Compiled {
+    let compiled = Compiled {
         formats,
         program,
         schedule: sched,
@@ -171,7 +189,8 @@ pub fn compile(graph: &Graph, cfg: &NeutronConfig, opts: &CompileOptions) -> Com
         compile_ms,
         inference_ms,
         calibration: opts.calibration.clone(),
-    }
+    };
+    (compiled, stats)
 }
 
 #[cfg(test)]

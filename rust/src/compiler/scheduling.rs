@@ -27,7 +27,7 @@ use std::collections::HashMap;
 use super::cost::CostModel;
 use super::tiling::{TiledProgram, TileId};
 use crate::arch::{DdrTraffic, NeutronConfig, Transfer, TransferKind};
-use crate::cp::{CpModel, LinExpr, SearchConfig, Status, Var};
+use crate::cp::{CpModel, LinExpr, SearchConfig, SolveStats, Status, Var};
 
 /// A scheduled data transfer inside a tick.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -143,10 +143,21 @@ pub fn schedule(prog: &TiledProgram, cfg: &NeutronConfig, opts: &SchedulingOptio
 /// facade keeps one source of truth; the tick *compute* latencies arrive
 /// already calibrated in `prog.steps[..].cycles`).
 pub fn schedule_with(prog: &TiledProgram, cost: &CostModel, opts: &SchedulingOptions) -> Schedule {
+    schedule_with_stats(prog, cost, opts).0
+}
+
+/// Like [`schedule_with`], additionally returning the merged [`SolveStats`]
+/// of every window CP solve (propagation-engine telemetry — never part of
+/// the schedule itself, so artifact bytes and plan equality are unaffected).
+pub fn schedule_with_stats(
+    prog: &TiledProgram,
+    cost: &CostModel,
+    opts: &SchedulingOptions,
+) -> (Schedule, SolveStats) {
     let cfg = cost.cfg();
     let n = prog.steps.len();
     if n == 0 {
-        return Schedule::default();
+        return (Schedule::default(), SolveStats::default());
     }
 
     // --- Liveness ---
@@ -348,6 +359,7 @@ pub fn schedule_with(prog: &TiledProgram, cost: &CostModel, opts: &SchedulingOpt
     let mut solve_ms = 0u64;
     let mut subproblems = 0usize;
     let mut variables = 0usize;
+    let mut cp_stats = SolveStats::default();
 
     let mut w_start = 0;
     while w_start < n_ticks {
@@ -363,7 +375,7 @@ pub fn schedule_with(prog: &TiledProgram, cost: &CostModel, opts: &SchedulingOpt
             })
             .collect();
 
-        let (placed, stats) = place_window(
+        let (placed, stats, sstats) = place_window(
             prog,
             cfg,
             opts,
@@ -376,6 +388,7 @@ pub fn schedule_with(prog: &TiledProgram, cost: &CostModel, opts: &SchedulingOpt
         subproblems += 1;
         solve_ms += stats.0;
         variables += stats.1;
+        cp_stats.merge(&sstats);
         for (ci, tick) in placed {
             let c = &candidates[ci];
             let tr = ScheduledTransfer {
@@ -391,7 +404,7 @@ pub fn schedule_with(prog: &TiledProgram, cost: &CostModel, opts: &SchedulingOpt
         w_start = w_end;
     }
 
-    Schedule { ticks, ddr, solve_ms, subproblems, variables }
+    (Schedule { ticks, ddr, solve_ms, subproblems, variables }, cp_stats)
 }
 
 fn next_use_after(prog: &TiledProgram, tile: &TileId, after: usize) -> usize {
@@ -405,9 +418,10 @@ fn next_use_after(prog: &TiledProgram, tile: &TileId, after: usize) -> usize {
 }
 
 /// CP placement of the window's transfer candidates. Returns
-/// `(placements, (solve_ms, vars))`. `prior` carries remembered tick
-/// placements from a warm-start schedule (empty when compiling cold);
-/// entries this window reuses are consumed so later windows don't.
+/// `(placements, (solve_ms, vars), solve_stats)`. `prior` carries
+/// remembered tick placements from a warm-start schedule (empty when
+/// compiling cold); entries this window reuses are consumed so later
+/// windows don't.
 #[allow(clippy::too_many_arguments)]
 fn place_window(
     prog: &TiledProgram,
@@ -418,9 +432,9 @@ fn place_window(
     in_window: &[(usize, (usize, usize))],
     w_start: usize,
     prior: &mut HashMap<(TileId, TransferKind, u64), std::collections::VecDeque<usize>>,
-) -> (Vec<(usize, usize)>, (u64, usize)) {
+) -> (Vec<(usize, usize)>, (u64, usize), SolveStats) {
     if in_window.is_empty() {
-        return (Vec::new(), (0, 0));
+        return (Vec::new(), (0, 0), SolveStats::default());
     }
     let w = window_ticks.len();
     let mut m = CpModel::new();
@@ -596,7 +610,7 @@ fn place_window(
         }
     }
     placed.sort();
-    (placed, (sol.solve_ms, vars))
+    (placed, (sol.solve_ms, vars), sol.stats)
 }
 
 #[cfg(test)]

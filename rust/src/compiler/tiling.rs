@@ -19,7 +19,7 @@ use std::collections::HashMap;
 use super::cost::{CostModel, OpProfile};
 use super::format::FormatPlan;
 use crate::arch::{Format, NeutronConfig};
-use crate::cp::{CpModel, LinExpr, SearchConfig, Status};
+use crate::cp::{CpModel, LinExpr, SearchConfig, SolveStats, Status};
 use crate::ir::{Graph, OpId, TensorId, TensorKind};
 
 /// Identifier of a tile in the tiled program.
@@ -142,6 +142,18 @@ pub fn tile_graph_with(
     cost: &CostModel,
     opts: &TilingOptions,
 ) -> TiledProgram {
+    tile_graph_with_stats(graph, plan, cost, opts).0
+}
+
+/// Like [`tile_graph_with`], additionally returning the merged
+/// [`SolveStats`] of every region CP solve (propagation-engine telemetry —
+/// never part of the tiled program, so artifact bytes are unaffected).
+pub fn tile_graph_with_stats(
+    graph: &Graph,
+    plan: &FormatPlan,
+    cost: &CostModel,
+    opts: &TilingOptions,
+) -> (TiledProgram, SolveStats) {
     let cfg = cost.cfg();
     let order = graph.topo_order();
     let profiles: HashMap<OpId, OpProfile> = order
@@ -185,8 +197,9 @@ pub fn tile_graph_with(
     } else {
         vec![regions.iter().flatten().copied().collect()]
     };
+    let mut cp_stats = SolveStats::default();
     for region in &region_groups {
-        let chosen = solve_region_sizes(
+        let (chosen, sstats) = solve_region_sizes(
             graph,
             &profiles,
             region,
@@ -194,6 +207,7 @@ pub fn tile_graph_with(
             &opts.solver,
             opts.warm_splits.as_ref(),
         );
+        cp_stats.merge(&sstats);
         for (oid, s) in chosen {
             splits.insert(oid, s);
         }
@@ -395,7 +409,7 @@ pub fn tile_graph_with(
     // Residency estimate per step: live tiles = produced-but-not-yet-fully-
     // consumed activations + inputs/params of the current step.
     prog.residency_banks = compute_residency(&prog);
-    prog
+    (prog, cp_stats)
 }
 
 /// The fusion/tiling CP for one region (Eq. 9–12): choose LS option per op
@@ -408,9 +422,9 @@ fn solve_region_sizes(
     cfg: &NeutronConfig,
     solver_cfg: &SearchConfig,
     warm_splits: Option<&HashMap<OpId, usize>>,
-) -> Vec<(OpId, usize)> {
+) -> (Vec<(OpId, usize)>, SolveStats) {
     if region.is_empty() {
-        return Vec::new();
+        return (Vec::new(), SolveStats::default());
     }
     let options: [SizeOption; 2] = [SizeOption { splits: 2 }, SizeOption { splits: 4 }];
     let c_banks = cfg.tcm_banks as i64;
@@ -521,7 +535,7 @@ fn solve_region_sizes(
             out.push((oid, options.last().unwrap().splits));
         }
     }
-    out
+    (out, sol.stats)
 }
 
 /// Per-step bank residency assuming no spills: inputs+params+output of the

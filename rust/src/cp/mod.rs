@@ -6,13 +6,23 @@
 //! from-scratch equivalent: a bounded-integer linear CP with bounds
 //! propagation and deterministic branch-and-bound, plus node/time limits so
 //! the partitioning trade-off of Table II can be reproduced faithfully.
+//!
+//! The propagation hot path is the incremental cached-activity engine in
+//! [`propagate`]; the original recompute-per-visit engine lives on in
+//! [`reference`] as a differential oracle (select it with
+//! [`EngineKind::Reference`]). Every solve reports deterministic
+//! [`SolveStats`]; the design and determinism contract are documented in
+//! `docs/solver.md`.
 
 pub mod model;
 pub mod propagate;
+pub mod reference;
 pub mod search;
 
 pub use model::{Cmp, CpModel, LinExpr, Var};
-pub use search::{solve, SearchConfig, Solution, Status, ValueError};
+pub use search::{
+    solve, EngineKind, SearchConfig, Solution, SolveStats, Status, ValueError,
+};
 
 #[cfg(test)]
 mod integration_tests {

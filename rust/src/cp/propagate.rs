@@ -1,12 +1,31 @@
-//! Bounds propagation for linear constraints.
+//! Incremental bounds propagation for linear constraints.
 //!
 //! Classic activity-based bound tightening: for `Σ aᵢxᵢ ≤ b`, the minimum
 //! activity of all terms but one bounds the remaining term, which tightens
-//! that variable's domain. Runs to fixpoint over a work queue; equalities
-//! propagate in both directions. Used both at the root (presolve) and at
-//! every node of the branch-and-bound search.
+//! that variable's domain. Runs to fixpoint over a deduped priority queue;
+//! equalities propagate in both directions. Used both at the root (presolve)
+//! and at every node of the branch-and-bound search.
+//!
+//! Unlike the original recompute-per-visit engine (preserved as the
+//! differential oracle in [`crate::cp::reference`]), this engine keeps
+//! **cached activity bounds**: per constraint, `min_act = Σ min(aᵢxᵢ)` and
+//! `max_act = Σ max(aᵢxᵢ)` are maintained in O(watchers) per bound change and
+//! restored exactly — integer deltas, no drift — on trail undo. On top of the
+//! caches sit **entailment watching** (a constraint whose cached activity
+//! already proves it satisfied for every assignment in the current box can
+//! never tighten anything deeper in the subtree, so it is unwatched until
+//! backtrack) and a **priority queue** (constraints with ≤1 unfixed variable
+//! first — those fix a variable outright — with a deterministic index
+//! tie-break). Queue order cannot affect results: every constraint is
+//! re-enqueued until it reaches its own closure (equalities included, whose
+//! `≤`/`≥` passes can feed each other), so each run converges to the unique
+//! greatest common fixpoint of the sound, monotone per-constraint tighteners
+//! regardless of visit order. The determinism/equivalence contract is spelled
+//! out in `docs/solver.md`.
 
-use super::model::{Cmp, CpModel, LinCon, Var};
+use std::collections::BTreeSet;
+
+use super::model::{Cmp, CpModel, Var};
 
 /// Mutable view of variable domains during search. Bounds are trailed by the
 /// search layer for backtracking.
@@ -52,13 +71,18 @@ impl Domains {
     }
 }
 
-/// One bound change, recorded so the search can undo it on backtrack.
+/// One reversible propagation event, recorded so the search can undo it on
+/// backtrack. Bound entries carry the *old* bound; the activity-cache deltas
+/// they imply are recomputed exactly (same integer products) on undo, so the
+/// trail itself stays as small as the original two-variant design.
 #[derive(Debug, Clone, Copy)]
 pub enum TrailEntry {
     /// Variable's lower bound was raised from `old`.
     Lb(Var, i64),
     /// Variable's upper bound was lowered from `old`.
     Ub(Var, i64),
+    /// Constraint was detected entailed and unwatched; re-watched on undo.
+    Entailed(u32),
 }
 
 /// Result of a propagation round.
@@ -70,125 +94,453 @@ pub enum PropResult {
     Infeasible,
 }
 
-/// Per-constraint cached activity bounds would be faster still, but the
-/// compiler's partitioned subproblems stay small (see `compiler::partition`),
-/// so a recompute-per-visit scheme with a var→constraints index is the
-/// simplicity/speed sweet spot here.
+/// Propagation-layer event counters, folded into
+/// [`SolveStats`](crate::cp::SolveStats) by the search layer.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PropCounters {
+    /// Constraint visits (queue pops that reached the tightening code).
+    pub propagations: u64,
+    /// Successful bound changes (lb raised or ub lowered).
+    pub tightenings: u64,
+    /// Constraints detected entailed and unwatched.
+    pub entailments: u64,
+}
+
+/// Sentinel for "no constraint currently being visited" (branch decisions).
+const NO_EXCLUDE: u32 = u32::MAX;
+
+/// The incremental propagation engine. Owns every domain mutation (branch
+/// decisions included) so the cached activities, unfixed-variable counts and
+/// entailment flags stay consistent with the trail at all times.
 pub struct Propagator {
-    /// For each var, indices of constraints that mention it.
-    watch: Vec<Vec<u32>>,
-    /// Scratch queue of constraint indices to revisit.
-    queue: Vec<u32>,
+    /// For each var, the (constraint index, coefficient) pairs that mention it.
+    watch: Vec<Vec<(u32, i64)>>,
+    /// Cached `Σ term_min` per constraint under the current domains.
+    min_act: Vec<i64>,
+    /// Cached `Σ term_max` per constraint under the current domains.
+    max_act: Vec<i64>,
+    /// Number of watch entries (terms) of each constraint whose var is unfixed.
+    unfixed: Vec<u32>,
+    /// Entailed (unwatched) flags; set via the trail, cleared on undo.
+    entailed: Vec<bool>,
+    /// Pending constraints as (priority, index): priority 0 when at most one
+    /// variable is unfixed (the visit can fix it outright), else 1. The
+    /// priority is assessed at insertion time; `BTreeSet` iteration gives the
+    /// deterministic (priority, index) pop order.
+    queue: BTreeSet<(u8, u32)>,
     /// Dedup flags for the queue.
     in_queue: Vec<bool>,
+    /// Event counters for the [`SolveStats`](crate::cp::SolveStats) layer.
+    pub counters: PropCounters,
 }
 
 impl Propagator {
-    /// Build the var→constraint watch lists for a model.
+    /// Build the watch lists and activity caches for a model. The caches are
+    /// (re)synchronized to the actual domains in [`Propagator::propagate_all`],
+    /// which must be the first call on any fresh `Domains`.
     pub fn new(model: &CpModel) -> Self {
         let mut watch = vec![Vec::new(); model.vars.len()];
         for (ci, c) in model.cons.iter().enumerate() {
-            for &(_, v) in &c.terms {
-                watch[v.index()].push(ci as u32);
+            for &(a, v) in &c.terms {
+                watch[v.index()].push((ci as u32, a));
             }
         }
+        let n = model.cons.len();
         Self {
             watch,
-            queue: Vec::new(),
-            in_queue: vec![false; model.cons.len()],
+            min_act: vec![0; n],
+            max_act: vec![0; n],
+            unfixed: vec![0; n],
+            entailed: vec![false; n],
+            queue: BTreeSet::new(),
+            in_queue: vec![false; n],
+            counters: PropCounters::default(),
         }
     }
 
-    /// Propagate all constraints to fixpoint (root call).
+    #[inline]
+    fn prio(&self, ci: u32) -> u8 {
+        u8::from(self.unfixed[ci as usize] > 1)
+    }
+
+    #[inline]
+    fn enqueue(&mut self, ci: u32) {
+        if !self.in_queue[ci as usize] && !self.entailed[ci as usize] {
+            self.in_queue[ci as usize] = true;
+            self.queue.insert((self.prio(ci), ci));
+        }
+    }
+
+    fn clear_queue(&mut self) {
+        while let Some((_, ci)) = self.queue.pop_first() {
+            self.in_queue[ci as usize] = false;
+        }
+    }
+
+    /// Raise `v`'s lower bound to `new_lb` (no-op unless it tightens). Trails
+    /// the change, updates every watcher's cached activities and unfixed
+    /// count, and enqueues watchers other than `exclude`. Returns false when
+    /// the domain empties.
+    fn set_lb(
+        &mut self,
+        v: Var,
+        new_lb: i64,
+        dom: &mut Domains,
+        trail: &mut Vec<TrailEntry>,
+        exclude: u32,
+    ) -> bool {
+        let i = v.index();
+        let old = dom.lb[i];
+        if new_lb <= old {
+            return true;
+        }
+        trail.push(TrailEntry::Lb(v, old));
+        dom.lb[i] = new_lb;
+        self.counters.tightenings += 1;
+        let was_fixed = old == dom.ub[i];
+        let now_fixed = new_lb == dom.ub[i];
+        let delta = new_lb - old;
+        for k in 0..self.watch[i].len() {
+            let (cj, c) = self.watch[i][k];
+            // lb moved: the bound-side term of min (c ≥ 0) or max (c < 0).
+            if c >= 0 {
+                self.min_act[cj as usize] += c * delta;
+            } else {
+                self.max_act[cj as usize] += c * delta;
+            }
+            if was_fixed != now_fixed {
+                if now_fixed {
+                    self.unfixed[cj as usize] -= 1;
+                } else {
+                    self.unfixed[cj as usize] += 1;
+                }
+            }
+            if cj != exclude {
+                self.enqueue(cj);
+            }
+        }
+        dom.ub[i] >= new_lb
+    }
+
+    /// Lower `v`'s upper bound to `new_ub`; mirror of [`Propagator::set_lb`].
+    fn set_ub(
+        &mut self,
+        v: Var,
+        new_ub: i64,
+        dom: &mut Domains,
+        trail: &mut Vec<TrailEntry>,
+        exclude: u32,
+    ) -> bool {
+        let i = v.index();
+        let old = dom.ub[i];
+        if new_ub >= old {
+            return true;
+        }
+        trail.push(TrailEntry::Ub(v, old));
+        dom.ub[i] = new_ub;
+        self.counters.tightenings += 1;
+        let was_fixed = old == dom.lb[i];
+        let now_fixed = new_ub == dom.lb[i];
+        let delta = new_ub - old;
+        for k in 0..self.watch[i].len() {
+            let (cj, c) = self.watch[i][k];
+            if c >= 0 {
+                self.max_act[cj as usize] += c * delta;
+            } else {
+                self.min_act[cj as usize] += c * delta;
+            }
+            if was_fixed != now_fixed {
+                if now_fixed {
+                    self.unfixed[cj as usize] -= 1;
+                } else {
+                    self.unfixed[cj as usize] += 1;
+                }
+            }
+            if cj != exclude {
+                self.enqueue(cj);
+            }
+        }
+        dom.lb[i] >= new_ub
+    }
+
+    /// Branch decision `x = lb` (or the domain-shrink `x ≥ lb+1`): raise the
+    /// lower bound through the engine so caches and queue stay consistent.
+    pub fn branch_lb(
+        &mut self,
+        v: Var,
+        new_lb: i64,
+        dom: &mut Domains,
+        trail: &mut Vec<TrailEntry>,
+    ) -> bool {
+        self.set_lb(v, new_lb, dom, trail, NO_EXCLUDE)
+    }
+
+    /// Branch decision `x = ub` (or the domain-shrink `x ≤ ub-1`).
+    pub fn branch_ub(
+        &mut self,
+        v: Var,
+        new_ub: i64,
+        dom: &mut Domains,
+        trail: &mut Vec<TrailEntry>,
+    ) -> bool {
+        self.set_ub(v, new_ub, dom, trail, NO_EXCLUDE)
+    }
+
+    /// Undo every trailed event past `mark`, restoring domains, cached
+    /// activities (exact integer deltas — the same products that were added
+    /// are subtracted), unfixed counts and entailment flags.
+    pub fn undo_to(&mut self, dom: &mut Domains, trail: &mut Vec<TrailEntry>, mark: usize) {
+        debug_assert!(self.queue.is_empty(), "undo with a non-empty queue");
+        while trail.len() > mark {
+            match trail.pop().unwrap() {
+                TrailEntry::Lb(v, old) => {
+                    let i = v.index();
+                    let cur = dom.lb[i];
+                    dom.lb[i] = old;
+                    let was_fixed = cur == dom.ub[i];
+                    let now_fixed = old == dom.ub[i];
+                    let delta = old - cur;
+                    for k in 0..self.watch[i].len() {
+                        let (cj, c) = self.watch[i][k];
+                        if c >= 0 {
+                            self.min_act[cj as usize] += c * delta;
+                        } else {
+                            self.max_act[cj as usize] += c * delta;
+                        }
+                        if was_fixed != now_fixed {
+                            if now_fixed {
+                                self.unfixed[cj as usize] -= 1;
+                            } else {
+                                self.unfixed[cj as usize] += 1;
+                            }
+                        }
+                    }
+                }
+                TrailEntry::Ub(v, old) => {
+                    let i = v.index();
+                    let cur = dom.ub[i];
+                    dom.ub[i] = old;
+                    let was_fixed = cur == dom.lb[i];
+                    let now_fixed = old == dom.lb[i];
+                    let delta = old - cur;
+                    for k in 0..self.watch[i].len() {
+                        let (cj, c) = self.watch[i][k];
+                        if c >= 0 {
+                            self.max_act[cj as usize] += c * delta;
+                        } else {
+                            self.min_act[cj as usize] += c * delta;
+                        }
+                        if was_fixed != now_fixed {
+                            if now_fixed {
+                                self.unfixed[cj as usize] -= 1;
+                            } else {
+                                self.unfixed[cj as usize] += 1;
+                            }
+                        }
+                    }
+                }
+                TrailEntry::Entailed(ci) => self.entailed[ci as usize] = false,
+            }
+        }
+    }
+
+    /// Propagate all constraints to fixpoint (root call). Synchronizes the
+    /// activity caches with `dom` first, so the engine may be paired with any
+    /// fresh `Domains` (not just the model's declared bounds).
     pub fn propagate_all(
         &mut self,
         model: &CpModel,
         dom: &mut Domains,
         trail: &mut Vec<TrailEntry>,
     ) -> PropResult {
-        self.queue.clear();
-        self.in_queue.iter_mut().for_each(|f| *f = false);
-        for ci in 0..model.cons.len() {
-            self.queue.push(ci as u32);
-            self.in_queue[ci] = true;
-        }
-        self.run(model, dom, trail)
-    }
-
-    /// Propagate starting from the constraints watching `seed` (after the
-    /// search fixed/tightened that variable).
-    pub fn propagate_from(
-        &mut self,
-        model: &CpModel,
-        dom: &mut Domains,
-        trail: &mut Vec<TrailEntry>,
-        seed: Var,
-    ) -> PropResult {
-        self.queue.clear();
-        self.in_queue.iter_mut().for_each(|f| *f = false);
-        for &ci in &self.watch[seed.index()] {
-            if !self.in_queue[ci as usize] {
-                self.queue.push(ci);
-                self.in_queue[ci as usize] = true;
+        self.clear_queue();
+        for (ci, con) in model.cons.iter().enumerate() {
+            let mut mn = 0i64;
+            let mut mx = 0i64;
+            let mut uf = 0u32;
+            for &(c, v) in &con.terms {
+                mn += term_min(c, dom.lb(v), dom.ub(v));
+                mx += term_max(c, dom.lb(v), dom.ub(v));
+                uf += u32::from(!dom.is_fixed(v));
             }
+            self.min_act[ci] = mn;
+            self.max_act[ci] = mx;
+            self.unfixed[ci] = uf;
+            self.entailed[ci] = false;
+        }
+        for ci in 0..model.cons.len() as u32 {
+            self.enqueue(ci);
         }
         self.run(model, dom, trail)
     }
 
-    fn run(
+    /// Drain the queue to fixpoint. Branch decisions enqueue the affected
+    /// watchers themselves, so a node propagation is `branch_*` + `run`.
+    pub fn run(
         &mut self,
         model: &CpModel,
         dom: &mut Domains,
         trail: &mut Vec<TrailEntry>,
     ) -> PropResult {
-        while let Some(ci) = self.queue.pop() {
+        while let Some((_, ci)) = self.queue.pop_first() {
             self.in_queue[ci as usize] = false;
-            let con = &model.cons[ci as usize];
-            let mut changed: Vec<Var> = Vec::new();
-            if !tighten(con, dom, trail, &mut changed) {
-                return PropResult::Infeasible;
+            if self.entailed[ci as usize] {
+                continue;
             }
-            for v in changed {
-                for &cj in &self.watch[v.index()] {
-                    if cj != ci && !self.in_queue[cj as usize] {
-                        self.queue.push(cj);
-                        self.in_queue[cj as usize] = true;
-                    }
-                }
+            if self.visit(model, dom, trail, ci) == PropResult::Infeasible {
+                // Leave the queue empty so backtracking can proceed; the
+                // unwound node re-enqueues nothing.
+                self.clear_queue();
+                return PropResult::Infeasible;
             }
         }
         PropResult::Consistent
     }
-}
 
-/// Tighten domains w.r.t. one constraint. Returns false on infeasibility;
-/// records changed variables in `changed` and bound changes on `trail`.
-fn tighten(
-    con: &LinCon,
-    dom: &mut Domains,
-    trail: &mut Vec<TrailEntry>,
-    changed: &mut Vec<Var>,
-) -> bool {
-    // Treat Eq as both Le and Ge.
-    let (do_le, do_ge) = match con.cmp {
-        Cmp::Le => (true, false),
-        Cmp::Ge => (false, true),
-        Cmp::Eq => (true, true),
-    };
-    if do_le && !tighten_le(&con.terms, con.rhs, dom, trail, changed) {
-        return false;
+    /// Revisit one constraint: cached-activity feasibility and entailment
+    /// checks, then the same per-term tightening arithmetic as the reference
+    /// engine with `min_act` read from the cache instead of recomputed.
+    fn visit(
+        &mut self,
+        model: &CpModel,
+        dom: &mut Domains,
+        trail: &mut Vec<TrailEntry>,
+        ci: u32,
+    ) -> PropResult {
+        let con = &model.cons[ci as usize];
+        self.counters.propagations += 1;
+        let (min_act, max_act) = (self.min_act[ci as usize], self.max_act[ci as usize]);
+
+        // Feasibility straight from the caches (the old engine derived the
+        // same facts by recomputing the activity per visit).
+        let infeasible = match con.cmp {
+            Cmp::Le => min_act > con.rhs,
+            Cmp::Ge => max_act < con.rhs,
+            Cmp::Eq => min_act > con.rhs || max_act < con.rhs,
+        };
+        if infeasible {
+            return PropResult::Infeasible;
+        }
+
+        // Entailment: satisfied for EVERY assignment in the current box ⇒ no
+        // tightening possible here or in any descendant node. Unwatch until
+        // backtrack (enqueue skips flagged constraints).
+        let entailed = match con.cmp {
+            Cmp::Le => max_act <= con.rhs,
+            Cmp::Ge => min_act >= con.rhs,
+            Cmp::Eq => min_act == con.rhs && max_act == con.rhs,
+        };
+        if entailed {
+            self.entailed[ci as usize] = true;
+            trail.push(TrailEntry::Entailed(ci));
+            self.counters.entailments += 1;
+            return PropResult::Consistent;
+        }
+
+        let (do_le, do_ge) = match con.cmp {
+            Cmp::Le => (true, false),
+            Cmp::Ge => (false, true),
+            Cmp::Eq => (true, true),
+        };
+        // `≤` pass: cap each term by rhs minus the other terms' minimum.
+        // `min_act` stays valid throughout the pass — the pass only lowers
+        // ubs of positive terms and raises lbs of negative terms, neither of
+        // which moves any term's minimum. An equality's `≥` pass below CAN
+        // move it, which is why changed Eq constraints re-enqueue themselves
+        // (`exclude` only suppresses the self-wakeup, never other watchers):
+        // both engines share that closure rule, making the fixpoint
+        // independent of queue order.
+        if do_le {
+            for &(c, v) in &con.terms {
+                let cap = con.rhs - (min_act - term_min(c, dom.lb(v), dom.ub(v)));
+                let ok = if c > 0 {
+                    self.set_ub(v, cap.div_euclid(c), dom, trail, ci)
+                } else if c < 0 {
+                    self.set_lb(v, div_ceil(cap, c), dom, trail, ci)
+                } else {
+                    true
+                };
+                if !ok {
+                    return PropResult::Infeasible;
+                }
+            }
+        }
+        // `≥` pass via the negated view: Σ aᵢxᵢ ≥ b ⇔ Σ (-aᵢ)xᵢ ≤ -b, whose
+        // minimum activity is -max_act. Re-read the cache: an Eq's `≤` pass
+        // above may have tightened negative-coefficient lbs, and the cache
+        // already reflects that (the old engine recomputed here).
+        if do_ge {
+            let min_act_neg = -self.max_act[ci as usize];
+            let rhs_neg = -con.rhs;
+            if min_act_neg > rhs_neg {
+                return PropResult::Infeasible;
+            }
+            for &(c, v) in &con.terms {
+                let nc = -c;
+                let cap = rhs_neg - (min_act_neg - term_min(nc, dom.lb(v), dom.ub(v)));
+                let ok = if nc > 0 {
+                    self.set_ub(v, cap.div_euclid(nc), dom, trail, ci)
+                } else if nc < 0 {
+                    self.set_lb(v, div_ceil(cap, nc), dom, trail, ci)
+                } else {
+                    true
+                };
+                if !ok {
+                    return PropResult::Infeasible;
+                }
+            }
+        }
+        // Self-requeue equalities whose own visit moved a bound: the two
+        // passes feed each other, so one visit may not reach the constraint's
+        // closure. (`set_*` excluded `ci`; the wakeup happens here instead so
+        // an unchanged constraint is not revisited.)
+        if con.cmp == Cmp::Eq
+            && (self.min_act[ci as usize], self.max_act[ci as usize]) != (min_act, max_act)
+        {
+            self.enqueue(ci);
+        }
+        PropResult::Consistent
     }
-    if do_ge {
-        // Σ aᵢxᵢ ≥ b  ⇔  Σ (-aᵢ)xᵢ ≤ -b
-        if !tighten_le_neg(&con.terms, -con.rhs, dom, trail, changed) {
-            return false;
+
+    /// Test/validate-mode oracle: recompute every cache from scratch and
+    /// panic on any divergence. Called by the search layer after each undo
+    /// when [`SearchConfig::validate`](crate::cp::SearchConfig::validate) is
+    /// set; O(model) per call, never enabled on production paths.
+    pub fn check_invariants(&self, model: &CpModel, dom: &Domains) {
+        assert!(self.queue.is_empty(), "invariant: queue not drained");
+        for (ci, con) in model.cons.iter().enumerate() {
+            let mut mn = 0i64;
+            let mut mx = 0i64;
+            let mut uf = 0u32;
+            for &(c, v) in &con.terms {
+                mn += term_min(c, dom.lb(v), dom.ub(v));
+                mx += term_max(c, dom.lb(v), dom.ub(v));
+                uf += u32::from(!dom.is_fixed(v));
+            }
+            assert_eq!(
+                (self.min_act[ci], self.max_act[ci]),
+                (mn, mx),
+                "invariant: stale activity cache for constraint {ci} ({:?})",
+                con.name
+            );
+            assert_eq!(
+                self.unfixed[ci], uf,
+                "invariant: stale unfixed count for constraint {ci}"
+            );
+            if self.entailed[ci] {
+                let holds = match con.cmp {
+                    Cmp::Le => mx <= con.rhs,
+                    Cmp::Ge => mn >= con.rhs,
+                    Cmp::Eq => mn == con.rhs && mx == con.rhs,
+                };
+                assert!(holds, "invariant: entailed flag on unentailed constraint {ci}");
+            }
         }
     }
-    true
 }
 
 #[inline]
-fn term_min(c: i64, lb: i64, ub: i64) -> i64 {
+pub(crate) fn term_min(c: i64, lb: i64, ub: i64) -> i64 {
     if c >= 0 {
         c * lb
     } else {
@@ -197,116 +549,18 @@ fn term_min(c: i64, lb: i64, ub: i64) -> i64 {
 }
 
 #[inline]
-fn term_max(c: i64, lb: i64, ub: i64) -> i64 {
+pub(crate) fn term_max(c: i64, lb: i64, ub: i64) -> i64 {
     if c >= 0 {
         c * ub
     } else {
         c * lb
     }
-}
-
-fn set_ub(v: Var, new_ub: i64, dom: &mut Domains, trail: &mut Vec<TrailEntry>, changed: &mut Vec<Var>) -> bool {
-    let i = v.index();
-    if new_ub < dom.ub[i] {
-        trail.push(TrailEntry::Ub(v, dom.ub[i]));
-        dom.ub[i] = new_ub;
-        changed.push(v);
-        if dom.lb[i] > new_ub {
-            return false;
-        }
-    }
-    true
-}
-
-fn set_lb(v: Var, new_lb: i64, dom: &mut Domains, trail: &mut Vec<TrailEntry>, changed: &mut Vec<Var>) -> bool {
-    let i = v.index();
-    if new_lb > dom.lb[i] {
-        trail.push(TrailEntry::Lb(v, dom.lb[i]));
-        dom.lb[i] = new_lb;
-        changed.push(v);
-        if dom.ub[i] < new_lb {
-            return false;
-        }
-    }
-    true
-}
-
-/// Tighten for `Σ aᵢxᵢ ≤ b` with coefficients as stored.
-fn tighten_le(
-    terms: &[(i64, Var)],
-    rhs: i64,
-    dom: &mut Domains,
-    trail: &mut Vec<TrailEntry>,
-    changed: &mut Vec<Var>,
-) -> bool {
-    let min_act: i64 = terms
-        .iter()
-        .map(|&(c, v)| term_min(c, dom.lb(v), dom.ub(v)))
-        .sum();
-    if min_act > rhs {
-        return false;
-    }
-    for &(c, v) in terms {
-        let rest = min_act - term_min(c, dom.lb(v), dom.ub(v));
-        // c*x ≤ rhs - rest
-        let cap = rhs - rest;
-        if c > 0 {
-            let new_ub = cap.div_euclid(c);
-            if !set_ub(v, new_ub, dom, trail, changed) {
-                return false;
-            }
-        } else if c < 0 {
-            // x ≥ ceil(cap / c) with c negative
-            let new_lb = -((-cap).div_euclid(-c)); // careful integer division
-            let new_lb = if c * new_lb > cap { new_lb + 1 } else { new_lb };
-            // Simpler: smallest x with c*x ≤ cap is ceil(cap/c) for c<0.
-            let exact = div_ceil(cap, c);
-            debug_assert!(c * exact <= cap);
-            let _ = new_lb;
-            if !set_lb(v, exact, dom, trail, changed) {
-                return false;
-            }
-        }
-    }
-    true
-}
-
-/// Tighten for `Σ (-aᵢ)xᵢ ≤ b` (negated view for ≥ constraints).
-fn tighten_le_neg(
-    terms: &[(i64, Var)],
-    rhs: i64,
-    dom: &mut Domains,
-    trail: &mut Vec<TrailEntry>,
-    changed: &mut Vec<Var>,
-) -> bool {
-    let min_act: i64 = terms
-        .iter()
-        .map(|&(c, v)| term_min(-c, dom.lb(v), dom.ub(v)))
-        .sum();
-    if min_act > rhs {
-        return false;
-    }
-    for &(c, v) in terms {
-        let nc = -c;
-        let rest = min_act - term_min(nc, dom.lb(v), dom.ub(v));
-        let cap = rhs - rest;
-        if nc > 0 {
-            if !set_ub(v, cap.div_euclid(nc), dom, trail, changed) {
-                return false;
-            }
-        } else if nc < 0 {
-            if !set_lb(v, div_ceil(cap, nc), dom, trail, changed) {
-                return false;
-            }
-        }
-    }
-    true
 }
 
 /// Ceiling division for possibly-negative divisor: smallest x with d*x ≤ cap
 /// when d < 0 is x = ceil(cap/d).
 #[inline]
-fn div_ceil(cap: i64, d: i64) -> i64 {
+pub(crate) fn div_ceil(cap: i64, d: i64) -> i64 {
     debug_assert!(d != 0);
     let q = cap / d;
     if cap % d != 0 && ((cap < 0) == (d < 0)) {
@@ -345,6 +599,9 @@ mod tests {
         let mut p = Propagator::new(model);
         let mut trail = Vec::new();
         let r = p.propagate_all(model, &mut dom, &mut trail);
+        if r == PropResult::Consistent {
+            p.check_invariants(model, &dom);
+        }
         (dom, r)
     }
 
@@ -426,5 +683,65 @@ mod tests {
         assert_eq!(div_ceil(-7, -2), 4); // -2x ≤ -7 → x ≥ 3.5 → 4
         assert_eq!(div_ceil(6, -3), -2);
         assert_eq!(div_ceil(-6, -3), 2);
+    }
+
+    #[test]
+    fn entailed_constraint_is_unwatched_and_rewatched_on_undo() {
+        let mut m = CpModel::new();
+        let a = m.int_var(0, 10, "a");
+        let b = m.int_var(0, 10, "b");
+        m.add_le(LinExpr::new().add(1, a).add(1, b), 25); // loose: max_act 20 ≤ 25
+        let mut dom = Domains::from_model(&m);
+        let mut p = Propagator::new(&m);
+        let mut trail = Vec::new();
+        assert_eq!(p.propagate_all(&m, &mut dom, &mut trail), PropResult::Consistent);
+        assert_eq!(p.counters.entailments, 1);
+        assert!(p.entailed[0]);
+        assert!(matches!(trail.last(), Some(TrailEntry::Entailed(0))));
+        p.check_invariants(&m, &dom);
+        // Undo rewinds the flag.
+        p.undo_to(&mut dom, &mut trail, 0);
+        assert!(!p.entailed[0]);
+        p.check_invariants(&m, &dom);
+    }
+
+    #[test]
+    fn caches_track_branch_and_undo_exactly() {
+        let mut m = CpModel::new();
+        let a = m.int_var(0, 10, "a");
+        let b = m.int_var(0, 10, "b");
+        let c = m.int_var(-5, 5, "c");
+        m.add_le(LinExpr::new().add(2, a).add(3, b).add(-1, c), 21);
+        m.add_ge(LinExpr::new().add(1, a).add(1, b).add(1, c), 2);
+        let mut dom = Domains::from_model(&m);
+        let mut p = Propagator::new(&m);
+        let mut trail = Vec::new();
+        assert_eq!(p.propagate_all(&m, &mut dom, &mut trail), PropResult::Consistent);
+        let mark = trail.len();
+        // Branch a = 4, propagate, then unwind: caches must be bit-exact.
+        assert!(p.branch_ub(a, 4, &mut dom, &mut trail));
+        assert!(p.branch_lb(a, 4, &mut dom, &mut trail));
+        assert_eq!(p.run(&m, &mut dom, &mut trail), PropResult::Consistent);
+        p.check_invariants(&m, &dom);
+        p.undo_to(&mut dom, &mut trail, mark);
+        p.check_invariants(&m, &dom);
+        assert_eq!((dom.lb(a), dom.ub(a)), (0, 10));
+    }
+
+    #[test]
+    fn eq_self_requeue_reaches_closure() {
+        // Mixed-sign equality whose ≥ pass strengthens its own ≤ pass:
+        // 2x − 3y = 0 with x ∈ [0,9], y ∈ [1,5]. One ≤/≥ sweep only gets
+        // x ≤ 7; the bounds fixpoint x ∈ [3,6], y ∈ [2,4] needs the visit
+        // to re-enqueue itself until closure (the rule both engines share —
+        // it makes the fixpoint independent of queue order).
+        let mut m = CpModel::new();
+        let x = m.int_var(0, 9, "x");
+        let y = m.int_var(1, 5, "y");
+        m.add_eq(LinExpr::new().add(2, x).add(-3, y), 0);
+        let (dom, r) = prop(&m);
+        assert_eq!(r, PropResult::Consistent);
+        assert_eq!((dom.lb(x), dom.ub(x)), (3, 6));
+        assert_eq!((dom.lb(y), dom.ub(y)), (2, 4));
     }
 }

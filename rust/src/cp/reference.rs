@@ -1,0 +1,577 @@
+//! The frozen recompute-per-visit propagation engine — the differential
+//! oracle for [`super::propagate`].
+//!
+//! This is the original engine the compiler shipped with before the
+//! incremental rewrite: every constraint visit recomputes its activity
+//! bounds from scratch (O(terms) per visit), the work queue is a plain LIFO
+//! stack, and there is no entailment detection. It is kept — unoptimized, on
+//! purpose — so `rust/tests/cp_differential.rs` and
+//! `benches/solver_hotpath.rs` can prove/measure the incremental engine
+//! against it, selected via
+//! [`EngineKind::Reference`](super::search::EngineKind).
+//!
+//! One deliberate change is shared with the incremental engine: an equality
+//! constraint whose own visit moved a bound re-enqueues itself (its `≤` and
+//! `≥` passes can feed each other, so a single visit may not reach the
+//! constraint's closure). With that rule, every propagation run converges to
+//! the unique greatest common fixpoint of the per-constraint tighteners
+//! *regardless of queue order* — which is exactly what makes the two
+//! engines' search trees provably identical node for node (see
+//! `docs/solver.md`).
+
+use std::time::Instant;
+
+use super::model::{Cmp, CpModel, LinCon, Var};
+use super::propagate::{
+    div_ceil, expr_min, term_min, Domains, PropResult, TrailEntry,
+};
+use super::search::{
+    objective_terms, validate_hint, SearchConfig, Solution, SolveStats, Status,
+};
+
+/// The original recompute-per-visit propagator: var→constraint watch lists,
+/// LIFO queue, activity recomputed at every visit.
+struct RefPropagator {
+    /// For each var, indices of constraints that mention it.
+    watch: Vec<Vec<u32>>,
+    /// Scratch queue of constraint indices to revisit.
+    queue: Vec<u32>,
+    /// Dedup flags for the queue.
+    in_queue: Vec<bool>,
+    /// Constraint visits (for [`SolveStats::propagations`]).
+    propagations: u64,
+    /// Successful bound changes (for [`SolveStats::tightenings`]).
+    tightenings: u64,
+}
+
+impl RefPropagator {
+    fn new(model: &CpModel) -> Self {
+        let mut watch = vec![Vec::new(); model.vars.len()];
+        for (ci, c) in model.cons.iter().enumerate() {
+            for &(_, v) in &c.terms {
+                watch[v.index()].push(ci as u32);
+            }
+        }
+        Self {
+            watch,
+            queue: Vec::new(),
+            in_queue: vec![false; model.cons.len()],
+            propagations: 0,
+            tightenings: 0,
+        }
+    }
+
+    /// Propagate all constraints to fixpoint (root call).
+    fn propagate_all(
+        &mut self,
+        model: &CpModel,
+        dom: &mut Domains,
+        trail: &mut Vec<TrailEntry>,
+    ) -> PropResult {
+        self.queue.clear();
+        self.in_queue.iter_mut().for_each(|f| *f = false);
+        for ci in 0..model.cons.len() {
+            self.queue.push(ci as u32);
+            self.in_queue[ci] = true;
+        }
+        self.run(model, dom, trail)
+    }
+
+    /// Propagate starting from the constraints watching `seed` (after the
+    /// search fixed/tightened that variable).
+    fn propagate_from(
+        &mut self,
+        model: &CpModel,
+        dom: &mut Domains,
+        trail: &mut Vec<TrailEntry>,
+        seed: Var,
+    ) -> PropResult {
+        self.queue.clear();
+        self.in_queue.iter_mut().for_each(|f| *f = false);
+        for &ci in &self.watch[seed.index()] {
+            if !self.in_queue[ci as usize] {
+                self.queue.push(ci);
+                self.in_queue[ci as usize] = true;
+            }
+        }
+        self.run(model, dom, trail)
+    }
+
+    fn run(
+        &mut self,
+        model: &CpModel,
+        dom: &mut Domains,
+        trail: &mut Vec<TrailEntry>,
+    ) -> PropResult {
+        while let Some(ci) = self.queue.pop() {
+            self.in_queue[ci as usize] = false;
+            let con = &model.cons[ci as usize];
+            self.propagations += 1;
+            let mut changed: Vec<Var> = Vec::new();
+            if !tighten(con, dom, trail, &mut changed, &mut self.tightenings) {
+                return PropResult::Infeasible;
+            }
+            let self_closure = con.cmp == Cmp::Eq && !changed.is_empty();
+            for v in changed {
+                for &cj in &self.watch[v.index()] {
+                    if cj != ci && !self.in_queue[cj as usize] {
+                        self.queue.push(cj);
+                        self.in_queue[cj as usize] = true;
+                    }
+                }
+            }
+            // Shared closure rule (see module doc): a changed equality
+            // revisits itself until its two passes stop feeding each other.
+            if self_closure && !self.in_queue[ci as usize] {
+                self.queue.push(ci);
+                self.in_queue[ci as usize] = true;
+            }
+        }
+        PropResult::Consistent
+    }
+}
+
+/// Tighten domains w.r.t. one constraint. Returns false on infeasibility;
+/// records changed variables in `changed` and bound changes on `trail`.
+fn tighten(
+    con: &LinCon,
+    dom: &mut Domains,
+    trail: &mut Vec<TrailEntry>,
+    changed: &mut Vec<Var>,
+    tightenings: &mut u64,
+) -> bool {
+    // Treat Eq as both Le and Ge.
+    let (do_le, do_ge) = match con.cmp {
+        Cmp::Le => (true, false),
+        Cmp::Ge => (false, true),
+        Cmp::Eq => (true, true),
+    };
+    if do_le && !tighten_le(&con.terms, con.rhs, dom, trail, changed, tightenings) {
+        return false;
+    }
+    if do_ge {
+        // Σ aᵢxᵢ ≥ b  ⇔  Σ (-aᵢ)xᵢ ≤ -b
+        if !tighten_le_neg(&con.terms, -con.rhs, dom, trail, changed, tightenings) {
+            return false;
+        }
+    }
+    true
+}
+
+fn set_ub(
+    v: Var,
+    new_ub: i64,
+    dom: &mut Domains,
+    trail: &mut Vec<TrailEntry>,
+    changed: &mut Vec<Var>,
+    tightenings: &mut u64,
+) -> bool {
+    let i = v.index();
+    if new_ub < dom.ub[i] {
+        trail.push(TrailEntry::Ub(v, dom.ub[i]));
+        dom.ub[i] = new_ub;
+        changed.push(v);
+        *tightenings += 1;
+        if dom.lb[i] > new_ub {
+            return false;
+        }
+    }
+    true
+}
+
+fn set_lb(
+    v: Var,
+    new_lb: i64,
+    dom: &mut Domains,
+    trail: &mut Vec<TrailEntry>,
+    changed: &mut Vec<Var>,
+    tightenings: &mut u64,
+) -> bool {
+    let i = v.index();
+    if new_lb > dom.lb[i] {
+        trail.push(TrailEntry::Lb(v, dom.lb[i]));
+        dom.lb[i] = new_lb;
+        changed.push(v);
+        *tightenings += 1;
+        if dom.ub[i] < new_lb {
+            return false;
+        }
+    }
+    true
+}
+
+/// Tighten for `Σ aᵢxᵢ ≤ b` with coefficients as stored, recomputing the
+/// minimum activity from the domains (the cost the incremental engine's
+/// caches eliminate).
+fn tighten_le(
+    terms: &[(i64, Var)],
+    rhs: i64,
+    dom: &mut Domains,
+    trail: &mut Vec<TrailEntry>,
+    changed: &mut Vec<Var>,
+    tightenings: &mut u64,
+) -> bool {
+    let min_act: i64 = terms
+        .iter()
+        .map(|&(c, v)| term_min(c, dom.lb(v), dom.ub(v)))
+        .sum();
+    if min_act > rhs {
+        return false;
+    }
+    for &(c, v) in terms {
+        let rest = min_act - term_min(c, dom.lb(v), dom.ub(v));
+        // c*x ≤ rhs - rest
+        let cap = rhs - rest;
+        if c > 0 {
+            if !set_ub(v, cap.div_euclid(c), dom, trail, changed, tightenings) {
+                return false;
+            }
+        } else if c < 0 {
+            // Smallest x with c*x ≤ cap is ceil(cap/c) for c<0.
+            if !set_lb(v, div_ceil(cap, c), dom, trail, changed, tightenings) {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Tighten for `Σ (-aᵢ)xᵢ ≤ b` (negated view for ≥ constraints).
+fn tighten_le_neg(
+    terms: &[(i64, Var)],
+    rhs: i64,
+    dom: &mut Domains,
+    trail: &mut Vec<TrailEntry>,
+    changed: &mut Vec<Var>,
+    tightenings: &mut u64,
+) -> bool {
+    let min_act: i64 = terms
+        .iter()
+        .map(|&(c, v)| term_min(-c, dom.lb(v), dom.ub(v)))
+        .sum();
+    if min_act > rhs {
+        return false;
+    }
+    for &(c, v) in terms {
+        let nc = -c;
+        let rest = min_act - term_min(nc, dom.lb(v), dom.ub(v));
+        let cap = rhs - rest;
+        if nc > 0 {
+            if !set_ub(v, cap.div_euclid(nc), dom, trail, changed, tightenings) {
+                return false;
+            }
+        } else if nc < 0 {
+            if !set_lb(v, div_ceil(cap, nc), dom, trail, changed, tightenings) {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+struct RefSearchCtx<'m> {
+    model: &'m CpModel,
+    prop: RefPropagator,
+    dom: Domains,
+    trail: Vec<TrailEntry>,
+    obj_terms: Vec<(i64, Var)>,
+    obj_const: i64,
+    best: Option<(i64, Vec<i64>)>,
+    nodes: u64,
+    start: Instant,
+    cfg: SearchConfig,
+    limit_hit: bool,
+    backtracks: u64,
+    peak_trail: u64,
+    last_conflict: Option<Var>,
+}
+
+impl<'m> RefSearchCtx<'m> {
+    /// Plain trail unwind (no caches to restore), with the same stat
+    /// accounting as the incremental engine's `backtrack_to`.
+    fn backtrack_to(&mut self, mark: usize) {
+        self.peak_trail = self.peak_trail.max(self.trail.len() as u64);
+        self.backtracks += 1;
+        while self.trail.len() > mark {
+            match self.trail.pop().unwrap() {
+                TrailEntry::Lb(v, old) => self.dom.lb[v.index()] = old,
+                TrailEntry::Ub(v, old) => self.dom.ub[v.index()] = old,
+                // The reference engine never trails entailment events.
+                TrailEntry::Entailed(_) => unreachable!("reference engine has no entailment"),
+            }
+        }
+    }
+
+    fn limits_exceeded(&mut self) -> bool {
+        if self.limit_hit {
+            return true;
+        }
+        if let Some(n) = self.cfg.node_limit {
+            if self.nodes >= n {
+                self.limit_hit = true;
+                return true;
+            }
+        }
+        if let Some(ms) = self.cfg.time_limit_ms {
+            // Check time only periodically — Instant::now is not free.
+            if self.nodes % 256 == 0 && self.start.elapsed().as_millis() as u64 >= ms {
+                self.limit_hit = true;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Identical selection rule to the incremental engine: last-conflict
+    /// refinement (when enabled), else smallest domain with index tie-break.
+    fn select_var(&self) -> Option<Var> {
+        if self.cfg.last_conflict {
+            if let Some(v) = self.last_conflict {
+                if self.dom.ub(v) > self.dom.lb(v) {
+                    return Some(v);
+                }
+            }
+        }
+        let mut best: Option<(i64, usize)> = None;
+        for i in 0..self.dom.lb.len() {
+            let w = self.dom.ub[i] - self.dom.lb[i];
+            if w > 0 {
+                match best {
+                    Some((bw, _)) if bw <= w => {}
+                    _ => best = Some((w, i)),
+                }
+            }
+        }
+        best.map(|(_, i)| Var(i as u32))
+    }
+
+    fn obj_coef(&self, v: Var) -> i64 {
+        self.obj_terms
+            .binary_search_by_key(&v, |&(_, var)| var)
+            .map(|i| self.obj_terms[i].0)
+            .unwrap_or(0)
+    }
+
+    fn dfs(&mut self) {
+        self.nodes += 1;
+        if self.limits_exceeded() {
+            return;
+        }
+
+        if let Some((best_obj, _)) = &self.best {
+            let lb = expr_min(&self.obj_terms, self.obj_const, &self.dom);
+            if lb >= *best_obj {
+                return;
+            }
+        }
+
+        let Some(v) = self.select_var() else {
+            let assignment = self.dom.assignment();
+            let obj = expr_min(&self.obj_terms, self.obj_const, &self.dom);
+            debug_assert!(self.model.violated(&assignment).is_none());
+            let better = match &self.best {
+                Some((b, _)) => obj < *b,
+                None => true,
+            };
+            if better {
+                self.best = Some((obj, assignment));
+            }
+            return;
+        };
+
+        let coef = self.obj_coef(v);
+        let lb_first = coef >= 0;
+        let (first_is_lb, second_is_lb) = (lb_first, !lb_first);
+        for is_lb in [first_is_lb, second_is_lb] {
+            if self.limit_hit {
+                return;
+            }
+            let mark = self.trail.len();
+            if is_lb {
+                let val = self.dom.lb(v);
+                let old = self.dom.ub[v.index()];
+                if old != val {
+                    self.trail.push(TrailEntry::Ub(v, old));
+                    self.dom.ub[v.index()] = val;
+                }
+            } else {
+                let val = self.dom.ub(v);
+                let old = self.dom.lb[v.index()];
+                if old != val {
+                    self.trail.push(TrailEntry::Lb(v, old));
+                    self.dom.lb[v.index()] = val;
+                }
+            }
+            let res = self
+                .prop
+                .propagate_from(self.model, &mut self.dom, &mut self.trail, v);
+            if res == PropResult::Consistent {
+                self.dfs();
+                if self.cfg.first_solution_only && self.best.is_some() {
+                    self.backtrack_to(mark);
+                    return;
+                }
+            } else {
+                self.last_conflict = Some(v);
+            }
+            self.backtrack_to(mark);
+
+            if is_lb == first_is_lb {
+                let mark2 = self.trail.len();
+                let feas = if first_is_lb {
+                    let nv = self.dom.lb(v) + 1;
+                    if nv > self.dom.ub(v) {
+                        false
+                    } else {
+                        self.trail.push(TrailEntry::Lb(v, nv - 1));
+                        self.dom.lb[v.index()] = nv;
+                        true
+                    }
+                } else {
+                    let nv = self.dom.ub(v) - 1;
+                    if nv < self.dom.lb(v) {
+                        false
+                    } else {
+                        self.trail.push(TrailEntry::Ub(v, nv + 1));
+                        self.dom.ub[v.index()] = nv;
+                        true
+                    }
+                };
+                if !feas {
+                    return; // domain exhausted; both branches done
+                }
+                let res = self
+                    .prop
+                    .propagate_from(self.model, &mut self.dom, &mut self.trail, v);
+                if res == PropResult::Infeasible {
+                    self.last_conflict = Some(v);
+                    self.backtrack_to(mark2);
+                    return;
+                }
+                self.dfs();
+                self.backtrack_to(mark2);
+                return;
+            }
+        }
+    }
+}
+
+/// Solve `model` with the frozen reference engine. Same search tree, same
+/// result surface as [`super::search::solve`] with the default engine —
+/// only `solve_ms` and the propagation-layer counters differ.
+pub fn solve_reference(model: &CpModel, cfg: SearchConfig) -> Solution {
+    let start = Instant::now();
+    let mut dom = Domains::from_model(model);
+    let mut prop = RefPropagator::new(model);
+    let mut trail = Vec::new();
+
+    let (obj_terms, obj_const) = objective_terms(model);
+    let (initial_best, hints_rejected) = validate_hint(model, &cfg, &obj_terms, obj_const);
+
+    if prop.propagate_all(model, &mut dom, &mut trail) == PropResult::Infeasible {
+        return Solution {
+            status: Status::Infeasible,
+            assignment: None,
+            objective: None,
+            nodes: 0,
+            solve_ms: start.elapsed().as_millis() as u64,
+            stats: SolveStats {
+                nodes: 0,
+                propagations: prop.propagations,
+                tightenings: prop.tightenings,
+                entailments: 0,
+                backtracks: 0,
+                peak_trail: trail.len() as u64,
+                hints_rejected,
+            },
+        };
+    }
+
+    let mut ctx = RefSearchCtx {
+        model,
+        prop,
+        dom,
+        trail,
+        obj_terms,
+        obj_const,
+        best: initial_best,
+        nodes: 0,
+        start,
+        cfg,
+        limit_hit: false,
+        backtracks: 0,
+        peak_trail: 0,
+        last_conflict: None,
+    };
+    ctx.dfs();
+
+    let solve_ms = ctx.start.elapsed().as_millis() as u64;
+    let stats = SolveStats {
+        nodes: ctx.nodes,
+        propagations: ctx.prop.propagations,
+        tightenings: ctx.prop.tightenings,
+        entailments: 0,
+        backtracks: ctx.backtracks,
+        peak_trail: ctx.peak_trail.max(ctx.trail.len() as u64),
+        hints_rejected,
+    };
+    match ctx.best {
+        Some((obj, assignment)) => Solution {
+            status: if ctx.limit_hit { Status::Feasible } else { Status::Optimal },
+            objective: Some(obj),
+            assignment: Some(assignment),
+            nodes: ctx.nodes,
+            solve_ms,
+            stats,
+        },
+        None => Solution {
+            status: if ctx.limit_hit { Status::Unknown } else { Status::Infeasible },
+            objective: None,
+            assignment: None,
+            nodes: ctx.nodes,
+            solve_ms,
+            stats,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cp::model::LinExpr;
+    use crate::cp::search::EngineKind;
+
+    #[test]
+    fn reference_engine_solves_and_reports_no_entailments() {
+        let mut m = CpModel::new();
+        let x = m.int_var(0, 5, "x");
+        let y = m.int_var(0, 5, "y");
+        m.add_ge(LinExpr::sum([x, y]), 3);
+        m.minimize(LinExpr::sum([x, y]));
+        let s = solve_reference(
+            &m,
+            SearchConfig { engine: EngineKind::Reference, ..Default::default() },
+        );
+        assert_eq!(s.status, Status::Optimal);
+        assert_eq!(s.objective, Some(3));
+        assert_eq!(s.stats.entailments, 0);
+        assert!(s.stats.propagations > 0);
+    }
+
+    #[test]
+    fn reference_reaches_eq_closure_like_the_incremental_engine() {
+        // Same model as propagate.rs::eq_self_requeue_reaches_closure: the
+        // shared self-requeue rule must give the reference the same (tight)
+        // root fixpoint, hence identical trees downstream.
+        let mut m = CpModel::new();
+        let x = m.int_var(0, 9, "x");
+        let y = m.int_var(1, 5, "y");
+        m.add_eq(LinExpr::new().add(2, x).add(-3, y), 0);
+        let mut dom = Domains::from_model(&m);
+        let mut p = RefPropagator::new(&m);
+        let mut trail = Vec::new();
+        assert_eq!(p.propagate_all(&m, &mut dom, &mut trail), PropResult::Consistent);
+        assert_eq!((dom.lb(x), dom.ub(x)), (3, 6));
+        assert_eq!((dom.lb(y), dom.ub(y)), (2, 4));
+    }
+}

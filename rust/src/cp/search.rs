@@ -3,18 +3,38 @@
 //! Depth-first search with trail-based backtracking:
 //!   * presolve propagation at the root;
 //!   * deterministic variable selection (smallest remaining domain, ties by
-//!     index — keeps compile results reproducible run-to-run);
+//!     index — keeps compile results reproducible run-to-run), optionally
+//!     refined by last-conflict-first branching ([`SearchConfig::last_conflict`]);
 //!   * value ordering steered by the objective (try the value that pulls the
 //!     objective down first);
 //!   * objective-bound pruning against the incumbent;
 //!   * node and wall-time limits with best-effort (incumbent) results, the
 //!     behaviour the paper relies on when it trades schedule quality for
 //!     compile time (Table II).
+//!
+//! Two interchangeable propagation engines back the search: the incremental
+//! cached-activity engine ([`super::propagate`], the default) and the frozen
+//! recompute-per-visit oracle ([`super::reference`]). Both explore the exact
+//! same tree — see `docs/solver.md` for the equivalence argument — and every
+//! solve reports a deterministic [`SolveStats`] alongside the result.
 
 use std::time::Instant;
 
 use super::model::{CpModel, Var};
 use super::propagate::{expr_min, Domains, PropResult, Propagator, TrailEntry};
+
+/// Which propagation engine backs the search. Results (status, objective,
+/// assignment, node count) are identical by construction; only wall time and
+/// the propagation-layer counters differ.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Cached-activity incremental engine (production default).
+    #[default]
+    Incremental,
+    /// Frozen recompute-per-visit oracle, kept for differential testing and
+    /// old-vs-new benchmarking.
+    Reference,
+}
 
 /// Search configuration.
 #[derive(Debug, Clone)]
@@ -27,8 +47,21 @@ pub struct SearchConfig {
     pub first_solution_only: bool,
     /// Warm-start hint: a full assignment (indexed by var index). If it
     /// satisfies the model it becomes the initial incumbent, so the search
-    /// can only improve on it — and prunes against it from node one.
+    /// can only improve on it — and prunes against it from node one. An
+    /// invalid hint is dropped and counted in [`SolveStats::hints_rejected`].
     pub hint: Option<Vec<i64>>,
+    /// Last-conflict-first branching: keep branching on the variable whose
+    /// decision most recently caused a failure, as long as it is unfixed.
+    /// Off by default — the compiler passes rely on the documented
+    /// smallest-domain order for byte-stable artifacts; flip it only for
+    /// experiments (both engines honor it identically).
+    pub last_conflict: bool,
+    /// Test instrumentation: recompute the incremental engine's cached
+    /// activities from scratch after every backtrack and panic on any
+    /// divergence. O(model) per node — never enable on production paths.
+    pub validate: bool,
+    /// Propagation engine selection (default [`EngineKind::Incremental`]).
+    pub engine: EngineKind,
 }
 
 impl Default for SearchConfig {
@@ -38,6 +71,9 @@ impl Default for SearchConfig {
             time_limit_ms: Some(20_000),
             first_solution_only: false,
             hint: None,
+            last_conflict: false,
+            validate: false,
+            engine: EngineKind::Incremental,
         }
     }
 }
@@ -48,9 +84,9 @@ impl SearchConfig {
     /// becomes the incumbent at node one and the search is *anytime* — a
     /// node-budget expiry returns the seed (or something strictly better)
     /// instead of failing. A seed without an assignment, with the wrong
-    /// arity, or violating the model is silently dropped by the hint
-    /// validation in [`solve`] — warm-starting degrades to a cold search,
-    /// never to a wrong answer.
+    /// arity, or violating the model is dropped by the hint validation in
+    /// [`solve`] (and counted in [`SolveStats::hints_rejected`]) —
+    /// warm-starting degrades to a cold search, never to a wrong answer.
     pub fn with_seed(mut self, seed: &Solution) -> Self {
         if let Some(a) = &seed.assignment {
             self.hint = Some(a.clone());
@@ -73,6 +109,46 @@ pub enum Status {
     Unknown,
 }
 
+/// Deterministic solver counters, reported with every [`Solution`] and
+/// aggregated across the compiler's CP subproblems. Under pure node budgets
+/// every field is a pure function of (model, config) — wall time never leaks
+/// in — so stats can participate in golden comparisons.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SolveStats {
+    /// Explored branch-and-bound nodes (mirrors [`Solution::nodes`] so the
+    /// count survives cross-pass aggregation, where individual `Solution`s
+    /// are long gone).
+    pub nodes: u64,
+    /// Constraint visits during propagation (queue pops that ran a tightener).
+    pub propagations: u64,
+    /// Successful bound changes (a lower bound raised or upper bound lowered).
+    pub tightenings: u64,
+    /// Constraints proven trivially satisfied and unwatched until backtrack
+    /// (always 0 for [`EngineKind::Reference`], which has no entailment).
+    pub entailments: u64,
+    /// Trail unwind operations performed by the search.
+    pub backtracks: u64,
+    /// Deepest trail (total trailed events) reached during the solve.
+    pub peak_trail: u64,
+    /// Warm-start hints that failed validation (wrong arity or violating the
+    /// model) and were dropped — the silent-cold-search signal.
+    pub hints_rejected: u64,
+}
+
+impl SolveStats {
+    /// Fold another solve's counters into this one: sums everywhere except
+    /// `peak_trail`, which takes the max (it is a depth, not a volume).
+    pub fn merge(&mut self, other: &SolveStats) {
+        self.nodes += other.nodes;
+        self.propagations += other.propagations;
+        self.tightenings += other.tightenings;
+        self.entailments += other.entailments;
+        self.backtracks += other.backtracks;
+        self.peak_trail = self.peak_trail.max(other.peak_trail);
+        self.hints_rejected += other.hints_rejected;
+    }
+}
+
 /// Search outcome.
 #[derive(Debug, Clone)]
 pub struct Solution {
@@ -83,9 +159,27 @@ pub struct Solution {
     pub objective: Option<i64>,
     /// Explored node count.
     pub nodes: u64,
-    /// Wall time of the solve in milliseconds.
+    /// Wall time of the solve in milliseconds. The only nondeterministic
+    /// field of a `Solution` — it is deliberately excluded from the
+    /// [`PartialEq`] surface so whole solutions can be golden-compared.
     pub solve_ms: u64,
+    /// Deterministic solver counters for this solve.
+    pub stats: SolveStats,
 }
+
+/// Equality over the *deterministic* surface only: `solve_ms` is wall clock
+/// and is ignored, so two runs of the same (model, config) compare equal.
+impl PartialEq for Solution {
+    fn eq(&self, other: &Self) -> bool {
+        self.status == other.status
+            && self.assignment == other.assignment
+            && self.objective == other.objective
+            && self.nodes == other.nodes
+            && self.stats == other.stats
+    }
+}
+
+impl Eq for Solution {}
 
 /// Why [`Solution::value`] could not produce a value.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -134,6 +228,39 @@ impl Solution {
     }
 }
 
+/// Validate a warm-start hint against the model; shared by both engines so
+/// the rejection accounting can never diverge. Returns the initial incumbent
+/// (objective, assignment) and the number of rejected hints (0 or 1).
+pub(crate) fn validate_hint(
+    model: &CpModel,
+    cfg: &SearchConfig,
+    obj_terms: &[(i64, Var)],
+    obj_const: i64,
+) -> (Option<(i64, Vec<i64>)>, u64) {
+    match cfg.hint.as_ref() {
+        Some(h) if h.len() == model.vars.len() && model.violated(h).is_none() => {
+            let obj = obj_const
+                + obj_terms
+                    .iter()
+                    .map(|&(c, v)| c * h[v.index()])
+                    .sum::<i64>();
+            (Some((obj, h.clone())), 0)
+        }
+        Some(_) => (None, 1),
+        None => (None, 0),
+    }
+}
+
+/// Normalized objective terms (sorted by var, for binary search) + constant.
+pub(crate) fn objective_terms(model: &CpModel) -> (Vec<(i64, Var)>, i64) {
+    let (mut terms, constant) = match &model.objective {
+        Some(o) => (o.terms.clone(), o.constant),
+        None => (Vec::new(), 0),
+    };
+    terms.sort_by_key(|&(_, v)| v);
+    (terms, constant)
+}
+
 struct SearchCtx<'m> {
     model: &'m CpModel,
     prop: Propagator,
@@ -147,15 +274,20 @@ struct SearchCtx<'m> {
     start: Instant,
     cfg: SearchConfig,
     limit_hit: bool,
+    backtracks: u64,
+    peak_trail: u64,
+    last_conflict: Option<Var>,
 }
 
 impl<'m> SearchCtx<'m> {
-    fn undo_to(&mut self, mark: usize) {
-        while self.trail.len() > mark {
-            match self.trail.pop().unwrap() {
-                TrailEntry::Lb(v, old) => self.dom.lb[v.index()] = old,
-                TrailEntry::Ub(v, old) => self.dom.ub[v.index()] = old,
-            }
+    /// Unwind the trail to `mark` through the engine (which restores its
+    /// activity caches), recording depth and backtrack stats.
+    fn backtrack_to(&mut self, mark: usize) {
+        self.peak_trail = self.peak_trail.max(self.trail.len() as u64);
+        self.backtracks += 1;
+        self.prop.undo_to(&mut self.dom, &mut self.trail, mark);
+        if self.cfg.validate {
+            self.prop.check_invariants(self.model, &self.dom);
         }
     }
 
@@ -179,9 +311,18 @@ impl<'m> SearchCtx<'m> {
         false
     }
 
-    /// Pick the branching variable: unfixed var with the smallest domain,
-    /// ties broken by index for determinism. Returns None if all fixed.
+    /// Pick the branching variable: the last conflicting variable if that
+    /// refinement is enabled and it is still unfixed, else the unfixed var
+    /// with the smallest domain, ties broken by index for determinism.
+    /// Returns None if all fixed.
     fn select_var(&self) -> Option<Var> {
+        if self.cfg.last_conflict {
+            if let Some(v) = self.last_conflict {
+                if self.dom.ub(v) > self.dom.lb(v) {
+                    return Some(v);
+                }
+            }
+        }
         let mut best: Option<(i64, usize)> = None;
         for i in 0..self.dom.lb.len() {
             let w = self.dom.ub[i] - self.dom.lb[i];
@@ -244,90 +385,85 @@ impl<'m> SearchCtx<'m> {
             }
             // With an incumbent we still need to explore both branches.
             let mark = self.trail.len();
-            let ok = if is_lb {
+            // Branch x = bound, routed through the engine so the activity
+            // caches follow; the decision enqueues the affected watchers.
+            if is_lb {
                 let val = self.dom.lb(v);
-                // x = lb branch: set ub := lb
-                let old = self.dom.ub[v.index()];
-                if old != val {
-                    self.trail.push(TrailEntry::Ub(v, old));
-                    self.dom.ub[v.index()] = val;
-                }
-                true
+                self.prop.branch_ub(v, val, &mut self.dom, &mut self.trail);
             } else {
                 let val = self.dom.ub(v);
-                let old = self.dom.lb[v.index()];
-                if old != val {
-                    self.trail.push(TrailEntry::Lb(v, old));
-                    self.dom.lb[v.index()] = val;
-                }
-                true
-            };
-            if ok {
-                let res = self
-                    .prop
-                    .propagate_from(self.model, &mut self.dom, &mut self.trail, v);
-                if res == PropResult::Consistent {
-                    self.dfs();
-                    if self.cfg.first_solution_only && self.best.is_some() {
-                        self.undo_to(mark);
-                        return;
-                    }
-                }
+                self.prop.branch_lb(v, val, &mut self.dom, &mut self.trail);
             }
-            self.undo_to(mark);
+            let res = self.prop.run(self.model, &mut self.dom, &mut self.trail);
+            if res == PropResult::Consistent {
+                self.dfs();
+                if self.cfg.first_solution_only && self.best.is_some() {
+                    self.backtrack_to(mark);
+                    return;
+                }
+            } else {
+                self.last_conflict = Some(v);
+            }
+            self.backtrack_to(mark);
 
             // Second branch excludes the tried bound: x ≥ lb+1 (or ≤ ub-1).
             // Applied before the loop's second iteration via domain shrink.
             if is_lb == first_is_lb {
                 let mark2 = self.trail.len();
                 let feas = if first_is_lb {
-                    let old = self.dom.lb[v.index()];
-                    let nv = old + 1;
+                    let nv = self.dom.lb(v) + 1;
                     if nv > self.dom.ub(v) {
                         false
                     } else {
-                        self.trail.push(TrailEntry::Lb(v, old));
-                        self.dom.lb[v.index()] = nv;
+                        self.prop.branch_lb(v, nv, &mut self.dom, &mut self.trail);
                         true
                     }
                 } else {
-                    let old = self.dom.ub[v.index()];
-                    let nv = old - 1;
+                    let nv = self.dom.ub(v) - 1;
                     if nv < self.dom.lb(v) {
                         false
                     } else {
-                        self.trail.push(TrailEntry::Ub(v, old));
-                        self.dom.ub[v.index()] = nv;
+                        self.prop.branch_ub(v, nv, &mut self.dom, &mut self.trail);
                         true
                     }
                 };
                 if !feas {
-                    self.undo_to(mark2);
                     return; // domain exhausted; both branches done
                 }
-                let res = self
-                    .prop
-                    .propagate_from(self.model, &mut self.dom, &mut self.trail, v);
+                let res = self.prop.run(self.model, &mut self.dom, &mut self.trail);
                 if res == PropResult::Infeasible {
-                    self.undo_to(mark2);
+                    self.last_conflict = Some(v);
+                    self.backtrack_to(mark2);
                     return;
                 }
                 // Recurse over the reduced domain instead of a literal
                 // second value: gives binary-tree branching on ranges.
                 self.dfs();
-                self.undo_to(mark2);
+                self.backtrack_to(mark2);
                 return;
             }
         }
     }
 }
 
-/// Solve `model` with the given configuration.
+/// Solve `model` with the given configuration, dispatching to the engine
+/// selected by [`SearchConfig::engine`].
 pub fn solve(model: &CpModel, cfg: SearchConfig) -> Solution {
+    match cfg.engine {
+        EngineKind::Incremental => solve_incremental(model, cfg),
+        EngineKind::Reference => super::reference::solve_reference(model, cfg),
+    }
+}
+
+fn solve_incremental(model: &CpModel, cfg: SearchConfig) -> Solution {
     let start = Instant::now();
     let mut dom = Domains::from_model(model);
     let mut prop = Propagator::new(model);
     let mut trail = Vec::new();
+
+    let (obj_terms, obj_const) = objective_terms(model);
+    // Warm start: adopt a valid hint as the initial incumbent; count drops.
+    let (initial_best, hints_rejected) = validate_hint(model, &cfg, &obj_terms, obj_const);
 
     // Root presolve.
     if prop.propagate_all(model, &mut dom, &mut trail) == PropResult::Infeasible {
@@ -337,29 +473,20 @@ pub fn solve(model: &CpModel, cfg: SearchConfig) -> Solution {
             objective: None,
             nodes: 0,
             solve_ms: start.elapsed().as_millis() as u64,
+            stats: SolveStats {
+                nodes: 0,
+                propagations: prop.counters.propagations,
+                tightenings: prop.counters.tightenings,
+                entailments: prop.counters.entailments,
+                backtracks: 0,
+                peak_trail: trail.len() as u64,
+                hints_rejected,
+            },
         };
     }
-
-    let (obj_terms, obj_const) = match &model.objective {
-        Some(o) => (o.terms.clone(), o.constant),
-        None => (Vec::new(), 0),
-    };
-    let mut obj_terms = obj_terms;
-    obj_terms.sort_by_key(|&(_, v)| v);
-
-    // Warm start: adopt a valid hint as the initial incumbent.
-    let initial_best = cfg.hint.as_ref().and_then(|h| {
-        if h.len() == model.vars.len() && model.violated(h).is_none() {
-            let obj = obj_const
-                + obj_terms
-                    .iter()
-                    .map(|&(c, v)| c * h[v.index()])
-                    .sum::<i64>();
-            Some((obj, h.clone()))
-        } else {
-            None
-        }
-    });
+    if cfg.validate {
+        prop.check_invariants(model, &dom);
+    }
 
     let mut ctx = SearchCtx {
         model,
@@ -373,10 +500,22 @@ pub fn solve(model: &CpModel, cfg: SearchConfig) -> Solution {
         start,
         cfg,
         limit_hit: false,
+        backtracks: 0,
+        peak_trail: 0,
+        last_conflict: None,
     };
     ctx.dfs();
 
     let solve_ms = ctx.start.elapsed().as_millis() as u64;
+    let stats = SolveStats {
+        nodes: ctx.nodes,
+        propagations: ctx.prop.counters.propagations,
+        tightenings: ctx.prop.counters.tightenings,
+        entailments: ctx.prop.counters.entailments,
+        backtracks: ctx.backtracks,
+        peak_trail: ctx.peak_trail.max(ctx.trail.len() as u64),
+        hints_rejected,
+    };
     match ctx.best {
         Some((obj, assignment)) => Solution {
             status: if ctx.limit_hit { Status::Feasible } else { Status::Optimal },
@@ -384,6 +523,7 @@ pub fn solve(model: &CpModel, cfg: SearchConfig) -> Solution {
             assignment: Some(assignment),
             nodes: ctx.nodes,
             solve_ms,
+            stats,
         },
         None => Solution {
             status: if ctx.limit_hit { Status::Unknown } else { Status::Infeasible },
@@ -391,6 +531,7 @@ pub fn solve(model: &CpModel, cfg: SearchConfig) -> Solution {
             assignment: None,
             nodes: ctx.nodes,
             solve_ms,
+            stats,
         },
     }
 }
@@ -527,6 +668,7 @@ mod tests {
             objective: Some(5),
             nodes: 0,
             solve_ms: 0,
+            stats: SolveStats::default(),
         };
 
         // Zero-node budget: the anytime search returns the seed itself.
@@ -546,7 +688,7 @@ mod tests {
     }
 
     #[test]
-    fn invalid_seed_degrades_to_cold_search() {
+    fn invalid_seed_degrades_to_cold_search_and_is_counted() {
         let mut m = CpModel::new();
         let x = m.int_var(0, 5, "x");
         m.add_ge(LinExpr::var(x), 2);
@@ -559,11 +701,16 @@ mod tests {
                 objective: None,
                 nodes: 0,
                 solve_ms: 0,
+                stats: SolveStats::default(),
             };
             let s = solve(&m, SearchConfig::default().with_seed(&seed));
             assert_eq!(s.status, Status::Optimal);
             assert_eq!(s.objective, Some(2));
+            assert_eq!(s.stats.hints_rejected, 1);
         }
+        // A valid seed is not counted.
+        let s = solve(&m, SearchConfig { hint: Some(vec![3]), ..Default::default() });
+        assert_eq!(s.stats.hints_rejected, 0);
     }
 
     #[test]
@@ -576,7 +723,85 @@ mod tests {
         ));
         let s1 = solve(&m, SearchConfig::default());
         let s2 = solve(&m, SearchConfig::default());
-        assert_eq!(s1.assignment, s2.assignment);
-        assert_eq!(s1.objective, s2.objective);
+        // Whole-solution equality: every field but wall clock, stats included.
+        assert_eq!(s1, s2);
+    }
+
+    #[test]
+    fn solution_equality_ignores_wall_clock() {
+        let a = Solution {
+            status: Status::Optimal,
+            assignment: Some(vec![1]),
+            objective: Some(1),
+            nodes: 3,
+            solve_ms: 0,
+            stats: SolveStats::default(),
+        };
+        let b = Solution { solve_ms: 10_000, ..a.clone() };
+        assert_eq!(a, b);
+        let c = Solution { nodes: 4, ..a.clone() };
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn both_engines_agree_node_for_node() {
+        let mut m = CpModel::new();
+        let vars: Vec<_> = (0..10).map(|i| m.bool_var(format!("b{i}"))).collect();
+        for w in vars.windows(3) {
+            m.add_le(LinExpr::sum(w.to_vec()), 2);
+        }
+        m.add_ge(LinExpr::sum(vars.clone()), 3);
+        m.minimize(LinExpr::weighted_sum(
+            vars.iter().enumerate().map(|(i, &v)| ((i as i64 * 7 % 5) - 2, v)),
+        ));
+        let inc = solve(&m, SearchConfig { validate: true, ..Default::default() });
+        let reference = solve(
+            &m,
+            SearchConfig { engine: EngineKind::Reference, ..Default::default() },
+        );
+        assert_eq!(inc.status, reference.status);
+        assert_eq!(inc.objective, reference.objective);
+        assert_eq!(inc.assignment, reference.assignment);
+        assert_eq!(inc.nodes, reference.nodes);
+        assert_eq!(inc.stats.backtracks, reference.stats.backtracks);
+        assert_eq!(inc.stats.peak_trail, reference.stats.peak_trail);
+    }
+
+    #[test]
+    fn last_conflict_branching_still_reaches_the_optimum() {
+        let mut m = CpModel::new();
+        let vars: Vec<_> = (0..8).map(|i| m.int_var(0, 3, format!("x{i}"))).collect();
+        for w in vars.windows(2) {
+            m.add_le(LinExpr::sum(w.to_vec()), 4);
+        }
+        m.add_ge(LinExpr::sum(vars.clone()), 6);
+        m.minimize(LinExpr::weighted_sum(
+            vars.iter().enumerate().map(|(i, &v)| (i as i64 % 3 + 1, v)),
+        ));
+        let base = solve(&m, SearchConfig::default());
+        for engine in [EngineKind::Incremental, EngineKind::Reference] {
+            let lc = solve(
+                &m,
+                SearchConfig { last_conflict: true, engine, ..Default::default() },
+            );
+            assert_eq!(lc.status, Status::Optimal);
+            assert_eq!(lc.objective, base.objective);
+        }
+    }
+
+    #[test]
+    fn stats_count_entailments_and_propagations() {
+        let mut m = CpModel::new();
+        let a = m.int_var(0, 10, "a");
+        let b = m.int_var(0, 10, "b");
+        m.add_le(LinExpr::new().add(1, a).add(1, b), 25); // entailed at the root
+        m.add_ge(LinExpr::sum([a, b]), 2);
+        m.minimize(LinExpr::sum([a, b]));
+        let s = solve(&m, SearchConfig { validate: true, ..Default::default() });
+        assert_eq!(s.status, Status::Optimal);
+        assert_eq!(s.objective, Some(2));
+        assert!(s.stats.entailments >= 1, "loose ≤ must be entailed: {:?}", s.stats);
+        assert!(s.stats.propagations > 0);
+        assert!(s.stats.peak_trail > 0);
     }
 }

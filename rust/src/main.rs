@@ -52,7 +52,7 @@
 use anyhow::{anyhow, bail, Result};
 
 use eiq_neutron::arch::NeutronConfig;
-use eiq_neutron::compiler::{compile, CompileOptions, CostCalibration};
+use eiq_neutron::compiler::{compile, compile_with_stats, CompileOptions, CostCalibration};
 use eiq_neutron::energy::{
     fj_to_joules, EnergyCalibration, EnergyCalibrationFile, EnergyChannel, EnergyMode,
     EnergyModel, FJ_PER_JOULE,
@@ -267,22 +267,28 @@ fn cmd_compile(args: &Args) -> Result<()> {
     };
     let fp = options_fingerprint(&opts);
     let mut loaded_from = None;
-    let c = match load_dir {
+    // Solver stats exist only when this invocation actually ran the CP
+    // passes — a loaded artifact carries none (they are not persisted).
+    let (c, solver_stats) = match load_dir {
         Some(dir) => {
             let store =
                 ArtifactStore::open(dir.as_str()).map_err(|e| anyhow!("--load {dir:?}: {e}"))?;
             match store.load(id, &cfg, &opts.calibration, fp) {
                 Ok(c) => {
                     loaded_from = Some(store.path_for(id, &cfg, &opts.calibration));
-                    c
+                    (c, None)
                 }
                 Err(e) => {
                     eprintln!("artifact load failed ({e}); compiling cold");
-                    compile(&g, &cfg, &opts)
+                    let (c, st) = compile_with_stats(&g, &cfg, &opts);
+                    (c, Some(st))
                 }
             }
         }
-        None => compile(&g, &cfg, &opts),
+        None => {
+            let (c, st) = compile_with_stats(&g, &cfg, &opts);
+            (c, Some(st))
+        }
     };
     if let Some(dir) = save_dir {
         let store =
@@ -303,6 +309,17 @@ fn cmd_compile(args: &Args) -> Result<()> {
         "compile time: {} ms ({} CP subproblems, {} vars)",
         c.compile_ms, c.schedule.subproblems, c.schedule.variables
     );
+    if let Some(st) = &solver_stats {
+        println!(
+            "CP solver:    {} nodes, {} propagations, {} tightenings, {} entailed, \
+             {} backtracks, peak trail {}",
+            st.nodes, st.propagations, st.tightenings, st.entailments, st.backtracks,
+            st.peak_trail
+        );
+        if st.hints_rejected > 0 {
+            println!("warm seeds:   {} rejected (degraded to cold search)", st.hints_rejected);
+        }
+    }
     println!("est latency:  {:.2} ms", c.inference_ms);
     println!("eff TOPS:     {:.2}", c.effective_tops(&g));
     println!("LTP:          {:.1}", c.ltp(&cfg));
@@ -640,6 +657,12 @@ fn serve_and_record(opts: &ServeOptions, path: &str) -> Result<()> {
     let (report, trace) = serve_recorded(&cfg, opts, &mut cache);
     // Report first: even if the write fails now, the run is not lost.
     print!("{}", report.summary());
+    if cache.hints_rejected > 0 {
+        eprintln!(
+            "warm-start: {} seed(s) rejected by the solver (degraded to cold search)",
+            cache.hints_rejected
+        );
+    }
     std::fs::write(path, trace.to_jsonl())?;
     eprintln!(
         "recorded {} request(s), {} completion(s), {} model profile(s) to {path}",
@@ -681,6 +704,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 prewarm_from_store(dir, &opts.models, &cfg, &calibration, &mut cache)?;
             }
             print!("{}", serve_with_cache(&cfg, &opts, &mut cache).summary());
+            if cache.hints_rejected > 0 {
+                eprintln!(
+                    "warm-start: {} seed(s) rejected by the solver (degraded to cold search)",
+                    cache.hints_rejected
+                );
+            }
             Ok(())
         }
     }

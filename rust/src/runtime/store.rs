@@ -22,6 +22,12 @@
 //! hash maps serialized in sorted key order so identical artifacts produce
 //! identical bytes.
 //!
+//! Propagation-engine telemetry ([`crate::cp::SolveStats`]) is deliberately
+//! **not** persisted: it is pure diagnostics, lives outside [`Compiled`]
+//! (see `compiler::compile_with_stats`), and keeping it out of the format
+//! means the incremental-solver work never perturbs artifact bytes — a
+//! loaded plan stays bit-identical to the freshly compiled one.
+//!
 //! ## Validation contract
 //!
 //! A `.npu` file is *evidence* of a prior compile, so nothing is silently

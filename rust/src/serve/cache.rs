@@ -15,7 +15,7 @@ use std::sync::Arc;
 
 use crate::arch::NeutronConfig;
 use crate::compiler::{
-    calibrated_layer_latency_cycles, compile, CompileOptions, Compiled, CostCalibration,
+    calibrated_layer_latency_cycles, compile_with_stats, CompileOptions, Compiled, CostCalibration,
 };
 use crate::coordinator::{emit, DecodeBucket, DecodeJob, JobProgram};
 use crate::cp::SearchConfig;
@@ -130,6 +130,11 @@ pub struct CompileCache {
     pub hits: u64,
     /// Lookups that ran a cold compile.
     pub misses: u64,
+    /// Warm-start seeds the CP solver rejected as invalid across every
+    /// compile this cache ran (see [`crate::cp::SolveStats::hints_rejected`]).
+    /// A systematically stale seed source shows up here instead of as a
+    /// silent cold-search regression.
+    pub hints_rejected: u64,
 }
 
 impl CompileCache {
@@ -144,6 +149,7 @@ impl CompileCache {
             decode_entries: HashMap::new(),
             hits: 0,
             misses: 0,
+            hints_rejected: 0,
         }
     }
 
@@ -203,7 +209,8 @@ impl CompileCache {
             warm_start,
             ..self.opts.clone()
         };
-        let compiled = compile(&graph, cfg, &opts);
+        let (compiled, stats) = compile_with_stats(&graph, cfg, &opts);
+        self.hints_rejected += stats.hints_rejected;
         let program = emit(&compiled, &graph.name);
         let entry = Arc::new(CachedModel { model, compiled, program });
         self.entries.insert(key, Arc::clone(&entry));
@@ -266,7 +273,7 @@ impl CompileCache {
     /// cache elides) and the analytic calibrated cost prediction the
     /// context-curve fit joins against.
     fn build_decode_bucket(
-        &self,
+        &mut self,
         dcfg: &crate::zoo::TransformerConfig,
         kv_len: u32,
     ) -> DecodeBucket {
@@ -276,7 +283,8 @@ impl CompileCache {
             warm_start: None,
             ..self.opts.clone()
         };
-        let compiled = compile(&graph, &self.cfg, &opts);
+        let (compiled, stats) = compile_with_stats(&graph, &self.cfg, &opts);
+        self.hints_rejected += stats.hints_rejected;
         let program = emit(&compiled, &graph.name);
         let kv_tiles = compiled
             .program

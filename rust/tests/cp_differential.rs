@@ -1,0 +1,260 @@
+//! Differential property suite: the incremental cached-activity propagation
+//! engine must be **node-for-node equivalent** to the frozen recompute
+//! oracle (`cp::reference`) — same `Status`, same objective, same
+//! assignment, same explored-node count, same backtrack/peak-trail
+//! accounting — on randomized linear models (feasible, infeasible, and
+//! budget-limited) and on real compiler workloads.
+//!
+//! Why this holds by construction, and what "equivalent" deliberately does
+//! NOT cover (the propagation-layer counters, which differ by design), is
+//! documented in `docs/solver.md`. Every incremental run here also enables
+//! `SearchConfig::validate`, which recomputes the cached activities from
+//! scratch after **every backtrack** and panics on any divergence — the
+//! trail-undo exactness check rides along with every case below.
+//!
+//! Differential comparisons pin `time_limit_ms: None`: wall-clock cutoffs
+//! are the one config knob that could make two correct engines diverge
+//! (they run at different speeds), so equivalence is only claimed — and
+//! tested — under deterministic node budgets.
+
+use eiq_neutron::arch::NeutronConfig;
+use eiq_neutron::compiler::{compile_with_stats, CompileOptions};
+use eiq_neutron::cp::{solve, CpModel, EngineKind, LinExpr, SearchConfig, Solution, Status};
+use eiq_neutron::serve::deterministic_compile_options;
+use eiq_neutron::util::prop::{for_each_case, Rng};
+use eiq_neutron::zoo::ModelId;
+
+/// A random bounded-integer linear model: mixed-sign bounds and
+/// coefficients, `≤`/`=`/`≥` constraints, optional objective. `=`
+/// constraints with random right-hand sides make a healthy fraction of the
+/// pool infeasible; nothing below assumes feasibility.
+fn random_linear_model(rng: &mut Rng, max_vars: usize, max_width: i64) -> CpModel {
+    let n = rng.usize(2, max_vars);
+    let mut m = CpModel::new();
+    let vars: Vec<_> = (0..n)
+        .map(|i| {
+            let lb = rng.int(-3, 2);
+            m.int_var(lb, lb + rng.int(0, max_width), format!("x{i}"))
+        })
+        .collect();
+    for _ in 0..rng.usize(1, n + 1) {
+        let mut e = LinExpr::new();
+        for &v in &vars {
+            let c = rng.int(-3, 3);
+            if c != 0 {
+                e.push(c, v);
+            }
+        }
+        if e.is_empty() {
+            e.push(1, vars[0]);
+        }
+        let rhs = rng.int(-8, 8);
+        match rng.usize(0, 2) {
+            0 => m.add_le(e, rhs),
+            1 => m.add_ge(e, rhs),
+            _ => m.add_eq(e, rhs),
+        }
+    }
+    if rng.bool() {
+        let mut obj = LinExpr::new();
+        for &v in &vars {
+            obj.push(rng.int(-4, 4), v);
+        }
+        m.minimize(obj);
+    }
+    m
+}
+
+/// A random warm-start hint: valid assignments, out-of-bounds values and
+/// wrong arities all occur. Both engines share one hint validator, so the
+/// accept/reject decision — and `hints_rejected` — must agree exactly.
+fn random_hint(rng: &mut Rng, m: &CpModel) -> Option<Vec<i64>> {
+    match rng.usize(0, 3) {
+        0 => None,
+        1 => Some(vec![rng.int(-2, 2); m.num_vars() + rng.usize(0, 2)]),
+        _ => Some((0..m.num_vars()).map(|_| rng.int(-4, 6)).collect()),
+    }
+}
+
+/// Run both engines on the same (model, budget, hint) and assert the whole
+/// search-level surface matches. The propagation-layer counters
+/// (`propagations`, `tightenings`, `entailments`) are excluded on purpose:
+/// entailment skipping makes the incremental engine visit *fewer*
+/// constraints — that is the optimization — while the tree it explores
+/// stays identical.
+fn assert_engines_agree(m: &CpModel, node_limit: Option<u64>, hint: Option<Vec<i64>>) {
+    let run = |engine: EngineKind, validate: bool| -> Solution {
+        solve(
+            m,
+            SearchConfig {
+                node_limit,
+                time_limit_ms: None,
+                hint: hint.clone(),
+                validate,
+                engine,
+                ..SearchConfig::default()
+            },
+        )
+    };
+    let inc = run(EngineKind::Incremental, true);
+    let oracle = run(EngineKind::Reference, false);
+    let what = format!("node_limit={node_limit:?} hint={hint:?}");
+    assert_eq!(inc.status, oracle.status, "status diverged ({what})");
+    assert_eq!(inc.objective, oracle.objective, "objective diverged ({what})");
+    assert_eq!(inc.assignment, oracle.assignment, "assignment diverged ({what})");
+    assert_eq!(inc.nodes, oracle.nodes, "node count diverged ({what})");
+    assert_eq!(inc.stats.nodes, inc.nodes, "stats.nodes must mirror Solution::nodes ({what})");
+    assert_eq!(oracle.stats.nodes, oracle.nodes, "oracle stats.nodes must mirror nodes ({what})");
+    assert_eq!(
+        inc.stats.backtracks, oracle.stats.backtracks,
+        "backtrack count diverged ({what})"
+    );
+    assert_eq!(
+        inc.stats.peak_trail, oracle.stats.peak_trail,
+        "peak trail diverged ({what})"
+    );
+    assert_eq!(
+        inc.stats.hints_rejected, oracle.stats.hints_rejected,
+        "hint accounting diverged ({what})"
+    );
+    // Whatever was found must actually satisfy the model — equivalence to
+    // a wrong oracle would be vacuous.
+    if let Some(a) = &inc.assignment {
+        assert!(m.violated(a).is_none(), "solution violates the model ({what})");
+    }
+    // The oracle has no entailment machinery; the incremental engine must
+    // never report entailments the reference could "miss" as extra nodes.
+    assert_eq!(oracle.stats.entailments, 0, "oracle must report no entailments");
+}
+
+#[test]
+fn engines_agree_on_random_models_with_unbounded_budgets() {
+    // ≥200 models solved to completion: status is proven (Optimal or
+    // Infeasible), so equivalence covers full trees including conflict-
+    // heavy infeasible ones. Small sizes keep full enumeration cheap.
+    let mut infeasible = 0u32;
+    let mut feasible = 0u32;
+    for_each_case(220, 0xd1ff_01, |rng| {
+        let m = random_linear_model(rng, 4, 4);
+        let hint = random_hint(rng, &m);
+        assert_engines_agree(&m, None, hint);
+        let s = solve(
+            &m,
+            SearchConfig { node_limit: None, time_limit_ms: None, ..Default::default() },
+        );
+        match s.status {
+            Status::Infeasible => infeasible += 1,
+            _ => feasible += 1,
+        }
+    });
+    // The generator must actually exercise both regimes.
+    assert!(infeasible >= 20, "only {infeasible} infeasible cases generated");
+    assert!(feasible >= 20, "only {feasible} feasible cases generated");
+}
+
+#[test]
+fn engines_agree_under_tight_node_budgets() {
+    // Budget expiry paths: the limit must trip at the same node in both
+    // engines, returning the same incumbent (or the same Unknown).
+    for_each_case(120, 0xd1ff_02, |rng| {
+        let m = random_linear_model(rng, 6, 6);
+        let budget = rng.int(0, 400) as u64;
+        let hint = random_hint(rng, &m);
+        assert_engines_agree(&m, Some(budget), hint);
+    });
+}
+
+#[test]
+fn engines_agree_with_last_conflict_branching() {
+    // The branching refinement changes the tree shape — but identically in
+    // both engines, since the conflict signal (which branch failed
+    // propagation) must itself be equivalent.
+    for_each_case(80, 0xd1ff_03, |rng| {
+        let m = random_linear_model(rng, 5, 4);
+        let run = |engine: EngineKind| {
+            solve(
+                &m,
+                SearchConfig {
+                    node_limit: None,
+                    time_limit_ms: None,
+                    last_conflict: true,
+                    validate: engine == EngineKind::Incremental,
+                    engine,
+                    ..SearchConfig::default()
+                },
+            )
+        };
+        let inc = run(EngineKind::Incremental);
+        let oracle = run(EngineKind::Reference);
+        assert_eq!(inc.status, oracle.status);
+        assert_eq!(inc.objective, oracle.objective);
+        assert_eq!(inc.assignment, oracle.assignment);
+        assert_eq!(inc.nodes, oracle.nodes);
+    });
+}
+
+/// Compiler-workload equivalence: compiling a zoo model with every CP pass
+/// pinned to the reference oracle must reproduce the production plan
+/// bit-for-bit (same tiled program, schedule ticks, placements, DDR
+/// traffic). The deterministic serving budgets are node-limited with no
+/// time limit, so the comparison is exact. The full-zoo sweep (all 13
+/// models) lives in `benches/solver_hotpath.rs`, which additionally bounds
+/// the node counts; here two cheap models keep the test suite fast.
+#[test]
+fn zoo_models_compile_identically_under_both_engines() {
+    let cfg = NeutronConfig::flagship_2tops();
+    for model in [ModelId::MobileNetV3Min, ModelId::EfficientNetLite0] {
+        let g = model.build();
+        let base = deterministic_compile_options();
+        let with_engine = |engine: EngineKind| -> CompileOptions {
+            let mut o = base.clone();
+            o.tiling.solver.engine = engine;
+            o.scheduling.solver.engine = engine;
+            o.allocation_solver.engine = engine;
+            o
+        };
+        let (inc, inc_stats) = compile_with_stats(&g, &cfg, &with_engine(EngineKind::Incremental));
+        let (oracle, oracle_stats) =
+            compile_with_stats(&g, &cfg, &with_engine(EngineKind::Reference));
+        assert_eq!(inc.program, oracle.program, "{model:?}: tiled programs diverged");
+        assert_eq!(inc.schedule.ticks, oracle.schedule.ticks, "{model:?}: schedules diverged");
+        assert_eq!(inc.schedule.ddr, oracle.schedule.ddr, "{model:?}: DDR traffic diverged");
+        assert_eq!(
+            inc.allocation.placements, oracle.allocation.placements,
+            "{model:?}: placements diverged"
+        );
+        assert_eq!(
+            inc.allocation.v2p_updates, oracle.allocation.v2p_updates,
+            "{model:?}: v2p updates diverged"
+        );
+        assert_eq!(
+            inc.inference_ms.to_bits(),
+            oracle.inference_ms.to_bits(),
+            "{model:?}: latency bits diverged"
+        );
+        // Search-level accounting matches across the whole compile; the
+        // propagation layer is where the engines are allowed to differ.
+        assert_eq!(inc_stats.nodes, oracle_stats.nodes, "{model:?}: node counts diverged");
+        assert_eq!(
+            inc_stats.backtracks, oracle_stats.backtracks,
+            "{model:?}: backtracks diverged"
+        );
+        assert_eq!(
+            inc_stats.peak_trail, oracle_stats.peak_trail,
+            "{model:?}: peak trail diverged"
+        );
+        assert_eq!(
+            inc_stats.hints_rejected, oracle_stats.hints_rejected,
+            "{model:?}: hint accounting diverged"
+        );
+        assert_eq!(oracle_stats.entailments, 0, "{model:?}: oracle reported entailments");
+    }
+}
+
+/// The production default must BE the incremental engine — a regression
+/// that silently flips the default would invalidate every benchmark claim.
+#[test]
+fn default_engine_is_incremental() {
+    assert_eq!(SearchConfig::default().engine, EngineKind::Incremental);
+    assert_eq!(EngineKind::default(), EngineKind::Incremental);
+}

@@ -283,21 +283,32 @@ fn invalid_warm_seeds_degrade_to_cold_search() {
     for_each_case(32, 0x5703_44, |rng| {
         let (m, ubs) = random_model(rng);
         let cold = solve_with(&m, None, None);
-        // Wrong arity and out-of-bounds seeds are dropped, not trusted.
+        assert_eq!(cold.stats.hints_rejected, 0, "cold search has no seed to reject");
+        // Wrong arity and out-of-bounds seeds are dropped, not trusted —
+        // and the drop is *counted*, never silent.
         let bad_arity = vec![0i64; ubs.len() + 3];
         let out_of_bounds: Vec<i64> = ubs.iter().map(|&u| u + 10).collect();
         for bad in [bad_arity, out_of_bounds] {
             let s = solve_with(&m, None, Some(bad));
             assert_eq!(s.status, Status::Optimal);
             assert_eq!(s.objective, cold.objective);
+            assert_eq!(s.stats.hints_rejected, 1, "rejected seed must be counted");
         }
     });
 }
 
 // --- Warm-started compilation: deterministic, structurally valid ---
 
-/// Compare every deterministic part of two artifacts (everything except
-/// the wall-clock `compile_ms` / `solve_ms` fields).
+/// Compare every deterministic part of two artifacts.
+///
+/// The wall-clock fields — `Compiled::compile_ms`, `Schedule::solve_ms`,
+/// `Allocation::solve_ms` — are **deliberately excluded**: they are the
+/// only nondeterministic values in an otherwise deterministic compile, and
+/// golden comparisons must never flake on them. The same contract holds
+/// one level down: `cp::Solution`'s `PartialEq` ignores its own
+/// `solve_ms`, so whole `Solution`s compare deterministically too (see
+/// `docs/solver.md`). Solver telemetry (`cp::SolveStats`) lives outside
+/// `Compiled` entirely and never enters any plan comparison.
 fn assert_same_plan(a: &Compiled, b: &Compiled, what: &str) {
     assert_eq!(a.formats, b.formats, "{what}: formats differ");
     assert_eq!(a.program, b.program, "{what}: tiled programs differ");
